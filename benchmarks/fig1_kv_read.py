@@ -1,0 +1,94 @@
+"""Paper Figure 1: simple key-value READ latency, SQLcached vs memcached.
+
+The paper's point (reproduced honestly): used as a *degenerate* key-value
+store, the relational cache is SLOWER than the hash-table daemon — its
+win is the structured workload (Table 2). Value sizes follow a geometric
+distribution, as in the paper's footnote 3.
+
+Output: CSV ``value_size,sqlcached_us,memcached_us`` per size bucket.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.baseline import MemcachedLike
+from repro.core.daemon import SQLCached
+
+SIZES = [16, 64, 256, 1024, 4096]
+N_KEYS = 512
+N_READS = 2000
+
+
+def _geometric_sizes(rng, n):
+    # geometric over the SIZES buckets (p=0.5), matching the paper's shape
+    idx = np.minimum(rng.geometric(0.5, size=n) - 1, len(SIZES) - 1)
+    return [SIZES[i] for i in idx]
+
+
+def run(seed: int = 0, n_keys: int = N_KEYS, n_reads: int = N_READS):
+    rng = np.random.default_rng(seed)
+    sizes = _geometric_sizes(rng, n_keys)
+    values = {f"k{i}": "x" * sizes[i] for i in range(n_keys)}
+
+    mc = MemcachedLike()
+    for k, v in values.items():
+        mc.set(k, v)
+
+    sq = SQLCached()
+    sq.execute(
+        f"CREATE TABLE kv (k TEXT, v TEXT) CAPACITY {2 * n_keys} "
+        f"MAX_SELECT 8")
+    sq.executemany("INSERT INTO kv (k, v) VALUES (?, ?)",
+                   [(k, v) for k, v in values.items()])
+
+    keys = [f"k{int(i)}" for i in rng.integers(0, n_keys, n_reads)]
+
+    # warm both paths (jit compile for sqlcached)
+    sq.execute("SELECT v FROM kv WHERE k = ? LIMIT 1", (keys[0],))
+    mc.get(keys[0])
+
+    t0 = time.perf_counter()
+    for k in keys:
+        mc.get(k)
+    mc_us = (time.perf_counter() - t0) / n_reads * 1e6
+
+    t0 = time.perf_counter()
+    for k in keys:
+        sq.execute("SELECT v FROM kv WHERE k = ? LIMIT 1", (k,))
+    sq_us = (time.perf_counter() - t0) / n_reads * 1e6
+
+    # per-size-bucket timing (reads grouped by the key's value size)
+    rows = []
+    for s in SIZES:
+        ks = [k for k in values if len(values[k]) == s][:64]
+        if not ks:
+            continue
+        reps = max(1, 200 // len(ks))
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            for k in ks:
+                mc.get(k)
+        m_us = (time.perf_counter() - t0) / (reps * len(ks)) * 1e6
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            for k in ks:
+                sq.execute("SELECT v FROM kv WHERE k = ? LIMIT 1", (k,))
+        s_us = (time.perf_counter() - t0) / (reps * len(ks)) * 1e6
+        rows.append((s, s_us, m_us))
+    return {"sqlcached_us": sq_us, "memcached_us": mc_us, "by_size": rows}
+
+
+def main():
+    res = run()
+    print("# Fig1: simple KV reads (paper: SQL cache slower here; its win "
+          "is Table 2)")
+    print("value_size,sqlcached_us,memcached_us")
+    for s, squ, mcu in res["by_size"]:
+        print(f"{s},{squ:.1f},{mcu:.1f}")
+    print(f"overall,{res['sqlcached_us']:.1f},{res['memcached_us']:.1f}")
+
+
+if __name__ == "__main__":
+    main()

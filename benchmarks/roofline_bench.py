@@ -1,0 +1,47 @@
+"""Roofline table: reads results/dryrun/*.json (written by
+repro.launch.dryrun) and prints the per-(arch x shape) three-term roofline
+for the single-pod mesh + the multi-pod pass/fail column.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+
+def load(out_dir="results/dryrun", variant="baseline"):
+    recs = {}
+    for p in pathlib.Path(out_dir).glob("*.json"):
+        r = json.loads(p.read_text())
+        if r.get("variant", "baseline") != variant:
+            continue  # §Perf variants live in their own records
+        recs[(r["arch"], r["shape"], r["mesh"])] = r
+    return recs
+
+
+def main():
+    recs = load()
+    if not recs:
+        print("# no dry-run records; run: python -m repro.launch.dryrun "
+              "--arch all --shape all --both-meshes")
+        return
+    print("arch,shape,mesh,status,compute_s,memory_s,collective_s,"
+          "dominant,useful_ratio,bytes_per_device_GB,fits,multi_pod")
+    singles = sorted(k for k in recs if k[2] == "single")
+    for arch, shape, _ in singles:
+        r = recs[(arch, shape, "single")]
+        m = recs.get((arch, shape, "multi"), {})
+        if r["status"] == "skip":
+            print(f"{arch},{shape},single,skip,,,,,,,,"
+                  f"{m.get('status', '-')}")
+            continue
+        rf = r.get("roofline", {})
+        print(f"{arch},{shape},single,{r['status']},"
+              f"{rf.get('compute_s', 0):.4f},{rf.get('memory_s', 0):.4f},"
+              f"{rf.get('collective_s', 0):.4f},{rf.get('dominant', '-')},"
+              f"{(r.get('useful_flops_ratio') or 0):.3f},"
+              f"{r.get('bytes_per_device', 0) / (1 << 30):.2f},"
+              f"{r.get('fits_16g_hbm', '-')},{m.get('status', '-')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Benchmark driver: one section per paper table/figure + the roofline
+summary. ``python -m benchmarks.run [--quick]``."""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    quick = "--quick" in sys.argv
+    print("=" * 72)
+    print("== Paper Fig. 1: simple key-value reads (SQLcached vs memcached)")
+    from benchmarks import fig1_kv_read
+    fig1_kv_read.main()
+
+    print("=" * 72)
+    print("== Paper Table 2: fine-grained forced expiry")
+    from benchmarks import table2_expiry
+    if quick:
+        res = table2_expiry.run(n=20_000)
+        print(f"(quick n=20k) page={res['sqlcached_page_ms']:.2f}ms "
+              f"user={res['sqlcached_user_ms']:.2f}ms "
+              f"flush+regen={res['memcached_flush_regen_ms']:.1f}ms")
+    else:
+        table2_expiry.main()
+
+    print("=" * 72)
+    print("== Paper §5: serving under invalidation (load spikes)")
+    from benchmarks import serving_bench
+    serving_bench.main()
+
+    print("=" * 72)
+    print("== Roofline (from dry-run artifacts)")
+    from benchmarks import roofline_bench
+    roofline_bench.main()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,92 @@
+"""The paper's own workload: a CMS page cache (header/nav/content/footer
+fragments, per-user views), comparing fine-grained invalidation against
+the memcached flush on a live request stream — reproduces the §5 claim
+("30% improvement at periods of intensive content creation, load spikes
+gone").
+
+Run: PYTHONPATH=src python examples/cms_cache_sim.py
+"""
+import time
+
+import numpy as np
+
+from repro.core.baseline import MemcachedLike
+from repro.core.daemon import SQLCached
+
+N_PAGES, N_USERS = 300, 40
+FRAGMENTS = ("header", "nav", "content", "footer")
+REQUESTS = 2000
+EDIT_EVERY = 50          # a content edit invalidates one page
+REGEN_COST_S = 10e-6     # simulated cost to regenerate one fragment
+
+rng = np.random.default_rng(0)
+
+
+def regen(n):  # pretend the app recomputes n fragments
+    time.sleep(REGEN_COST_S * n)
+
+
+def run_sqlcached():
+    db = SQLCached()
+    db.execute("CREATE TABLE frags (page INT, user INT, kind TEXT) "
+               f"CAPACITY {1 << 16} MAX_SELECT 8")
+    db.executemany(
+        "INSERT INTO frags (page, user, kind) VALUES (?, ?, ?)",
+        [(int(p), int(u), k) for p in range(N_PAGES)
+         for u in range(N_USERS // 10) for k in FRAGMENTS])
+    lat = []
+    for i in range(REQUESTS):
+        t0 = time.perf_counter()
+        if i % EDIT_EVERY == 0:
+            page = int(rng.integers(0, N_PAGES))
+            n = db.execute("DELETE FROM frags WHERE page = ?",
+                           (page,)).count
+            regen(n)  # only that page's fragments
+            db.executemany(
+                "INSERT INTO frags (page, user, kind) VALUES (?, ?, ?)",
+                [(page, 0, k) for k in FRAGMENTS])
+        p, u = int(rng.integers(0, N_PAGES)), int(rng.integers(0, 4))
+        r = db.execute(
+            "SELECT kind FROM frags WHERE page = ? AND user = ?", (p, u))
+        if r.count == 0:
+            regen(len(FRAGMENTS))
+            db.executemany(
+                "INSERT INTO frags (page, user, kind) VALUES (?, ?, ?)",
+                [(p, u, k) for k in FRAGMENTS])
+        lat.append(time.perf_counter() - t0)
+    return np.asarray(lat)
+
+
+def run_memcached():
+    mc = MemcachedLike()
+    def fill():
+        for p in range(N_PAGES):
+            for u in range(N_USERS // 10):
+                for k in FRAGMENTS:
+                    mc.set(f"{p}:{u}:{k}", "frag")
+    fill()
+    lat = []
+    n_entries = N_PAGES * (N_USERS // 10) * len(FRAGMENTS)
+    for i in range(REQUESTS):
+        t0 = time.perf_counter()
+        if i % EDIT_EVERY == 0:
+            # opaque keys: can't target one page's views -> flush + regen
+            mc.flush_all()
+            regen(n_entries)
+            fill()
+        p, u = int(rng.integers(0, N_PAGES)), int(rng.integers(0, 4))
+        got = [mc.get(f"{p}:{u}:{k}") for k in FRAGMENTS]
+        if got[0] is None:
+            regen(len(FRAGMENTS))
+            for k in FRAGMENTS:
+                mc.set(f"{p}:{u}:{k}", "frag")
+        lat.append(time.perf_counter() - t0)
+    return np.asarray(lat)
+
+
+for name, fn in (("sqlcached", run_sqlcached), ("memcached", run_memcached)):
+    lat = fn() * 1e3
+    print(f"{name:10s} mean {lat.mean():7.2f}ms  p99 {np.percentile(lat, 99):8.2f}ms"
+          f"  max {lat.max():8.2f}ms  total {lat.sum()/1e3:6.2f}s")
+print("\n(paper §5: fine-grained expiry -> ~30% overall win, load spikes "
+      "removed during intensive content creation)")

@@ -1,0 +1,135 @@
+"""Checkpointing: async, atomic, elastic.
+
+- **Atomic**: writes go to ``step_N.tmp/`` and are renamed into place —
+  a preemption mid-write never corrupts the latest checkpoint.
+- **Async**: ``AsyncCheckpointer`` snapshots to host memory on the step
+  path and writes on a background thread (the device never waits on disk).
+- **Elastic**: leaves are stored UNSHARDED with their tree paths; restore
+  re-lays-out onto *any* mesh via the logical-axis rules (a job restarted
+  at a different pod count re-shards transparently — params carry their
+  axes, not their old device layout).
+
+Format: one ``.npy`` per leaf (path-encoded name) + ``meta.json``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import shutil
+import threading
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def save(path: str | os.PathLike, step: int, tree, meta: dict | None = None):
+    """Synchronous atomic save of a pytree snapshot."""
+    root = pathlib.Path(path)
+    final = root / f"step_{step}"
+    tmp = root / f"step_{step}.tmp"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+    flat = _flatten(tree)
+    names = {}
+    dtypes = {}
+    for i, (key, leaf) in enumerate(sorted(flat.items())):
+        arr = np.asarray(jax.device_get(leaf))
+        dtypes[key] = str(arr.dtype)
+        if arr.dtype.name == "bfloat16":  # npy stores f32; restored as bf16
+            arr = arr.astype(np.float32)
+        np.save(tmp / f"leaf_{i}.npy", arr)
+        names[key] = f"leaf_{i}.npy"
+    (tmp / "meta.json").write_text(json.dumps(
+        {"step": step, "names": names, "dtypes": dtypes,
+         "meta": meta or {}}))
+    if final.exists():
+        shutil.rmtree(final)
+    tmp.rename(final)
+    return final
+
+
+def latest_step(path: str | os.PathLike) -> int | None:
+    root = pathlib.Path(path)
+    if not root.exists():
+        return None
+    steps = [int(p.name.split("_")[1]) for p in root.glob("step_*")
+             if not p.name.endswith(".tmp")]
+    return max(steps) if steps else None
+
+
+def restore(path: str | os.PathLike, step: int, like_tree,
+            shardings=None):
+    """Restore into the structure of ``like_tree``; with ``shardings``
+    (a matching tree of NamedShardings) each leaf is device_put onto the
+    CURRENT mesh — elastic re-sharding across mesh changes."""
+    root = pathlib.Path(path) / f"step_{step}"
+    info = json.loads((root / "meta.json").read_text())
+    names = info["names"]
+    flat_like = _flatten(like_tree)
+    flat_shard = _flatten(shardings) if shardings is not None else {}
+    leaves_by_key = {}
+    import jax.numpy as jnp
+    for key in flat_like:
+        arr = np.load(root / names[key])
+        like = flat_like[key]
+        sh = flat_shard.get(key)
+        out = (jax.device_put(arr, sh) if sh is not None
+               else jax.device_put(arr))
+        if hasattr(like, "dtype") and out.dtype != like.dtype:
+            out = out.astype(like.dtype)  # jnp cast handles bf16
+        leaves_by_key[key] = out
+    # rebuild in like_tree's structure
+    paths, treedef = jax.tree_util.tree_flatten_with_path(like_tree)
+    ordered = []
+    for path, _ in paths:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        ordered.append(leaves_by_key[key])
+    return jax.tree_util.tree_unflatten(treedef, ordered), info
+
+
+class AsyncCheckpointer:
+    """Snapshot on the step path, write on a background thread."""
+
+    def __init__(self, path: str | os.PathLike, keep: int = 3):
+        self.path = pathlib.Path(path)
+        self.keep = keep
+        self._thread: threading.Thread | None = None
+        self.saved_steps: list[int] = []
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def save_async(self, step: int, tree, meta: dict | None = None):
+        self.wait()  # one in flight
+        snapshot = jax.tree.map(lambda a: np.asarray(jax.device_get(a)),
+                                tree)
+
+        def work():
+            save(self.path, step, snapshot, meta)
+            self.saved_steps.append(step)
+            self._gc()
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def _gc(self):
+        steps = sorted(int(p.name.split("_")[1])
+                       for p in self.path.glob("step_*")
+                       if not p.name.endswith(".tmp"))
+        for s in steps[: -self.keep]:
+            shutil.rmtree(self.path / f"step_{s}", ignore_errors=True)

@@ -1,0 +1,94 @@
+"""Assigned input shapes and per-(arch x shape) input specs.
+
+``input_specs`` returns ShapeDtypeStructs only — the dry-run lowers
+against them with zero allocation (weak-type-correct, shardable).
+LM shapes are seq_len x global_batch; decode_*/long_* lower serve_step
+(one token against a seq_len cache), not train_step.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES: dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+# long_500k needs sub-quadratic attention: run only for SSM/hybrid archs
+# (O(1)-state decode). Pure full-attention archs skip it (DESIGN.md §4).
+_LONG_OK_FAMILIES = ("ssm", "hybrid")
+
+
+def applicable(cfg: ModelConfig, shape: str) -> bool:
+    if shape == "long_500k":
+        return cfg.family in _LONG_OK_FAMILIES
+    return True
+
+
+def skip_reason(cfg: ModelConfig, shape: str) -> str | None:
+    if applicable(cfg, shape):
+        return None
+    return (f"{cfg.name} is pure full-attention ({cfg.family}); 500k-token "
+            "decode requires sub-quadratic attention (DESIGN.md §4)")
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def token_split(cfg: ModelConfig, seq_len: int) -> tuple[int, int]:
+    """(frontend_len, text_len) for decoder inputs of total length seq."""
+    if cfg.frontend == "vision":
+        fl = min(cfg.frontend_len, seq_len // 2)
+        return fl, seq_len - fl
+    return 0, seq_len
+
+
+def train_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    fl, st = token_split(cfg, s)
+    specs = {
+        "tokens": _sds((b, st), jnp.int32),
+        "labels": _sds((b, s), jnp.int32),
+        "loss_mask": _sds((b, s), jnp.float32),
+    }
+    if fl:
+        specs["frontend"] = _sds((b, fl, cfg.d_model), cfg.dtype)
+    if cfg.is_encdec:
+        specs["enc_frames"] = _sds((b, cfg.frontend_len, cfg.d_model),
+                                   cfg.dtype)
+        specs["tokens"] = _sds((b, s), jnp.int32)  # decoder tokens, full s
+    return specs
+
+
+def prefill_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    specs = train_specs(cfg, shape)
+    specs.pop("labels")
+    specs.pop("loss_mask")
+    return specs
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """One new token against a cache of ``seq_len`` tokens."""
+    b = shape.global_batch
+    specs = {
+        "tokens": _sds((b,), jnp.int32),
+        "lengths": _sds((b,), jnp.int32),
+    }
+    return specs

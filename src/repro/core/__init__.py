@@ -1,0 +1,21 @@
+"""Core: the paper's contribution — a relational cache plane in JAX.
+
+Public API:
+    SQLCached      — the daemon (SQL in, device arrays out)
+    TableSchema    — schema objects for direct (no-SQL) use
+    make_schema    — schema constructor
+    table          — functional table ops (jit-composable)
+    MemcachedLike  — the opaque-KV baseline from the paper's comparison
+"""
+from repro.core.baseline import MemcachedLike
+from repro.core.daemon import Result, SQLCached
+from repro.core.schema import ExpiryPolicy, TableSchema, make_schema
+
+__all__ = [
+    "SQLCached",
+    "Result",
+    "TableSchema",
+    "ExpiryPolicy",
+    "make_schema",
+    "MemcachedLike",
+]

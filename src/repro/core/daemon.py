@@ -1,0 +1,369 @@
+"""SQLCached: the cache daemon object (host-facing management plane).
+
+Faithful structure of the paper's daemon, re-hosted on an accelerator:
+
+- clients speak a subset of SQL (``execute``/``executemany``; optionally
+  over TCP via core/protocol.py — "web-enabling");
+- statements are parsed once and compiled once into jitted executors
+  (the prepared-statement cache ≙ jax's compilation cache);
+- TEXT values are interned host-side to int64 ids (the TPU has no strings;
+  DESIGN.md §2) and re-materialized in results;
+- a single mutation stream per table (functional state threading) mirrors
+  the paper's single-threaded request execution — and is exactly what makes
+  the pool safely usable inside pjit'd serving steps;
+- the paper's third automatic expiry condition (every N cache operations)
+  is triggered here, calling the device-side age/row-count expiry.
+
+The daemon is also the serving plane's metadata engine: `table_state` /
+`swap_table_state` hand the device arrays to jitted serving steps with
+zero copies.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Iterable, Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import predicate as P
+from repro.core import sqlparse as S
+from repro.core import table as T
+from repro.core.schema import ExpiryPolicy, TableSchema, make_schema
+
+
+class Interner:
+    """Host-side string<->id map (TEXT columns / params)."""
+
+    def __init__(self):
+        self._fwd: dict[str, int] = {}
+        self._rev: list[str] = [""]  # id 0 = empty/NULL
+
+    def intern(self, s: str) -> int:
+        i = self._fwd.get(s)
+        if i is None:
+            i = len(self._rev)
+            self._fwd[s] = i
+            self._rev.append(s)
+        return i
+
+    def lookup(self, i: int) -> str:
+        if 0 <= i < len(self._rev):
+            return self._rev[i]
+        return f"<unknown:{i}>"
+
+
+@dataclasses.dataclass
+class Result:
+    """Result of one statement."""
+
+    count: int = 0
+    rows: list[dict] | None = None
+    arrays: dict[str, np.ndarray] | None = None
+    payloads: dict[str, jax.Array] | None = None
+    row_ids: np.ndarray | None = None
+    value: Any = None  # aggregate result
+
+
+@dataclasses.dataclass
+class _Table:
+    schema: TableSchema
+    state: dict
+    host_ops: int = 0
+
+
+def _bucket(n: int) -> int:
+    """Pad batch sizes to powers of two to bound executor retraces."""
+    b = 1
+    while b < n:
+        b *= 2
+    return b
+
+
+class SQLCached:
+    def __init__(self, auto_expire: bool = True):
+        self.tables: dict[str, _Table] = {}
+        self.interner = Interner()
+        self.auto_expire = auto_expire
+        self._stmts: dict[str, S.Statement] = {}
+        self._execs: dict[tuple, Any] = {}
+
+    # ------------------------------------------------------------- plumbing
+    def _parse(self, sql: str) -> S.Statement:
+        stmt = self._stmts.get(sql)
+        if stmt is None:
+            stmt = S.parse(sql)
+            self._stmts[sql] = stmt
+        return stmt
+
+    def _table(self, name: str) -> _Table:
+        t = self.tables.get(name)
+        if t is None:
+            raise S.SQLError(f"no such table {name!r}")
+        return t
+
+    def _intern_ast(self, node):
+        return P.map_consts(
+            node, lambda v: self.interner.intern(v) if isinstance(v, str) else v
+        )
+
+    def _prep_params(self, params: Sequence[Any]) -> tuple:
+        out = []
+        for p in params:
+            if isinstance(p, str):
+                p = self.interner.intern(p)
+            out.append(p)
+        return tuple(out)
+
+    def _executor(self, key: tuple, builder):
+        fn = self._execs.get(key)
+        if fn is None:
+            fn = builder()
+            self._execs[key] = fn
+        return fn
+
+    # ----------------------------------------------------------- statements
+    def execute(
+        self,
+        sql: str,
+        params: Sequence[Any] = (),
+        payloads: Mapping[str, Any] | None = None,
+    ) -> Result:
+        stmt = self._parse(sql)
+        if isinstance(stmt, S.CreateTable):
+            return self._do_create(stmt)
+        if isinstance(stmt, S.DropTable):
+            self.tables.pop(stmt.table, None)
+            return Result()
+        if isinstance(stmt, S.Insert):
+            return self.executemany(sql, [tuple(params)],
+                                    [payloads] if payloads else None)
+        if isinstance(stmt, S.Select):
+            return self._do_select(stmt, self._prep_params(params))
+        if isinstance(stmt, S.Update):
+            return self._do_update(stmt, self._prep_params(params))
+        if isinstance(stmt, S.Delete):
+            return self._do_delete(stmt, self._prep_params(params))
+        if isinstance(stmt, S.Expire):
+            return self._do_expire(stmt.table)
+        if isinstance(stmt, S.Flush):
+            t = self._table(stmt.table)
+            t.state, n = jax.jit(T.flush, static_argnums=0)(t.schema, t.state)
+            return Result(count=int(n))
+        raise S.SQLError(f"unhandled statement {stmt!r}")
+
+    def _do_create(self, stmt: S.CreateTable) -> Result:
+        from repro.core.sqlparse import _PAYLOAD_DTYPES
+
+        schema = make_schema(
+            stmt.table,
+            list(stmt.columns),
+            [(n, s, _PAYLOAD_DTYPES[d]) for (n, s, d) in stmt.payloads],
+            capacity=stmt.capacity,
+            max_select=stmt.max_select,
+            expiry=ExpiryPolicy(stmt.ttl, stmt.max_rows, stmt.ops_interval),
+        )
+        self.tables[stmt.table] = _Table(schema, T.init_state(schema))
+        return Result()
+
+    def executemany(
+        self,
+        sql: str,
+        params_list: Sequence[Sequence[Any]],
+        payloads_list: Sequence[Mapping[str, Any]] | None = None,
+    ) -> Result:
+        """Batched INSERT — rows are padded to a power-of-two bucket so one
+        compiled executor serves many batch sizes."""
+        stmt = self._parse(sql)
+        if not isinstance(stmt, S.Insert):
+            raise S.SQLError("executemany only supports INSERT")
+        t = self._table(stmt.table)
+        schema = t.schema
+        cols = stmt.columns or schema.column_names[: len(stmt.values)]
+        if len(cols) != len(stmt.values):
+            raise S.SQLError("INSERT column/value count mismatch")
+        n = len(params_list)
+        if n == 0:
+            return Result(count=0)
+        b = _bucket(n)
+        # host-side param matrix [b, n_params]
+        n_params = max((P.collect_params(v) for v in stmt.values), default=0)
+        if stmt.ttl is not None:
+            n_params = max(n_params, P.collect_params(stmt.ttl))
+        pm = []
+        for i in range(b):
+            row = params_list[min(i, n - 1)]
+            pm.append(self._prep_params(row))
+        param_cols = tuple(
+            np.asarray([pm[i][j] for i in range(b)]) for j in range(n_params)
+        )
+        row_mask = np.arange(b) < n
+
+        pl_args = {}
+        for p in schema.payloads:
+            if payloads_list and p.name in (payloads_list[0] or {}):
+                arrs = [np.asarray(pl[p.name]) for pl in payloads_list]
+                pad = np.concatenate([arrs, [arrs[-1]] * (b - n)]) if b > n else np.stack(arrs)
+                pl_args[p.name] = pad
+
+        values_ast = tuple(self._intern_ast(v) for v in stmt.values)
+        ttl_ast = self._intern_ast(stmt.ttl) if stmt.ttl is not None else None
+        key = ("insert", schema, values_ast, ttl_ast, tuple(cols), b,
+               tuple(sorted(pl_args)))
+
+        def build():
+            def fn(state, param_cols, pl_args, row_mask):
+                values = {}
+                for cname, vast in zip(cols, values_ast):
+                    v = P.eval_expr(vast, {}, param_cols)
+                    values[cname] = jnp.broadcast_to(jnp.asarray(v), (b,))
+                ttl = 0
+                if ttl_ast is not None:
+                    ttl = P.eval_expr(ttl_ast, {}, param_cols)
+                return T.insert(schema, state, values, pl_args, row_mask, ttl)
+
+            return jax.jit(fn, donate_argnums=0)
+
+        fn = self._executor(key, build)
+        t.state, slots, evicted = fn(t.state, param_cols, pl_args, row_mask)
+        self._post_op(t)
+        return Result(count=n, row_ids=np.asarray(slots)[:n],
+                      value=int(evicted))
+
+    def _do_select(self, stmt: S.Select, params: tuple) -> Result:
+        t = self._table(stmt.table)
+        schema = t.schema
+        where = self._intern_ast(stmt.where)
+        if stmt.agg is not None:
+            agg, col = stmt.agg
+            key = ("agg", schema, agg, col, where)
+            fn = self._executor(
+                key,
+                lambda: jax.jit(
+                    lambda st, pr: T.aggregate(schema, st, agg, col, where, pr)
+                ),
+            )
+            t.state, val = fn(t.state, params)
+            self._post_op(t)
+            return Result(value=np.asarray(val).item())
+        columns = stmt.columns or schema.column_names
+        limit = stmt.limit if stmt.limit is not None else schema.max_select
+        key = ("select", schema, where, tuple(columns), stmt.payloads,
+               stmt.order_by, stmt.descending, limit)
+
+        def build():
+            def fn(st, pr):
+                return T.select(
+                    schema, st, where, pr,
+                    columns=columns, order_by=stmt.order_by,
+                    descending=stmt.descending, limit=limit,
+                    with_payloads=stmt.payloads,
+                )
+            return jax.jit(fn, donate_argnums=0)
+
+        fn = self._executor(key, build)
+        t.state, res = fn(t.state, params)
+        self._post_op(t)
+        return self._materialize(schema, columns, res, limit)
+
+    def _materialize(self, schema, columns, res, limit) -> Result:
+        count = int(res["count"])
+        shown = min(count, limit)
+        present = np.asarray(res["present"])
+        arrays = {}
+        for c in columns:
+            a = np.asarray(res["rows"][c])[:shown]
+            arrays[c] = a
+        rows = []
+        text_cols = set(schema.text_columns())
+        for i in range(shown):
+            if not present[i]:
+                continue
+            row = {}
+            for c in columns:
+                v = arrays[c][i].item()
+                if c in text_cols:
+                    v = self.interner.lookup(int(v))
+                row[c] = v
+            rows.append(row)
+        return Result(
+            count=count, rows=rows, arrays=arrays,
+            payloads=dict(res["payloads"]),
+            row_ids=np.asarray(res["row_ids"])[:shown],
+        )
+
+    def _do_update(self, stmt: S.Update, params: tuple) -> Result:
+        t = self._table(stmt.table)
+        schema = t.schema
+        where = self._intern_ast(stmt.where)
+        sets = tuple((c, self._intern_ast(e)) for c, e in stmt.sets)
+        key = ("update", schema, where, sets)
+
+        def build():
+            def fn(st, pr):
+                return T.update(schema, st, where, dict(sets), pr)
+            return jax.jit(fn, donate_argnums=0)
+
+        fn = self._executor(key, build)
+        t.state, n = fn(t.state, params)
+        self._post_op(t)
+        return Result(count=int(n))
+
+    def _do_delete(self, stmt: S.Delete, params: tuple) -> Result:
+        t = self._table(stmt.table)
+        schema = t.schema
+        where = self._intern_ast(stmt.where)
+        key = ("delete", schema, where)
+
+        def build():
+            def fn(st, pr):
+                return T.delete(schema, st, where, pr)
+            return jax.jit(fn, donate_argnums=0)
+
+        fn = self._executor(key, build)
+        t.state, n = fn(t.state, params)
+        self._post_op(t)
+        return Result(count=int(n))
+
+    def _do_expire(self, name: str) -> Result:
+        t = self._table(name)
+        key = ("expire", t.schema)
+        fn = self._executor(
+            key, lambda: jax.jit(lambda st: T.expire(t.schema, st),
+                                 donate_argnums=0)
+        )
+        t.state, n = fn(t.state)
+        return Result(count=int(n))
+
+    def _post_op(self, t: _Table):
+        """Paper §4.3 condition 3: run auto-expiry every N operations."""
+        t.host_ops += 1
+        iv = t.schema.expiry.ops_interval
+        if self.auto_expire and iv > 0 and t.host_ops % iv == 0:
+            self._do_expire(t.schema.name)
+
+    # ----------------------------------------------------- serving-plane API
+    def table_state(self, name: str) -> dict:
+        """Zero-copy handle to the device-resident table state (for jitted
+        serving steps that read the pool directly)."""
+        return self._table(name).state
+
+    def swap_table_state(self, name: str, state: dict) -> None:
+        """Install a state produced by an external jitted step."""
+        self._table(name).state = state
+
+    def schema(self, name: str) -> TableSchema:
+        return self._table(name).schema
+
+    def live_rows(self, name: str) -> int:
+        return int(T.live_count(self._table(name).state))
+
+    def advance_clock(self, ticks: int, table: str | None = None) -> None:
+        """Advance the logical clock (tests / wall-time sync)."""
+        names = [table] if table else list(self.tables)
+        for nm in names:
+            t = self._table(nm)
+            st = dict(t.state)
+            st["clock"] = st["clock"] + jnp.asarray(ticks, dtype=st["clock"].dtype)
+            t.state = st

@@ -1,0 +1,177 @@
+"""KV-block pool: the paper's cache table specialized for transformer KV.
+
+This is SQLcached's central claim applied to serving: KV blocks are
+*complex data* (typed tensors) whose metadata (sequence, user, position,
+prefix hash, access time, ttl) lives in queryable columns. One row = one
+block of ``block_size`` token positions across *all* layers, so a single
+page table serves the whole model.
+
+Table schema (built by :func:`kv_schema`):
+
+    columns:  slot INT         -- batch slot of the owning request
+              seq_id INT       -- request/sequence id
+              user_id INT      -- session owner (per-user expiry, §4.3)
+              pos_block INT    -- block index within the sequence
+              prefix_hash INT  -- rolling hash of tokens up to block end
+    payload:  kv TENSOR(layers, 2, block, kv_heads, head_dim)
+
+Fine-grained expiry — the Table 2 operations — are plain SQL against
+this table::
+
+    DELETE FROM kv WHERE seq_id = ?     -- finish one request   (~"one page")
+    DELETE FROM kv WHERE user_id = ?    -- end one user session (~"one user")
+    FLUSH kv                            -- the memcached way
+
+The functions here are pure and jit-composable; the serving engine
+threads the table state through its scheduler ticks.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import predicate as P
+from repro.core import table as T
+from repro.core.schema import ExpiryPolicy, TableSchema, make_schema
+
+KV_COLUMNS = (
+    ("slot", "INT"),
+    ("seq_id", "INT"),
+    ("user_id", "INT"),
+    ("pos_block", "INT"),
+    ("prefix_hash", "INT"),
+)
+
+
+def kv_schema(
+    *,
+    layers: int,
+    block_size: int,
+    kv_heads: int,
+    head_dim: int,
+    capacity: int,
+    dtype: Any = jnp.bfloat16,
+    name: str = "kv",
+    expiry: ExpiryPolicy = ExpiryPolicy(),
+    max_select: int = 256,
+) -> TableSchema:
+    payload = ("kv", (layers, 2, block_size, kv_heads, head_dim), dtype)
+    return make_schema(
+        name, list(KV_COLUMNS), [payload],
+        capacity=capacity, max_select=max_select, expiry=expiry,
+    )
+
+
+def init_pool(schema: TableSchema) -> dict:
+    return T.init_state(schema)
+
+
+def append_blocks(
+    schema: TableSchema,
+    state: dict,
+    *,
+    slot: jax.Array,        # [n] int32
+    seq_id: jax.Array,      # [n]
+    user_id: jax.Array,     # [n]
+    pos_block: jax.Array,   # [n]
+    prefix_hash: jax.Array, # [n]
+    kv: jax.Array,          # [n, layers, 2, block, kv_heads, head_dim]
+    row_mask: jax.Array | None = None,
+    ttl: int | jax.Array = 0,
+):
+    """Insert ``n`` KV blocks; returns (state, slots, evicted)."""
+    values = {
+        "slot": slot, "seq_id": seq_id, "user_id": user_id,
+        "pos_block": pos_block, "prefix_hash": prefix_hash,
+    }
+    return T.insert(schema, state, values, {"kv": kv}, row_mask, ttl)
+
+
+def page_table(schema: TableSchema, state: dict, *, max_slots: int,
+               max_blocks: int) -> jax.Array:
+    """Materialize [max_slots, max_blocks] page table of pool row ids.
+
+    Entry (s, b) = row index of the valid block with slot==s, pos_block==b;
+    missing entries hold ``capacity`` (the sentinel the paged-attention
+    kernel masks on). One O(capacity) scatter — the TPU-native 'index'.
+    """
+    cap = schema.capacity
+    slot = state["cols"]["slot"]
+    pos = state["cols"]["pos_block"]
+    valid = state["valid"]
+    in_range = valid & (slot >= 0) & (slot < max_slots) & (pos >= 0) & (pos < max_blocks)
+    s = jnp.where(in_range, slot, max_slots)  # out-of-range -> dropped
+    b = jnp.where(in_range, pos, 0)
+    pt = jnp.full((max_slots + 1, max_blocks), cap, dtype=jnp.int32)
+    pt = pt.at[s, b].set(jnp.arange(cap, dtype=jnp.int32), mode="drop")
+    return pt[:max_slots]
+
+
+def seq_lengths(schema: TableSchema, state: dict, *, max_slots: int,
+                block_size: int) -> jax.Array:
+    """Per-slot cached length in tokens = (#blocks) * block_size."""
+    cap = schema.capacity
+    slot = state["cols"]["slot"]
+    valid = state["valid"]
+    s = jnp.where(valid & (slot >= 0) & (slot < max_slots), slot, max_slots)
+    counts = jnp.zeros((max_slots + 1,), dtype=jnp.int32)
+    counts = counts.at[s].add(1, mode="drop")
+    return counts[:max_slots] * block_size
+
+
+def gather_blocks(state: dict, pages: jax.Array) -> jax.Array:
+    """Gather KV payloads through a page table. pages: [slots, blocks] row
+    ids (sentinel = capacity → zeros). Returns
+    [slots, blocks, layers, 2, block, kv_heads, head_dim]."""
+    pool = state["payloads"]["kv"]
+    cap = pool.shape[0]
+    safe = jnp.minimum(pages, cap - 1)
+    out = pool[safe]
+    mask = (pages < cap)[..., None, None, None, None, None]
+    return jnp.where(mask, out, jnp.zeros((), dtype=pool.dtype))
+
+
+def delete_seq(schema: TableSchema, state: dict, seq_id) -> tuple[dict, jax.Array]:
+    """Fine-grained expiry: one request's blocks (paper's 'single page')."""
+    return T.delete(schema, state, P.BinOp("=", P.Col("seq_id"), P.Param(0)),
+                    (seq_id,))
+
+
+def delete_user(schema: TableSchema, state: dict, user_id) -> tuple[dict, jax.Array]:
+    """Fine-grained expiry: one user's sessions (paper's 'single user')."""
+    return T.delete(schema, state, P.BinOp("=", P.Col("user_id"), P.Param(0)),
+                    (user_id,))
+
+
+def find_prefix(schema: TableSchema, state: dict, prefix_hash,
+                *, limit: int = 64):
+    """Prefix-cache lookup: all blocks whose prefix hash matches — the
+    paper's 'retrieval by complex criteria' reused as transformer prefix
+    caching. Returns (state, result) with row ids + pos_block columns."""
+    where = P.BinOp("=", P.Col("prefix_hash"), P.Param(0))
+    return T.select(schema, state, where, (prefix_hash,),
+                    columns=("pos_block", "seq_id"), limit=limit)
+
+
+def rolling_prefix_hashes(tokens: jax.Array, block_size: int) -> jax.Array:
+    """Deterministic rolling hash per block boundary (host or device).
+
+    tokens: [seq] int32 -> [seq // block_size] int32 hashes. Uses a
+    multiplicative rolling hash folded per block; stable across runs.
+    """
+    seq = tokens.shape[0]
+    nblk = seq // block_size
+    tok = tokens[: nblk * block_size].reshape(nblk, block_size).astype(jnp.uint32)
+
+    def block_fold(carry, blk):
+        h = carry
+        def tok_fold(h, t):
+            return h * jnp.uint32(1000003) + t + jnp.uint32(1), None
+        h, _ = jax.lax.scan(tok_fold, h, blk)
+        return h, h
+
+    _, hashes = jax.lax.scan(block_fold, jnp.uint32(2166136261), tok)
+    # map into positive int32 range (column dtype)
+    return (hashes & jnp.uint32(0x7FFFFFFF)).astype(jnp.int32)

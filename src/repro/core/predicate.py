@@ -1,0 +1,256 @@
+"""Predicate / expression AST and its vectorized JAX evaluator.
+
+This is the query-execution core of the cache: a ``WHERE`` clause is parsed
+once into this AST and *compiled once* into a jitted masked-scan over the
+table's columns (the TPU-native replacement for SQLite's B-tree walks —
+see DESIGN.md §2). ``Param`` nodes (`?` placeholders) keep the compiled
+executor reusable across calls, mirroring SQLcached's prepared-statement
+cache with jit's compilation cache.
+
+Evaluation contract: ``eval_expr(node, cols, params) -> array[capacity]``
+broadcast over rows; predicates return bool masks. The caller ANDs the
+mask with the table's validity bits.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+import jax.numpy as jnp
+
+
+class Node:
+    """Base AST node."""
+
+    __slots__ = ()
+
+
+@dataclasses.dataclass(frozen=True)
+class Col(Node):
+    name: str
+
+
+@dataclasses.dataclass(frozen=True)
+class Const(Node):
+    value: Any  # python scalar (str consts are interned before eval)
+
+
+@dataclasses.dataclass(frozen=True)
+class Param(Node):
+    index: int  # position of the `?` in the statement
+
+
+@dataclasses.dataclass(frozen=True)
+class BinOp(Node):
+    op: str  # = != < <= > >= + - * / %
+    left: Node
+    right: Node
+
+
+@dataclasses.dataclass(frozen=True)
+class And(Node):
+    left: Node
+    right: Node
+
+
+@dataclasses.dataclass(frozen=True)
+class Or(Node):
+    left: Node
+    right: Node
+
+
+@dataclasses.dataclass(frozen=True)
+class Not(Node):
+    child: Node
+
+
+@dataclasses.dataclass(frozen=True)
+class Between(Node):
+    expr: Node
+    low: Node
+    high: Node
+
+
+@dataclasses.dataclass(frozen=True)
+class InList(Node):
+    expr: Node
+    items: tuple[Node, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class Func(Node):
+    """Scalar function call: ABS, MIN, MAX (2-arg scalar forms), UPPER is
+    host-side only (text) and rejected at compile time on device."""
+
+    name: str
+    args: tuple[Node, ...]
+
+
+_CMP = {
+    "=": lambda a, b: a == b,
+    "==": lambda a, b: a == b,
+    "!=": lambda a, b: a != b,
+    "<>": lambda a, b: a != b,
+    "<": lambda a, b: a < b,
+    "<=": lambda a, b: a <= b,
+    ">": lambda a, b: a > b,
+    ">=": lambda a, b: a >= b,
+}
+
+_ARITH = {
+    "+": lambda a, b: a + b,
+    "-": lambda a, b: a - b,
+    "*": lambda a, b: a * b,
+    "/": lambda a, b: a / b,
+    "%": lambda a, b: a % b,
+}
+
+_FUNCS = {
+    "ABS": lambda args: jnp.abs(args[0]),
+    "MIN2": lambda args: jnp.minimum(args[0], args[1]),
+    "MAX2": lambda args: jnp.maximum(args[0], args[1]),
+}
+
+
+def eval_expr(node: Node, cols: dict, params: Sequence[Any]):
+    """Evaluate an expression AST over column arrays. Returns an array
+    broadcastable to [capacity] (or a scalar for const-only expressions)."""
+    if isinstance(node, Col):
+        if node.name not in cols:
+            raise KeyError(f"unknown column {node.name!r}")
+        return cols[node.name]
+    if isinstance(node, Const):
+        return node.value
+    if isinstance(node, Param):
+        return params[node.index]
+    if isinstance(node, BinOp):
+        a = eval_expr(node.left, cols, params)
+        b = eval_expr(node.right, cols, params)
+        if node.op in _CMP:
+            return _CMP[node.op](a, b)
+        if node.op in _ARITH:
+            return _ARITH[node.op](a, b)
+        raise ValueError(f"unknown operator {node.op!r}")
+    if isinstance(node, And):
+        return eval_expr(node.left, cols, params) & eval_expr(node.right, cols, params)
+    if isinstance(node, Or):
+        return eval_expr(node.left, cols, params) | eval_expr(node.right, cols, params)
+    if isinstance(node, Not):
+        return ~eval_expr(node.child, cols, params)
+    if isinstance(node, Between):
+        x = eval_expr(node.expr, cols, params)
+        lo = eval_expr(node.low, cols, params)
+        hi = eval_expr(node.high, cols, params)
+        return (x >= lo) & (x <= hi)
+    if isinstance(node, InList):
+        x = eval_expr(node.expr, cols, params)
+        mask = None
+        for item in node.items:
+            m = x == eval_expr(item, cols, params)
+            mask = m if mask is None else (mask | m)
+        if mask is None:  # IN () is false
+            return jnp.zeros_like(jnp.asarray(x), dtype=bool) & False
+        return mask
+    if isinstance(node, Func):
+        fname = node.name.upper()
+        if fname in ("MIN", "MAX") and len(node.args) == 2:
+            fname += "2"
+        if fname not in _FUNCS:
+            raise ValueError(f"function {node.name!r} not supported on device")
+        return _FUNCS[fname]([eval_expr(a, cols, params) for a in node.args])
+    raise TypeError(f"unknown AST node {node!r}")
+
+
+def eval_predicate(node: Node | None, cols: dict, params: Sequence[Any], capacity: int):
+    """Evaluate a WHERE clause to a bool[capacity] mask (None = all rows)."""
+    if node is None:
+        return jnp.ones((capacity,), dtype=bool)
+    mask = eval_expr(node, cols, params)
+    mask = jnp.asarray(mask)
+    if mask.dtype != jnp.bool_:
+        mask = mask != 0
+    return jnp.broadcast_to(mask, (capacity,))
+
+
+def collect_params(node: Node | None) -> int:
+    """Number of `?` placeholders in an AST (max index + 1)."""
+    mx = -1
+
+    def walk(n):
+        nonlocal mx
+        if n is None:
+            return
+        if isinstance(n, Param):
+            mx = max(mx, n.index)
+        elif isinstance(n, (BinOp, And, Or)):
+            walk(n.left), walk(n.right)
+        elif isinstance(n, Not):
+            walk(n.child)
+        elif isinstance(n, Between):
+            walk(n.expr), walk(n.low), walk(n.high)
+        elif isinstance(n, InList):
+            walk(n.expr)
+            for i in n.items:
+                walk(i)
+        elif isinstance(n, Func):
+            for a in n.args:
+                walk(a)
+
+    walk(node)
+    return mx + 1
+
+
+def collect_text_consts(node: Node | None) -> list[Const]:
+    """All string-valued Const nodes (to be interned before compilation)."""
+    out: list[Const] = []
+
+    def walk(n):
+        if n is None:
+            return
+        if isinstance(n, Const) and isinstance(n.value, str):
+            out.append(n)
+        elif isinstance(n, (BinOp, And, Or)):
+            walk(n.left), walk(n.right)
+        elif isinstance(n, Not):
+            walk(n.child)
+        elif isinstance(n, Between):
+            walk(n.expr), walk(n.low), walk(n.high)
+        elif isinstance(n, InList):
+            walk(n.expr)
+            for i in n.items:
+                walk(i)
+        elif isinstance(n, Func):
+            for a in n.args:
+                walk(a)
+
+    walk(node)
+    return out
+
+
+def map_consts(node: Node | None, fn) -> Node | None:
+    """Return a copy of the AST with every Const passed through ``fn``."""
+    if node is None:
+        return None
+    if isinstance(node, Const):
+        return Const(fn(node.value))
+    if isinstance(node, (Col, Param)):
+        return node
+    if isinstance(node, BinOp):
+        return BinOp(node.op, map_consts(node.left, fn), map_consts(node.right, fn))
+    if isinstance(node, And):
+        return And(map_consts(node.left, fn), map_consts(node.right, fn))
+    if isinstance(node, Or):
+        return Or(map_consts(node.left, fn), map_consts(node.right, fn))
+    if isinstance(node, Not):
+        return Not(map_consts(node.child, fn))
+    if isinstance(node, Between):
+        return Between(
+            map_consts(node.expr, fn), map_consts(node.low, fn), map_consts(node.high, fn)
+        )
+    if isinstance(node, InList):
+        return InList(
+            map_consts(node.expr, fn), tuple(map_consts(i, fn) for i in node.items)
+        )
+    if isinstance(node, Func):
+        return Func(node.name, tuple(map_consts(a, fn) for a in node.args))
+    raise TypeError(f"unknown AST node {node!r}")

@@ -1,0 +1,249 @@
+"""The "web-enabling" layer: a memcached-style text protocol carrying SQL.
+
+Faithful to the paper's §3: a daemon reachable over TCP *and* unix
+sockets, line-based text protocol (in the spirit of early TCP protocols),
+asynchronous connection handling with a **single execution stream** —
+at any moment only one request is being executed against the store
+(SQLcached used poll(); we use asyncio, the modern POSIX equivalent).
+
+Wire format (CRLF or LF tolerated):
+
+    client:  EXEC <sql>                 -- start a statement
+             ARG I <int>                -- bind next `?` (integer)
+             ARG F <float>              --   (float)
+             ARG S <base64(utf-8)>      --   (text)
+             GO                         -- execute
+
+    server:  COUNT <n>                  -- rows affected / matched
+             VALUE <v>                  -- aggregate result (if any)
+             ROW <json>                 -- one line per returned row
+             END                        -- statement finished
+             ERR <message>              -- on any failure
+
+Tensor payloads never cross this socket — they live on the accelerator;
+the protocol is the management/metadata plane (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import asyncio
+import base64
+import json
+import socket
+from typing import Any, Sequence
+
+from repro.core.daemon import Result, SQLCached
+
+_MAX_LINE = 1 << 20
+
+
+def _encode_arg(v: Any) -> str:
+    if isinstance(v, bool):
+        return f"ARG I {int(v)}"
+    if isinstance(v, int):
+        return f"ARG I {v}"
+    if isinstance(v, float):
+        return f"ARG F {v!r}"
+    if isinstance(v, str):
+        return "ARG S " + base64.b64encode(v.encode()).decode()
+    raise TypeError(f"unsupported arg type {type(v)!r}")
+
+
+def _decode_arg(kind: str, raw: str) -> Any:
+    if kind == "I":
+        return int(raw)
+    if kind == "F":
+        return float(raw)
+    if kind == "S":
+        return base64.b64decode(raw).decode()
+    raise ValueError(f"bad ARG kind {kind!r}")
+
+
+class SQLCachedServer:
+    """Asyncio daemon wrapping one SQLCached store.
+
+    ``serve_forever`` listens on TCP and/or a unix socket. Connection
+    handling is async; statement execution is serialized through
+    ``self._exec_lock`` (single execution stream, as in the paper).
+    """
+
+    def __init__(self, db: SQLCached | None = None):
+        self.db = db or SQLCached()
+        self._exec_lock = asyncio.Lock()
+        self._servers: list[asyncio.AbstractServer] = []
+        self.stats = {"connections": 0, "statements": 0, "errors": 0}
+
+    # ------------------------------------------------------------ lifecycle
+    async def start(
+        self,
+        host: str | None = "127.0.0.1",
+        port: int | None = 0,
+        unix_path: str | None = None,
+    ) -> tuple[str, int] | None:
+        addr = None
+        if host is not None and port is not None:
+            srv = await asyncio.start_server(self._handle, host, port)
+            self._servers.append(srv)
+            addr = srv.sockets[0].getsockname()[:2]
+        if unix_path is not None:
+            srv = await asyncio.start_unix_server(self._handle, unix_path)
+            self._servers.append(srv)
+        return addr
+
+    async def stop(self) -> None:
+        for srv in self._servers:
+            srv.close()
+            await srv.wait_closed()
+        self._servers.clear()
+
+    # ------------------------------------------------------------- protocol
+    async def _handle(self, reader: asyncio.StreamReader,
+                      writer: asyncio.StreamWriter) -> None:
+        self.stats["connections"] += 1
+        sql: str | None = None
+        args: list[Any] = []
+        try:
+            while True:
+                line = await reader.readline()
+                if not line:
+                    break
+                if len(line) > _MAX_LINE:
+                    writer.write(b"ERR line too long\r\n")
+                    break
+                text = line.decode("utf-8", "replace").rstrip("\r\n")
+                if not text:
+                    continue
+                verb, _, rest = text.partition(" ")
+                verb = verb.upper()
+                if verb == "EXEC":
+                    sql, args = rest, []
+                elif verb == "ARG":
+                    kind, _, raw = rest.partition(" ")
+                    try:
+                        args.append(_decode_arg(kind, raw))
+                    except Exception as e:  # noqa: BLE001
+                        writer.write(f"ERR bad arg: {e}\r\n".encode())
+                        sql = None
+                elif verb == "GO":
+                    await self._run(sql, args, writer)
+                    sql, args = None, []
+                elif verb == "PING":
+                    writer.write(b"PONG\r\n")
+                elif verb == "QUIT":
+                    writer.write(b"BYE\r\n")
+                    break
+                else:
+                    writer.write(f"ERR unknown verb {verb!r}\r\n".encode())
+                await writer.drain()
+        finally:
+            writer.close()
+            try:
+                await writer.wait_closed()
+            except Exception:  # noqa: BLE001
+                pass
+
+    async def _run(self, sql: str | None, args: list[Any],
+                   writer: asyncio.StreamWriter) -> None:
+        if not sql:
+            writer.write(b"ERR no statement\r\n")
+            self.stats["errors"] += 1
+            return
+        async with self._exec_lock:  # single execution stream
+            try:
+                res: Result = await asyncio.to_thread(self.db.execute, sql, args)
+            except Exception as e:  # noqa: BLE001
+                self.stats["errors"] += 1
+                msg = str(e).replace("\n", " ")[:500]
+                writer.write(f"ERR {msg}\r\n".encode())
+                return
+        self.stats["statements"] += 1
+        writer.write(f"COUNT {res.count}\r\n".encode())
+        if res.value is not None:
+            writer.write(f"VALUE {res.value}\r\n".encode())
+        for row in res.rows or []:
+            writer.write(b"ROW " + json.dumps(row).encode() + b"\r\n")
+        writer.write(b"END\r\n")
+
+
+class SQLCachedClient:
+    """Small synchronous client (what a web app's cache layer would embed)."""
+
+    def __init__(self, host: str = "127.0.0.1", port: int = 0,
+                 unix_path: str | None = None, timeout: float = 10.0):
+        if unix_path is not None:
+            self._sock = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+            self._sock.connect(unix_path)
+        else:
+            self._sock = socket.create_connection((host, port), timeout=timeout)
+        self._sock.settimeout(timeout)
+        self._buf = b""
+
+    def _readline(self) -> str:
+        while b"\n" not in self._buf:
+            chunk = self._sock.recv(65536)
+            if not chunk:
+                raise ConnectionError("server closed connection")
+            self._buf += chunk
+        line, _, self._buf = self._buf.partition(b"\n")
+        return line.decode().rstrip("\r")
+
+    def execute(self, sql: str, params: Sequence[Any] = ()) -> dict:
+        out = [f"EXEC {sql}"]
+        out += [_encode_arg(p) for p in params]
+        out.append("GO")
+        self._sock.sendall(("\r\n".join(out) + "\r\n").encode())
+        result: dict = {"count": 0, "value": None, "rows": []}
+        while True:
+            line = self._readline()
+            verb, _, rest = line.partition(" ")
+            if verb == "COUNT":
+                result["count"] = int(rest)
+            elif verb == "VALUE":
+                try:
+                    result["value"] = json.loads(rest)
+                except json.JSONDecodeError:
+                    result["value"] = rest
+            elif verb == "ROW":
+                result["rows"].append(json.loads(rest))
+            elif verb == "END":
+                return result
+            elif verb == "ERR":
+                raise RuntimeError(f"server error: {rest}")
+            elif verb in ("PONG", "BYE"):
+                return result
+            else:
+                raise RuntimeError(f"bad server line: {line!r}")
+
+    def ping(self) -> bool:
+        self._sock.sendall(b"PING\r\n")
+        return self._readline() == "PONG"
+
+    def close(self) -> None:
+        try:
+            self._sock.sendall(b"QUIT\r\n")
+        except OSError:
+            pass
+        self._sock.close()
+
+
+def run_server_forever(host: str, port: int, unix_path: str | None = None,
+                       db: SQLCached | None = None) -> None:
+    """Blocking entry point (used by `python -m repro.core.protocol`)."""
+
+    async def main():
+        server = SQLCachedServer(db)
+        addr = await server.start(host, port, unix_path)
+        print(f"sqlcached listening on {addr} unix={unix_path}")
+        await asyncio.Event().wait()
+
+    asyncio.run(main())
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=11222)
+    ap.add_argument("--unix", default=None)
+    a = ap.parse_args()
+    run_server_forever(a.host, a.port, a.unix)

@@ -1,0 +1,132 @@
+"""Table schemas for the device-resident relational cache (SQLcached on TPU).
+
+A table is a fixed-capacity struct-of-arrays: scalar metadata *columns*
+(int/float/bool; TEXT is interned host-side to int64 ids) plus optional
+tensor *payloads* — one fixed-shape tensor per row, stored in a pool array
+``[capacity, *shape]``. Payloads are the paper's "complex data without
+serialization": typed device tensors (KV blocks, SSM states, encoder
+outputs) instead of pickled blobs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+# SQL type name -> numpy dtype. TEXT is stored as an interned int64 id.
+SQL_TYPES: dict[str, Any] = {
+    "INT": np.int32,
+    "INTEGER": np.int32,
+    "BIGINT": np.int64,
+    "FLOAT": np.float32,
+    "REAL": np.float32,
+    "DOUBLE": np.float64,
+    "BOOL": np.bool_,
+    "BOOLEAN": np.bool_,
+    "TEXT": np.int32,  # interned string id (host-side interner; <2^31 ids)
+}
+
+# Columns maintained automatically on every table (the paper's expiry
+# metadata): insertion timestamp, last access, per-row ttl (0 = no ttl).
+RESERVED_COLUMNS = ("_created", "_accessed", "_ttl")
+
+
+@dataclasses.dataclass(frozen=True)
+class ColumnSpec:
+    name: str
+    sql_type: str  # key into SQL_TYPES
+    is_text: bool = False
+
+    @property
+    def dtype(self):
+        return SQL_TYPES[self.sql_type.upper()]
+
+
+@dataclasses.dataclass(frozen=True)
+class PayloadSpec:
+    """A fixed-shape tensor attached to each row (pool column)."""
+
+    name: str
+    shape: tuple[int, ...]
+    dtype: Any = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class ExpiryPolicy:
+    """The paper's three automatic expiry conditions (§4.3).
+
+    - ``ttl``: default data-age limit in logical-clock ticks (0 = none);
+      per-row ``_ttl`` overrides when nonzero.
+    - ``max_rows``: table size cap; oldest rows evicted beyond it (0 = none).
+    - ``ops_interval``: run automatic expiry every N cache operations
+      (0 = only when explicitly asked).
+    """
+
+    ttl: int = 0
+    max_rows: int = 0
+    ops_interval: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class TableSchema:
+    name: str
+    columns: tuple[ColumnSpec, ...]
+    payloads: tuple[PayloadSpec, ...] = ()
+    capacity: int = 4096
+    max_select: int = 1024  # fixed upper bound on rows a SELECT returns
+    expiry: ExpiryPolicy = ExpiryPolicy()
+
+    def __post_init__(self):
+        names = [c.name for c in self.columns] + [p.name for p in self.payloads]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate column names in table {self.name!r}")
+        for r in RESERVED_COLUMNS:
+            if r in names:
+                raise ValueError(f"{r} is a reserved column name")
+        if self.max_select > self.capacity:
+            object.__setattr__(self, "max_select", self.capacity)
+
+    @property
+    def column_names(self) -> tuple[str, ...]:
+        return tuple(c.name for c in self.columns)
+
+    def column(self, name: str) -> ColumnSpec:
+        for c in self.columns:
+            if c.name == name:
+                return c
+        raise KeyError(f"no column {name!r} in table {self.name!r}")
+
+    def payload(self, name: str) -> PayloadSpec:
+        for p in self.payloads:
+            if p.name == name:
+                return p
+        raise KeyError(f"no payload {name!r} in table {self.name!r}")
+
+    def has_column(self, name: str) -> bool:
+        return any(c.name == name for c in self.columns)
+
+    def text_columns(self) -> tuple[str, ...]:
+        return tuple(c.name for c in self.columns if c.is_text)
+
+
+def validate_row_values(schema: TableSchema, values: Mapping[str, Any]) -> None:
+    for k in values:
+        if not schema.has_column(k):
+            raise KeyError(f"unknown column {k!r} for table {schema.name!r}")
+
+
+def make_schema(
+    name: str,
+    columns: Sequence[tuple[str, str]],
+    payloads: Sequence[tuple[str, tuple[int, ...], Any]] = (),
+    capacity: int = 4096,
+    max_select: int = 1024,
+    expiry: ExpiryPolicy = ExpiryPolicy(),
+) -> TableSchema:
+    cols = tuple(
+        ColumnSpec(n, t, is_text=(t.upper() == "TEXT")) for n, t in columns
+    )
+    pls = tuple(PayloadSpec(n, tuple(s), d) for n, s, d in payloads)
+    return TableSchema(name, cols, pls, capacity, max_select, expiry)

@@ -1,0 +1,435 @@
+"""SQL-subset parser for the cache daemon.
+
+SQLcached's client interface is "an almost complete set of SQL statements"
+over a text protocol. We implement the subset that a cache plane needs
+(the paper itself notes n-way joins are a performance anti-pattern in a
+cache daemon and we exclude them):
+
+  CREATE TABLE t (a INT, b TEXT, ..., PAYLOAD kv TENSOR(16,2,8,64) BF16)
+      [CAPACITY 4096] [MAX_SELECT 256] [TTL 100] [MAX_ROWS 1000]
+      [OPS_INTERVAL 64]
+  INSERT INTO t (a, b) VALUES (?, 'x') [TTL 50]
+  SELECT a, b FROM t WHERE a = ? AND b BETWEEN 2 AND 7
+      [ORDER BY a [ASC|DESC]] [LIMIT 10]
+  SELECT COUNT(*) | MIN(a) | MAX(a) | SUM(a) | AVG(a) FROM t [WHERE ...]
+  SELECT PAYLOAD(kv), a FROM t WHERE ...
+  UPDATE t SET a = a + 1, TTL = 200 WHERE b = ?
+  DELETE FROM t WHERE user_id = ?
+  EXPIRE t            -- run automatic expiry now
+  FLUSH t             -- drop all rows (the memcached way)
+  DROP TABLE t
+
+Statements parse to frozen dataclasses (hashable → usable as static jit
+arguments); `?` placeholders become Param nodes so one parse+jit serves
+every execution (the prepared-statement cache of the paper).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+import jax.numpy as jnp
+
+from repro.core import predicate as P
+from repro.core.schema import SQL_TYPES
+
+_TOKEN_RE = re.compile(
+    r"""
+    (?P<ws>\s+)
+  | (?P<num>\d+\.\d+(?:[eE][+-]?\d+)?|\.\d+|\d+)
+  | (?P<str>'(?:[^']|'')*')
+  | (?P<name>[A-Za-z_][A-Za-z_0-9]*)
+  | (?P<op><=|>=|!=|<>|==|[=<>+\-*/%(),?])
+    """,
+    re.VERBOSE,
+)
+
+_PAYLOAD_DTYPES = {
+    "FLOAT": jnp.float32,
+    "F32": jnp.float32,
+    "BF16": jnp.bfloat16,
+    "F16": jnp.float16,
+    "INT8": jnp.int8,
+    "INT32": jnp.int32,
+    "BOOL": jnp.bool_,
+}
+
+_AGG_NAMES = ("COUNT", "SUM", "MIN", "MAX", "AVG")
+
+
+class SQLError(ValueError):
+    pass
+
+
+def tokenize(sql: str) -> list[tuple[str, str]]:
+    out, pos = [], 0
+    while pos < len(sql):
+        m = _TOKEN_RE.match(sql, pos)
+        if not m:
+            raise SQLError(f"bad token at {sql[pos:pos+20]!r}")
+        pos = m.end()
+        kind = m.lastgroup
+        if kind == "ws":
+            continue
+        out.append((kind, m.group()))
+    out.append(("eof", ""))
+    return out
+
+
+# ---------------------------------------------------------------- statements
+
+
+@dataclasses.dataclass(frozen=True)
+class CreateTable:
+    table: str
+    columns: tuple[tuple[str, str], ...]  # (name, sql_type)
+    payloads: tuple[tuple[str, tuple[int, ...], str], ...]  # (name, shape, dtype)
+    capacity: int = 4096
+    max_select: int = 1024
+    ttl: int = 0
+    max_rows: int = 0
+    ops_interval: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class Insert:
+    table: str
+    columns: tuple[str, ...]
+    values: tuple[P.Node, ...]
+    ttl: P.Node | None = None
+
+
+@dataclasses.dataclass(frozen=True)
+class Select:
+    table: str
+    columns: tuple[str, ...]  # () = *
+    payloads: tuple[str, ...] = ()
+    agg: tuple[str, str | None] | None = None  # (fn, col)
+    where: P.Node | None = None
+    order_by: str | None = None
+    descending: bool = False
+    limit: int | None = None
+
+
+@dataclasses.dataclass(frozen=True)
+class Update:
+    table: str
+    sets: tuple[tuple[str, P.Node], ...]
+    where: P.Node | None = None
+
+
+@dataclasses.dataclass(frozen=True)
+class Delete:
+    table: str
+    where: P.Node | None = None
+
+
+@dataclasses.dataclass(frozen=True)
+class Expire:
+    table: str
+
+
+@dataclasses.dataclass(frozen=True)
+class Flush:
+    table: str
+
+
+@dataclasses.dataclass(frozen=True)
+class DropTable:
+    table: str
+
+
+Statement = (
+    CreateTable | Insert | Select | Update | Delete | Expire | Flush | DropTable
+)
+
+
+# ------------------------------------------------------------------- parser
+
+
+class _Parser:
+    def __init__(self, sql: str):
+        self.toks = tokenize(sql)
+        self.i = 0
+        self.n_params = 0
+
+    # -- token helpers
+    def peek(self):
+        return self.toks[self.i]
+
+    def next(self):
+        t = self.toks[self.i]
+        self.i += 1
+        return t
+
+    def accept_kw(self, *kws) -> str | None:
+        kind, val = self.peek()
+        if kind == "name" and val.upper() in kws:
+            self.next()
+            return val.upper()
+        return None
+
+    def expect_kw(self, *kws) -> str:
+        got = self.accept_kw(*kws)
+        if got is None:
+            raise SQLError(f"expected {'/'.join(kws)}, got {self.peek()[1]!r}")
+        return got
+
+    def accept_op(self, *ops) -> str | None:
+        kind, val = self.peek()
+        if kind == "op" and val in ops:
+            self.next()
+            return val
+        return None
+
+    def expect_op(self, op: str):
+        if not self.accept_op(op):
+            raise SQLError(f"expected {op!r}, got {self.peek()[1]!r}")
+
+    def name(self) -> str:
+        kind, val = self.next()
+        if kind != "name":
+            raise SQLError(f"expected identifier, got {val!r}")
+        return val
+
+    def integer(self) -> int:
+        kind, val = self.next()
+        if kind != "num" or "." in val:
+            raise SQLError(f"expected integer, got {val!r}")
+        return int(val)
+
+    # -- expressions
+    def expr(self) -> P.Node:
+        return self._or()
+
+    def _or(self) -> P.Node:
+        node = self._and()
+        while self.accept_kw("OR"):
+            node = P.Or(node, self._and())
+        return node
+
+    def _and(self) -> P.Node:
+        node = self._not()
+        while self.accept_kw("AND"):
+            node = P.And(node, self._not())
+        return node
+
+    def _not(self) -> P.Node:
+        if self.accept_kw("NOT"):
+            return P.Not(self._not())
+        return self._cmp()
+
+    def _cmp(self) -> P.Node:
+        node = self._add()
+        op = self.accept_op("=", "==", "!=", "<>", "<", "<=", ">", ">=")
+        if op:
+            return P.BinOp(op, node, self._add())
+        if self.accept_kw("BETWEEN"):
+            lo = self._add()
+            self.expect_kw("AND")
+            return P.Between(node, lo, self._add())
+        if self.accept_kw("IN"):
+            self.expect_op("(")
+            items = [self.expr()]
+            while self.accept_op(","):
+                items.append(self.expr())
+            self.expect_op(")")
+            return P.InList(node, tuple(items))
+        return node
+
+    def _add(self) -> P.Node:
+        node = self._mul()
+        while True:
+            op = self.accept_op("+", "-")
+            if not op:
+                return node
+            node = P.BinOp(op, node, self._mul())
+
+    def _mul(self) -> P.Node:
+        node = self._unary()
+        while True:
+            op = self.accept_op("*", "/", "%")
+            if not op:
+                return node
+            node = P.BinOp(op, node, self._unary())
+
+    def _unary(self) -> P.Node:
+        if self.accept_op("-"):
+            return P.BinOp("-", P.Const(0), self._unary())
+        return self._primary()
+
+    def _primary(self) -> P.Node:
+        kind, val = self.peek()
+        if kind == "num":
+            self.next()
+            return P.Const(float(val) if "." in val or "e" in val.lower() else int(val))
+        if kind == "str":
+            self.next()
+            return P.Const(val[1:-1].replace("''", "'"))
+        if kind == "op" and val == "?":
+            self.next()
+            node = P.Param(self.n_params)
+            self.n_params += 1
+            return node
+        if kind == "op" and val == "(":
+            self.next()
+            node = self.expr()
+            self.expect_op(")")
+            return node
+        if kind == "name":
+            nm = self.name()
+            if self.accept_op("("):
+                args = []
+                if not self.accept_op(")"):
+                    args.append(self.expr())
+                    while self.accept_op(","):
+                        args.append(self.expr())
+                    self.expect_op(")")
+                return P.Func(nm, tuple(args))
+            return P.Col(nm)
+        raise SQLError(f"unexpected token {val!r}")
+
+    # -- statements
+    def statement(self) -> Statement:
+        kw = self.expect_kw(
+            "CREATE", "INSERT", "SELECT", "UPDATE", "DELETE", "EXPIRE", "FLUSH", "DROP"
+        )
+        fn = getattr(self, f"_stmt_{kw.lower()}")
+        stmt = fn()
+        if self.peek()[0] != "eof":
+            raise SQLError(f"trailing tokens: {self.peek()[1]!r}")
+        return stmt
+
+    def _stmt_create(self) -> CreateTable:
+        self.expect_kw("TABLE")
+        table = self.name()
+        self.expect_op("(")
+        columns, payloads = [], []
+        while True:
+            if self.accept_kw("PAYLOAD"):
+                pname = self.name()
+                self.expect_kw("TENSOR")
+                self.expect_op("(")
+                shape = [self.integer()]
+                while self.accept_op(","):
+                    shape.append(self.integer())
+                self.expect_op(")")
+                dt = "FLOAT"
+                kind, val = self.peek()
+                if kind == "name" and val.upper() in _PAYLOAD_DTYPES:
+                    dt = self.next()[1].upper()
+                payloads.append((pname, tuple(shape), dt))
+            else:
+                cname = self.name()
+                ctype = self.name().upper()
+                if ctype not in SQL_TYPES:
+                    raise SQLError(f"unknown type {ctype!r}")
+                columns.append((cname, ctype))
+            if not self.accept_op(","):
+                break
+        self.expect_op(")")
+        opts = {"capacity": 4096, "max_select": 1024, "ttl": 0, "max_rows": 0,
+                "ops_interval": 0}
+        while True:
+            kw = self.accept_kw("CAPACITY", "MAX_SELECT", "TTL", "MAX_ROWS",
+                                "OPS_INTERVAL")
+            if not kw:
+                break
+            opts[kw.lower()] = self.integer()
+        return CreateTable(table, tuple(columns), tuple(payloads), **opts)
+
+    def _stmt_insert(self) -> Insert:
+        self.expect_kw("INTO")
+        table = self.name()
+        cols = []
+        if self.accept_op("("):
+            cols.append(self.name())
+            while self.accept_op(","):
+                cols.append(self.name())
+            self.expect_op(")")
+        self.expect_kw("VALUES")
+        self.expect_op("(")
+        vals = [self.expr()]
+        while self.accept_op(","):
+            vals.append(self.expr())
+        self.expect_op(")")
+        ttl = None
+        if self.accept_kw("TTL"):
+            ttl = self.expr()
+        return Insert(table, tuple(cols), tuple(vals), ttl)
+
+    def _stmt_select(self) -> Select:
+        columns: list[str] = []
+        payloads: list[str] = []
+        agg = None
+        if self.accept_op("*"):
+            pass
+        else:
+            while True:
+                kind, val = self.peek()
+                up = val.upper() if kind == "name" else ""
+                if up in _AGG_NAMES:
+                    self.next()
+                    self.expect_op("(")
+                    if self.accept_op("*"):
+                        agg = (up, None)
+                    else:
+                        agg = (up, self.name())
+                    self.expect_op(")")
+                elif up == "PAYLOAD":
+                    self.next()
+                    self.expect_op("(")
+                    payloads.append(self.name())
+                    self.expect_op(")")
+                else:
+                    columns.append(self.name())
+                if not self.accept_op(","):
+                    break
+        self.expect_kw("FROM")
+        table = self.name()
+        where = self.expr() if self.accept_kw("WHERE") else None
+        order_by, desc = None, False
+        if self.accept_kw("ORDER"):
+            self.expect_kw("BY")
+            order_by = self.name()
+            if self.accept_kw("DESC"):
+                desc = True
+            else:
+                self.accept_kw("ASC")
+        limit = self.integer() if self.accept_kw("LIMIT") else None
+        return Select(table, tuple(columns), tuple(payloads), agg, where,
+                      order_by, desc, limit)
+
+    def _stmt_update(self) -> Update:
+        table = self.name()
+        self.expect_kw("SET")
+        sets = []
+        while True:
+            col = self.name()
+            self.expect_op("=")
+            sets.append((col, self.expr()))
+            if not self.accept_op(","):
+                break
+        where = self.expr() if self.accept_kw("WHERE") else None
+        return Update(table, tuple(sets), where)
+
+    def _stmt_delete(self) -> Delete:
+        self.expect_kw("FROM")
+        table = self.name()
+        where = self.expr() if self.accept_kw("WHERE") else None
+        return Delete(table, where)
+
+    def _stmt_expire(self) -> Expire:
+        return Expire(self.name())
+
+    def _stmt_flush(self) -> Flush:
+        return Flush(self.name())
+
+    def _stmt_drop(self) -> DropTable:
+        self.expect_kw("TABLE")
+        return DropTable(self.name())
+
+
+def parse(sql: str) -> Statement:
+    return _Parser(sql).statement()

@@ -1,0 +1,326 @@
+"""RelTable: a fixed-capacity, device-resident relational cache table.
+
+The TPU-native reimagining of SQLcached's SQLite-backed store (DESIGN.md §2):
+
+- storage is struct-of-arrays with a validity bitmap — no pointers, no
+  B-trees; every query is a vectorized masked scan (VPU-friendly, jit-able
+  with fixed shapes);
+- every operation is a *pure function* ``(state, ...) -> (state, result)``
+  so the daemon can jit + donate it and thread it through pjit programs;
+- slot allocation unifies the free list with LRU eviction: one ``top_k``
+  over ``where(valid, _accessed, -1)`` picks invalid rows first, then the
+  least-recently-used valid rows (the paper's "number of records" expiry
+  becomes the allocator itself);
+- a logical clock stamps ``_created`` / ``_accessed``; the paper's three
+  automatic expiry conditions (age / row count / op count, §4.3) are
+  implemented in :func:`expire`.
+
+Row results of SELECT are fixed-size (``schema.max_select``) with an exact
+``count`` — the host slices; payload gathers stay on device for zero-copy
+hand-off to compute (e.g. paged attention reading KV blocks).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import predicate as P
+from repro.core.schema import RESERVED_COLUMNS, TableSchema
+
+CLOCK_DTYPE = jnp.int64 if jax.config.read("jax_enable_x64") else jnp.int32
+# NOTE: we keep clocks in int32 unless x64 is enabled; the daemon widens by
+# running with jax_enable_x64 when available. 2^31 ops is plenty for tests.
+
+
+def init_state(schema: TableSchema) -> dict:
+    cap = schema.capacity
+    cols = {c.name: jnp.zeros((cap,), dtype=c.dtype) for c in schema.columns}
+    for r in RESERVED_COLUMNS:
+        cols[r] = jnp.zeros((cap,), dtype=jnp.int32)
+    payloads = {
+        p.name: jnp.zeros((cap,) + p.shape, dtype=p.dtype) for p in schema.payloads
+    }
+    return {
+        "cols": cols,
+        "payloads": payloads,
+        "valid": jnp.zeros((cap,), dtype=bool),
+        "clock": jnp.zeros((), dtype=jnp.int32),
+        "ops": jnp.zeros((), dtype=jnp.int32),
+    }
+
+
+def _tick(state: dict) -> dict:
+    state = dict(state)
+    state["clock"] = state["clock"] + 1
+    state["ops"] = state["ops"] + 1
+    return state
+
+
+def _alloc_slots(state: dict, n: int):
+    """Pick ``n`` slots: invalid rows first, then LRU-evict valid rows.
+
+    Returns (slots[n], evicted_count). One top_k does both jobs — the
+    free-list and the paper's capacity-pressure expiry."""
+    valid = state["valid"]
+    accessed = state["cols"]["_accessed"]
+    # invalid rows get key -1 (< any clock stamp, clocks start at 0)
+    key = jnp.where(valid, accessed, -1)
+    _, slots = jax.lax.top_k(-key, n)  # n smallest keys
+    evicted = jnp.sum(valid[slots].astype(jnp.int32))
+    return slots, evicted
+
+
+def insert(
+    schema: TableSchema,
+    state: dict,
+    values: Mapping[str, jax.Array],
+    payloads: Mapping[str, jax.Array] | None = None,
+    row_mask: jax.Array | None = None,
+    ttl: jax.Array | int = 0,
+):
+    """Insert a batch of rows. ``values[col]`` has shape [n]; all columns
+    not supplied default to 0. ``row_mask`` ([n] bool) lets a fixed-width
+    executor insert fewer than n rows (padding support).
+
+    Returns (state, slots[n], evicted_count)."""
+    payloads = payloads or {}
+    n = None
+    for v in values.values():
+        n = np.shape(v)[0]
+        break
+    for v in payloads.values():
+        n = np.shape(v)[0] if n is None else n
+        break
+    if n is None:
+        raise ValueError("insert needs at least one column or payload")
+    slots, evicted = _alloc_slots(state, n)
+    if row_mask is None:
+        row_mask = jnp.ones((n,), dtype=bool)
+    # Rows whose mask is off write to a scratch slot? No — we redirect them
+    # onto themselves by scattering with mode='drop' on an out-of-range index.
+    cap = schema.capacity
+    tgt = jnp.where(row_mask, slots, cap)  # cap is out-of-range -> dropped
+
+    cols = dict(state["cols"])
+    for c in schema.columns:
+        vals = values.get(c.name)
+        if vals is None:
+            vals = jnp.zeros((n,), dtype=c.dtype)
+        else:
+            vals = jnp.asarray(vals).astype(c.dtype)
+        cols[c.name] = cols[c.name].at[tgt].set(vals, mode="drop")
+    now = state["clock"].astype(jnp.int32)
+    now_b = jnp.broadcast_to(now, (n,))
+    cols["_created"] = cols["_created"].at[tgt].set(now_b, mode="drop")
+    cols["_accessed"] = cols["_accessed"].at[tgt].set(now_b, mode="drop")
+    ttl_b = jnp.broadcast_to(jnp.asarray(ttl, dtype=jnp.int32), (n,))
+    cols["_ttl"] = cols["_ttl"].at[tgt].set(ttl_b, mode="drop")
+
+    pls = dict(state["payloads"])
+    for p in schema.payloads:
+        if p.name in payloads:
+            pv = jnp.asarray(payloads[p.name]).astype(p.dtype)
+            pls[p.name] = pls[p.name].at[tgt].set(pv, mode="drop")
+
+    valid = state["valid"].at[tgt].set(True, mode="drop")
+    new_state = dict(state, cols=cols, payloads=pls, valid=valid)
+    new_state = _tick(new_state)
+    # only count evictions of rows we actually overwrote
+    evicted = jnp.sum((state["valid"][slots] & row_mask).astype(jnp.int32))
+    return new_state, slots, evicted
+
+
+def _match_mask(schema: TableSchema, state: dict, where: P.Node | None, params):
+    mask = P.eval_predicate(where, state["cols"], params, schema.capacity)
+    return mask & state["valid"]
+
+
+def _compact(mask: jax.Array, limit: int, capacity: int):
+    """Indices of the first ``limit`` set bits (row order), padded.
+
+    Pure-jnp path; the Pallas ``relscan`` kernel implements the same
+    contract for on-TPU pools (see kernels/relscan.py)."""
+    idx = jnp.nonzero(mask, size=limit, fill_value=capacity)[0]
+    present = idx < capacity
+    return jnp.where(present, idx, 0).astype(jnp.int32), present
+
+
+def select(
+    schema: TableSchema,
+    state: dict,
+    where: P.Node | None,
+    params: Sequence[Any] = (),
+    *,
+    columns: Sequence[str] | None = None,
+    order_by: str | None = None,
+    descending: bool = False,
+    limit: int | None = None,
+    with_payloads: Sequence[str] = (),
+    touch: bool = True,
+):
+    """SELECT. Returns (state, result dict).
+
+    result = {"count": scalar, "rows": {col: [limit]}, "present": bool[limit],
+              "payloads": {name: [limit, *shape]}}
+    """
+    limit = schema.max_select if limit is None else min(limit, schema.max_select)
+    mask = _match_mask(schema, state, where, params)
+    count = jnp.sum(mask.astype(jnp.int32))
+    if order_by is not None:
+        key = state["cols"][order_by].astype(jnp.float32)
+        key = key if descending else -key
+        key = jnp.where(mask, key, -jnp.inf)
+        _, idx = jax.lax.top_k(key, limit)
+        present = mask[idx]
+        idx = idx.astype(jnp.int32)
+    else:
+        idx, present = _compact(mask, limit, schema.capacity)
+    columns = tuple(columns) if columns is not None else schema.column_names
+    rows = {c: state["cols"][c][idx] for c in columns}
+    pls = {p: state["payloads"][p][idx] for p in with_payloads}
+    if touch:
+        cols = dict(state["cols"])
+        now = state["clock"].astype(jnp.int32)
+        touched = jnp.where(mask, now, cols["_accessed"])
+        cols["_accessed"] = touched
+        state = dict(state, cols=cols)
+    state = _tick(state)
+    return state, {
+        "count": count,
+        "rows": rows,
+        "present": present,
+        "row_ids": idx,
+        "payloads": pls,
+    }
+
+
+def update(
+    schema: TableSchema,
+    state: dict,
+    where: P.Node | None,
+    set_exprs: Mapping[str, P.Node],
+    params: Sequence[Any] = (),
+):
+    """UPDATE t SET col = expr ... WHERE pred. Returns (state, n_updated)."""
+    mask = _match_mask(schema, state, where, params)
+    cols = dict(state["cols"])
+    for name, expr in set_exprs.items():
+        tgt = "_ttl" if name.upper() == "TTL" else name
+        spec_dtype = cols[tgt].dtype
+        newv = P.eval_expr(expr, state["cols"], params)
+        newv = jnp.broadcast_to(jnp.asarray(newv, dtype=spec_dtype), (schema.capacity,))
+        cols[tgt] = jnp.where(mask, newv, cols[tgt])
+    n = jnp.sum(mask.astype(jnp.int32))
+    state = dict(state, cols=cols)
+    state = _tick(state)
+    return state, n
+
+
+def delete(
+    schema: TableSchema,
+    state: dict,
+    where: P.Node | None,
+    params: Sequence[Any] = (),
+):
+    """DELETE FROM t WHERE pred — flips validity bits only; payload bytes
+    never move (the 0.2 ms-vs-1000 ms effect from the paper's Table 2)."""
+    mask = _match_mask(schema, state, where, params)
+    n = jnp.sum(mask.astype(jnp.int32))
+    state = dict(state, valid=state["valid"] & ~mask)
+    state = _tick(state)
+    return state, n
+
+
+_AGGS = {
+    "COUNT": lambda v, m: jnp.sum(m.astype(jnp.int32)),
+    "SUM": lambda v, m: jnp.sum(jnp.where(m, v, 0)),
+    "MIN": lambda v, m: jnp.min(jnp.where(m, v, jnp.inf)).astype(v.dtype)
+    if jnp.issubdtype(v.dtype, jnp.floating)
+    else jnp.min(jnp.where(m, v, jnp.iinfo(v.dtype).max)),
+    "MAX": lambda v, m: jnp.max(jnp.where(m, v, -jnp.inf)).astype(v.dtype)
+    if jnp.issubdtype(v.dtype, jnp.floating)
+    else jnp.max(jnp.where(m, v, jnp.iinfo(v.dtype).min)),
+    "AVG": lambda v, m: jnp.sum(jnp.where(m, v.astype(jnp.float32), 0.0))
+    / jnp.maximum(jnp.sum(m.astype(jnp.int32)), 1),
+}
+
+
+def aggregate(
+    schema: TableSchema,
+    state: dict,
+    agg: str,
+    column: str | None,
+    where: P.Node | None,
+    params: Sequence[Any] = (),
+):
+    """COUNT/SUM/MIN/MAX/AVG over the matching rows. Returns (state, value)."""
+    mask = _match_mask(schema, state, where, params)
+    agg = agg.upper()
+    if agg == "COUNT" or column is None:
+        val = _AGGS["COUNT"](None, mask)
+    else:
+        val = _AGGS[agg](state["cols"][column], mask)
+    state = _tick(state)
+    return state, val
+
+
+def expire(schema: TableSchema, state: dict):
+    """Automatic expiry — the paper's §4.3 conditions 1 (age) and 2 (rows).
+
+    Condition 3 (op count) is the daemon's trigger for calling this.
+    Returns (state, n_expired)."""
+    pol = schema.expiry
+    valid = state["valid"]
+    cols = state["cols"]
+    now = state["clock"].astype(jnp.int32)
+    expired = jnp.zeros_like(valid)
+
+    # 1. data age: per-row _ttl overrides the table default
+    default_ttl = jnp.asarray(pol.ttl, dtype=jnp.int32)
+    ttl_eff = jnp.where(cols["_ttl"] > 0, cols["_ttl"], default_ttl)
+    aged = (ttl_eff > 0) & ((now - cols["_created"]) > ttl_eff)
+    expired = expired | (valid & aged)
+
+    # 2. row-count cap: keep the newest max_rows (stable tie-break by row id).
+    # Overflow-safe ordering: rank rows by (created, row_id) via double
+    # argsort instead of a keyed multiply (which overflows int32 clocks).
+    if pol.max_rows > 0 and pol.max_rows < schema.capacity:
+        cap = schema.capacity
+        live = valid & ~expired
+        order = jnp.lexsort((jnp.arange(cap), cols["_created"]))  # old -> new
+        rank = jnp.zeros((cap,), dtype=jnp.int32).at[order].set(
+            jnp.arange(cap, dtype=jnp.int32)
+        )
+        # rank among LIVE rows only: count live rows with strictly lower rank
+        live_i = live.astype(jnp.int32)
+        # cumulative live count in rank order, mapped back to row order
+        live_in_rank = live_i[order]
+        cum = jnp.cumsum(live_in_rank) - live_in_rank  # live rows older than me
+        older_live = jnp.zeros((cap,), dtype=jnp.int32).at[order].set(cum)
+        n_live = jnp.sum(live_i)
+        # drop the oldest (n_live - max_rows): live rows whose "younger live
+        # count" = n_live - older_live - 1 >= max_rows
+        younger = n_live - older_live - 1
+        drop = live & (younger >= pol.max_rows)
+        expired = expired | drop
+
+    n = jnp.sum(expired.astype(jnp.int32))
+    state = dict(state, valid=valid & ~expired)
+    state = _tick(state)
+    return state, n
+
+
+def flush(schema: TableSchema, state: dict):
+    """Drop every row (memcached's only bulk invalidation mode)."""
+    n = jnp.sum(state["valid"].astype(jnp.int32))
+    state = dict(state, valid=jnp.zeros_like(state["valid"]))
+    state = _tick(state)
+    return state, n
+
+
+def live_count(state: dict) -> jax.Array:
+    return jnp.sum(state["valid"].astype(jnp.int32))

@@ -1,0 +1,135 @@
+"""Pallas TPU flash attention (prefill/train): causal, sliding-window,
+logit-softcap, GQA — the compute hot-spot of every attention arch here.
+
+TPU mapping: grid (batch, q_heads, nq, nk) — the kv dimension is the
+innermost (sequential) axis, so one VMEM-resident (m, l, acc) scratch
+carries the online softmax across kv tiles; q/k/v tiles are MXU-aligned
+``[block_q, head_dim]`` x ``[block_kv, head_dim]`` (block_q/kv default 128,
+head_dim is 64..256 for all assigned archs). GQA indexes the kv head as
+``h // group`` in the BlockSpec index_map — no materialized KV repeat.
+
+Causal skipping: tiles strictly above the diagonal contribute nothing;
+they are masked (numerics) AND their matmuls are skipped via
+``pl.when`` on the tile coordinates, keeping FLOPs triangular.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, causal: bool, window: int, softcap: float,
+            block_q: int, block_kv: int, q_offset: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_pos = q_offset + iq * block_q + jax.lax.iota(jnp.int32, block_q)
+    k_pos = ik * block_kv + jax.lax.iota(jnp.int32, block_kv)
+
+    # tile is live unless fully masked (above diagonal / outside window)
+    live = True
+    if causal:
+        live = (iq * block_q + q_offset + block_q - 1) >= (ik * block_kv)
+    # window: tile dead if its NEWEST k is older than the OLDEST q - window
+    # (checked at trace time only when both are static; else mask handles it)
+
+    @pl.when(live if isinstance(live, bool) else live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale   # [bq, hd]
+        k = k_ref[0, 0].astype(jnp.float32)           # [bkv, hd]
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)        # [bq, bkv]
+        if softcap and softcap > 0:
+            s = jnp.tanh(s / softcap) * softcap
+        mask = jnp.ones((block_q, block_kv), dtype=jnp.bool_)
+        if causal:
+            mask &= q_pos[:, None] >= k_pos[None, :]
+        if window and window > 0:
+            mask &= (q_pos[:, None] - k_pos[None, :]) < window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=-1)
+        pv = jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        acc_scr[...] = acc_scr[...] * corr[:, None] + pv
+        m_scr[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _emit():
+        o_ref[0, 0] = (acc_scr[...] /
+                       jnp.maximum(l_scr[...], 1e-30)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "softcap", "scale", "block_q",
+                     "block_kv", "q_offset", "interpret"))
+def flash_attention(
+    q, k, v, *,
+    scale: float,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+    block_q: int = 128,
+    block_kv: int = 128,
+    q_offset: int = 0,
+    interpret: bool = True,
+):
+    """q: [b, h, sq, hd]; k, v: [b, kh, sk, hd] -> [b, h, sq, hd]."""
+    b, h, sq, hd = q.shape
+    _, kh, sk, _ = k.shape
+    g = h // kh
+    block_q = min(block_q, sq)
+    block_kv = min(block_kv, sk)
+    assert sq % block_q == 0 and sk % block_kv == 0
+    nq, nk = sq // block_q, sk // block_kv
+
+    grid = (b, h, nq, nk)
+    kern = functools.partial(
+        _kernel, scale=scale, causal=causal, window=window,
+        softcap=softcap, block_q=block_q, block_kv=block_kv,
+        q_offset=q_offset)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, hd),
+                         lambda ib, ih, iq, ik: (ib, ih, iq, 0)),
+            pl.BlockSpec((1, 1, block_kv, hd),
+                         lambda ib, ih, iq, ik: (ib, ih // g, ik, 0)),
+            pl.BlockSpec((1, 1, block_kv, hd),
+                         lambda ib, ih, iq, ik: (ib, ih // g, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, hd),
+                               lambda ib, ih, iq, ik: (ib, ih, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

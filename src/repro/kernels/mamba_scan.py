@@ -1,0 +1,107 @@
+"""Pallas TPU chunked SSD scan (Mamba2) — the SSM archs' prefill hot spot.
+
+TPU mapping: grid (b, nh, nchunks), chunks innermost; the inter-chunk
+state [dh, state] lives in VMEM scratch and carries across the chunk
+axis, so the whole recurrence is ONE kernel launch. Inside a chunk the
+SSD dual form is pure MXU work: [chunk, chunk] decay-masked scores
+(C B^T), plus two [chunk x state] x [state x dh]-shaped matmuls for the
+state path — chunk defaults to 128 to align the MXU.
+
+Inputs are the post-projection tensors (x heads, dt, dA, B, C) — the
+surrounding projections are plain einsums that XLA already fuses well.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, dA_ref, B_ref, C_ref, y_ref, hlast_ref, h_scr, *,
+            chunk: int):
+    ic = pl.program_id(2)
+    nc = pl.num_programs(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    x = x_ref[0, :, 0].astype(jnp.float32)       # [chunk, dh]
+    dt = dt_ref[0, :, 0].astype(jnp.float32)     # [chunk]
+    dA = dA_ref[0, :, 0].astype(jnp.float32)     # [chunk]
+    B = B_ref[0].astype(jnp.float32)             # [chunk, st]
+    C = C_ref[0].astype(jnp.float32)             # [chunk, st]
+
+    cum = jnp.cumsum(dA)                         # inclusive [chunk]
+    # intra-chunk: w[t,u] = (C_t.B_u) exp(cum_t - cum_u) dt_u for u <= t
+    cb = jax.lax.dot_general(C, B, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    decay = jnp.exp(cum[:, None] - cum[None, :])
+    t_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    u_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    w = jnp.where(t_idx >= u_idx, cb * decay, 0.0) * dt[None, :]
+    y_intra = jax.lax.dot_general(w, x, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+    # inter-chunk: y_t += C_t . (exp(cum_t) * h_prev)
+    h_prev = h_scr[...]                          # [dh, st]
+    ch = jax.lax.dot_general(C, h_prev, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    y = y_intra + jnp.exp(cum)[:, None] * ch
+    y_ref[0, :, 0] = y.astype(y_ref.dtype)
+
+    # state update: h = exp(total) h_prev + sum_u exp(total-cum_u) dt_u x_u B_u^T
+    total = cum[chunk - 1]
+    sdecay = jnp.exp(total - cum) * dt           # [chunk]
+    xw = x * sdecay[:, None]                     # [chunk, dh]
+    s_new = jax.lax.dot_general(xw, B, (((0,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    h_scr[...] = jnp.exp(total) * h_prev + s_new
+
+    @pl.when(ic == nc - 1)
+    def _emit():
+        hlast_ref[0, 0] = h_scr[...]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def mamba2_scan(x, dt, dA, B, C, *, chunk: int = 128,
+                interpret: bool = True):
+    """x: [b, s, nh, dh]; dt/dA: [b, s, nh]; B/C: [b, s, st] (one group).
+    Returns (y [b, s, nh, dh], h_last [b, nh, dh, st]). Zero initial state
+    (prefill); the engine chains states across calls for chunked prefill.
+    """
+    b, s, nh, dh = x.shape
+    st = B.shape[-1]
+    chunk = min(chunk, s)
+    while s % chunk:
+        chunk //= 2
+    nc = s // chunk
+
+    grid = (b, nh, nc)
+    kern = functools.partial(_kernel, chunk=chunk)
+    y, hlast = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, dh),
+                         lambda ib, ih, ic: (ib, ic, ih, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda ib, ih, ic: (ib, ic, ih)),
+            pl.BlockSpec((1, chunk, 1), lambda ib, ih, ic: (ib, ic, ih)),
+            pl.BlockSpec((1, chunk, st), lambda ib, ih, ic: (ib, ic, 0)),
+            pl.BlockSpec((1, chunk, st), lambda ib, ih, ic: (ib, ic, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, dh),
+                         lambda ib, ih, ic: (ib, ic, ih, 0)),
+            pl.BlockSpec((1, 1, dh, st), lambda ib, ih, ic: (ib, ih, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, s, nh, dh), x.dtype),
+            jax.ShapeDtypeStruct((b, nh, dh, st), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((dh, st), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, dA, B, C)
+    return y, hlast

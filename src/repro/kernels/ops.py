@@ -1,0 +1,77 @@
+"""Jit'd dispatch for the Pallas kernels: on TPU the compiled kernels run
+natively; everywhere else they run interpret=True (correctness) or fall
+back to the pure-jnp oracle (speed) — selectable per call site.
+
+The model/serving layers call through here so a single switch flips the
+whole system between reference and kernel paths.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.paged_attention import paged_attention as _paged
+from repro.kernels.relscan import compact, relscan as _relscan
+from repro.kernels.mamba_scan import mamba2_scan as _mamba2
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _mode() -> str:
+    """kernel | interpret | ref (env REPRO_KERNELS overrides)."""
+    env = os.environ.get("REPRO_KERNELS")
+    if env in ("kernel", "interpret", "ref"):
+        return env
+    return "kernel" if on_tpu() else "ref"
+
+
+def flash_attention(q, k, v, **kw):
+    mode = _mode()
+    if mode == "ref":
+        kw.pop("block_q", None)
+        kw.pop("block_kv", None)
+        return ref.flash_attention_ref(q, k, v, **kw)
+    return _flash(q, k, v, interpret=(mode == "interpret"), **kw)
+
+
+def paged_attention(q, arena, pages, lengths, **kw):
+    mode = _mode()
+    if mode == "ref":
+        return ref.paged_attention_ref(q, arena, pages, lengths, **kw)
+    return _paged(q, arena, pages, lengths,
+                  interpret=(mode == "interpret"), **kw)
+
+
+def predicate_scan(col_a, valid, *, val_a, col_b=None, val_b=None,
+                   limit=None, **kw):
+    """Fused WHERE scan + compaction. Returns (row_ids, present, count)."""
+    mode = _mode()
+    if mode == "ref":
+        cols = {"a": col_a, "b": col_b if col_b is not None else col_a}
+        mask, n = ref.relscan_ref(cols, valid, "a", val_a,
+                                  "b" if col_b is not None else None, val_b)
+    else:
+        mask, cnt = _relscan(col_a, valid, val_a=val_a, col_b=col_b,
+                             val_b=val_b, interpret=(mode == "interpret"),
+                             **kw)
+        import jax.numpy as jnp
+        n = jnp.sum(cnt)
+    limit = limit or mask.shape[0]
+    ids, present = compact(mask, limit=limit)
+    return ids, present, n
+
+
+def mamba2_scan(x, dt, dA, B, C, **kw):
+    mode = _mode()
+    if mode == "ref":
+        import jax.numpy as jnp
+        b, s, nh, dh = x.shape
+        h0 = jnp.zeros((b, nh, dh, B.shape[-1]), jnp.float32)
+        return ref.mamba2_scan_ref(x.astype(jnp.float32), dt, dA, B, C, h0)
+    return _mamba2(x, dt, dA, B, C, interpret=(mode == "interpret"), **kw)

@@ -1,0 +1,133 @@
+"""Pallas TPU paged attention (decode): the RelCache hot path.
+
+One new query token per sequence attends to KV *blocks* gathered from the
+pool arena through the relational page table — "retrieve exactly the
+needed rows" (paper §4.2) executed at HBM bandwidth.
+
+TPU mapping: the page table and lengths ride as **scalar prefetch**
+operands (pltpu.PrefetchScalarGridSpec) so each grid step's BlockSpec
+index_map dereferences ``pages[b, i]`` to pick the arena row to DMA into
+VMEM next — the gather IS the pipeline, no materialized copy of the KV.
+Grid (b, kh, nblk) with nblk innermost; (m, l, acc) online-softmax
+scratch carries across blocks; out written at the last block. Missing
+rows (page id < 0) are masked and their DMA clamped to row 0.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(pages_ref, lengths_ref, q_ref, arena_ref, o_ref,
+            m_scr, l_scr, acc_scr, *, scale: float, softcap: float,
+            window: int, block: int):
+    ib = pl.program_id(0)
+    ik = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    row = pages_ref[ib, ik]
+    length = lengths_ref[ib]
+
+    @pl.when(row >= 0)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale       # [g, hd]
+        k = arena_ref[0, 0, :, 0].astype(jnp.float32)     # [block, hd]
+        v = arena_ref[0, 0, :, 1].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)            # [g, block]
+        if softcap and softcap > 0:
+            s = jnp.tanh(s / softcap) * softcap
+        pos = ik * block + jax.lax.iota(jnp.int32, block)
+        ok = pos < length
+        if window and window > 0:
+            ok &= (length - pos) < window
+        s = jnp.where(ok[None, :], s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=-1)
+        acc_scr[...] = (acc_scr[...] * corr[:, None]
+                        + jax.lax.dot_general(
+                            p, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32))
+        m_scr[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _emit():
+        o_ref[0, 0] = (acc_scr[...]
+                       / jnp.maximum(l_scr[...], 1e-30)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("scale", "softcap", "window", "interpret"))
+def paged_attention(
+    q, arena, pages, lengths, *,
+    scale: float,
+    softcap: float = 0.0,
+    window: int = 0,
+    interpret: bool = True,
+):
+    """q: [b, h, hd]; arena: [cap, 2, block, kh, hd]; pages: [b, nblk]
+    (row ids, -1 = missing); lengths: [b]. Returns [b, h, hd].
+
+    Note: attends to the first ``lengths[b]`` pool tokens (the current
+    token's self-KV is appended by the caller's write path first, or
+    handled by the island's self-term — this kernel is the pool part).
+    """
+    b, h, hd = q.shape
+    cap, _, block, kh, _ = arena.shape
+    nblk = pages.shape[1]
+    g = h // kh
+
+    # layout: q -> [b, kh, g, hd]; arena indexed [row, 2, block, kh, hd]
+    qg = q.reshape(b, kh, g, hd)
+    # arena transposed so the kv-head is a leading block dim the index_map
+    # can pick: [kh, cap, block, 2, hd]
+    ar = jnp.transpose(arena, (3, 0, 2, 1, 4))
+
+    grid = (b, kh, nblk)
+    kern = functools.partial(_kernel, scale=scale, softcap=softcap,
+                             window=window, block=block)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # pages, lengths
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, g, hd),
+                         lambda ib, ih, ik, pages, lengths: (ib, ih, 0, 0)),
+            pl.BlockSpec(
+                (1, 1, block, 2, hd),
+                lambda ib, ih, ik, pages, lengths:
+                (ih, jnp.maximum(pages[ib, ik], 0), 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, g, hd),
+            lambda ib, ih, ik, pages, lengths: (ib, ih, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g, hd), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kh, g, hd), q.dtype),
+        interpret=interpret,
+    )(pages, lengths, qg, ar)
+    return out.reshape(b, h, hd)

@@ -1,0 +1,84 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, *, scale, causal=True, window=0,
+                        softcap=0.0, q_offset=0):
+    """q: [b, h, sq, hd]; k/v: [b, kh, sk, hd] -> [b, h, sq, hd]."""
+    b, h, sq, hd = q.shape
+    _, kh, sk, _ = k.shape
+    g = h // kh
+    kr = jnp.repeat(k, g, axis=1).astype(jnp.float32)
+    vr = jnp.repeat(v, g, axis=1).astype(jnp.float32)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32) * scale, kr)
+    if softcap and softcap > 0:
+        s = jnp.tanh(s / softcap) * softcap
+    q_pos = q_offset + jnp.arange(sq)
+    k_pos = jnp.arange(sk)
+    mask = jnp.ones((sq, sk), dtype=bool)
+    if causal:
+        mask &= q_pos[:, None] >= k_pos[None, :]
+    if window and window > 0:
+        mask &= (q_pos[:, None] - k_pos[None, :]) < window
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vr).astype(q.dtype)
+
+
+def paged_attention_ref(q, arena, pages, lengths, *, scale, softcap=0.0,
+                        window=0):
+    """Decode oracle. q: [b, h, hd]; arena: [cap, 2, block, kh, hd];
+    pages: [b, nblk] (-1 = missing); lengths: [b] tokens visible.
+    Attends to the first ``lengths`` cached tokens only."""
+    b, h, hd = q.shape
+    cap, _, block, kh, _ = arena.shape
+    nblk = pages.shape[1]
+    g = h // kh
+    blk = arena[jnp.clip(pages, 0, cap - 1)]       # [b, nblk, 2, blk, kh, hd]
+    k = blk[:, :, 0].reshape(b, nblk * block, kh, hd).astype(jnp.float32)
+    v = blk[:, :, 1].reshape(b, nblk * block, kh, hd).astype(jnp.float32)
+    qg = q.reshape(b, kh, g, hd).astype(jnp.float32) * scale
+    s = jnp.einsum("bkgd,btkd->bkgt", qg, k)
+    if softcap and softcap > 0:
+        s = jnp.tanh(s / softcap) * softcap
+    pos = jnp.arange(nblk * block)
+    ok = (pos[None] < lengths[:, None])
+    ok &= jnp.repeat(pages >= 0, block, axis=1)
+    if window and window > 0:
+        ok &= (lengths[:, None] - pos[None]) < window
+    s = jnp.where(ok[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgt,btkd->bkgd", p, v)
+    return o.reshape(b, h, hd).astype(q.dtype)
+
+
+def relscan_ref(cols, valid, col_a, val_a, col_b=None, val_b=None):
+    """Predicate bitmap oracle: valid & (cols[a]==va) [& (cols[b]==vb)].
+    cols: dict name -> [cap] int32. Returns (mask [cap] bool, count)."""
+    m = valid & (cols[col_a] == val_a)
+    if col_b is not None:
+        m = m & (cols[col_b] == val_b)
+    return m, jnp.sum(m.astype(jnp.int32))
+
+
+def mamba2_scan_ref(x, dt, dA, B, C, h0):
+    """Sequential SSD oracle. x: [b, s, nh, dh]; dt/dA: [b, s, nh];
+    B/C: [b, s, st]; h0: [b, nh, dh, st]. Returns (y [b, s, nh, dh],
+    h_last)."""
+    def step(h, inp):
+        xt, dtt, dAt, Bt, Ct = inp
+        h = (jnp.exp(dAt)[..., None, None] * h
+             + jnp.einsum("bh,bhd,bs->bhds", dtt, xt, Bt))
+        y = jnp.einsum("bhds,bs->bhd", h, Ct)
+        return h, y
+
+    xs = (jnp.moveaxis(x, 1, 0), jnp.moveaxis(dt, 1, 0),
+          jnp.moveaxis(dA, 1, 0), jnp.moveaxis(B, 1, 0),
+          jnp.moveaxis(C, 1, 0))
+    h, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1), h

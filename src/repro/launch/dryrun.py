@@ -1,0 +1,360 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the first two lines: jax locks the device count on first init.
+# The dry-run (and ONLY the dry-run) builds the 512-chip production mesh
+# out of host placeholder devices; smoke tests/benches see 1 CPU device.
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell,
+print memory/cost analysis, parse collective bytes, and emit a JSON
+record per cell for EXPERIMENTS.md §Dry-run / §Roofline.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch yi-6b \
+        --shape train_4k [--multi-pod] [--out results/dryrun]
+"""
+import argparse
+import dataclasses
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.configs import shapes as SH
+from repro.launch.mesh import make_production_mesh
+from repro.models import transformer as TF
+from repro.models.params import abstract_init
+from repro.optim.adamw import adamw_init
+from repro.parallel import sharding as SHD
+from repro.roofline.analysis import collective_bytes, model_flops_per_step, roofline_terms
+from repro.training.step import make_train_step
+
+# Empirical activation cost (measured on this backend: gemma2 remat=full
+# showed ~21 bytes per token x layer x d_model of per-microbatch temp).
+ACT_BYTES_PER_TLD = 22.0
+ACT_BUDGET = 9 << 30  # per-device temp budget -> microbatch choice
+
+
+def _dp_axes(mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _dp_size(mesh) -> int:
+    return int(np.prod([mesh.shape[a] for a in _dp_axes(mesh)]))
+
+
+def batch_specs(mesh, tree, batch: int):
+    """Shard dim0 (batch) over the DP axes when divisible, else replicate."""
+    dp = _dp_axes(mesh)
+    ok = batch % _dp_size(mesh) == 0
+    spec0 = P(dp) if ok and dp else P()
+
+    def one(sds):
+        parts = [spec0[0] if ok and dp else None]
+        parts += [None] * (len(sds.shape) - 1)
+        return NamedSharding(mesh, P(*parts))
+
+    return jax.tree.map(one, tree)
+
+
+def pick_microbatches(cfg, shape: SH.ShapeSpec, mesh) -> int:
+    """Per-microbatch temp ~ ACT_BYTES_PER_TLD * b_mb*s*d*L (remat=full);
+    choose the smallest power-of-two microbatch count fitting the budget.
+    REPRO_MB overrides (perf-iteration knob: FSDP weight all-gathers scale
+    with the microbatch count)."""
+    if os.environ.get("REPRO_MB"):
+        return int(os.environ["REPRO_MB"])
+    b_local = max(shape.global_batch // _dp_size(mesh), 1)
+    act = (ACT_BYTES_PER_TLD * b_local * shape.seq_len * cfg.d_model
+           * max(cfg.n_layers, 1))
+    mb = 1
+    while act / mb > ACT_BUDGET and mb < b_local:
+        mb *= 2
+    return mb
+
+
+def lower_train(cfg, shape: SH.ShapeSpec, mesh, unroll: bool = True):
+    """unroll=False: production graph (rolled scans, real microbatch count)
+    -> memory-fit proof. unroll=True: cost-accounting graph (unrolled
+    layers/loss, ONE microbatch; flops/bytes/collectives scale x mb,
+    optimizer counted once -> negligible overcount, noted in the record).
+    """
+    params_sds, axes = abstract_init(TF.init_model, cfg)
+    opt_sds = jax.eval_shape(adamw_init, params_sds)
+    mb = pick_microbatches(cfg, shape, mesh)
+    extra = {"microbatches": mb}
+    if unroll:
+        dp = _dp_size(mesh)
+        gb = max(((shape.global_batch // mb) // dp) * dp, dp)
+        extra["cost_scale"] = shape.global_batch / gb
+        shape = dataclasses.replace(shape, global_batch=gb)
+        step_fn = make_train_step(cfg, remat="full", microbatches=1,
+                                  unroll=True)
+    else:
+        step_fn = make_train_step(cfg, remat="full", microbatches=mb,
+                                  unroll=False)
+    p_specs = SHD.specs_for_tree(axes, SHD.TRAIN_PARAM_RULES, mesh,
+                                 params_sds)
+    # opt-state shardings follow the param layout (moments same shape)
+    from repro.optim.adamw import AdamWState
+    o_specs = AdamWState(
+        mu=p_specs, nu=p_specs,
+        count=NamedSharding(mesh, P()))
+    b_sds = {k: v for k, v in SH.train_specs(cfg, shape).items()}
+    b_specs = batch_specs(mesh, b_sds, shape.global_batch)
+    step_sds = jax.ShapeDtypeStruct((), jnp.int32)
+
+    jitted = jax.jit(
+        step_fn,
+        in_shardings=(p_specs, o_specs, b_specs, NamedSharding(mesh, P())),
+        donate_argnums=(0, 1),
+    )
+    with SHD.axis_rules(_act_rules(), mesh):
+        lowered = jitted.lower(params_sds, opt_sds, b_sds, step_sds)
+    return lowered, extra
+
+
+def _act_rules():
+    """Activation rules (variant hook): REPRO_SEQ_ACT=model turns on
+    Megatron-SP-style sequence sharding of the residual stream."""
+    rules = dict(SHD.DEFAULT_RULES)
+    if os.environ.get("REPRO_SEQ_ACT") == "model":
+        rules["seq"] = ("model",)
+    return rules
+
+
+def lower_prefill(cfg, shape: SH.ShapeSpec, mesh, unroll: bool = True):
+    params_sds, axes = abstract_init(TF.init_model, cfg)
+    p_specs = SHD.specs_for_tree(axes, SHD.SERVE_PARAM_RULES, mesh,
+                                 params_sds)
+    b_sds = SH.prefill_specs(cfg, shape)
+    b_specs = batch_specs(mesh, b_sds, shape.global_batch)
+
+    def prefill_fn(params, batch):
+        return TF.prefill(params, cfg, batch, unroll=unroll)
+
+    jitted = jax.jit(prefill_fn, in_shardings=(p_specs, b_specs))
+    with SHD.axis_rules(SHD.DEFAULT_RULES, mesh):
+        lowered = jitted.lower(params_sds, b_sds)
+    return lowered, {}
+
+
+def lower_decode(cfg, shape: SH.ShapeSpec, mesh, unroll: bool = True):
+    from repro.serving.engine import lower_serve_step
+    return lower_serve_step(cfg, shape, mesh, unroll=unroll)
+
+
+def shrink_to_groups(cfg, k: int):
+    """Same arch with only ``k`` scan groups (+ the tail) — the two-point
+    cost probe. HLO costs of the unrolled graph are additive in groups, so
+    total(ng) = C(1) + (ng-1) * (C(2) - C(1)) exactly."""
+    gs, ng, tail = TF.scan_layout(cfg)
+    k = min(k, ng)
+    n_layers = gs * k + tail
+    return dataclasses.replace(
+        cfg, n_layers=n_layers,
+        layer_pattern=cfg.layer_pattern[: gs * k]
+        + cfg.layer_pattern[gs * ng :])
+
+
+def _cost_of(compiled):
+    cost = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+    del hlo
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "coll": coll,
+    }
+
+
+def two_point_costs(lower_one, cfg, ng: int) -> dict:
+    """Lower k=1 and k=2 group variants (unrolled), extrapolate to ng."""
+    c = {}
+    for k in (1, 2):
+        lowered, extra = lower_one(shrink_to_groups(cfg, k))
+        c[k] = _cost_of(lowered.compile())
+        c[k]["scale"] = float(extra.get("cost_scale", 1.0))
+    out = {}
+    s1, s2 = c[1]["scale"], c[2]["scale"]
+    for key in ("flops", "bytes"):
+        v1, v2 = c[1][key] * s1, c[2][key] * s2
+        out[key] = v1 + (ng - 1) * (v2 - v1)
+    coll = {}
+    for op in c[1]["coll"]:
+        v1 = c[1]["coll"][op] * s1
+        v2 = c[2]["coll"][op] * s2
+        coll[op] = int(v1 + (ng - 1) * (v2 - v1))
+    out["coll"] = coll
+    out["probe"] = {"c1": c[1], "c2": c[2]}
+    return out
+
+
+# §Perf variants: named config mutations hillclimbed against the baseline
+VARIANTS = {
+    "seqpar": lambda cfg: dataclasses.replace(cfg, attn_seq_shard=True),
+    "remat_dots": lambda cfg: cfg,   # handled via env in lower_train
+    "qblk256": lambda cfg: dataclasses.replace(cfg, q_block=256),
+    "qblk1024": lambda cfg: dataclasses.replace(cfg, q_block=1024,
+                                                kv_block=2048),
+    "lossblk256": lambda cfg: dataclasses.replace(cfg, loss_block=256),
+    "kvq8": lambda cfg: dataclasses.replace(cfg, kv_quant_int8=True),
+    "moe_ragged": lambda cfg: cfg,   # handled via env in the MoE layer
+}
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             out_dir: pathlib.Path, unroll: bool = True,
+             variant: str = "") -> dict:
+    cfg = configs.get_config(arch)
+    if variant:
+        cfg = VARIANTS[variant](cfg)
+    shape = SH.SHAPES[shape_name]
+    mesh_name = "multi" if multi_pod else "single"
+    rec: dict = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "kind": shape.kind, "time": time.strftime("%Y-%m-%d %H:%M:%S"),
+        "variant": variant or "baseline",
+    }
+    reason = SH.skip_reason(cfg, shape_name)
+    if reason:
+        rec["status"] = "skip"
+        rec["skip_reason"] = reason
+        out_dir.mkdir(parents=True, exist_ok=True)
+        suffix = f"__{variant}" if variant else ""
+        (out_dir / f"{arch}__{shape_name}__{mesh_name}{suffix}.json"
+         ).write_text(json.dumps(rec, indent=1))
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = int(np.prod(list(mesh.shape.values())))
+
+    def lower_one_full(do_unroll: bool):
+        if shape.kind == "train":
+            return lower_train(cfg, shape, mesh, do_unroll)
+        if shape.kind == "prefill":
+            return lower_prefill(cfg, shape, mesh, do_unroll)
+        return lower_decode(cfg, shape, mesh, do_unroll)
+
+    try:
+        # ---- pass A: production graph (rolled) -> memory-fit proof
+        t0 = time.time()
+        lowered, extra = lower_one_full(False)
+        rec.update(extra)
+        rec["lower_s"] = time.time() - t0
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = time.time() - t1
+        mem = compiled.memory_analysis()
+        print(mem)  # proves it fits
+        if mem is not None:
+            for k in ("temp_size_in_bytes", "argument_size_in_bytes",
+                      "output_size_in_bytes", "generated_code_size_in_bytes"):
+                v = getattr(mem, k, None)
+                if v is not None:
+                    rec[k] = int(v)
+            rec["bytes_per_device"] = int(
+                rec.get("argument_size_in_bytes", 0)
+                + rec.get("temp_size_in_bytes", 0))
+            rec["fits_16g_hbm"] = rec["bytes_per_device"] <= (16 << 30)
+
+        # ---- pass B: exact cost accounting via the two-point group probe
+        # (single-pod roofline only; multi-pod proves sharding coherence)
+        if unroll and not multi_pod:
+            t2 = time.time()
+            gs, ng, tail = TF.scan_layout(cfg)
+
+            def lower_k(cfg_k):
+                if shape.kind == "train":
+                    return lower_train(cfg_k, shape, mesh, True)
+                if shape.kind == "prefill":
+                    return lower_prefill(cfg_k, shape, mesh, True)
+                return lower_decode(cfg_k, shape, mesh, True)
+
+            tp = two_point_costs(lower_k, cfg, ng)
+            rec["cost_compile_s"] = time.time() - t2
+            flops, bytes_acc = tp["flops"], tp["bytes"]
+            coll = tp["coll"]
+        else:
+            cost = compiled.cost_analysis() or {}
+            flops = float(cost.get("flops", 0.0))
+            bytes_acc = float(cost.get("bytes accessed", 0.0))
+            hlo = compiled.as_text()
+            coll = collective_bytes(hlo)
+            rec["hlo_n_lines"] = hlo.count("\n")
+            del hlo
+            rec["cost_note"] = ("rolled-scan HLO: loop bodies counted once "
+                                "(memory-fit pass; see single-pod record "
+                                "for exact cost terms)")
+        rec["hlo_flops_per_device"] = flops
+        rec["hlo_bytes_per_device"] = bytes_acc
+        rec["collective_bytes_per_device"] = coll
+
+        terms = roofline_terms(
+            hlo_flops=flops, hlo_bytes=bytes_acc,
+            coll_bytes=coll["total"], chips=chips, per_device=True)
+        rec["roofline"] = terms
+
+        tokens = shape.global_batch * (
+            shape.seq_len if shape.kind != "decode" else 1)
+        mf = model_flops_per_step(
+            cfg, tokens, "train" if shape.kind == "train" else "serve")
+        rec["model_flops_total"] = mf
+        rec["model_flops_per_device"] = mf / chips
+        rec["useful_flops_ratio"] = (
+            mf / chips / flops if flops > 0 else None)
+        rec["status"] = "ok"
+    except Exception as e:  # a failure here is a bug in the system
+        rec["status"] = "fail"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    out_dir.mkdir(parents=True, exist_ok=True)
+    suffix = f"__{variant}" if variant else ""
+    fn = out_dir / f"{arch}__{shape_name}__{mesh_name}{suffix}.json"
+    fn.write_text(json.dumps(rec, indent=1, default=str))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True,
+                    help="arch id or 'all'")
+    ap.add_argument("--shape", default="all",
+                    help="shape name or 'all'")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--rolled", action="store_true",
+                    help="keep lax.scan rolled (production graph; HLO "
+                         "cost analysis then counts scan bodies once)")
+    ap.add_argument("--variant", default="",
+                    help=f"§Perf variant: one of {sorted(VARIANTS)}")
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+
+    archs = configs.all_archs() if args.arch == "all" else [args.arch]
+    shapes = list(SH.SHAPES) if args.shape == "all" else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    out = pathlib.Path(args.out)
+    n_fail = 0
+    for arch in archs:
+        for shp in shapes:
+            for mp in meshes:
+                rec = run_cell(arch, shp, multi_pod=mp, out_dir=out,
+                               unroll=not args.rolled,
+                               variant=args.variant)
+                status = rec["status"]
+                extra = (f" [{rec.get('error', '')[:120]}]"
+                         if status == "fail" else "")
+                n_fail += status == "fail"
+                print(f"{arch:24s} {shp:12s} "
+                      f"{'multi' if mp else 'single':6s} -> {status}{extra}",
+                      flush=True)
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

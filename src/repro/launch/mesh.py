@@ -1,0 +1,27 @@
+"""Production meshes. A FUNCTION (not a module constant) so importing this
+module never touches jax device state — the dry-run forces 512 host
+devices before first jax init; tests see the single real CPU device."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single pod (256 chips) or 2x16x16 multi-pod (512 chips).
+
+    Axes: 'pod' = outer data-parallel axis (gradient reduction crosses the
+    inter-pod links), 'data' = in-pod batch/FSDP axis, 'model' = tensor/
+    expert axis (innermost => fastest ICI ring).
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(n_data: int = 2, n_model: int = 2, *, pods: int = 0):
+    """Small host-device mesh for lowering tests (requires
+    XLA_FLAGS=--xla_force_host_platform_device_count >= product)."""
+    if pods:
+        return jax.make_mesh((pods, n_data, n_model),
+                             ("pod", "data", "model"))
+    return jax.make_mesh((n_data, n_model), ("data", "model"))

@@ -1,0 +1,384 @@
+"""GQA attention: chunked-flash forward (train/prefill), dense-cache and
+paged-cache decode.
+
+The forward path is a *flash-style chunked attention in pure JAX*: an
+unrolled python loop over q blocks (static), each with a ``lax.scan`` over
+exactly the kv blocks that q block can see (static causal/window bounds).
+This keeps
+  - memory bounded by (q_block × kv_block) score tiles,
+  - FLOPs *triangular* (no 2× causal waste — important for the roofline
+    compute term),
+  - shapes fully static (lowerable at 512 devices).
+The Pallas kernel in ``repro.kernels.flash_attention`` implements the same
+contract for real TPUs; ``repro.kernels.ops`` dispatches.
+
+GQA is computed in grouped form (no materialized KV repeat): q is viewed
+as [b, s, kv_heads, group, hd] and contracted against un-repeated k/v.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import Annot, KeyGen, dense_init, ones_init
+from repro.models.layers.norms import rms_norm_gain
+from repro.models.layers.rope import apply_rope
+
+NEG_INF = -1e30
+
+
+# ------------------------------------------------------------------ params
+def init_attention(kg: KeyGen, cfg) -> dict:
+    d, h, kh, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    dt = cfg.dtype
+    p = {
+        "wq": dense_init(kg(), (d, h, hd), ("embed", "heads", "head_dim"), dt),
+        "wk": dense_init(kg(), (d, kh, hd), ("embed", "kv_heads", "head_dim"), dt),
+        "wv": dense_init(kg(), (d, kh, hd), ("embed", "kv_heads", "head_dim"), dt),
+        "wo": dense_init(kg(), (h, hd, d), ("heads", "head_dim", "embed"), dt),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = ones_init((hd,), ("head_dim",), dt)
+        p["k_norm"] = ones_init((hd,), ("head_dim",), dt)
+    return p
+
+
+# ---------------------------------------------------------------- projective
+def qkv_project(params, cfg, x, positions, theta):
+    """x: [b, s, d] -> q [b, s, h, hd], k/v [b, s, kh, hd] (roped)."""
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    if cfg.qk_norm:
+        q = rms_norm_gain(q, params["q_norm"], cfg.norm_eps)
+        k = rms_norm_gain(k, params["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, positions, theta)
+    k = apply_rope(k, positions, theta)
+    return q, k, v
+
+
+def out_project(params, attn):
+    """attn: [b, s, h, hd] -> [b, s, d]."""
+    return jnp.einsum("bshk,hkd->bsd", attn, params["wo"])
+
+
+def _scale(cfg):
+    return cfg.attn_scale if cfg.attn_scale > 0 else cfg.head_dim ** -0.5
+
+
+def _softcap(scores, cap: float):
+    if cap and cap > 0:
+        return jnp.tanh(scores / cap) * cap
+    return scores
+
+
+def _fit_block(n: int, blk: int) -> int:
+    """Largest divisor of n that is <= blk (ragged-seq support)."""
+    blk = min(blk, n)
+    while n % blk:
+        blk -= 1
+    return max(blk, 1)
+
+
+# ------------------------------------------------- chunked flash (fwd path)
+def chunked_attention(
+    q, k, v, *,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+    scale: float,
+    q_block: int = 512,
+    kv_block: int = 1024,
+    q_offset: int = 0,
+    kv_valid=None,
+    q_positions=None,
+):
+    """Flash-style attention. q: [b, sq, h, hd]; k, v: [b, sk, kh, hd].
+
+    ``q_offset``: absolute position of q[0] within the kv axis (static).
+    ``window`` > 0 restricts to kv positions in (q_pos - window, q_pos].
+    ``kv_valid``: optional [b] number of valid kv positions (tail mask).
+    ``q_positions``: optional TRACED [sq] absolute positions (sequence-
+    parallel shards); disables static causal block-skipping — masks only.
+    Returns [b, sq, h, hd].
+    """
+    b, sq, h, hd = q.shape
+    _, sk, kh, _ = k.shape
+    g = h // kh
+    q_block = _fit_block(sq, q_block)
+    kv_block = _fit_block(sk, kv_block)
+    nq, nk = sq // q_block, sk // kv_block
+
+    qg = q.reshape(b, sq, kh, g, hd).astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+
+    out_blocks = []
+    for qi in range(nq):  # static unroll: triangular FLOPs, static shapes
+        q_start = q_offset + qi * q_block
+        q_end = q_start + q_block
+        if q_positions is None:
+            # kv block range this q block can see (static bounds)
+            hi = min(nk, -(-q_end // kv_block)) if causal else nk
+            lo = 0
+            if window and window > 0:
+                lo = max(0, (q_start - window + 1) // kv_block)
+        else:  # traced positions: full range, masks carry the semantics
+            lo, hi = 0, nk
+        n_steps = max(hi - lo, 1)
+
+        qb = jax.lax.dynamic_slice_in_dim(qg, qi * q_block, q_block, axis=1)
+        if q_positions is None:
+            q_pos = q_start + jnp.arange(q_block)
+        else:
+            q_pos = jax.lax.dynamic_slice_in_dim(
+                q_positions, qi * q_block, q_block, 0)
+
+        def kv_step(carry, step):
+            m_prev, l_prev, acc = carry
+            kv_i = lo + step
+            kb = jax.lax.dynamic_slice_in_dim(kf, kv_i * kv_block, kv_block, 1)
+            vb = jax.lax.dynamic_slice_in_dim(vf, kv_i * kv_block, kv_block, 1)
+            k_pos = kv_i * kv_block + jnp.arange(kv_block)
+            s = jnp.einsum("bqkgd,bskd->bkgqs", qb, kb)
+            s = _softcap(s, softcap)
+            mask = jnp.ones((q_block, kv_block), dtype=bool)
+            if causal:
+                mask &= q_pos[:, None] >= k_pos[None, :]
+            if window and window > 0:
+                mask &= (q_pos[:, None] - k_pos[None, :]) < window
+            m = mask[None, None, None]
+            if kv_valid is not None:
+                m = m & (k_pos[None, :] < kv_valid[:, None])[:, None, None, None]
+            s = jnp.where(m, s, NEG_INF)
+            m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m_prev - m_new)
+            l_new = l_prev * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bkgqs,bskd->bkgqd", p, vb)
+            acc = acc * corr[..., None] + pv
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((b, kh, g, q_block), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kh, g, q_block), jnp.float32)
+        a0 = jnp.zeros((b, kh, g, q_block, hd), jnp.float32)
+        (mf, lf, accf), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), jnp.arange(n_steps)
+        )
+        ob = accf / jnp.maximum(lf[..., None], 1e-30)
+        # [b, kh, g, qb, hd] -> [b, qb, kh*g, hd]
+        ob = ob.transpose(0, 3, 1, 2, 4).reshape(b, q_block, h, hd)
+        out_blocks.append(ob)
+
+    return jnp.concatenate(out_blocks, axis=1).astype(q.dtype)
+
+
+# ------------------------------------------------- sequence-parallel path
+def _seqpar_attention(cfg, q, k, v, *, causal, window, mesh):
+    """Shard the QUERY sequence over 'model' (shard_map island; KV
+    replicated within the island). The §Perf lever for archs whose head
+    counts don't divide the model axis — GSPMD would otherwise replicate
+    the whole attention there. Causal bounds become dynamic, so each
+    shard scans the full KV range under masks (<=2x triangular waste vs
+    the >=8x replication win; a ring schedule would recover the rest)."""
+    import jax
+    from jax.sharding import PartitionSpec as P
+
+    n_model = int(mesh.shape["model"])
+    b, sq, h, hd = q.shape
+    if sq % n_model:
+        return None  # ragged sequence: fall back
+    s_local = sq // n_model
+    # manual over the batch axes too (else GSPMD replicates the island
+    # boundary across 'data'; see embed_tokens for the profiled cost)
+    import numpy as _np
+    dp = tuple(a for a in ("pod", "data")
+               if a in mesh.axis_names and mesh.shape[a] > 1)
+    dp_n = int(_np.prod([mesh.shape[a] for a in dp])) if dp else 1
+    if b % dp_n:
+        dp = ()
+    bspec = dp or None
+
+    def body(q_l, k_f, v_f):
+        idx = jax.lax.axis_index("model")
+        # traced q_offset -> full-range kv scan with positional masks
+        pos_off = idx * s_local
+        q_pos = pos_off + jnp.arange(s_local)
+        return chunked_attention(
+            q_l, k_f, v_f, causal=causal, window=window,
+            softcap=cfg.attn_softcap, scale=_scale(cfg),
+            q_block=min(cfg.q_block, s_local), kv_block=cfg.kv_block,
+            q_positions=q_pos)
+
+    # fp32 island boundary: the XLA CPU backend miscompiles bf16 sharding
+    # transitions around shard_map regions ("invalid binary opcode copy");
+    # on TPU the casts fuse into the adjacent reshards.
+    out = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(bspec, "model", None, None),
+                  P(bspec, None, None, None),
+                  P(bspec, None, None, None)),
+        out_specs=P(bspec, "model", None, None),
+        axis_names={"model", *dp}, check_vma=False,
+    )(q.astype(jnp.float32), k.astype(jnp.float32),
+      v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+# ----------------------------------------------------------------- forward
+def attention_forward(params, cfg, x, positions, *, theta, window: int = 0,
+                      causal: bool = True, kv_valid=None):
+    """Full attention sub-layer on [b, s, d] (no residual/norm here)."""
+    q, k, v = qkv_project(params, cfg, x, positions, theta)
+    if getattr(cfg, "attn_seq_shard", False):
+        from repro.parallel import sharding as _SHD
+        mesh = _SHD.current_mesh()
+        if (mesh is not None and "model" in getattr(mesh, "axis_names", ())
+                and kv_valid is None):
+            o = _seqpar_attention(cfg, q, k, v, causal=causal,
+                                  window=window, mesh=mesh)
+            if o is not None:
+                return out_project(params, o)
+    o = chunked_attention(
+        q, k, v, causal=causal, window=window, softcap=cfg.attn_softcap,
+        scale=_scale(cfg), q_block=cfg.q_block, kv_block=cfg.kv_block,
+        kv_valid=kv_valid,
+    )
+    return out_project(params, o)
+
+
+def attention_prefill(params, cfg, x, positions, *, theta, window: int = 0):
+    """Forward + return the KV cache contribution [b, s, kh, hd] × 2."""
+    q, k, v = qkv_project(params, cfg, x, positions, theta)
+    o = chunked_attention(
+        q, k, v, causal=True, window=window, softcap=cfg.attn_softcap,
+        scale=_scale(cfg), q_block=cfg.q_block, kv_block=cfg.kv_block,
+    )
+    return out_project(params, o), (k, v)
+
+
+# ------------------------------------------------------------------ decode
+def attention_decode(params, cfg, x, cache_k, cache_v, lengths, *,
+                     theta, window: int = 0):
+    """One-token decode against a dense cache.
+
+    x: [b, 1, d]; cache_k/v: [b, L, kh, hd]; lengths: [b] current cached
+    length (new token is written at ``lengths``). Returns (out [b, 1, d],
+    cache_k, cache_v) with the caches updated in place (donated by jit).
+    """
+    b, L, kh, hd = cache_k.shape
+    pos = lengths[:, None]  # [b, 1]
+    q, k, v = qkv_project(params, cfg, x, pos, theta)
+    bidx = jnp.arange(b)
+    cache_k = cache_k.at[bidx, lengths].set(k[:, 0])
+    cache_v = cache_v.at[bidx, lengths].set(v[:, 0])
+
+    h = cfg.n_heads
+    g = h // kh
+    qg = q.reshape(b, kh, g, hd).astype(jnp.float32) * _scale(cfg)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, cache_k.astype(jnp.float32))
+    s = _softcap(s, cfg.attn_softcap)
+    k_pos = jnp.arange(L)
+    mask = k_pos[None, :] <= lengths[:, None]  # causal: includes new token
+    if window and window > 0:
+        mask &= (lengths[:, None] - k_pos[None, :]) < window
+    s = jnp.where(mask[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p, cache_v.astype(jnp.float32))
+    o = o.reshape(b, 1, h, hd).astype(x.dtype)
+    return out_project(params, o), cache_k, cache_v
+
+
+def attention_decode_paged(params, cfg, x, pool_kv, pages, lengths, *,
+                           theta, layer_idx, window: int = 0):
+    """One-token decode against the RelCache paged pool (the paper's
+    technique on the serving hot path).
+
+    pool_kv: [capacity, layers, 2, block, kh, hd] — the table payload.
+    pages:   [b, max_blocks] pool row ids (sentinel = capacity).
+    lengths: [b] tokens already cached (the new token attends to itself
+    via a separate local term — its KV is returned for the engine to
+    append into the pool through the relational INSERT path).
+
+    Returns (out [b, 1, d], new_k [b, kh, hd], new_v [b, kh, hd]).
+    """
+    cap = pool_kv.shape[0]
+    block = pool_kv.shape[3]
+    b, _, d = x.shape
+    kh, hd = cfg.n_kv_heads, cfg.head_dim
+    h = cfg.n_heads
+    g = h // kh
+
+    pos = lengths[:, None]
+    q, k, v = qkv_project(params, cfg, x, pos, theta)
+    qg = q.reshape(b, kh, g, hd).astype(jnp.float32) * _scale(cfg)
+
+    nblocks = pages.shape[1]
+
+    def blk_step(carry, bi):
+        m_prev, l_prev, acc = carry
+        rows = pages[:, bi]  # [b]
+        safe = jnp.minimum(rows, cap - 1)
+        blk = jax.lax.dynamic_index_in_dim(
+            pool_kv, layer_idx, axis=1, keepdims=False
+        )[safe]  # [b, 2, block, kh, hd]
+        kb = blk[:, 0].astype(jnp.float32)
+        vb = blk[:, 1].astype(jnp.float32)
+        s = jnp.einsum("bkgd,bskd->bkgs", qg, kb)
+        s = _softcap(s, cfg.attn_softcap)
+        k_pos = bi * block + jnp.arange(block)
+        mask = (k_pos[None, :] < lengths[:, None]) & (rows < cap)[:, None]
+        if window and window > 0:
+            mask &= (lengths[:, None] - k_pos[None, :]) <= window
+        s = jnp.where(mask[:, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bkgs,bskd->bkgd", p, vb)
+        acc = acc * corr[..., None] + pv
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((b, kh, g), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, kh, g), jnp.float32)
+    a0 = jnp.zeros((b, kh, g, hd), jnp.float32)
+    (mf, lf, accf), _ = jax.lax.scan(blk_step, (m0, l0, a0), jnp.arange(nblocks))
+
+    # self-attention to the new token's own KV (not yet in the pool)
+    s_self = jnp.einsum("bkgd,bkd->bkg", qg, k[:, 0].astype(jnp.float32))
+    s_self = _softcap(s_self, cfg.attn_softcap)
+    m_new = jnp.maximum(mf, s_self)
+    corr = jnp.exp(mf - m_new)
+    p_self = jnp.exp(s_self - m_new)
+    lf = lf * corr + p_self
+    accf = accf * corr[..., None] + p_self[..., None] * v[:, 0].astype(jnp.float32)[:, :, None]
+
+    o = (accf / jnp.maximum(lf[..., None], 1e-30)).reshape(b, 1, h, hd)
+    return out_project(params, o.astype(x.dtype)), k[:, 0], v[:, 0]
+
+
+# ------------------------------------------------------- cross-attention
+def init_cross_attention(kg: KeyGen, cfg) -> dict:
+    return init_attention(kg, cfg)
+
+
+def cross_attention(params, cfg, x, enc_k, enc_v, *, enc_valid=None):
+    """Decoder cross-attention: q from x [b, sq, d], kv precomputed from
+    the encoder output [b, se, kh, hd] (cached once per request — the
+    paper's 'expensive fragment cached as typed rows')."""
+    b, sq, d = x.shape
+    h, kh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    o = chunked_attention(
+        q, enc_k, enc_v, causal=False, softcap=cfg.attn_softcap,
+        scale=_scale(cfg), q_block=cfg.q_block, kv_block=cfg.kv_block,
+        kv_valid=enc_valid,
+    )
+    return out_project(params, o)
+
+
+def cross_kv(params, cfg, enc_out):
+    """Precompute cross-attention KV from encoder output (no rope)."""
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, params["wv"])
+    return k, v

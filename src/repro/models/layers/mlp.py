@@ -1,0 +1,33 @@
+"""Feed-forward: gated (SwiGLU/GeGLU) or plain, per config."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import KeyGen, dense_init
+
+_ACTS = {
+    "silu": jax.nn.silu,
+    "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+    "relu": jax.nn.relu,
+}
+
+
+def init_mlp(kg: KeyGen, cfg) -> dict:
+    d, f, dt = cfg.d_model, cfg.d_ff, cfg.dtype
+    p = {"w_up": dense_init(kg(), (d, f), ("embed", "mlp"), dt),
+         "w_down": dense_init(kg(), (f, d), ("mlp", "embed"), dt)}
+    if cfg.mlp_gated:
+        p["w_gate"] = dense_init(kg(), (d, f), ("embed", "mlp"), dt)
+    return p
+
+
+def mlp_forward(params, cfg, x):
+    act = _ACTS[cfg.mlp_act]
+    up = jnp.einsum("bsd,df->bsf", x, params["w_up"])
+    if cfg.mlp_gated:
+        gate = jnp.einsum("bsd,df->bsf", x, params["w_gate"])
+        h = act(gate) * up
+    else:
+        h = act(up)
+    return jnp.einsum("bsf,fd->bsd", h, params["w_down"])

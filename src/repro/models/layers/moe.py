@@ -1,0 +1,126 @@
+"""Mixture-of-Experts feed-forward (granite-moe 32e/top-8, phi3.5-moe
+16e/top-2).
+
+Baseline path = **dense dispatch**: every token is multiplied against
+every expert and combined with the (sparse) top-k router weights. This
+lowers on any mesh with plain einsums (experts sharded over 'model' = EP)
+and is the correctness oracle. The compute waste factor is
+n_experts/top_k — visible in the roofline MODEL_FLOPS/HLO_FLOPs ratio and
+attacked in §Perf with the sort-based ragged dispatch (`moe_dispatch`).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import KeyGen, dense_init
+
+from repro.models.layers.mlp import _ACTS
+
+
+def init_moe(kg: KeyGen, cfg) -> dict:
+    d, f, e, dt = cfg.d_model, cfg.d_ff, cfg.n_experts, cfg.dtype
+    p = {
+        "router": dense_init(kg(), (d, e), ("embed", "expert"), dt),
+        "w_up": dense_init(kg(), (e, d, f), ("expert", "embed", "mlp"), dt),
+        "w_down": dense_init(kg(), (e, f, d), ("expert", "mlp", "embed"), dt),
+    }
+    if cfg.mlp_gated:
+        p["w_gate"] = dense_init(kg(), (e, d, f), ("expert", "embed", "mlp"), dt)
+    return p
+
+
+def router_probs(params, cfg, x):
+    """x: [b, s, d] -> (weights [b, s, e] with only top-k nonzero, aux)."""
+    logits = jnp.einsum("bsd,de->bse", x, params["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topv, topi = jax.lax.top_k(probs, cfg.top_k)
+    topv = topv / jnp.sum(topv, axis=-1, keepdims=True)  # renormalize
+    weights = jnp.zeros_like(probs)
+    weights = jnp.take_along_axis(weights, topi, axis=-1)  # zeros
+    weights = jnp.zeros_like(probs).at[
+        jnp.arange(probs.shape[0])[:, None, None],
+        jnp.arange(probs.shape[1])[None, :, None],
+        topi,
+    ].set(topv)
+    # Switch-style load-balance aux loss
+    e = cfg.n_experts
+    frac_tokens = jnp.mean((weights > 0).astype(jnp.float32), axis=(0, 1))
+    frac_probs = jnp.mean(probs, axis=(0, 1))
+    aux = e * jnp.sum(frac_tokens * frac_probs)
+    return weights.astype(x.dtype), aux
+
+
+def moe_forward_dense(params, cfg, x):
+    """Dense-dispatch MoE: O(n_experts) compute per token (baseline)."""
+    act = _ACTS[cfg.mlp_act]
+    weights, aux = router_probs(params, cfg, x)
+    up = jnp.einsum("bsd,edf->besf", x, params["w_up"])
+    if cfg.mlp_gated:
+        gate = jnp.einsum("bsd,edf->besf", x, params["w_gate"])
+        h = act(gate) * up
+    else:
+        h = act(up)
+    y = jnp.einsum("besf,efd->besd", h, params["w_down"])
+    out = jnp.einsum("besd,bse->bsd", y, weights)
+    return out, aux
+
+
+def moe_forward_ragged(params, cfg, x, *, capacity_factor: float = 1.25):
+    """Sort-based dispatch: tokens are routed to per-expert buffers of
+    bounded capacity, processed with one [e, cap, d] batch per expert and
+    combined back. Compute is O(top_k × capacity_factor) per token instead
+    of O(n_experts) — the §Perf MoE optimization. Overflowing tokens are
+    dropped from that expert (standard Switch behaviour)."""
+    act = _ACTS[cfg.mlp_act]
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    n = b * s
+    cap = max(8, int(capacity_factor * n * k / e))
+    cap = min(cap, n)
+
+    xf = x.reshape(n, d)
+    logits = jnp.einsum("nd,de->ne", xf, params["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topv, topi = jax.lax.top_k(probs, k)              # [n, k]
+    topv = topv / jnp.sum(topv, axis=-1, keepdims=True)
+
+    # position of each (token, slot) within its expert's buffer
+    flat_e = topi.reshape(-1)                          # [n*k]
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)
+    pos_in_e = jnp.cumsum(onehot, axis=0) * onehot     # running count
+    pos = jnp.sum(pos_in_e, axis=-1) - 1               # [n*k]
+    keep = pos < cap
+    dest = jnp.where(keep, flat_e * cap + pos, e * cap)  # overflow -> dropped
+
+    buf = jnp.zeros((e * cap + 1, d), dtype=x.dtype)
+    src = jnp.repeat(xf, k, axis=0)                    # [n*k, d]
+    buf = buf.at[dest].set(src, mode="drop")
+    buf = buf[:-1].reshape(e, cap, d)
+
+    up = jnp.einsum("ecd,edf->ecf", buf, params["w_up"])
+    if cfg.mlp_gated:
+        gate = jnp.einsum("ecd,edf->ecf", buf, params["w_gate"])
+        h = act(gate) * up
+    else:
+        h = act(up)
+    y = jnp.einsum("ecf,efd->ecd", h, params["w_down"])  # [e, cap, d]
+
+    yf = y.reshape(e * cap, d)
+    safe = jnp.minimum(dest, e * cap - 1)
+    gathered = jnp.where(keep[:, None], yf[safe], 0.0)   # [n*k, d]
+    combined = (gathered.reshape(n, k, d)
+                * topv[..., None].astype(x.dtype)).sum(axis=1)
+
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(topi, e, dtype=jnp.float32), axis=(0, 1)
+    ) * k
+    frac_probs = jnp.mean(probs, axis=0)
+    aux = e * jnp.sum(frac_tokens / k * frac_probs)
+    return combined.reshape(b, s, d), aux
+
+
+def moe_forward(params, cfg, x, *, ragged: bool = False):
+    if ragged:
+        return moe_forward_ragged(params, cfg, x)
+    return moe_forward_dense(params, cfg, x)

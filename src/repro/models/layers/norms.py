@@ -1,0 +1,32 @@
+"""RMSNorm (the only norm any assigned arch uses)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.params import ones_init, zeros_init
+
+
+def init_rmsnorm(d: int, dtype, zero_centered: bool = False):
+    """zero_centered=True stores gamma-1 (gemma convention)."""
+    if zero_centered:
+        return {"scale": zeros_init((d,), ("embed",), dtype)}
+    return {"scale": ones_init((d,), ("embed",), dtype)}
+
+
+def rms_norm(x, params, eps: float = 1e-6, zero_centered: bool = False):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    xn = xf / jnp.sqrt(var + eps)
+    g = params["scale"].astype(jnp.float32)
+    if zero_centered:
+        g = g + 1.0
+    return (xn * g).astype(dt)
+
+
+def rms_norm_gain(x, gain, eps: float = 1e-6):
+    """Norm with a raw gain vector (used for per-head q/k norms)."""
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return ((xf / jnp.sqrt(var + eps)) * gain.astype(jnp.float32)).astype(dt)

@@ -1,0 +1,23 @@
+"""Rotary position embeddings. theta may be a traced scalar (per-layer
+data in scan-over-layers), so inv_freq is computed inside."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rope_freqs(head_dim: int, theta) -> jnp.ndarray:
+    exp = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return jnp.asarray(theta, dtype=jnp.float32) ** (-exp)  # [hd/2]
+
+
+def apply_rope(x, positions, theta):
+    """x: [..., seq, heads, head_dim]; positions: [..., seq] (int).
+    Rotates pairs (x[2i], x[2i+1]) — GPT-NeoX convention (split halves)."""
+    hd = x.shape[-1]
+    inv = rope_freqs(hd, theta)  # [hd/2]
+    ang = positions[..., None].astype(jnp.float32) * inv  # [..., seq, hd/2]
+    cos = jnp.cos(ang)[..., None, :]  # broadcast over heads
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)

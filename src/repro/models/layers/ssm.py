@@ -1,0 +1,316 @@
+"""SSM blocks: Mamba1 (falcon-mamba-7b) and Mamba2/SSD (zamba2-2.7b).
+
+Both are implemented as *chunked* scans — the TPU-native layout:
+
+- Mamba1: the recurrence ``h_t = a_t h_{t-1} + b_t`` is evaluated with a
+  ``lax.scan`` over fixed-size chunks and a ``lax.associative_scan``
+  *within* each chunk, so the materialized (a, b) working set is
+  ``[b, chunk, d_inner, state]`` instead of the full sequence (17 GB/layer
+  at 4k for falcon-mamba if done naively).
+- Mamba2: the SSD dual form — intra-chunk attention-like matmuls
+  (MXU-aligned ``[chunk, chunk]`` score tiles) plus an inter-chunk state
+  pass. This is the matmul-rich rewrite the Mamba2 paper introduces, and
+  it is what the ``mamba_scan`` Pallas kernel implements for real TPUs.
+
+Decode is O(1) per token: the recurrent state ``[b, ...]`` plus a
+depthwise-conv tail of ``conv_width - 1`` tokens. These states are
+exactly the "complex payload" rows the RelCache stores for SSM archs
+(DESIGN.md §Arch-applicability): per-request typed tensors with
+per-user/per-seq expiry.
+
+Sharding: ``d_inner`` (and Mamba2 heads) carry the 'inner'/'ssm_heads'
+logical axes -> 'model'; the tiny B/C/dt projections are replicated.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import Annot, KeyGen, dense_init, ones_init, zeros_init
+
+
+# --------------------------------------------------------------- common ops
+def silu(x):
+    return jax.nn.silu(x)
+
+
+def causal_conv(x, w, b, tail=None):
+    """Depthwise causal conv. x: [b, s, c]; w: [c, width]; b: [c].
+
+    ``tail``: [b, width-1, c] previous tokens (decode/chunk carry) or None
+    (zero history). Returns (y [b, s, c], new_tail [b, width-1, c]).
+    """
+    bsz, s, c = x.shape
+    width = w.shape[1]
+    if tail is None:
+        tail = jnp.zeros((bsz, width - 1, c), dtype=x.dtype)
+    xp = jnp.concatenate([tail, x], axis=1)  # [b, s+width-1, c]
+    # unrolled taps (width is 4): y_t = sum_k w[:, k] * xp[t + k]
+    y = jnp.zeros((bsz, s, c), dtype=jnp.float32)
+    for k in range(width):
+        y = y + xp[:, k : k + s].astype(jnp.float32) * w[:, k].astype(jnp.float32)
+    y = y + b.astype(jnp.float32)
+    new_tail = xp[:, s:].astype(x.dtype) if width > 1 else tail
+    return y.astype(x.dtype), new_tail
+
+
+def conv_step(x1, w, b, tail):
+    """One-token conv update. x1: [b, c]; tail: [b, width-1, c]."""
+    width = w.shape[1]
+    xp = jnp.concatenate([tail, x1[:, None]], axis=1)  # [b, width, c]
+    y = jnp.einsum("bwc,cw->bc", xp.astype(jnp.float32), w.astype(jnp.float32))
+    y = y + b.astype(jnp.float32)
+    return y.astype(x1.dtype), xp[:, 1:]
+
+
+def _fit_chunk(s: int, chunk: int) -> int:
+    """Largest divisor of s that is <= chunk (ragged-seq support)."""
+    chunk = min(chunk, s)
+    while s % chunk:
+        chunk -= 1
+    return max(chunk, 1)
+
+
+def _assoc_linear_scan(a, b, h0):
+    """h_t = a_t * h_{t-1} + b_t along axis 1, given h0.
+
+    a, b: [b, s, ...]; h0: [b, ...]. Returns (h [b, s, ...], h_last).
+    Uses associative_scan: elements (A, B) with (A2, B2)∘(A1, B1) =
+    (A1*A2, B2 + A2*B1); prefix (P_t, Q_t) gives h_t = P_t h0 + Q_t.
+    """
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, br + ar * bl
+
+    pa, pb = jax.lax.associative_scan(combine, (a, b), axis=1)
+    h = pa * h0[:, None] + pb
+    return h, h[:, -1]
+
+
+# ============================================================= Mamba1 block
+def init_mamba1(kg: KeyGen, cfg) -> dict:
+    d, di, st, dr = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_dt_rank
+    cw, dt = cfg.ssm_conv, cfg.dtype
+    # S4D-real init for A: A[n] = -(n+1), stored as log
+    a0 = jnp.broadcast_to(
+        jnp.arange(1, st + 1, dtype=jnp.float32)[None, :], (di, st)
+    )
+    # x/z projections are SEPARATE tensors (not one [d, 2di] concat) so the
+    # 'inner' dim shards identically for both under manual AND auto modes.
+    return {
+        "in_x": dense_init(kg(), (d, di), ("embed", "inner"), dt),
+        "in_z": dense_init(kg(), (d, di), ("embed", "inner"), dt),
+        "conv_w": dense_init(kg(), (di, cw), ("inner", "conv"), dt, scale=1.0),
+        "conv_b": zeros_init((di,), ("inner",), dt),
+        "x_proj": dense_init(kg(), (di, dr + 2 * st), ("inner", "lowrank"), dt),
+        "dt_proj": dense_init(kg(), (dr, di), ("lowrank", "inner"), dt),
+        "dt_bias": zeros_init((di,), ("inner",), jnp.float32),
+        "A_log": Annot(jnp.log(a0), ("inner", "state")),
+        "D": ones_init((di,), ("inner",), jnp.float32),
+        "out_proj": dense_init(kg(), (di, d), ("inner", "embed"), dt),
+    }
+
+
+def mamba1_init_state(cfg, batch: int):
+    di, st, cw = cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    return {
+        "h": jnp.zeros((batch, di, st), dtype=jnp.float32),
+        "conv": jnp.zeros((batch, cw - 1, di), dtype=cfg.dtype),
+    }
+
+
+def _mamba1_ssm_inputs(params, cfg, xc):
+    """Shared pre-scan math. xc: [b, s, di] (post-conv, post-silu).
+    Returns (dt [b,s,di] fp32, B [b,s,st], C [b,s,st])."""
+    dr, st = cfg.ssm_dt_rank, cfg.ssm_state
+    dbc = jnp.einsum("bsc,cr->bsr", xc, params["x_proj"]).astype(jnp.float32)
+    dt_lr, B, C = jnp.split(dbc, [dr, dr + st], axis=-1)
+    dt = jnp.einsum("bsr,rc->bsc", dt_lr, params["dt_proj"].astype(jnp.float32))
+    dt = jax.nn.softplus(dt + params["dt_bias"])
+    return dt, B, C
+
+
+def mamba1_forward(params, cfg, x, state=None):
+    """x: [b, s, d] -> (y [b, s, d], new_state). ``state`` None = zeros.
+
+    Chunked selective scan; chunk = cfg.ssm_chunk (s must divide or be
+    padded by the caller).
+    """
+    bsz, s, d = x.shape
+    di, st = cfg.d_inner, cfg.ssm_state
+    chunk = _fit_chunk(s, cfg.ssm_chunk)
+    if state is None:
+        state = mamba1_init_state(cfg, bsz)
+
+    xi = jnp.einsum("bsd,de->bse", x, params["in_x"])
+    z = jnp.einsum("bsd,de->bse", x, params["in_z"])
+    xc, conv_tail = causal_conv(xi, params["conv_w"], params["conv_b"],
+                                state["conv"])
+    xc = silu(xc)
+    dt, B, C = _mamba1_ssm_inputs(params, cfg, xc)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))  # [di, st]
+
+    nchunks = s // chunk
+    xcf = xc.astype(jnp.float32)
+
+    def chunk_step(h0, idx):
+        sl = lambda v: jax.lax.dynamic_slice_in_dim(v, idx * chunk, chunk, 1)
+        dtc, Bc, Cc, xcc = sl(dt), sl(B), sl(C), sl(xcf)
+        a = jnp.exp(dtc[..., None] * A)                       # [b,c,di,st]
+        bx = (dtc * xcc)[..., None] * Bc[:, :, None, :]       # [b,c,di,st]
+        h, h_last = _assoc_linear_scan(a, bx, h0)
+        yc = jnp.einsum("bcis,bcs->bci", h, Cc)               # [b,c,di]
+        return h_last, yc
+
+    h_last, ys = jax.lax.scan(chunk_step, state["h"], jnp.arange(nchunks))
+    y = jnp.moveaxis(ys, 0, 1).reshape(bsz, s, di)
+    y = y + params["D"] * xcf
+    y = (y * silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = jnp.einsum("bsi,id->bsd", y, params["out_proj"])
+    return out, {"h": h_last, "conv": conv_tail}
+
+
+def mamba1_decode(params, cfg, x1, state):
+    """One token. x1: [b, 1, d] -> (y [b, 1, d], new_state)."""
+    bsz = x1.shape[0]
+    xi = jnp.einsum("bsd,de->bse", x1, params["in_x"])[:, 0]
+    z = jnp.einsum("bsd,de->bse", x1, params["in_z"])[:, 0]
+    xc, conv_tail = conv_step(xi, params["conv_w"], params["conv_b"],
+                              state["conv"])
+    xc = silu(xc)
+    dt, B, C = _mamba1_ssm_inputs(params, cfg, xc[:, None])
+    dt, B, C = dt[:, 0], B[:, 0], C[:, 0]
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    a = jnp.exp(dt[..., None] * A)                            # [b,di,st]
+    bx = (dt * xc.astype(jnp.float32))[..., None] * B[:, None, :]
+    h = a * state["h"] + bx
+    y = jnp.einsum("bis,bs->bi", h, C) + params["D"] * xc.astype(jnp.float32)
+    y = (y * silu(z.astype(jnp.float32))).astype(x1.dtype)
+    out = jnp.einsum("bi,id->bd", y, params["out_proj"])[:, None]
+    return out, {"h": h, "conv": conv_tail}
+
+
+# ========================================================= Mamba2 (SSD) block
+def init_mamba2(kg: KeyGen, cfg) -> dict:
+    d, di, st = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    nh, cw, dt = cfg.ssm_heads, cfg.ssm_conv, cfg.dtype
+    # separate projections (z, x sharded on 'inner'; B/C/dt replicated)
+    return {
+        "in_z": dense_init(kg(), (d, di), ("embed", "inner"), dt),
+        "in_x": dense_init(kg(), (d, di), ("embed", "inner"), dt),
+        "in_bc": dense_init(kg(), (d, 2 * st), ("embed", None), dt),
+        "in_dt": dense_init(kg(), (d, nh), ("embed", "ssm_heads"), dt),
+        "conv_x_w": dense_init(kg(), (di, cw), ("inner", "conv"), dt, scale=1.0),
+        "conv_x_b": zeros_init((di,), ("inner",), dt),
+        "conv_bc_w": dense_init(kg(), (2 * st, cw), (None, "conv"), dt, scale=1.0),
+        "conv_bc_b": zeros_init((2 * st,), (None,), dt),
+        "A_log": zeros_init((nh,), ("ssm_heads",), jnp.float32),
+        "D": ones_init((nh,), ("ssm_heads",), jnp.float32),
+        "dt_bias": zeros_init((nh,), ("ssm_heads",), jnp.float32),
+        "gate_norm": ones_init((di,), ("inner",), dt),
+        "out_proj": dense_init(kg(), (di, d), ("inner", "embed"), dt),
+    }
+
+
+def mamba2_init_state(cfg, batch: int):
+    di, st, cw = cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    nh, dh = cfg.ssm_heads, cfg.ssm_head_dim
+    return {
+        "h": jnp.zeros((batch, nh, dh, st), dtype=jnp.float32),
+        "conv_x": jnp.zeros((batch, cw - 1, di), dtype=cfg.dtype),
+        "conv_bc": jnp.zeros((batch, cw - 1, 2 * st), dtype=cfg.dtype),
+    }
+
+
+def _mamba2_proj(params, cfg, x):
+    z = jnp.einsum("bsd,de->bse", x, params["in_z"])
+    xi = jnp.einsum("bsd,de->bse", x, params["in_x"])
+    BC = jnp.einsum("bsd,de->bse", x, params["in_bc"])
+    dt = jnp.einsum("bsd,de->bse", x, params["in_dt"])
+    return z, xi, BC, dt
+
+
+def _gated_norm(y, z, gain, eps):
+    """Mamba2 output: RMSNorm(y * silu(z)) * gain, fp32 internals."""
+    g = y * silu(z.astype(jnp.float32))
+    var = jnp.mean(jnp.square(g), axis=-1, keepdims=True)
+    return g / jnp.sqrt(var + eps) * gain.astype(jnp.float32)
+
+
+def mamba2_forward(params, cfg, x, state=None):
+    """SSD chunked scan. x: [b, s, d] -> (y, new_state)."""
+    bsz, s, d = x.shape
+    di, st = cfg.d_inner, cfg.ssm_state
+    nh, dh = cfg.ssm_heads, cfg.ssm_head_dim
+    chunk = _fit_chunk(s, cfg.ssm_chunk)
+    if state is None:
+        state = mamba2_init_state(cfg, bsz)
+
+    z, xi, BC, dt = _mamba2_proj(params, cfg, x)
+    xc, tail_x = causal_conv(xi, params["conv_x_w"], params["conv_x_b"],
+                             state["conv_x"])
+    bcc, tail_bc = causal_conv(BC, params["conv_bc_w"], params["conv_bc_b"],
+                               state["conv_bc"])
+    xc, bcc = silu(xc), silu(bcc)
+    B, C = jnp.split(bcc.astype(jnp.float32), 2, axis=-1)   # [b,s,st]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # [b,s,nh]
+    a = -jnp.exp(params["A_log"])                            # [nh]
+    dA = dt * a                                              # [b,s,nh] (<= 0)
+
+    xh = xc.astype(jnp.float32).reshape(bsz, s, nh, dh)
+    nchunks = s // chunk
+    tri = jnp.tril(jnp.ones((chunk, chunk), dtype=bool))
+
+    def chunk_step(h0, idx):
+        sl = lambda v: jax.lax.dynamic_slice_in_dim(v, idx * chunk, chunk, 1)
+        dAc, dtc, Bc, Cc, xcc = sl(dA), sl(dt), sl(B), sl(C), sl(xh)
+        cum = jnp.cumsum(dAc, axis=1)                        # [b,c,nh] inclusive
+        # intra-chunk: scores[t, u] = (C_t . B_u) * exp(cum_t - cum_u), u <= t
+        cb = jnp.einsum("bts,bus->btu", Cc, Bc)              # [b,c,c]
+        decay = jnp.exp(cum[:, :, None, :] - cum[:, None, :, :])  # [b,t,u,nh]
+        w = jnp.where(tri[None, :, :, None], cb[..., None] * decay, 0.0)
+        y_intra = jnp.einsum("btuh,buh,buhd->bthd", w, dtc, xcc)
+        # inter-chunk: contribution of the carried state
+        y_inter = jnp.einsum("bts,bth,bhds->bthd", Cc, jnp.exp(cum), h0)
+        # state update: S = exp(total) * h0 + sum_u exp(total - cum_u) dt_u B_u x_u
+        total = cum[:, -1]                                   # [b,nh]
+        sdecay = jnp.exp(total[:, None] - cum)               # [b,c,nh]
+        s_new = jnp.einsum("buh,buh,buhd,bus->bhds", sdecay, dtc, xcc, Bc)
+        h1 = jnp.exp(total)[..., None, None] * h0 + s_new
+        return h1, y_intra + y_inter
+
+    h0 = state["h"]
+    h_last, ys = jax.lax.scan(chunk_step, h0, jnp.arange(nchunks))
+    y = jnp.moveaxis(ys, 0, 1).reshape(bsz, s, nh, dh)
+    y = y + params["D"][:, None] * xh
+    y = y.reshape(bsz, s, di)
+    y = _gated_norm(y, z, params["gate_norm"], cfg.norm_eps).astype(x.dtype)
+    out = jnp.einsum("bsi,id->bsd", y, params["out_proj"])
+    return out, {"h": h_last, "conv_x": tail_x, "conv_bc": tail_bc}
+
+
+def mamba2_decode(params, cfg, x1, state):
+    """One token. x1: [b, 1, d] -> (y [b, 1, d], new_state)."""
+    bsz = x1.shape[0]
+    nh, dh, st = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    z, xi, BC, dt = _mamba2_proj(params, cfg, x1)
+    z, xi, BC, dt = z[:, 0], xi[:, 0], BC[:, 0], dt[:, 0]
+    xc, tail_x = conv_step(xi, params["conv_x_w"], params["conv_x_b"],
+                           state["conv_x"])
+    bcc, tail_bc = conv_step(BC, params["conv_bc_w"], params["conv_bc_b"],
+                             state["conv_bc"])
+    xc, bcc = silu(xc), silu(bcc)
+    B, C = jnp.split(bcc.astype(jnp.float32), 2, axis=-1)    # [b,st]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # [b,nh]
+    a = -jnp.exp(params["A_log"])
+    dA = jnp.exp(dt * a)                                     # [b,nh]
+    xh = xc.astype(jnp.float32).reshape(bsz, nh, dh)
+    h = (dA[..., None, None] * state["h"]
+         + jnp.einsum("bh,bhd,bs->bhds", dt, xh, B))
+    y = jnp.einsum("bhds,bs->bhd", h, C) + params["D"][:, None] * xh
+    y = y.reshape(bsz, -1)
+    y = _gated_norm(y, z, params["gate_norm"], cfg.norm_eps).astype(x1.dtype)
+    out = jnp.einsum("bi,id->bd", y, params["out_proj"])[:, None]
+    return out, {"h": h, "conv_x": tail_x, "conv_bc": tail_bc}

@@ -1,0 +1,105 @@
+"""Parameter trees with logical sharding axes.
+
+Every ``init_*`` function builds a pytree whose leaves are ``Annot(value,
+axes)`` — the array together with its *logical* axis names (('embed',
+'heads', 'head_dim'), ...). ``split`` separates the tree into (params,
+axes) twins with identical structure, so the sharding rules in
+``repro.parallel`` can map logical names to mesh axes without any risk of
+drifting from the init code (the annotation lives next to the shape).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class Annot(NamedTuple):
+    value: Any                      # jax.Array | ShapeDtypeStruct
+    axes: tuple[str | None, ...]    # logical axis name per dim
+
+
+def annot(value, *axes: str | None) -> Annot:
+    if np.ndim(value) != len(axes):
+        raise ValueError(f"rank {np.ndim(value)} != {len(axes)} axes {axes}")
+    return Annot(value, tuple(axes))
+
+
+def is_annot(x) -> bool:
+    return isinstance(x, Annot)
+
+
+def split(tree):
+    """(annotated tree) -> (params, axes) with identical structure."""
+    params = jax.tree.map(lambda a: a.value, tree, is_leaf=is_annot)
+    axes = jax.tree.map(lambda a: a.axes, tree, is_leaf=is_annot)
+    return params, axes
+
+
+def abstract_init(init_fn, *args, key=None):
+    """Shape-only init: returns (params_sds_tree, axes_tree) with ZERO
+    allocation — the dry-run's way to stand up 42B-param models on a
+    laptop. ``init_fn(key, *args)`` must return an annotated tree."""
+    captured = {}
+
+    def run(k):
+        tree = init_fn(k, *args)
+        vals, axes = split(tree)
+        captured["axes"] = axes  # concrete strings, safe to grab in-trace
+        return vals
+
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    vals_sds = jax.eval_shape(run, key)
+    return vals_sds, captured["axes"]
+
+
+def stack(trees: list, axis_name: str = "layers"):
+    """Stack a list of identically-structured annotated trees along a new
+    leading 'layers' axis (scan-over-layers layout)."""
+    def _stack(*leaves):
+        vals = jnp.stack([l.value for l in leaves])
+        return Annot(vals, (axis_name,) + leaves[0].axes)
+    return jax.tree.map(_stack, *trees, is_leaf=is_annot)
+
+
+# ----------------------------------------------------------- initializers
+def _fan_in_out(shape, axes):
+    """Heuristic fan computation: last axis = out, rest = in."""
+    if len(shape) == 1:
+        return shape[0], shape[0]
+    fan_out = shape[-1]
+    fan_in = int(np.prod(shape[:-1]))
+    return fan_in, fan_out
+
+
+def dense_init(key, shape, axes, dtype, scale: float = 1.0) -> Annot:
+    fan_in, _ = _fan_in_out(shape, axes)
+    std = scale / np.sqrt(max(fan_in, 1))
+    v = (jax.random.normal(key, shape, dtype=jnp.float32) * std).astype(dtype)
+    return Annot(v, tuple(axes))
+
+
+def zeros_init(shape, axes, dtype) -> Annot:
+    return Annot(jnp.zeros(shape, dtype=dtype), tuple(axes))
+
+
+def ones_init(shape, axes, dtype) -> Annot:
+    return Annot(jnp.ones(shape, dtype=dtype), tuple(axes))
+
+
+def const_init(value, axes) -> Annot:
+    return Annot(value, tuple(axes))
+
+
+class KeyGen:
+    """Splitting helper: kg() returns a fresh key each call."""
+
+    def __init__(self, key):
+        self._key = key
+
+    def __call__(self):
+        self._key, sub = jax.random.split(self._key)
+        return sub

@@ -1,0 +1,769 @@
+"""Unified model stack for all 10 assigned architectures.
+
+One mechanism covers every family: **group-scan over layers**. The layer
+pattern (e.g. gemma3's ``(L L L L L G)``, zamba2's ``(M M M M M M +shared)``)
+is tiled into ``scan_group``-sized units; ``lax.scan`` runs over the units
+with the stacked params as ``xs`` while the unit body is *unrolled*, so
+per-position attributes (sliding-window size, rope theta, shared-block
+application) stay **static** — sliding-window attention keeps its
+triangular/banded FLOPs instead of degrading to full causal with a mask.
+Layers beyond the last full unit run unrolled as a tail.
+
+Decode threads caches through the same scan as ``xs -> ys`` (per-unit cache
+slices in, updated slices out) so no top-level dynamic updates are needed.
+
+Entry points
+    init_model(key, cfg)            -> annotated param tree
+    train_loss(params, cfg, batch)  -> (loss, metrics)
+    prefill(params, cfg, batch)     -> (last-token logits, cache)
+    init_cache(cfg, batch, max_len) -> decode cache pytree
+    decode_step(params, cfg, tokens, cache, lengths, ...) -> (logits, cache)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import params as PM
+from repro.models.config import GLOBAL, LOCAL, MAMBA1, MAMBA2, ModelConfig
+from repro.models.layers import ssm
+from repro.models.layers.attention import (
+    NEG_INF,
+    attention_decode,
+    attention_forward,
+    attention_prefill,
+    cross_attention,
+    cross_kv,
+    init_attention,
+    init_cross_attention,
+    out_project,
+    qkv_project,
+    _scale,
+    _softcap,
+)
+from repro.models.layers.mlp import init_mlp, mlp_forward
+from repro.models.layers.moe import init_moe, moe_forward
+from repro.models.layers.norms import init_rmsnorm, rms_norm
+from repro.models.params import KeyGen
+from repro.parallel.sharding import shard_act
+
+
+# ======================================================== pattern utilities
+def scan_layout(cfg: ModelConfig) -> tuple[int, int, int]:
+    """(group_size, n_groups, n_tail)."""
+    gs = max(cfg.scan_group, 1)
+    ng = cfg.n_layers // gs
+    return gs, ng, cfg.n_layers - ng * gs
+
+
+def _unit_pattern(cfg: ModelConfig) -> tuple[str, ...]:
+    gs, ng, _ = scan_layout(cfg)
+    unit = cfg.layer_pattern[:gs]
+    # every tiled unit must repeat exactly (static unroll correctness)
+    for g in range(ng):
+        assert cfg.layer_pattern[g * gs : (g + 1) * gs] == unit, (
+            f"layer_pattern of {cfg.name} does not tile with scan_group={gs}"
+        )
+    return unit
+
+
+def attn_positions(cfg: ModelConfig) -> tuple[int, ...]:
+    """Indices (within the unit) of attention layers."""
+    return tuple(i for i, k in enumerate(_unit_pattern(cfg))
+                 if k in (GLOBAL, LOCAL))
+
+
+def n_attn_layers(cfg: ModelConfig) -> int:
+    """Total attention layers (scan + tail), EXCLUDING the shared block."""
+    return len(cfg.attn_layer_ids)
+
+
+# ============================================================ layer blocks
+def init_block(kg: KeyGen, cfg: ModelConfig, kind: str,
+               cross: bool = False) -> dict:
+    d, dt = cfg.d_model, cfg.dtype
+    if kind in (MAMBA1, MAMBA2):
+        init_fn = ssm.init_mamba1 if kind == MAMBA1 else ssm.init_mamba2
+        return {"norm1": init_rmsnorm(d, dt), "mamba": init_fn(kg, cfg)}
+    p = {
+        "norm1": init_rmsnorm(d, dt),
+        "attn": init_attention(kg, cfg),
+        "norm2": init_rmsnorm(d, dt),
+    }
+    p["mlp"] = init_moe(kg, cfg) if cfg.is_moe else init_mlp(kg, cfg)
+    if cfg.sandwich_norm:
+        p["norm1_post"] = init_rmsnorm(d, dt)
+        p["norm2_post"] = init_rmsnorm(d, dt)
+    if cross:
+        p["norm_x"] = init_rmsnorm(d, dt)
+        p["cross"] = init_cross_attention(kg, cfg)
+    return p
+
+
+def _mlp_or_moe(p, cfg, h):
+    if cfg.is_moe:
+        import os
+        ragged = os.environ.get("REPRO_MOE_RAGGED") == "1"
+        return moe_forward(p["mlp"], cfg, h, ragged=ragged)
+    return mlp_forward(p["mlp"], cfg, h), jnp.zeros((), jnp.float32)
+
+
+def attn_block_fwd(p, cfg, x, positions, *, window: int, theta: float,
+                   causal: bool = True, collect_kv: bool = False,
+                   enc_kv=None, enc_valid=None):
+    """One attention(+MLP) block. Returns (x, aux, kv or None)."""
+    x = shard_act(x, "batch", "seq", "embed")
+    h = rms_norm(x, p["norm1"], cfg.norm_eps)
+    if collect_kv:
+        a, kv = attention_prefill(p["attn"], cfg, h, positions, theta=theta,
+                                  window=window)
+    else:
+        a = attention_forward(p["attn"], cfg, h, positions, theta=theta,
+                              window=window, causal=causal)
+        kv = None
+    if cfg.sandwich_norm:
+        a = rms_norm(a, p["norm1_post"], cfg.norm_eps)
+    x = x + a
+    if enc_kv is not None:  # enc-dec cross attention
+        h = rms_norm(x, p["norm_x"], cfg.norm_eps)
+        x = x + cross_attention(p["cross"], cfg, h, *enc_kv,
+                                enc_valid=enc_valid)
+    h = rms_norm(x, p["norm2"], cfg.norm_eps)
+    m, aux = _mlp_or_moe(p, cfg, h)
+    if cfg.sandwich_norm:
+        m = rms_norm(m, p["norm2_post"], cfg.norm_eps)
+    return x + m, aux, kv
+
+
+def mamba_block_fwd(p, cfg, kind, x, state=None):
+    """One SSM block. Returns (x, new_state)."""
+    x = shard_act(x, "batch", "seq", "embed")
+    h = rms_norm(x, p["norm1"], cfg.norm_eps)
+    fwd = ssm.mamba1_forward if kind == MAMBA1 else ssm.mamba2_forward
+    y, st = fwd(p["mamba"], cfg, h, state)
+    return x + y, st
+
+
+def mamba_block_decode(p, cfg, kind, x1, state):
+    h = rms_norm(x1, p["norm1"], cfg.norm_eps)
+    step = ssm.mamba1_decode if kind == MAMBA1 else ssm.mamba2_decode
+    y, st = step(p["mamba"], cfg, h, state)
+    return x1 + y, st
+
+
+def attn_block_decode(p, cfg, x1, cache_k, cache_v, lengths, *,
+                      window: int, theta: float, cross_kv_pair=None,
+                      enc_valid=None):
+    """One-token decode through an attention block. cache_k/v: [b,L,kh,hd].
+    Returns (x1, cache_k, cache_v)."""
+    h = rms_norm(x1, p["norm1"], cfg.norm_eps)
+    a, cache_k, cache_v = attention_decode(
+        p["attn"], cfg, h, cache_k, cache_v, lengths, theta=theta,
+        window=window)
+    if cfg.sandwich_norm:
+        a = rms_norm(a, p["norm1_post"], cfg.norm_eps)
+    x1 = x1 + a
+    if cross_kv_pair is not None:
+        h = rms_norm(x1, p["norm_x"], cfg.norm_eps)
+        x1 = x1 + _cross_decode(p["cross"], cfg, h, *cross_kv_pair,
+                                enc_valid=enc_valid)
+    h = rms_norm(x1, p["norm2"], cfg.norm_eps)
+    m, _ = _mlp_or_moe(p, cfg, h)
+    if cfg.sandwich_norm:
+        m = rms_norm(m, p["norm2_post"], cfg.norm_eps)
+    return x1 + m, cache_k, cache_v
+
+
+def _cross_decode(p, cfg, x1, enc_k, enc_v, *, enc_valid=None):
+    """Single-token cross attention. x1: [b,1,d]; enc_k/v: [b,se,kh,hd]."""
+    b, _, d = x1.shape
+    h, kh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    g = h // kh
+    q = jnp.einsum("bsd,dhk->bshk", x1, p["wq"])
+    qg = q.reshape(b, kh, g, hd).astype(jnp.float32) * _scale(cfg)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, enc_k.astype(jnp.float32))
+    s = _softcap(s, cfg.attn_softcap)
+    if enc_valid is not None:
+        k_pos = jnp.arange(enc_k.shape[1])
+        s = jnp.where((k_pos[None, :] < enc_valid[:, None])[:, None, None],
+                      s, NEG_INF)
+    pr = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", pr, enc_v.astype(jnp.float32))
+    o = o.reshape(b, 1, h, hd).astype(x1.dtype)
+    return out_project(p, o)
+
+
+# ============================================================== init model
+def init_model(key, cfg: ModelConfig):
+    """Annotated parameter tree (values + logical axes)."""
+    kg = KeyGen(key)
+    d, dt = cfg.d_model, cfg.dtype
+    tree: dict[str, Any] = {
+        "embed": PM.dense_init(kg(), (cfg.padded_vocab, d),
+                               ("vocab", "embed"), dt, scale=1.0),
+        "final_norm": init_rmsnorm(d, dt),
+    }
+    unit = _unit_pattern(cfg)
+    gs, ng, tail = scan_layout(cfg)
+    layers = [init_block(kg, cfg, cfg.layer_pattern[i],
+                         cross=cfg.is_encdec)
+              for i in range(cfg.n_layers)]
+    if ng > 0:
+        tree["layers"] = PM.stack(layers[: ng * gs])
+    for t in range(tail):
+        tree[f"tail_{t}"] = layers[ng * gs + t]
+    if cfg.shared_attn_every > 0:  # zamba2 shared transformer block
+        shared_cfg = cfg  # same dims; the shared block carries the MLP
+        tree["shared"] = {
+            "norm1": init_rmsnorm(d, dt),
+            "attn": init_attention(kg, shared_cfg),
+            "norm2": init_rmsnorm(d, dt),
+            "mlp": init_mlp(kg, shared_cfg),
+        }
+    if cfg.is_encdec:
+        enc_layers = [init_block(kg, cfg, GLOBAL) for _ in range(cfg.enc_layers)]
+        tree["encoder"] = {
+            "layers": PM.stack(enc_layers),
+            "final_norm": init_rmsnorm(d, dt),
+        }
+    if not cfg.tie_embeddings:
+        tree["lm_head"] = PM.dense_init(kg(), (d, cfg.padded_vocab),
+                                        ("embed", "vocab"), dt, scale=1.0)
+    return tree
+
+
+# ======================================================= embeddings / loss
+def embed_tokens(params, cfg: ModelConfig, tokens):
+    """Token lookup. Under a mesh with a vocab-sharded table, the gather is
+    done shard-locally (clamp + mask + psum over 'model') via a
+    partial-manual shard_map — GSPMD otherwise falls back to replicating
+    the whole table ('involuntary full rematerialization')."""
+    from repro.parallel import sharding as _SHD
+    from jax.sharding import PartitionSpec as _P
+
+    emb = params["embed"]
+    mesh = _SHD.current_mesh()
+    rules = _SHD.current_rules()
+    use_manual = (
+        rules is not None and mesh is not None
+        and "model" in getattr(mesh, "axis_names", ())
+        and "model" in rules.get("vocab", ())
+        and cfg.padded_vocab % mesh.shape["model"] == 0
+    )
+    if use_manual:
+        vshard = cfg.padded_vocab // mesh.shape["model"]
+        # manual over the batch axes too: leaving them auto makes GSPMD
+        # replicate the [b, s, d] psum operand across 'data' (profiled:
+        # 1.2-1.5 GB/step of pure replication traffic on starcoder2).
+        dp = tuple(a for a in ("pod", "data")
+                   if a in mesh.axis_names and mesh.shape[a] > 1)
+        dp_n = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+        if tokens.shape[0] % dp_n:
+            dp = ()
+
+        def lookup(emb_local, toks):
+            lo = jax.lax.axis_index("model") * vshard
+            loc = jnp.clip(toks - lo, 0, vshard - 1)
+            # fp32 inside the island: the XLA CPU backend miscompiles a
+            # bf16 psum here ("invalid binary instruction opcode copy");
+            # on TPU the cast is fused away around a tiny [b,s,d] tensor.
+            out = jnp.take(emb_local, loc, axis=0).astype(jnp.float32)
+            ok = ((toks >= lo) & (toks < lo + vshard))[..., None]
+            out = jnp.where(ok, out, 0.0)
+            return jax.lax.psum(out, "model").astype(emb_local.dtype)
+
+        x = jax.shard_map(
+            lookup, mesh=mesh,
+            in_specs=(_P("model", None), _P(dp or None)),
+            out_specs=_P(dp or None),
+            axis_names={"model", *dp}, check_vma=False,
+        )(emb, tokens)
+    else:
+        x = jnp.take(emb, tokens, axis=0)
+    if cfg.scale_embeddings:
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), dtype=x.dtype)
+    return shard_act(x, "batch", "seq", "embed")
+
+
+def assemble_inputs(params, cfg: ModelConfig, batch):
+    """tokens (+ optional frontend embeddings) -> hidden [b, s_total, d]."""
+    x = embed_tokens(params, cfg, batch["tokens"])
+    if cfg.frontend != "none" and "frontend" in batch:
+        fe = batch["frontend"].astype(x.dtype)
+        x = jnp.concatenate([fe, x], axis=1)
+    return x
+
+
+def logits_fn(params, cfg: ModelConfig, hidden):
+    """hidden [..., d] -> fp32 logits [..., padded_vocab] (softcapped,
+    padded ids masked)."""
+    head = params["embed"].T if "lm_head" not in params else params["lm_head"]
+    logits = jnp.einsum("...d,dv->...v", hidden.astype(jnp.float32),
+                        head.astype(jnp.float32))
+    logits = _softcap(logits, cfg.logit_softcap)
+    if cfg.padded_vocab != cfg.vocab:
+        ids = jnp.arange(cfg.padded_vocab)
+        logits = jnp.where(ids < cfg.vocab, logits, NEG_INF)
+    axes = (("batch", "seq", "vocab") if logits.ndim == 3
+            else ("batch", "vocab"))
+    return shard_act(logits, *axes)
+
+
+def lm_loss(params, cfg: ModelConfig, hidden, labels, loss_mask, *,
+            unroll: bool = False):
+    """Chunked-vocab cross entropy: logits materialized one seq block at a
+    time ([b, loss_block, padded_vocab] fp32, vocab-sharded), never the
+    full [b, s, V]."""
+    b, s, d = hidden.shape
+    blk = min(cfg.loss_block, s)
+    while s % blk:
+        blk //= 2
+    nblk = s // blk
+    mask = loss_mask.astype(jnp.float32)
+
+    def body(carry, idx):
+        tot, cnt = carry
+        h = jax.lax.dynamic_slice_in_dim(hidden, idx * blk, blk, 1)
+        y = jax.lax.dynamic_slice_in_dim(labels, idx * blk, blk, 1)
+        m = jax.lax.dynamic_slice_in_dim(mask, idx * blk, blk, 1)
+        lg = logits_fn(params, cfg, h)
+        lse = jax.nn.logsumexp(lg, axis=-1)
+        # label logit via masked sum, NOT take_along_axis: a gather over
+        # the vocab-sharded axis would make GSPMD all-gather the logits
+        ids = jnp.arange(cfg.padded_vocab)
+        ll = jnp.sum(jnp.where(ids == y[..., None], lg, 0.0), axis=-1)
+        tot = tot + jnp.sum((lse - ll) * m)
+        cnt = cnt + jnp.sum(m)
+        return (tot, cnt), None
+
+    init = (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32))
+    if unroll:
+        carry = init
+        for i in range(nblk):
+            carry, _ = body(carry, i)
+        tot, cnt = carry
+    else:
+        (tot, cnt), _ = jax.lax.scan(body, init, jnp.arange(nblk))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+# ========================================================== stack (forward)
+def _split_scan_tail(params, cfg):
+    gs, ng, tail = scan_layout(cfg)
+    scan_tree = None
+    if ng > 0:
+        scan_tree = jax.tree.map(
+            lambda a: a.reshape(ng, gs, *a.shape[1:]), params["layers"])
+    tails = [params[f"tail_{t}"] for t in range(tail)]
+    return scan_tree, tails
+
+
+def _unit_fwd(cfg, unit, p_unit, shared, x, positions, *, collect: bool,
+              enc_kv_unit=None, enc_valid=None, causal=True):
+    """Run one pattern unit (unrolled). p_unit leaves have leading [gs].
+    Returns (x, aux, kvs list, states list, shared_kv or None)."""
+    aux = jnp.zeros((), jnp.float32)
+    kvs, states = [], []
+    shared_kv = None
+    windows = [cfg.window if k == LOCAL else 0 for k in unit]
+    thetas = [cfg.rope_theta if k == LOCAL else
+              (cfg.rope_theta_global or cfg.rope_theta) for k in unit]
+    for j, kind in enumerate(unit):
+        pj = jax.tree.map(lambda a: a[j], p_unit)
+        if kind in (MAMBA1, MAMBA2):
+            x, st = mamba_block_fwd(pj, cfg, kind, x)
+            if collect:
+                states.append(st)
+        else:
+            ek = None
+            if enc_kv_unit is not None:
+                ek = (enc_kv_unit[0][j], enc_kv_unit[1][j])
+            x, a, kv = attn_block_fwd(
+                pj, cfg, x, positions, window=windows[j], theta=thetas[j],
+                causal=causal, collect_kv=collect, enc_kv=ek,
+                enc_valid=enc_valid)
+            aux = aux + a
+            if collect and kv is not None:
+                kvs.append(kv)
+    if shared is not None:  # zamba2: shared block closes every unit
+        x, a, kv = attn_block_fwd(
+            shared, cfg, x, positions, window=0,
+            theta=cfg.rope_theta_global or cfg.rope_theta,
+            causal=causal, collect_kv=collect)
+        aux = aux + a
+        if collect and kv is not None:
+            shared_kv = kv
+    return x, aux, kvs, states, shared_kv
+
+
+def run_stack(params, cfg: ModelConfig, x, positions, *, collect: bool = False,
+              enc_kv=None, enc_valid=None, causal: bool = True,
+              remat: str = "none", unroll: bool = False):
+    """Decoder (or encoder) stack. Returns (hidden, aux, collected).
+
+    ``collect=True`` gathers per-layer KV (attention) / final SSM states
+    (prefill path). ``enc_kv``: (k, v) stacked [L, b, se, kh, hd] for
+    enc-dec cross attention.
+    """
+    unit = _unit_pattern(cfg)
+    gs, ng, tail = scan_layout(cfg)
+    shared = params.get("shared")
+    scan_tree, tails = _split_scan_tail(params, cfg)
+
+    enc_kv_scan = enc_kv_tail = None
+    if enc_kv is not None:
+        ek, ev = enc_kv
+        enc_kv_scan = (ek[: ng * gs].reshape(ng, gs, *ek.shape[1:]),
+                       ev[: ng * gs].reshape(ng, gs, *ev.shape[1:]))
+        enc_kv_tail = (ek[ng * gs :], ev[ng * gs :])
+
+    collected_kv, collected_states = [], []
+    shared_kv_out = None
+    aux_total = jnp.zeros((), jnp.float32)
+
+    if ng > 0:
+        def body(carry, xs):
+            x, aux = carry
+            if enc_kv_scan is not None:
+                p_unit, eku = xs
+            else:
+                p_unit, eku = xs, None
+            x, a, kvs, states, shkv = _unit_fwd(
+                cfg, unit, p_unit, shared, x, positions, collect=collect,
+                enc_kv_unit=eku, enc_valid=enc_valid, causal=causal)
+            ys = {}
+            if collect and kvs:
+                ys["k"] = jnp.stack([k for k, v in kvs])
+                ys["v"] = jnp.stack([v for k, v in kvs])
+            if collect and states:
+                ys["ssm"] = jax.tree.map(lambda *l: jnp.stack(l), *states)
+            if collect and shkv is not None:
+                ys["shk"], ys["shv"] = shkv
+            return (x, aux + a), ys
+
+        if remat != "none":
+            policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                      if remat == "dots" else
+                      jax.checkpoint_policies.nothing_saveable)
+            body = jax.checkpoint(body, policy=policy)
+        xs = (scan_tree, enc_kv_scan) if enc_kv_scan is not None else scan_tree
+        if unroll:
+            # analysis mode: XLA cost_analysis counts a while-loop body
+            # ONCE; unrolling yields exact per-step HLO FLOPs/bytes/
+            # collectives for the dry-run roofline. Same math as the scan.
+            carry, ys_list = (x, aux_total), []
+            for gidx in range(ng):
+                xs_g = jax.tree.map(lambda a: a[gidx], xs)
+                carry, ys_g = body(carry, xs_g)
+                ys_list.append(ys_g)
+            (x, aux_total) = carry
+            ys = (jax.tree.map(lambda *l: jnp.stack(l), *ys_list)
+                  if ys_list and ys_list[0] else {})
+        else:
+            (x, aux_total), ys = jax.lax.scan(body, (x, aux_total), xs)
+        if collect and "k" in ys:
+            collected_kv.append((
+                ys["k"].reshape(-1, *ys["k"].shape[2:]),
+                ys["v"].reshape(-1, *ys["v"].shape[2:])))
+        if collect and "ssm" in ys:
+            collected_states.append(jax.tree.map(
+                lambda a: a.reshape(-1, *a.shape[2:]), ys["ssm"]))
+        if collect and "shk" in ys:
+            shared_kv_out = (ys["shk"], ys["shv"])  # [n_groups, b, s, kh, hd]
+
+    for t, pt in enumerate(tails):
+        kind = cfg.layer_pattern[ng * gs + t]
+        if kind in (MAMBA1, MAMBA2):
+            x, st = mamba_block_fwd(pt, cfg, kind, x)
+            if collect:
+                collected_states.append(
+                    jax.tree.map(lambda a: a[None], st))
+        else:
+            window = cfg.window if kind == LOCAL else 0
+            theta = (cfg.rope_theta if kind == LOCAL
+                     else cfg.rope_theta_global or cfg.rope_theta)
+            ek = None
+            if enc_kv_tail is not None:
+                ek = (enc_kv_tail[0][t], enc_kv_tail[1][t])
+            x, a, kv = attn_block_fwd(
+                pt, cfg, x, positions, window=window, theta=theta,
+                causal=causal, collect_kv=collect, enc_kv=ek,
+                enc_valid=enc_valid)
+            aux_total = aux_total + a
+            if collect and kv is not None:
+                collected_kv.append((kv[0][None], kv[1][None]))
+
+    collected = {}
+    if collect and collected_kv:
+        collected["k"] = jnp.concatenate([k for k, v in collected_kv])
+        collected["v"] = jnp.concatenate([v for k, v in collected_kv])
+    if collect and collected_states:
+        collected["ssm"] = jax.tree.map(
+            lambda *l: jnp.concatenate(l), *collected_states)
+    if collect and shared_kv_out is not None:
+        collected["shared_k"], collected["shared_v"] = shared_kv_out
+    return x, aux_total, collected
+
+
+# ============================================================ encoder side
+def run_encoder(params, cfg: ModelConfig, frames, *, unroll: bool = False):
+    """Bidirectional encoder over precomputed frame embeddings [b, se, d].
+    Returns per-decoder-layer cross KV stacked [L_dec, b, se, kh, hd]."""
+    enc = params["encoder"]
+    b, se, d = frames.shape
+    positions = jnp.broadcast_to(jnp.arange(se)[None], (b, se))
+    # uniform GLOBAL encoder: reuse run_stack machinery with a local cfg view
+    enc_params = {"layers": enc["layers"], "final_norm": enc["final_norm"]}
+    import dataclasses
+    enc_cfg = dataclasses.replace(
+        cfg, n_layers=cfg.enc_layers, layer_pattern=(GLOBAL,) * cfg.enc_layers,
+        scan_group=1, shared_attn_every=0, enc_layers=0, n_experts=0,
+        top_k=0)
+    x, _, _ = run_stack(enc_params, enc_cfg, frames.astype(cfg.dtype),
+                        positions, causal=False, unroll=unroll)
+    x = rms_norm(x, enc["final_norm"], cfg.norm_eps)
+    return x
+
+
+def encoder_cross_kv(params, cfg: ModelConfig, enc_out):
+    """Precompute each decoder layer's cross KV from the encoder output.
+    Returns (k, v) stacked [L_dec, b, se, kh, hd] — the 'expensive
+    fragment' the RelCache stores per request."""
+    gs, ng, tail = scan_layout(cfg)
+    ks, vs = [], []
+    scan_tree, tails = _split_scan_tail(params, cfg)
+    if scan_tree is not None:
+        flat = jax.tree.map(
+            lambda a: a.reshape(ng * gs, *a.shape[2:]), scan_tree)
+        for i in range(ng * gs):
+            pi = jax.tree.map(lambda a: a[i], flat)
+            k, v = cross_kv(pi["cross"], cfg, enc_out)
+            ks.append(k)
+            vs.append(v)
+    for pt in tails:
+        k, v = cross_kv(pt["cross"], cfg, enc_out)
+        ks.append(k)
+        vs.append(v)
+    return jnp.stack(ks), jnp.stack(vs)
+
+
+# ============================================================== public API
+def train_loss(params, cfg: ModelConfig, batch, *, remat: str = "none",
+               unroll: bool = False):
+    """batch: tokens [b,st], labels [b,s_total], loss_mask [b,s_total],
+    (+frontend [b,fl,d] | enc_frames [b,se,d]). Returns (loss, metrics)."""
+    x = assemble_inputs(params, cfg, batch)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    enc_kv = None
+    enc_valid = None
+    if cfg.is_encdec:
+        enc_out = run_encoder(params, cfg, batch["enc_frames"],
+                              unroll=unroll)
+        enc_kv = encoder_cross_kv(params, cfg, enc_out)
+    x, aux, _ = run_stack(params, cfg, x, positions, enc_kv=enc_kv,
+                          enc_valid=enc_valid, remat=remat, unroll=unroll)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    ce = lm_loss(params, cfg, x, batch["labels"], batch["loss_mask"],
+                 unroll=unroll)
+    loss = ce
+    if cfg.is_moe:
+        loss = loss + cfg.router_aux_coef * aux / max(cfg.n_layers, 1)
+    return loss, {"ce": ce, "aux": aux}
+
+
+def prefill(params, cfg: ModelConfig, batch, *, unroll: bool = False):
+    """Run the full prompt; returns (last-token logits [b, V], cache dict).
+
+    cache: {"k","v": [La, b, s, kh, hd]} and/or {"ssm": tree[L, ...]},
+    plus {"enc_k","enc_v"} for enc-dec. The serving engine re-blocks k/v
+    into the RelCache pool.
+    """
+    x = assemble_inputs(params, cfg, batch)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    enc_kv = None
+    if cfg.is_encdec:
+        enc_out = run_encoder(params, cfg, batch["enc_frames"],
+                              unroll=unroll)
+        enc_kv = encoder_cross_kv(params, cfg, enc_out)
+    x, _, coll = run_stack(params, cfg, x, positions, collect=True,
+                           enc_kv=enc_kv, unroll=unroll)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = logits_fn(params, cfg, x[:, -1])
+    cache = dict(coll)
+    if enc_kv is not None:
+        cache["enc_k"], cache["enc_v"] = enc_kv
+    return logits, cache
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, enc_len: int = 0):
+    """Decode cache pytree (dense layout; the paged RelCache layout lives
+    in serving/)."""
+    cache: dict[str, Any] = {}
+    la = n_attn_layers(cfg)
+    kh, hd = cfg.n_kv_heads, cfg.head_dim
+    if la > 0:
+        cache["k"] = jnp.zeros((la, batch, max_len, kh, hd), cfg.dtype)
+        cache["v"] = jnp.zeros((la, batch, max_len, kh, hd), cfg.dtype)
+    if cfg.shared_attn_every > 0:
+        na = cfg.n_shared_applications()
+        cache["shared_k"] = jnp.zeros((na, batch, max_len, kh, hd), cfg.dtype)
+        cache["shared_v"] = jnp.zeros((na, batch, max_len, kh, hd), cfg.dtype)
+    if cfg.ssm_layer_ids:
+        n_ssm = len(cfg.ssm_layer_ids)
+        kind = MAMBA1 if MAMBA1 in cfg.layer_pattern else MAMBA2
+        init = (ssm.mamba1_init_state if kind == MAMBA1
+                else ssm.mamba2_init_state)
+        one = init(cfg, batch)
+        cache["ssm"] = jax.tree.map(
+            lambda a: jnp.zeros((n_ssm,) + a.shape, a.dtype), one)
+    if cfg.is_encdec and enc_len > 0:
+        cache["enc_k"] = jnp.zeros((cfg.n_layers, batch, enc_len, kh, hd),
+                                   cfg.dtype)
+        cache["enc_v"] = jnp.zeros((cfg.n_layers, batch, enc_len, kh, hd),
+                                   cfg.dtype)
+    return cache
+
+
+def decode_step(params, cfg: ModelConfig, tokens, cache, lengths, *,
+                enc_valid=None):
+    """One decode token for the whole batch (dense-cache reference path).
+
+    tokens: [b] int32; lengths: [b] tokens already in cache. Returns
+    (logits [b, V], new_cache). The KV caches ride the scan as xs->ys.
+    """
+    unit = _unit_pattern(cfg)
+    gs, ng, tail = scan_layout(cfg)
+    apos = attn_positions(cfg)
+    apg = len(apos)  # attention layers per unit
+    shared = params.get("shared")
+    scan_tree, tails = _split_scan_tail(params, cfg)
+
+    x = embed_tokens(params, cfg, tokens[:, None])
+    windows = [cfg.window if k == LOCAL else 0 for k in unit]
+    thetas = [cfg.rope_theta if k == LOCAL else
+              (cfg.rope_theta_global or cfg.rope_theta) for k in unit]
+    new_cache = dict(cache)
+
+    # slice the caches into per-unit xs
+    def _unit_slices(arr, per_unit):
+        n_scan = ng * per_unit
+        return (arr[:n_scan].reshape(ng, per_unit, *arr.shape[1:]),
+                arr[n_scan:])
+
+    xs: dict[str, Any] = {"p": scan_tree}
+    k_scan = v_scan = k_tail = v_tail = None
+    if "k" in cache and apg > 0:
+        k_scan, k_tail = _unit_slices(cache["k"], apg)
+        v_scan, v_tail = _unit_slices(cache["v"], apg)
+        xs["k"], xs["v"] = k_scan, v_scan
+    ssm_scan = ssm_tail = None
+    spg = len(unit) - apg  # ssm layers per unit
+    if "ssm" in cache and spg > 0:
+        ssm_scan = jax.tree.map(
+            lambda a: a[: ng * spg].reshape(ng, spg, *a.shape[1:]),
+            cache["ssm"])
+        ssm_tail = jax.tree.map(lambda a: a[ng * spg :], cache["ssm"])
+        xs["ssm"] = ssm_scan
+    if "shared_k" in cache:
+        xs["sk"] = cache["shared_k"]
+        xs["sv"] = cache["shared_v"]
+    if "enc_k" in cache:
+        ek_scan, ek_tail = _unit_slices(cache["enc_k"], len(unit))
+        ev_scan, ev_tail = _unit_slices(cache["enc_v"], len(unit))
+        xs["ek"], xs["ev"] = ek_scan, ev_scan
+    kind_ssm = MAMBA1 if MAMBA1 in cfg.layer_pattern else MAMBA2
+
+    def body(x, xs_t):
+        ys = {}
+        ai = si = 0
+        for j, kind in enumerate(unit):
+            pj = jax.tree.map(lambda a: a[j], xs_t["p"])
+            if kind in (MAMBA1, MAMBA2):
+                st = jax.tree.map(lambda a: a[si], xs_t["ssm"])
+                x_new, st = mamba_block_decode(pj, cfg, kind, x, st)
+                ys.setdefault("ssm", []).append(st)
+                x = x_new
+                si += 1
+            else:
+                ck, cv = xs_t["k"][ai], xs_t["v"][ai]
+                ckv = None
+                if "ek" in xs_t:
+                    ckv = (xs_t["ek"][j], xs_t["ev"][j])
+                x, ck, cv = attn_block_decode(
+                    pj, cfg, x, ck, cv, lengths, window=windows[j],
+                    theta=thetas[j], cross_kv_pair=ckv, enc_valid=enc_valid)
+                ys.setdefault("k", []).append(ck)
+                ys.setdefault("v", []).append(cv)
+                ai += 1
+        if shared is not None:
+            sk, sv = xs_t["sk"], xs_t["sv"]
+            x, sk, sv = attn_block_decode(
+                shared, cfg, x, sk, sv, lengths, window=0,
+                theta=cfg.rope_theta_global or cfg.rope_theta)
+            ys["sk"], ys["sv"] = sk, sv
+        out = {}
+        for nm in ("k", "v"):
+            if nm in ys:
+                out[nm] = jnp.stack(ys[nm])
+        if "ssm" in ys:
+            out["ssm"] = jax.tree.map(lambda *l: jnp.stack(l), *ys["ssm"])
+        for nm in ("sk", "sv"):
+            if nm in ys:
+                out[nm] = ys[nm]
+        return x, out
+
+    if ng > 0:
+        x, ys = jax.lax.scan(body, x, xs)
+        if "k" in ys:
+            upd_k = ys["k"].reshape(-1, *ys["k"].shape[2:])
+            upd_v = ys["v"].reshape(-1, *ys["v"].shape[2:])
+            new_cache["k"] = (upd_k if k_tail is None or k_tail.shape[0] == 0
+                              else jnp.concatenate([upd_k, k_tail]))
+            new_cache["v"] = (upd_v if v_tail is None or v_tail.shape[0] == 0
+                              else jnp.concatenate([upd_v, v_tail]))
+        if "ssm" in ys:
+            flat = jax.tree.map(lambda a: a.reshape(-1, *a.shape[2:]),
+                                ys["ssm"])
+            if ssm_tail is not None and jax.tree.leaves(ssm_tail)[0].shape[0]:
+                flat = jax.tree.map(lambda a, b: jnp.concatenate([a, b]),
+                                    flat, ssm_tail)
+            new_cache["ssm"] = flat
+        if "sk" in ys:
+            new_cache["shared_k"], new_cache["shared_v"] = ys["sk"], ys["sv"]
+
+    # tail layers (unrolled, static cache indices)
+    ai = ng * apg
+    si = ng * spg
+    for t, pt in enumerate(tails):
+        kind = cfg.layer_pattern[ng * gs + t]
+        if kind in (MAMBA1, MAMBA2):
+            st = jax.tree.map(lambda a, _si=si: a[_si], new_cache["ssm"])
+            x, st = mamba_block_decode(pt, cfg, kind, x, st)
+            new_cache["ssm"] = jax.tree.map(
+                lambda a, s, _si=si: a.at[_si].set(s), new_cache["ssm"], st)
+            si += 1
+        else:
+            window = cfg.window if kind == LOCAL else 0
+            theta = (cfg.rope_theta if kind == LOCAL
+                     else cfg.rope_theta_global or cfg.rope_theta)
+            idx = ai
+            ai += 1
+            ck, cv = new_cache["k"][idx], new_cache["v"][idx]
+            ckv = None
+            if "enc_k" in cache:
+                ckv = (cache["enc_k"][ng * gs + t], cache["enc_v"][ng * gs + t])
+            x, ck, cv = attn_block_decode(
+                pt, cfg, x, ck, cv, lengths, window=window, theta=theta,
+                cross_kv_pair=ckv, enc_valid=enc_valid)
+            new_cache["k"] = new_cache["k"].at[idx].set(ck)
+            new_cache["v"] = new_cache["v"].at[idx].set(cv)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = logits_fn(params, cfg, x[:, 0])
+    return logits, new_cache

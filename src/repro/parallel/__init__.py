@@ -1,0 +1,11 @@
+from repro.parallel.sharding import (  # noqa: F401
+    axis_rules,
+    current_rules,
+    shard_act,
+    spec_for_axes,
+    specs_for_tree,
+    DEFAULT_RULES,
+    MULTIPOD_RULES,
+    TRAIN_PARAM_RULES,
+    SERVE_PARAM_RULES,
+)

@@ -1,0 +1,84 @@
+"""int8 gradient compression with error feedback for the cross-pod
+all-reduce.
+
+At 2+ pods the gradient reduction crosses the slowest links; quantizing
+to int8 cuts those bytes 4x vs fp32 (2x vs bf16). Scheme (per tensor):
+
+    g_fb   = g + err                      (error feedback carry-in)
+    scale  = pmax_pods(absmax(g_fb)) / (127 // n_pods)
+    q      = clip(round(g_fb / scale), +-(127 // n_pods))   int8
+    g_hat  = psum_pods(q) * scale / n_pods                  (no overflow:
+             n_pods * (127 // n_pods) <= 127 fits int8 on the wire)
+    err'   = g_fb - q * scale             (what this pod failed to send)
+
+Error feedback makes the quantization noise *unbiased over time* — the
+residual is re-added next step, so convergence matches uncompressed SGD
+to first order (Seide et al., Karimireddy et al.).
+
+Realized as a partial-manual shard_map over the 'pod' axis only: inside,
+each pod computes grads on its own batch shard (data/model stay GSPMD-
+auto); the only cross-pod traffic is the int8 tensor + one f32 scale.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def compress_psum_pod(g, err, *, n_pods: int, axis: str = "pod"):
+    """One tensor: (g, err) -> (g_hat, err'). Runs inside a shard_map
+    that is manual over ``axis``."""
+    limit = max(127 // n_pods, 1)
+    gf = g.astype(jnp.float32) + err
+    absmax = jnp.max(jnp.abs(gf))
+    absmax = jax.lax.pmax(absmax, axis)          # shared scale
+    scale = jnp.maximum(absmax, 1e-12) / limit
+    q = jnp.clip(jnp.round(gf / scale), -limit, limit).astype(jnp.int8)
+    qs = jax.lax.psum(q, axis)                   # int8 on the wire
+    g_hat = qs.astype(jnp.float32) * (scale / n_pods)
+    err_new = gf - q.astype(jnp.float32) * scale
+    return g_hat, err_new
+
+
+def make_compressed_grad_fn(loss_grad_fn, mesh, *, axis: str = "pod"):
+    """Wrap ``loss_grad_fn(params, batch) -> ((loss, aux), grads)`` so each
+    pod differentiates its own batch shard and gradients cross pods as
+    int8. Returns fn(params, batch, err_tree) -> (loss, grads, err_tree').
+    """
+    n_pods = int(mesh.shape[axis])
+
+    def per_pod(params, batch, err_tree):
+        (loss, _), grads = loss_grad_fn(params, batch)
+        flat_g, tdef = jax.tree.flatten(grads)
+        flat_e = tdef.flatten_up_to(err_tree)
+        out = [compress_psum_pod(g, e, n_pods=n_pods, axis=axis)
+               for g, e in zip(flat_g, flat_e)]
+        g_hat = tdef.unflatten([o[0] for o in out])
+        err_new = tdef.unflatten([o[1] for o in out])
+        loss = jax.lax.pmean(loss, axis)
+        return loss, g_hat, err_new
+
+    def batch_specs(batch):
+        return jax.tree.map(
+            lambda x: P(*((axis,) + (None,) * (x.ndim - 1))), batch)
+
+    def run(params, batch, err_tree):
+        in_specs = (jax.tree.map(lambda _: P(), params),
+                    batch_specs(batch),
+                    jax.tree.map(lambda _: P(), err_tree))
+        out_specs = (P(), jax.tree.map(lambda _: P(), err_tree),
+                     jax.tree.map(lambda _: P(), err_tree))
+        return jax.shard_map(
+            per_pod, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            axis_names={axis}, check_vma=False,
+        )(params, batch, err_tree)
+
+    return run
+
+
+def init_error_state(params):
+    return jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)

@@ -1,0 +1,5 @@
+from repro.roofline.analysis import (  # noqa: F401
+    HW,
+    collective_bytes,
+    roofline_terms,
+)

@@ -1,0 +1,118 @@
+"""Three-term roofline from a compiled dry-run artifact.
+
+    compute    = HLO_FLOPs / (chips * peak_FLOP/s)
+    memory     = HLO_bytes / (chips * HBM_bw)
+    collective = collective_bytes / (chips * link_bw)
+
+FLOPs/bytes come from ``compiled.cost_analysis()`` (falling back to the
+platform-independent ``lowered.cost_analysis()``); collective bytes are
+NOT in cost_analysis — they are parsed from the post-SPMD HLO text by
+summing the operand sizes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute.
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI (per the assignment).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+
+@dataclasses.dataclass(frozen=True)
+class HW:
+    peak_flops: float = 197e12      # bf16 / chip
+    hbm_bw: float = 819e9           # bytes/s / chip
+    ici_bw: float = 50e9            # bytes/s / link
+
+
+V5E = HW()
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2,
+    "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+}
+
+# `bf16[8,128,512]{2,1,0}` or `f32[]`
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+
+_COLLECTIVE_OPS = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+# e.g. `%x = (bf16[...], bf16[...]) all-reduce(...)` or
+#      `ROOT %y = bf16[...] all-gather(...)`
+_COLL_LINE_RE = re.compile(
+    r"=\s*(\(?[a-z0-9]+\[[^=]*?)\s*"
+    r"(all-reduce-start|all-reduce|all-gather-start|all-gather|"
+    r"reduce-scatter|all-to-all|collective-permute-start|collective-permute)"
+    r"\(")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Sum output-shape bytes of every collective op in (post-SPMD) HLO.
+
+    Returns {op_kind: bytes} plus a "total". Sizes are per-participant
+    (the partitioned module is per-device code), which is the natural
+    numerator for a per-chip link-bandwidth roofline.
+    """
+    out: dict[str, int] = {k: 0 for k in _COLLECTIVE_OPS}
+    for m in _COLL_LINE_RE.finditer(hlo_text):
+        shapes, op = m.group(1), m.group(2)
+        kind = op.replace("-start", "")
+        out[kind] += _shape_bytes(shapes)
+    out["total"] = sum(out[k] for k in _COLLECTIVE_OPS)
+    return out
+
+
+def roofline_terms(
+    *,
+    hlo_flops: float,
+    hlo_bytes: float,
+    coll_bytes: float,
+    chips: int,
+    per_device: bool = True,
+    hw: HW = V5E,
+) -> dict:
+    """Three terms in seconds (+ dominant). ``per_device=True`` means the
+    inputs already are per-partitioned-module numbers (compiled at N
+    devices); otherwise they are whole-program and get divided by chips."""
+    div = 1 if per_device else chips
+    compute = hlo_flops / div / hw.peak_flops
+    memory = hlo_bytes / div / hw.hbm_bw
+    coll = coll_bytes / div / hw.ici_bw
+    terms = {"compute_s": compute, "memory_s": memory, "collective_s": coll}
+    dominant = max(terms, key=terms.get)
+    bound = max(compute, memory, coll)
+    total = max(bound, 1e-30)
+    return {
+        **terms,
+        "dominant": dominant,
+        "bound_s": bound,
+        "compute_fraction": compute / total,
+    }
+
+
+def model_flops_per_step(cfg, tokens: int, kind: str = "train") -> float:
+    """MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE); decode uses D=1
+    token per sequence. Train counts fwd+bwd (x3 of forward)."""
+    n = cfg.active_param_count()
+    per_tok = 2 * n
+    if kind == "train":
+        per_tok *= 3
+    return per_tok * tokens

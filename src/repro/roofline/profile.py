@@ -1,0 +1,76 @@
+import os
+if "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Collective profiler: lower a cell's 1-group probe and rank the
+collectives by per-device bytes — the §Perf 'what is the bottleneck op'
+tool (our stand-in for a wall-clock profile on this CPU-only box).
+
+    PYTHONPATH=src python -m repro.roofline.profile --arch gemma3-27b \
+        --shape train_4k [--variant ...] [--groups 1] [--top 15]
+"""
+import argparse
+import collections
+import re
+
+from repro.roofline.analysis import _COLL_LINE_RE, _shape_bytes
+
+_META_RE = re.compile(r'op_name="([^"]*)"')
+
+
+def top_collectives(hlo_text: str, top: int = 15):
+    rows = []
+    for m in _COLL_LINE_RE.finditer(hlo_text):
+        shapes, op = m.group(1), m.group(2)
+        line_end = hlo_text.find("\n", m.end())
+        meta = _META_RE.search(hlo_text[m.start(): line_end])
+        rows.append((_shape_bytes(shapes), op.replace("-start", ""),
+                     shapes.strip()[:60],
+                     (meta.group(1)[-90:] if meta else "")))
+    rows.sort(reverse=True)
+    agg = collections.Counter()
+    for b, op, _, name in rows:
+        key = (op, name.split("/")[-1][:40])
+        agg[key] += b
+    return rows[:top], agg.most_common(top)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--variant", default="")
+    ap.add_argument("--groups", type=int, default=1)
+    ap.add_argument("--top", type=int, default=15)
+    args = ap.parse_args()
+
+    from repro import configs
+    from repro.configs import shapes as SH
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch import dryrun as DR
+
+    cfg = configs.get_config(args.arch)
+    if args.variant:
+        cfg = DR.VARIANTS[args.variant](cfg)
+    cfg = DR.shrink_to_groups(cfg, args.groups)
+    shape = SH.SHAPES[args.shape]
+    mesh = make_production_mesh()
+    if shape.kind == "train":
+        lowered, extra = DR.lower_train(cfg, shape, mesh, True)
+    elif shape.kind == "prefill":
+        lowered, extra = DR.lower_prefill(cfg, shape, mesh, True)
+    else:
+        lowered, extra = DR.lower_decode(cfg, shape, mesh, True)
+    hlo = lowered.compile().as_text()
+    rows, agg = top_collectives(hlo, args.top)
+    print(f"# {args.arch} {args.shape} variant={args.variant or 'baseline'} "
+          f"groups={args.groups} (cost_scale={extra.get('cost_scale', 1)})")
+    print("## top individual collectives (per-device bytes)")
+    for b, op, shp, name in rows:
+        print(f"{b/2**20:9.1f} MiB  {op:18s} {shp:44s} {name}")
+    print("## aggregated by (op, origin)")
+    for (op, name), b in agg:
+        print(f"{b/2**20:9.1f} MiB  {op:18s} {name}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from repro.serving.paged import PagedGeom, plan_geometry  # noqa: F401
+from repro.serving.engine import ServeEngine, make_serve_step  # noqa: F401

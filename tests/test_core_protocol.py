@@ -1,0 +1,127 @@
+"""Tests for the TCP/unix-socket text protocol daemon and client."""
+import asyncio
+import threading
+
+import pytest
+
+from repro.core.protocol import SQLCachedClient, SQLCachedServer
+
+
+class ServerThread:
+    """Run the asyncio server in a background thread for sync tests."""
+
+    def __init__(self, unix_path=None):
+        self.unix_path = unix_path
+        self.addr = None
+        self._loop = None
+        self._started = threading.Event()
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+        self._started.wait(10)
+
+    def _run(self):
+        self._loop = asyncio.new_event_loop()
+        asyncio.set_event_loop(self._loop)
+        self.server = SQLCachedServer()
+
+        async def boot():
+            self.addr = await self.server.start(unix_path=self.unix_path)
+            self._started.set()
+
+        self._loop.run_until_complete(boot())
+        self._loop.run_forever()
+
+    def stop(self):
+        async def down():
+            await self.server.stop()
+
+        asyncio.run_coroutine_threadsafe(down(), self._loop).result(10)
+        self._loop.call_soon_threadsafe(self._loop.stop)
+        self._thread.join(10)
+
+
+@pytest.fixture(scope="module")
+def server():
+    s = ServerThread()
+    yield s
+    s.stop()
+
+
+@pytest.fixture()
+def client(server):
+    c = SQLCachedClient(*server.addr)
+    yield c
+    c.close()
+
+
+def test_ping(client):
+    assert client.ping()
+
+
+def test_create_insert_select_over_wire(client):
+    client.execute("CREATE TABLE wire (a INT, name TEXT, v FLOAT) CAPACITY 64")
+    for i in range(8):
+        r = client.execute(
+            "INSERT INTO wire (a, name, v) VALUES (?, ?, ?)",
+            [i, f"item-{i}", i * 1.5],
+        )
+        assert r["count"] == 1
+    r = client.execute("SELECT a, name, v FROM wire WHERE a >= ? ORDER BY a ASC", [5])
+    assert [row["a"] for row in r["rows"]] == [5, 6, 7]
+    assert r["rows"][0]["name"] == "item-5"
+    assert r["rows"][2]["v"] == pytest.approx(10.5)
+
+
+def test_aggregate_over_wire(client):
+    r = client.execute("SELECT COUNT(*) FROM wire")
+    assert r["value"] == 8
+
+
+def test_delete_where_over_wire(client):
+    r = client.execute("DELETE FROM wire WHERE a < 3")
+    assert r["count"] == 3
+    assert client.execute("SELECT COUNT(*) FROM wire")["value"] == 5
+
+
+def test_error_reporting(client):
+    with pytest.raises(RuntimeError, match="server error"):
+        client.execute("SELECT a FROM no_such_table")
+    # connection still usable after an error
+    assert client.ping()
+
+
+def test_text_with_special_chars(client):
+    client.execute("CREATE TABLE esc (name TEXT) CAPACITY 8")
+    weird = "a'b\"c\td eé"
+    client.execute("INSERT INTO esc (name) VALUES (?)", [weird])
+    r = client.execute("SELECT name FROM esc WHERE name = ?", [weird])
+    assert r["rows"][0]["name"] == weird
+
+
+def test_concurrent_clients(server):
+    cs = [SQLCachedClient(*server.addr) for _ in range(4)]
+    try:
+        cs[0].execute("CREATE TABLE conc (a INT, w INT) CAPACITY 256")
+        for w, c in enumerate(cs):
+            for i in range(10):
+                c.execute("INSERT INTO conc (a, w) VALUES (?, ?)", [i, w])
+        assert cs[0].execute("SELECT COUNT(*) FROM conc")["value"] == 40
+        for w, c in enumerate(cs):
+            assert c.execute(
+                "SELECT COUNT(*) FROM conc WHERE w = ?", [w]
+            )["value"] == 10
+    finally:
+        for c in cs:
+            c.close()
+
+
+def test_unix_socket(tmp_path):
+    s = ServerThread(unix_path=str(tmp_path / "sqlcached.sock"))
+    try:
+        c = SQLCachedClient(unix_path=str(tmp_path / "sqlcached.sock"))
+        c.execute("CREATE TABLE ux (a INT) CAPACITY 8")
+        c.execute("INSERT INTO ux (a) VALUES (42)")
+        assert c.execute("SELECT COUNT(*) FROM ux")["value"] == 1
+        c.close()
+    finally:
+        s.stop()

@@ -1,0 +1,122 @@
+"""Unit tests for the SQL-subset parser (core/sqlparse.py)."""
+import pytest
+
+from repro.core import predicate as P
+from repro.core import sqlparse as S
+
+
+def test_create_table_basic():
+    st = S.parse("CREATE TABLE t (a INT, b TEXT, c FLOAT)")
+    assert isinstance(st, S.CreateTable)
+    assert st.table == "t"
+    assert st.columns == (("a", "INT"), ("b", "TEXT"), ("c", "FLOAT"))
+    assert st.payloads == ()
+    assert st.capacity == 4096
+
+
+def test_create_table_payload_and_options():
+    st = S.parse(
+        "CREATE TABLE kv (seq INT, PAYLOAD blk TENSOR(16,2,8,64) BF16) "
+        "CAPACITY 1024 MAX_SELECT 64 TTL 100 MAX_ROWS 900 OPS_INTERVAL 32"
+    )
+    assert st.payloads == (("blk", (16, 2, 8, 64), "BF16"),)
+    assert (st.capacity, st.max_select) == (1024, 64)
+    assert (st.ttl, st.max_rows, st.ops_interval) == (100, 900, 32)
+
+
+def test_insert_params_and_ttl():
+    st = S.parse("INSERT INTO t (a, b) VALUES (?, 'x''y') TTL 50")
+    assert isinstance(st, S.Insert)
+    assert st.columns == ("a", "b")
+    assert isinstance(st.values[0], P.Param)
+    assert st.values[1] == P.Const("x'y")
+    assert st.ttl == P.Const(50)
+
+
+def test_select_full_clause():
+    st = S.parse(
+        "SELECT a, PAYLOAD(kv), b FROM t WHERE a = ? AND b BETWEEN 2 AND 7 "
+        "ORDER BY b DESC LIMIT 10"
+    )
+    assert st.columns == ("a", "b")
+    assert st.payloads == ("kv",)
+    assert st.order_by == "b" and st.descending and st.limit == 10
+    assert isinstance(st.where, P.And)
+
+
+def test_select_aggregates():
+    for agg in ("COUNT", "SUM", "MIN", "MAX", "AVG"):
+        arg = "*" if agg == "COUNT" else "x"
+        st = S.parse(f"SELECT {agg}({arg}) FROM t")
+        assert st.agg == (agg, None if arg == "*" else "x")
+
+
+def test_update_multi_set():
+    st = S.parse("UPDATE t SET a = a + 1, TTL = 200 WHERE b = ?")
+    assert st.sets[0][0] == "a" and st.sets[1][0] == "TTL"
+    assert isinstance(st.where, P.BinOp)
+
+
+def test_delete_expire_flush_drop():
+    assert isinstance(S.parse("DELETE FROM t WHERE u = 3"), S.Delete)
+    assert isinstance(S.parse("EXPIRE t"), S.Expire)
+    assert isinstance(S.parse("FLUSH t"), S.Flush)
+    assert isinstance(S.parse("DROP TABLE t"), S.DropTable)
+
+
+def test_operator_precedence():
+    st = S.parse("SELECT a FROM t WHERE a = 1 OR b = 2 AND c = 3")
+    assert isinstance(st.where, P.Or)  # AND binds tighter
+    st = S.parse("SELECT a FROM t WHERE a + 2 * 3 = 7")
+    w = st.where
+    assert isinstance(w.left, P.BinOp) and w.left.op == "+"
+    assert w.left.right.op == "*"
+
+
+def test_in_list_and_not():
+    st = S.parse("SELECT a FROM t WHERE NOT a IN (1, 2, 3)")
+    assert isinstance(st.where, P.Not)
+    assert isinstance(st.where.child, P.InList)
+    assert len(st.where.child.items) == 3
+
+
+def test_param_indices_sequential():
+    st = S.parse("SELECT a FROM t WHERE a = ? AND b = ? AND c = ?")
+    idxs = []
+
+    def walk(n):
+        if isinstance(n, P.Param):
+            idxs.append(n.index)
+        elif isinstance(n, (P.And, P.Or, P.BinOp)):
+            walk(n.left), walk(n.right)
+
+    walk(st.where)
+    assert sorted(idxs) == [0, 1, 2]
+
+
+def test_parse_errors():
+    for bad in (
+        "SELEC a FROM t",
+        "SELECT a FROM",
+        "CREATE TABLE t (a NOTATYPE)",
+        "INSERT INTO t VALUES",
+        "SELECT a FROM t WHERE",
+        "SELECT a FROM t extra garbage",
+        "SELECT a FROM t WHERE a @ 3",
+    ):
+        with pytest.raises(S.SQLError):
+            S.parse(bad)
+
+
+def test_statements_are_hashable():
+    a = S.parse("SELECT a FROM t WHERE a = ?")
+    b = S.parse("SELECT a FROM t WHERE a = ?")
+    assert a == b and hash(a) == hash(b)
+
+
+def test_negative_numbers_and_floats():
+    st = S.parse("SELECT a FROM t WHERE a = -3 AND b = 2.5e2")
+    left = st.where.left
+    assert left.right.op == "-"  # unary minus encoded as 0 - 3
+    right = st.where.right
+    assert right.right == P.Const(250.0)

@@ -1,0 +1,256 @@
+"""Unit + property tests for the device-resident RelTable (core/table.py).
+
+The property tests drive the JAX table and a plain-python dict-of-rows
+model with the same operation stream and assert identical observable
+state — the central invariant of the cache plane.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro.core import predicate as P
+from repro.core import table as T
+from repro.core.schema import ExpiryPolicy, make_schema
+
+
+def mk(capacity=32, max_select=32, expiry=ExpiryPolicy(), payloads=()):
+    return make_schema(
+        "t",
+        [("k", "INT"), ("v", "FLOAT"), ("u", "INT")],
+        payloads,
+        capacity=capacity,
+        max_select=max_select,
+        expiry=expiry,
+    )
+
+
+def ins(schema, state, rows, ttl=0):
+    vals = {
+        "k": jnp.asarray([r[0] for r in rows]),
+        "v": jnp.asarray([r[1] for r in rows], dtype=jnp.float32),
+        "u": jnp.asarray([r[2] for r in rows]),
+    }
+    state, slots, ev = T.insert(schema, state, vals, ttl=ttl)
+    return state, slots, ev
+
+
+def test_insert_select_roundtrip():
+    sch = mk()
+    stt = T.init_state(sch)
+    stt, slots, ev = ins(sch, stt, [(1, 10.0, 0), (2, 20.0, 1), (3, 30.0, 0)])
+    assert int(ev) == 0
+    stt, res = T.select(sch, stt, P.BinOp("=", P.Col("u"), P.Const(0)))
+    assert int(res["count"]) == 2
+    got = sorted(
+        float(v) for v, p in zip(np.asarray(res["rows"]["v"]), np.asarray(res["present"])) if p
+    )
+    assert got == [10.0, 30.0]
+
+
+def test_delete_where_only_flips_validity():
+    sch = mk()
+    stt = T.init_state(sch)
+    stt, *_ = ins(sch, stt, [(i, float(i), i % 2) for i in range(10)])
+    payload_before = {k: v for k, v in stt["cols"].items()}
+    stt, n = T.delete(sch, stt, P.BinOp("=", P.Col("u"), P.Const(1)))
+    assert int(n) == 5
+    assert int(T.live_count(stt)) == 5
+    # column bytes untouched (the 0.2ms-vs-1000ms effect: no data movement)
+    for k in ("k", "v", "u"):
+        np.testing.assert_array_equal(
+            np.asarray(stt["cols"][k]), np.asarray(payload_before[k])
+        )
+
+
+def test_update_expression():
+    sch = mk()
+    stt = T.init_state(sch)
+    stt, *_ = ins(sch, stt, [(1, 10.0, 0), (2, 20.0, 1)])
+    stt, n = T.update(
+        sch, stt,
+        P.BinOp("=", P.Col("u"), P.Const(1)),
+        {"v": P.BinOp("*", P.Col("v"), P.Const(3))},
+    )
+    assert int(n) == 1
+    stt, res = T.select(sch, stt, P.BinOp("=", P.Col("k"), P.Const(2)))
+    assert float(np.asarray(res["rows"]["v"])[0]) == 60.0
+
+
+def test_lru_eviction_on_capacity():
+    sch = mk(capacity=4, max_select=4)
+    stt = T.init_state(sch)
+    stt, *_ = ins(sch, stt, [(i, float(i), 0) for i in range(4)])
+    # touch rows 2,3 (k=2,3) so 0,1 are LRU
+    stt, _ = T.select(sch, stt, P.BinOp(">=", P.Col("k"), P.Const(2)))
+    stt, slots, ev = ins(sch, stt, [(10, 100.0, 0), (11, 110.0, 0)])
+    assert int(ev) == 2  # two valid rows evicted
+    stt, res = T.select(sch, stt, None)
+    ks = sorted(
+        int(v) for v, p in zip(np.asarray(res["rows"]["k"]), np.asarray(res["present"])) if p
+    )
+    assert ks == [2, 3, 10, 11]  # LRU rows 0,1 were replaced
+
+
+def test_ttl_age_expiry():
+    sch = mk(expiry=ExpiryPolicy(ttl=5))
+    stt = T.init_state(sch)
+    stt, *_ = ins(sch, stt, [(1, 1.0, 0)])
+    stt = dict(stt, clock=stt["clock"] + 10)
+    stt, *_ = ins(sch, stt, [(2, 2.0, 0)])
+    stt, n = T.expire(sch, stt)
+    assert int(n) == 1  # first row aged out, second fresh
+    assert int(T.live_count(stt)) == 1
+
+
+def test_per_row_ttl_overrides_default():
+    sch = mk(expiry=ExpiryPolicy(ttl=100))
+    stt = T.init_state(sch)
+    stt, *_ = ins(sch, stt, [(1, 1.0, 0)], ttl=3)  # short per-row ttl
+    stt, *_ = ins(sch, stt, [(2, 2.0, 0)])  # default 100
+    stt = dict(stt, clock=stt["clock"] + 10)
+    stt, n = T.expire(sch, stt)
+    assert int(n) == 1
+    stt, res = T.select(sch, stt, None)
+    assert int(np.asarray(res["rows"]["k"])[0]) == 2
+
+
+def test_max_rows_expiry_keeps_newest():
+    sch = mk(capacity=16, expiry=ExpiryPolicy(max_rows=3))
+    stt = T.init_state(sch)
+    for i in range(6):
+        stt, *_ = ins(sch, stt, [(i, float(i), 0)])
+    stt, n = T.expire(sch, stt)
+    assert int(n) == 3
+    stt, res = T.select(sch, stt, None)
+    ks = sorted(
+        int(v) for v, p in zip(np.asarray(res["rows"]["k"]), np.asarray(res["present"])) if p
+    )
+    assert ks == [3, 4, 5]
+
+
+def test_aggregates():
+    sch = mk()
+    stt = T.init_state(sch)
+    stt, *_ = ins(sch, stt, [(i, float(i), i % 2) for i in range(1, 7)])
+    where = P.BinOp("=", P.Col("u"), P.Const(0))
+    for agg, expect in (("COUNT", 3), ("SUM", 12.0), ("MIN", 2.0),
+                        ("MAX", 6.0), ("AVG", 4.0)):
+        _, val = T.aggregate(sch, stt, agg, "v", where)
+        assert float(val) == expect
+
+
+def test_order_by_and_limit():
+    sch = mk()
+    stt = T.init_state(sch)
+    stt, *_ = ins(sch, stt, [(i, float(10 - i), 0) for i in range(10)])
+    stt, res = T.select(sch, stt, None, order_by="v", descending=True, limit=3)
+    vs = np.asarray(res["rows"]["v"])[:3]
+    assert list(vs) == [10.0, 9.0, 8.0]
+
+
+def test_payload_roundtrip():
+    sch = make_schema(
+        "p", [("k", "INT")], [("blk", (4, 8), jnp.float32)], capacity=8
+    )
+    stt = T.init_state(sch)
+    blk = jnp.arange(2 * 4 * 8, dtype=jnp.float32).reshape(2, 4, 8)
+    stt, slots, _ = T.insert(
+        sch, stt, {"k": jnp.asarray([7, 9])}, {"blk": blk}
+    )
+    stt, res = T.select(
+        sch, stt, P.BinOp("=", P.Col("k"), P.Const(9)), with_payloads=("blk",)
+    )
+    np.testing.assert_allclose(np.asarray(res["payloads"]["blk"][0]), np.asarray(blk[1]))
+
+
+def test_flush():
+    sch = mk()
+    stt = T.init_state(sch)
+    stt, *_ = ins(sch, stt, [(i, float(i), 0) for i in range(5)])
+    stt, n = T.flush(sch, stt)
+    assert int(n) == 5 and int(T.live_count(stt)) == 0
+
+
+def test_insert_row_mask_padding():
+    sch = mk()
+    stt = T.init_state(sch)
+    vals = {"k": jnp.asarray([1, 2, 3, 4]), "v": jnp.zeros(4), "u": jnp.zeros(4, int)}
+    stt, slots, ev = T.insert(sch, stt, vals, row_mask=jnp.asarray([True, True, False, False]))
+    assert int(T.live_count(stt)) == 2
+
+
+# ---------------------------------------------------------------- property
+
+class PyModel:
+    """Plain-python reference model of the table."""
+
+    def __init__(self, capacity):
+        self.rows = {}  # slot -> (k, v, u, created, accessed)
+        self.capacity = capacity
+        self.clock = 0
+
+    def live(self):
+        return len(self.rows)
+
+
+@settings(max_examples=20, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(
+    ops=st.lists(
+        st.one_of(
+            st.tuples(st.just("ins"), st.integers(0, 7), st.integers(0, 3)),
+            st.tuples(st.just("del_u"), st.integers(0, 3)),
+            st.tuples(st.just("del_k"), st.integers(0, 7)),
+            st.tuples(st.just("count"), st.integers(0, 3)),
+        ),
+        min_size=1,
+        max_size=30,
+    )
+)
+def test_property_matches_python_model(ops):
+    """Table state matches a dict-of-rows model under random op streams
+    (no capacity pressure: capacity > max inserts)."""
+    sch = mk(capacity=64, max_select=64)
+    stt = T.init_state(sch)
+    model = []  # list of (k, u) live rows
+
+    for op in ops:
+        if op[0] == "ins":
+            _, k, u = op
+            stt, *_ = ins(sch, stt, [(k, float(k), u)])
+            model.append((k, u))
+        elif op[0] == "del_u":
+            _, u = op
+            stt, n = T.delete(sch, stt, P.BinOp("=", P.Col("u"), P.Const(u)))
+            expect = sum(1 for r in model if r[1] == u)
+            assert int(n) == expect
+            model = [r for r in model if r[1] != u]
+        elif op[0] == "del_k":
+            _, k = op
+            stt, n = T.delete(sch, stt, P.BinOp("=", P.Col("k"), P.Const(k)))
+            expect = sum(1 for r in model if r[0] == k)
+            assert int(n) == expect
+            model = [r for r in model if r[0] != k]
+        elif op[0] == "count":
+            _, u = op
+            _, val = T.aggregate(
+                sch, stt, "COUNT", None, P.BinOp("=", P.Col("u"), P.Const(u))
+            )
+            assert int(val) == sum(1 for r in model if r[1] == u)
+        assert int(T.live_count(stt)) == len(model)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    kvals=st.lists(st.integers(-100, 100), min_size=1, max_size=32),
+    threshold=st.integers(-100, 100),
+)
+def test_property_predicate_scan_matches_numpy(kvals, threshold):
+    sch = mk(capacity=64, max_select=64)
+    stt = T.init_state(sch)
+    stt, *_ = ins(sch, stt, [(k, float(k), 0) for k in kvals])
+    where = P.BinOp("<", P.Col("k"), P.Const(threshold))
+    _, res = T.select(sch, stt, where)
+    assert int(res["count"]) == int(np.sum(np.asarray(kvals) < threshold))

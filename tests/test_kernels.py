@@ -1,0 +1,151 @@
+"""Pallas kernel sweeps: every kernel vs its pure-jnp oracle across
+shapes x dtypes (interpret=True executes the kernel bodies on CPU)."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref as R
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.paged_attention import paged_attention
+from repro.kernels.relscan import compact, relscan
+from repro.kernels.mamba_scan import mamba2_scan
+
+TOLS = {jnp.float32: dict(rtol=2e-5, atol=2e-5),
+        jnp.bfloat16: dict(rtol=2e-2, atol=2e-2)}
+
+
+def _tol(dt):
+    return TOLS[dt]
+
+
+# ------------------------------------------------------------------- flash
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,h,kh,sq,sk,hd,causal,window,softcap",
+    [
+        (2, 4, 4, 128, 128, 64, True, 0, 0.0),
+        (1, 8, 2, 256, 256, 64, True, 0, 0.0),      # GQA g=4
+        (2, 4, 2, 128, 256, 32, False, 0, 0.0),     # cross (sq != sk)
+        (1, 4, 4, 256, 256, 64, True, 96, 0.0),     # sliding window
+        (1, 4, 4, 128, 128, 64, True, 0, 50.0),     # softcap (gemma2)
+        (2, 2, 2, 64, 64, 128, True, 48, 30.0),     # window+softcap
+    ])
+def test_flash_attention_matches_ref(b, h, kh, sq, sk, hd, causal, window,
+                                     softcap, dtype):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(k1, (b, h, sq, hd), dtype)
+    k = jax.random.normal(k2, (b, kh, sk, hd), dtype)
+    v = jax.random.normal(k3, (b, kh, sk, hd), dtype)
+    scale = hd ** -0.5
+    out = flash_attention(q, k, v, scale=scale, causal=causal,
+                          window=window, softcap=softcap,
+                          block_q=64, block_kv=64, interpret=True)
+    want = R.flash_attention_ref(q, k, v, scale=scale, causal=causal,
+                                 window=window, softcap=softcap)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+# ------------------------------------------------------------------- paged
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,h,kh,hd,block,nblk,window,softcap",
+    [
+        (2, 4, 4, 64, 16, 4, 0, 0.0),
+        (3, 8, 2, 64, 16, 6, 0, 0.0),       # GQA g=4
+        (2, 4, 4, 128, 32, 3, 0, 50.0),     # softcap
+        (2, 4, 2, 64, 16, 8, 40, 0.0),      # sliding window
+    ])
+def test_paged_attention_matches_ref(b, h, kh, hd, block, nblk, window,
+                                     softcap, dtype):
+    rng = np.random.default_rng(0)
+    cap = b * nblk + 4
+    k1, k2 = jax.random.split(jax.random.PRNGKey(1))
+    q = jax.random.normal(k1, (b, h, hd), dtype)
+    arena = jax.random.normal(k2, (cap, 2, block, kh, hd), dtype)
+    # each seq gets a random set of rows; some missing (-1)
+    pages = np.full((b, nblk), -1, np.int32)
+    lengths = np.zeros((b,), np.int32)
+    perm = rng.permutation(cap)
+    pi = 0
+    for i in range(b):
+        n = int(rng.integers(1, nblk + 1))
+        pages[i, :n] = perm[pi : pi + n]
+        pi += n
+        lengths[i] = (n - 1) * block + int(rng.integers(1, block + 1))
+    pages = jnp.asarray(pages)
+    lengths = jnp.asarray(lengths)
+    scale = hd ** -0.5
+    out = paged_attention(q, arena, pages, lengths, scale=scale,
+                          softcap=softcap, window=window, interpret=True)
+    want = R.paged_attention_ref(q, arena, pages, lengths, scale=scale,
+                                 softcap=softcap, window=window)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+def test_paged_attention_matches_island_body():
+    """The serving island and the Pallas kernel agree (pool part only)."""
+    from repro.serving.paged import plan_geometry, make_paged_island
+    b, h, kh, hd, block, nblk = 2, 4, 2, 32, 8, 4
+    cap = b * nblk
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(k1, (b, h, hd), jnp.float32)
+    arena = jax.random.normal(k2, (cap, 2, block, kh, hd), jnp.float32)
+    pages = jnp.asarray([[0, 1, 2, -1], [4, 5, -1, -1]], jnp.int32)
+    lengths = jnp.asarray([block * 3, block * 2], jnp.int32)
+    scale = hd ** -0.5
+    kern = paged_attention(q, arena, pages, lengths, scale=scale,
+                           interpret=True)
+    ref = R.paged_attention_ref(q, arena, pages, lengths, scale=scale)
+    np.testing.assert_allclose(kern, ref, rtol=2e-5, atol=2e-5)
+
+
+# ----------------------------------------------------------------- relscan
+@pytest.mark.parametrize("cap,block", [(64, 16), (1024, 256), (100, 32)])
+@pytest.mark.parametrize("two_cols", [False, True])
+def test_relscan_matches_ref(cap, block, two_cols):
+    rng = np.random.default_rng(3)
+    col_a = jnp.asarray(rng.integers(0, 5, cap), jnp.int32)
+    col_b = jnp.asarray(rng.integers(0, 3, cap), jnp.int32)
+    valid = jnp.asarray(rng.random(cap) < 0.7)
+    kw = dict(col_b=col_b, val_b=1) if two_cols else {}
+    mask, cnt = relscan(col_a, valid, val_a=2, block=block,
+                        interpret=True, **kw)
+    want_mask, want_n = R.relscan_ref(
+        {"a": col_a, "b": col_b}, valid, "a", 2,
+        "b" if two_cols else None, 1 if two_cols else None)
+    np.testing.assert_array_equal(mask, want_mask)
+    assert int(jnp.sum(cnt)) == int(want_n)
+    # compaction epilogue agrees with the table's _compact contract
+    ids, present = compact(mask, limit=16)
+    want_ids = np.nonzero(np.asarray(want_mask))[0][:16]
+    np.testing.assert_array_equal(np.asarray(ids)[present], want_ids)
+
+
+# -------------------------------------------------------------- mamba scan
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,s,nh,dh,st,chunk",
+    [(2, 64, 2, 16, 8, 16), (1, 128, 4, 32, 16, 32), (2, 96, 1, 8, 4, 32)])
+def test_mamba2_scan_matches_ref(b, s, nh, dh, st, chunk, dtype):
+    keys = jax.random.split(jax.random.PRNGKey(4), 5)
+    x = jax.random.normal(keys[0], (b, s, nh, dh), dtype)
+    dt = jax.nn.softplus(jax.random.normal(keys[1], (b, s, nh))).astype(
+        jnp.float32)
+    dA = -jax.nn.softplus(jax.random.normal(keys[2], (b, s, nh))).astype(
+        jnp.float32)
+    B = jax.random.normal(keys[3], (b, s, st), jnp.float32)
+    C = jax.random.normal(keys[4], (b, s, st), jnp.float32)
+    y, h = mamba2_scan(x, dt, dA, B, C, chunk=chunk, interpret=True)
+    h0 = jnp.zeros((b, nh, dh, st), jnp.float32)
+    want_y, want_h = R.mamba2_scan_ref(x.astype(jnp.float32), dt, dA, B, C,
+                                       h0)
+    tol = dict(rtol=1e-4, atol=1e-4) if dtype == jnp.float32 else _tol(dtype)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(want_y, np.float32), **tol)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(want_h),
+                               rtol=1e-3, atol=1e-3)
