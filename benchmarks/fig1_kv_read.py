@@ -5,10 +5,23 @@ store, the relational cache is SLOWER than the hash-table daemon — its
 win is the structured workload (Table 2). Value sizes follow a geometric
 distribution, as in the paper's footnote 3.
 
-Output: CSV ``value_size,sqlcached_us,memcached_us`` per size bucket.
+Two SQLcached paths are timed:
+
+  sync      the pre-pipeline behavior: every SELECT materializes its
+            result (device sync + host row loop) before the next one;
+  async     the sync-free pipeline: SELECTs enqueue back-to-back via the
+            lazy Result contract (kernels fused via relscan), one drain
+            at the end, rows materialized afterwards.
+
+Output: CSV ``value_size,sqlcached_us,memcached_us`` per size bucket, or
+``--json`` -> BENCH_fig1.json at the repo root (ops/s, p50/p99 µs) so the
+perf trajectory is tracked PR over PR.
 """
 from __future__ import annotations
 
+import json
+import pathlib
+import sys
 import time
 
 import numpy as np
@@ -20,6 +33,8 @@ SIZES = [16, 64, 256, 1024, 4096]
 N_KEYS = 512
 N_READS = 2000
 
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+
 
 def _geometric_sizes(rng, n):
     # geometric over the SIZES buckets (p=0.5), matching the paper's shape
@@ -27,26 +42,34 @@ def _geometric_sizes(rng, n):
     return [SIZES[i] for i in idx]
 
 
-def run(seed: int = 0, n_keys: int = N_KEYS, n_reads: int = N_READS):
-    rng = np.random.default_rng(seed)
+def _pcts(us):
+    us = np.asarray(us)
+    return {"p50_us": round(float(np.percentile(us, 50)), 2),
+            "p99_us": round(float(np.percentile(us, 99)), 2)}
+
+
+def _setup(rng, n_keys):
     sizes = _geometric_sizes(rng, n_keys)
     values = {f"k{i}": "x" * sizes[i] for i in range(n_keys)}
-
     mc = MemcachedLike()
     for k, v in values.items():
         mc.set(k, v)
-
     sq = SQLCached()
     sq.execute(
         f"CREATE TABLE kv (k TEXT, v TEXT) CAPACITY {2 * n_keys} "
         f"MAX_SELECT 8")
     sq.executemany("INSERT INTO kv (k, v) VALUES (?, ?)",
                    [(k, v) for k, v in values.items()])
+    return values, mc, sq
 
+
+def run(seed: int = 0, n_keys: int = N_KEYS, n_reads: int = N_READS):
+    rng = np.random.default_rng(seed)
+    values, mc, sq = _setup(rng, n_keys)
     keys = [f"k{int(i)}" for i in rng.integers(0, n_keys, n_reads)]
 
     # warm both paths (jit compile for sqlcached)
-    sq.execute("SELECT v FROM kv WHERE k = ? LIMIT 1", (keys[0],))
+    sq.execute("SELECT v FROM kv WHERE k = ? LIMIT 1", (keys[0],)).rows
     mc.get(keys[0])
 
     t0 = time.perf_counter()
@@ -54,10 +77,44 @@ def run(seed: int = 0, n_keys: int = N_KEYS, n_reads: int = N_READS):
         mc.get(k)
     mc_us = (time.perf_counter() - t0) / n_reads * 1e6
 
+    # --- sync path: the seed behavior (materialize every SELECT's rows
+    # before issuing the next statement — one round trip per read)
+    lat_sync = []
     t0 = time.perf_counter()
     for k in keys:
-        sq.execute("SELECT v FROM kv WHERE k = ? LIMIT 1", (k,))
-    sq_us = (time.perf_counter() - t0) / n_reads * 1e6
+        t1 = time.perf_counter()
+        sq.execute("SELECT v FROM kv WHERE k = ? LIMIT 1", (k,)).rows
+        lat_sync.append((time.perf_counter() - t1) * 1e6)
+    sync_us = (time.perf_counter() - t0) / n_reads * 1e6
+
+    # --- async path: the statement pipeline. Reads enqueue back-to-back
+    # in micro-batches (one lax.scan dispatch per window, lazy Results),
+    # one drain at the end — zero round trips inside the timed region.
+    W = 32
+    # warm the batch executor for both bucket sizes the loop will hit
+    sq.executemany("SELECT v FROM kv WHERE k = ? LIMIT 1",
+                   [(k,) for k in keys[:W]])
+    if n_reads % W:
+        sq.executemany("SELECT v FROM kv WHERE k = ? LIMIT 1",
+                       [(k,) for k in keys[: n_reads % W]])
+    sq.drain("kv")
+    lat_async = []
+    t0 = time.perf_counter()
+    results = []
+    for i in range(0, n_reads, W):
+        chunk = keys[i:i + W]
+        t1 = time.perf_counter()
+        results.extend(sq.executemany(
+            "SELECT v FROM kv WHERE k = ? LIMIT 1",
+            [(k,) for k in chunk]))
+        lat_async.append((time.perf_counter() - t1) / len(chunk) * 1e6)
+    sq.drain("kv")
+    async_us = (time.perf_counter() - t0) / n_reads * 1e6
+    # materialization (outside the statement pipeline; amortized host work)
+    t0 = time.perf_counter()
+    for r in results:
+        r.rows
+    mat_us = (time.perf_counter() - t0) / n_reads * 1e6
 
     # per-size-bucket timing (reads grouped by the key's value size)
     rows = []
@@ -75,12 +132,59 @@ def run(seed: int = 0, n_keys: int = N_KEYS, n_reads: int = N_READS):
         for _ in range(reps):
             for k in ks:
                 sq.execute("SELECT v FROM kv WHERE k = ? LIMIT 1", (k,))
+        sq.drain("kv")
         s_us = (time.perf_counter() - t0) / (reps * len(ks)) * 1e6
         rows.append((s, s_us, m_us))
-    return {"sqlcached_us": sq_us, "memcached_us": mc_us, "by_size": rows}
+    return {
+        "sqlcached_us": sync_us,
+        "sqlcached_sync_us": sync_us,
+        "sqlcached_async_us": async_us,
+        "sqlcached_async_materialize_us": mat_us,
+        "memcached_us": mc_us,
+        "lat_sync": lat_sync,
+        "lat_async": lat_async,
+        "by_size": rows,
+    }
 
 
-def main():
+def run_json(quick: bool = False) -> dict:
+    n_keys = 128 if quick else N_KEYS
+    n_reads = 300 if quick else N_READS
+    res = run(n_keys=n_keys, n_reads=n_reads)
+    sync_us, async_us = res["sqlcached_sync_us"], res["sqlcached_async_us"]
+    return {
+        "bench": "fig1_kv_read",
+        "n_reads": n_reads,
+        "memcached": {"per_op_us": round(res["memcached_us"], 2)},
+        "sqlcached_sync": {
+            "per_op_us": round(sync_us, 2),
+            "ops_per_s": round(1e6 / sync_us, 1),
+            **_pcts(res["lat_sync"]),
+        },
+        "sqlcached_async": {
+            "per_op_us": round(async_us, 2),
+            "ops_per_s": round(1e6 / async_us, 1),
+            "materialize_per_op_us": round(
+                res["sqlcached_async_materialize_us"], 2),
+            **_pcts(res["lat_async"]),
+        },
+        "async_speedup_vs_sync": round(sync_us / async_us, 2),
+        "by_size": [
+            {"value_size": s, "sqlcached_us": round(a, 1),
+             "memcached_us": round(b, 1)} for s, a, b in res["by_size"]
+        ],
+    }
+
+
+def main(argv=None):
+    argv = sys.argv[1:] if argv is None else argv
+    if "--json" in argv:
+        out = run_json(quick="--quick" in argv)
+        path = REPO_ROOT / "BENCH_fig1.json"
+        path.write_text(json.dumps(out, indent=2) + "\n")
+        print(json.dumps(out, indent=2))
+        print(f"# wrote {path}")
+        return
     res = run()
     print("# Fig1: simple KV reads (paper: SQL cache slower here; its win "
           "is Table 2)")
@@ -88,6 +192,9 @@ def main():
     for s, squ, mcu in res["by_size"]:
         print(f"{s},{squ:.1f},{mcu:.1f}")
     print(f"overall,{res['sqlcached_us']:.1f},{res['memcached_us']:.1f}")
+    print(f"# pipelined (async+drain): {res['sqlcached_async_us']:.1f}us/op "
+          f"vs sync {res['sqlcached_sync_us']:.1f}us/op "
+          f"({res['sqlcached_sync_us'] / res['sqlcached_async_us']:.1f}x)")
 
 
 if __name__ == "__main__":

@@ -1,5 +1,15 @@
-"""Benchmark driver: one section per paper table/figure + the roofline
-summary. ``python -m benchmarks.run [--quick]``."""
+"""Benchmark driver — the single entry point for the perf trajectory.
+
+``python -m benchmarks.run [--json] [--quick]``
+
+--json   run fig1 + table2 in JSON mode and write ``BENCH_fig1.json`` /
+         ``BENCH_table2.json`` to the repo root (ops/s, p50/p99 µs); these
+         files are checked in so every PR's numbers are comparable.
+--quick  tier-1-friendly smoke sizes — finishes in seconds on CPU.
+
+Without flags, the full human-readable suite runs: every paper
+table/figure plus the serving and roofline sections.
+"""
 from __future__ import annotations
 
 import sys
@@ -7,10 +17,23 @@ import sys
 
 def main() -> None:
     quick = "--quick" in sys.argv
+    as_json = "--json" in sys.argv
+
+    if as_json:
+        from benchmarks import fig1_kv_read, table2_expiry
+        args = ["--json"] + (["--quick"] if quick else [])
+        print("=" * 72)
+        print("== Paper Fig. 1 (JSON) -> BENCH_fig1.json")
+        fig1_kv_read.main(args)
+        print("=" * 72)
+        print("== Paper Table 2 (JSON) -> BENCH_table2.json")
+        table2_expiry.main(args)
+        return
+
     print("=" * 72)
     print("== Paper Fig. 1: simple key-value reads (SQLcached vs memcached)")
     from benchmarks import fig1_kv_read
-    fig1_kv_read.main()
+    fig1_kv_read.main([])
 
     print("=" * 72)
     print("== Paper Table 2: fine-grained forced expiry")
@@ -21,8 +44,10 @@ def main() -> None:
               f"user={res['sqlcached_user_ms']:.2f}ms "
               f"flush+regen={res['memcached_flush_regen_ms']:.1f}ms")
     else:
-        table2_expiry.main()
+        table2_expiry.main([])
 
+    if quick:
+        return
     print("=" * 72)
     print("== Paper §5: serving under invalidation (load spikes)")
     from benchmarks import serving_bench

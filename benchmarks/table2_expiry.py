@@ -14,6 +14,9 @@ counts regeneration of the working set, which is the paper's real cost
 """
 from __future__ import annotations
 
+import json
+import pathlib
+import sys
 import time
 
 import numpy as np
@@ -24,6 +27,8 @@ from repro.core.daemon import SQLCached
 N_RECORDS = 100_000
 N_PAGES = 30_000
 N_USERS = 1_000
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
 
 
 def _dataset(rng, n=N_RECORDS):
@@ -78,16 +83,71 @@ def run(seed: int = 0, n: int = N_RECORDS):
         mc.set(f"p{pages[i]}:u{users[i]}:{i}", int(payload[i]))
     regen_ms = (time.perf_counter() - t0) * 1e3
 
+    # --- repeated fine-grained expiry for percentiles (sync-free pipeline:
+    # lazy Results, drain once per window) + the micro-batch path
+    k = 64
+    targets = [int(p) for p in pages[2: 2 + k]]
+    lat = []
+    for p in targets:
+        t0 = time.perf_counter()
+        sq.execute("DELETE FROM cache WHERE page_id = ?", (p,))
+        sq.drain("cache")
+        lat.append((time.perf_counter() - t0) * 1e6)
+    batch_targets = [(int(p),) for p in pages[2 + k: 2 + 2 * k]]
+    warm_targets = [(int(p),) for p in pages[2 + 2 * k: 2 + 3 * k]]
+    sq.executemany("DELETE FROM cache WHERE page_id = ?", warm_targets)
+    sq.drain("cache")  # warm the micro-batch executor at this bucket size
+    t0 = time.perf_counter()
+    sq.executemany("DELETE FROM cache WHERE page_id = ?", batch_targets)
+    sq.drain("cache")
+    batch_us = (time.perf_counter() - t0) / len(batch_targets) * 1e6
+
     return {
         "records": n, "load_s": load_s,
         "sqlcached_page_ms": page_ms, "page_rows": n_page,
         "sqlcached_user_ms": user_ms, "user_rows": n_user,
+        "page_delete_lat_us": lat,
+        "page_delete_batch_us": batch_us,
         "memcached_flush_ms": flush_ms,
         "memcached_flush_regen_ms": flush_ms + regen_ms,
     }
 
 
-def main():
+def run_json(quick: bool = False) -> dict:
+    res = run(n=20_000 if quick else N_RECORDS)
+    lat = np.asarray(res["page_delete_lat_us"])
+    per_op = float(lat.mean())
+    return {
+        "bench": "table2_expiry",
+        "records": res["records"],
+        "memcached_flush_ms": round(res["memcached_flush_ms"], 3),
+        "memcached_flush_regen_ms": round(
+            res["memcached_flush_regen_ms"], 2),
+        "sqlcached_page_delete": {
+            "per_op_us": round(per_op, 1),
+            "ops_per_s": round(1e6 / per_op, 1),
+            "p50_us": round(float(np.percentile(lat, 50)), 1),
+            "p99_us": round(float(np.percentile(lat, 99)), 1),
+        },
+        "sqlcached_page_delete_microbatch": {
+            "per_op_us": round(res["page_delete_batch_us"], 1),
+            "ops_per_s": round(1e6 / res["page_delete_batch_us"], 1),
+        },
+        "sqlcached_user_delete_ms": round(res["sqlcached_user_ms"], 3),
+        "separation_flush_over_page": round(
+            res["memcached_flush_regen_ms"] * 1e3 / per_op, 0),
+    }
+
+
+def main(argv=None):
+    argv = sys.argv[1:] if argv is None else argv
+    if "--json" in argv:
+        out = run_json(quick="--quick" in argv)
+        path = REPO_ROOT / "BENCH_table2.json"
+        path.write_text(json.dumps(out, indent=2) + "\n")
+        print(json.dumps(out, indent=2))
+        print(f"# wrote {path}")
+        return
     res = run()
     print("# Table 2: forced data expiry (paper: 1000 / 0.2 / 6.1 ms)")
     print("operation,time_ms,rows_touched")

@@ -12,7 +12,31 @@ Faithful structure of the paper's daemon, re-hosted on an accelerator:
   the paper's single-threaded request execution — and is exactly what makes
   the pool safely usable inside pjit'd serving steps;
 - the paper's third automatic expiry condition (every N cache operations)
-  is triggered here, calling the device-side age/row-count expiry.
+  is fused INTO each statement executor (a device-side ``lax.cond`` on a
+  host-computed flag), so auto-expiry costs zero extra dispatches.
+
+Sync-free execution contract
+----------------------------
+
+``execute``/``executemany`` never block on the device. Every dispatch
+returns a **lazy** :class:`Result`: ``count``, ``rows``, ``arrays``,
+``row_ids`` and ``value`` hold device handles that materialize (one
+device→host sync) on *first attribute access*; ``payloads`` and the
+``*_device`` accessors are zero-copy device arrays and never sync.
+Back-to-back statements therefore enqueue device work in a pipeline —
+the serving engine issues several statements per tick without a single
+round trip. ``execute_async`` is the same entry point under its
+intent-revealing name; ``drain()`` blocks until all enqueued work for a
+table (or every table) has retired. ``executemany`` additionally
+micro-batches same-statement DELETE/UPDATE parameter lists into ONE
+dispatch (a ``lax.scan`` over the parameter rows).
+
+The WHERE hot path (conjunctions of equality/range terms on integer
+columns) lowers to the fused Pallas relscan kernel; the env var
+``REPRO_KERNELS`` selects ``kernel`` (TPU), ``interpret`` (kernel body on
+CPU) or ``ref`` (pure-jnp oracle, the non-TPU default) — see
+kernels/ops.py. Unfusable predicates fall back to the generic jnp
+masked scan automatically.
 
 The daemon is also the serving plane's metadata engine: `table_state` /
 `swap_table_state` hand the device arrays to jitted serving steps with
@@ -54,16 +78,159 @@ class Interner:
         return f"<unknown:{i}>"
 
 
-@dataclasses.dataclass
-class Result:
-    """Result of one statement."""
+_UNSET = object()
 
-    count: int = 0
-    rows: list[dict] | None = None
-    arrays: dict[str, np.ndarray] | None = None
-    payloads: dict[str, jax.Array] | None = None
-    row_ids: np.ndarray | None = None
-    value: Any = None  # aggregate result
+
+class _HostStack:
+    """One device→host transfer shared by every Result of a micro-batched
+    SELECT: the per-statement Results are index views into the stacked
+    [batch, ...] outputs, so materializing any of them syncs once for all."""
+
+    __slots__ = ("dev", "_np")
+
+    def __init__(self, dev: dict):
+        self.dev = dev
+        self._np = None
+
+    def host(self) -> dict:
+        if self._np is None:
+            self._np = jax.tree.map(np.asarray, self.dev)
+        return self._np
+
+
+class Result:
+    """Lazy result of one statement.
+
+    Device outputs stay un-synced until first access: reading ``count``,
+    ``rows``, ``arrays``, ``row_ids`` or ``value`` forces (and caches) the
+    device→host transfer; ``payloads``, ``row_ids_device``,
+    ``count_device`` and ``present_device`` return the raw device arrays
+    with no sync. A Result built from host values (e.g. ``Result(count=3)``)
+    behaves exactly like the former eager dataclass.
+    """
+
+    __slots__ = ("_count", "_rows", "_arrays", "_payloads", "_row_ids",
+                 "_value", "_dev", "_ctx")
+
+    def __init__(self, count: int = 0, rows=None, arrays=None, payloads=None,
+                 row_ids=None, value: Any = None, *, dev: dict | None = None,
+                 ctx: dict | None = None):
+        self._dev = dev or {}
+        self._ctx = ctx or {}
+        self._count = _UNSET if self._lazy("count") else count
+        self._rows = rows
+        self._arrays = arrays
+        self._payloads = payloads
+        self._row_ids = _UNSET if self._lazy("row_ids") else row_ids
+        self._value = _UNSET if self._lazy("value") else value
+
+    def _lazy(self, name: str) -> bool:
+        stack = self._ctx.get("stack")
+        if stack is not None:
+            return name in stack.dev
+        return name in self._dev
+
+    def _host(self, name: str):
+        """Host view of a lazy device output (stack-aware)."""
+        stack = self._ctx.get("stack")
+        if stack is not None:
+            return stack.host()[name][self._ctx["index"]]
+        return np.asarray(self._dev[name])
+
+    # ------------------------------------------------- lazy host accessors
+    @property
+    def count(self) -> int:
+        if self._count is _UNSET:
+            self._count = int(self._host("count"))
+        return self._count
+
+    @property
+    def value(self) -> Any:
+        if self._value is _UNSET:
+            self._value = self._host("value").item()
+        return self._value
+
+    def _shown(self) -> int:
+        n = self._ctx.get("nshow")
+        if n is None:
+            n = min(self.count, self._ctx.get("limit", self.count))
+        return n
+
+    @property
+    def row_ids(self) -> np.ndarray | None:
+        if self._row_ids is _UNSET:
+            self._row_ids = self._host("row_ids")[: self._shown()]
+        return self._row_ids
+
+    def _materialize_rows(self) -> None:
+        if self._arrays is not None or not self._lazy("rows"):
+            return
+        shown = self._shown()
+        present = self._host("present")
+        columns = self._ctx["columns"]
+        interner = self._ctx["interner"]
+        text_cols = self._ctx["text_cols"]
+        stack = self._ctx.get("stack")
+        if stack is not None:
+            i = self._ctx["index"]
+            arrays = {c: stack.host()["rows"][c][i][:shown] for c in columns}
+        else:
+            arrays = {c: np.asarray(self._dev["rows"][c])[:shown]
+                      for c in columns}
+        rows = []
+        for i in range(shown):
+            if not present[i]:
+                continue
+            row = {}
+            for c in columns:
+                v = arrays[c][i].item()
+                if c in text_cols:
+                    v = interner.lookup(int(v))
+                row[c] = v
+            rows.append(row)
+        self._arrays, self._rows = arrays, rows
+
+    @property
+    def rows(self) -> list[dict] | None:
+        self._materialize_rows()
+        return self._rows
+
+    @property
+    def arrays(self) -> dict[str, np.ndarray] | None:
+        self._materialize_rows()
+        return self._arrays
+
+    @property
+    def payloads(self) -> dict[str, jax.Array] | None:
+        if self._payloads is None and "payload_stack" in self._ctx:
+            i = self._ctx["index"]
+            self._payloads = {k: v[i]
+                              for k, v in self._ctx["payload_stack"].items()}
+        return self._payloads
+
+    # --------------------------------------------- zero-sync device access
+    @property
+    def count_device(self):
+        return self._dev.get("count", self._count)
+
+    @property
+    def row_ids_device(self):
+        ids = self._dev.get("row_ids")
+        return ids if ids is not None else (
+            None if self._row_ids is _UNSET else self._row_ids)
+
+    @property
+    def present_device(self):
+        return self._dev.get("present")
+
+    @property
+    def value_device(self):
+        return self._dev.get("value", None if self._value is _UNSET
+                             else self._value)
+
+    def __repr__(self):  # avoid forcing a sync in debuggers/logs
+        lazy = ",".join(sorted(self._dev)) or "-"
+        return f"Result(lazy=[{lazy}])"
 
 
 @dataclasses.dataclass
@@ -123,6 +290,32 @@ class SQLCached:
             self._execs[key] = fn
         return fn
 
+    def _jit_with_expiry(self, schema, base):
+        """Jit a statement executor ``base(state, *args) -> (state, *outs)``
+        with the §4.3 op-count expiry fused into the same dispatch: a
+        device-side ``lax.cond`` on a host-computed flag replaces the former
+        separate ``_do_expire`` call, so auto-expiry is dispatch-free."""
+        if schema.expiry.ops_interval > 0:
+            def fn(state, expire_flag, *args):
+                out = base(state, *args)
+                state = jax.lax.cond(
+                    expire_flag,
+                    lambda s: T.expire(schema, s)[0],
+                    lambda s: s,
+                    out[0])
+                return (state,) + tuple(out[1:])
+        else:
+            def fn(state, expire_flag, *args):
+                return base(state, *args)
+        return jax.jit(fn, donate_argnums=0)
+
+    def _expire_flag(self, t: _Table) -> bool:
+        """Paper §4.3 condition 3: expire every N cache operations. Counted
+        host-side; the flag rides into the fused executor."""
+        t.host_ops += 1
+        iv = t.schema.expiry.ops_interval
+        return bool(self.auto_expire and iv > 0 and t.host_ops % iv == 0)
+
     # ----------------------------------------------------------- statements
     def execute(
         self,
@@ -150,8 +343,27 @@ class SQLCached:
         if isinstance(stmt, S.Flush):
             t = self._table(stmt.table)
             t.state, n = jax.jit(T.flush, static_argnums=0)(t.schema, t.state)
-            return Result(count=int(n))
+            return Result(dev={"count": n})
         raise S.SQLError(f"unhandled statement {stmt!r}")
+
+    def execute_async(
+        self,
+        sql: str,
+        params: Sequence[Any] = (),
+        payloads: Mapping[str, Any] | None = None,
+    ) -> Result:
+        """Enqueue a statement without any device round trip (the returned
+        :class:`Result` is lazy — see the module docstring). ``execute`` is
+        already sync-free; this alias names the intent at call sites that
+        pipeline statements and ``drain()`` later."""
+        return self.execute(sql, params, payloads)
+
+    def drain(self, table: str | None = None) -> None:
+        """Block until every enqueued device op for ``table`` (default: all
+        tables) has retired. The pipeline barrier matching execute_async."""
+        names = [table] if table else list(self.tables)
+        for nm in names:
+            jax.block_until_ready(self._table(nm).state)
 
     def _do_create(self, stmt: S.CreateTable) -> Result:
         from repro.core.sqlparse import _PAYLOAD_DTYPES
@@ -172,12 +384,23 @@ class SQLCached:
         sql: str,
         params_list: Sequence[Sequence[Any]],
         payloads_list: Sequence[Mapping[str, Any]] | None = None,
-    ) -> Result:
-        """Batched INSERT — rows are padded to a power-of-two bucket so one
-        compiled executor serves many batch sizes."""
+    ) -> "Result | list[Result]":
+        """Micro-batch one statement over many parameter rows — ONE device
+        dispatch per call (rows are padded to a power-of-two bucket so one
+        compiled executor serves many batch sizes).
+
+        INSERT/DELETE/UPDATE return a single aggregate :class:`Result`.
+        SELECT returns ``list[Result]`` — one per parameter row (empty
+        list for an empty ``params_list``), all views into one stacked
+        transfer."""
         stmt = self._parse(sql)
+        if isinstance(stmt, (S.Delete, S.Update)):
+            return self._do_batch_dml(stmt, params_list)
+        if isinstance(stmt, S.Select):
+            return self._do_batch_select(stmt, params_list)
         if not isinstance(stmt, S.Insert):
-            raise S.SQLError("executemany only supports INSERT")
+            raise S.SQLError("executemany supports INSERT/SELECT/DELETE/"
+                             "UPDATE")
         t = self._table(stmt.table)
         schema = t.schema
         cols = stmt.columns or schema.column_names[: len(stmt.values)]
@@ -204,8 +427,9 @@ class SQLCached:
         for p in schema.payloads:
             if payloads_list and p.name in (payloads_list[0] or {}):
                 arrs = [np.asarray(pl[p.name]) for pl in payloads_list]
-                pad = np.concatenate([arrs, [arrs[-1]] * (b - n)]) if b > n else np.stack(arrs)
-                pl_args[p.name] = pad
+                # stack rows (concatenate would join along the first payload
+                # axis and corrupt every non-power-of-two batch)
+                pl_args[p.name] = np.stack(arrs + [arrs[-1]] * (b - n))
 
         values_ast = tuple(self._intern_ast(v) for v in stmt.values)
         ttl_ast = self._intern_ast(stmt.ttl) if stmt.ttl is not None else None
@@ -213,7 +437,7 @@ class SQLCached:
                tuple(sorted(pl_args)))
 
         def build():
-            def fn(state, param_cols, pl_args, row_mask):
+            def base(state, param_cols, pl_args, row_mask):
                 values = {}
                 for cname, vast in zip(cols, values_ast):
                     v = P.eval_expr(vast, {}, param_cols)
@@ -223,13 +447,184 @@ class SQLCached:
                     ttl = P.eval_expr(ttl_ast, {}, param_cols)
                 return T.insert(schema, state, values, pl_args, row_mask, ttl)
 
-            return jax.jit(fn, donate_argnums=0)
+            return self._jit_with_expiry(schema, base)
 
         fn = self._executor(key, build)
-        t.state, slots, evicted = fn(t.state, param_cols, pl_args, row_mask)
-        self._post_op(t)
-        return Result(count=n, row_ids=np.asarray(slots)[:n],
-                      value=int(evicted))
+        flag = self._expire_flag(t)
+        t.state, slots, evicted = fn(t.state, flag, param_cols, pl_args,
+                                     row_mask)
+        return Result(count=n, dev={"row_ids": slots, "value": evicted},
+                      ctx={"nshow": n})
+
+    def _do_batch_dml(self, stmt, params_list: Sequence[Sequence[Any]]
+                      ) -> Result:
+        """Micro-batch same-executor DELETE/UPDATE statements into ONE
+        dispatch. Single-column equality DELETEs (the Table 2 hot shape,
+        ``... WHERE page_id = ?``) collapse into ONE pass over the table
+        (sorted multi-value membership — see T.delete_many_eq); other
+        DELETEs vectorize to a [W, capacity] union (deletes commute, so
+        the union count equals the sequential total). UPDATEs keep a
+        ``lax.scan`` so later statements observe earlier SETs. Padded rows
+        are deactivated via ``extra_mask``/``active``."""
+        t = self._table(stmt.table)
+        schema = t.schema
+        n = len(params_list)
+        if n == 0:
+            return Result(count=0)
+        b = _bucket(n)
+        is_delete = isinstance(stmt, S.Delete)
+        where = self._intern_ast(stmt.where)
+        sets = ()
+        n_params = P.collect_params(where)
+        if not is_delete:
+            sets = tuple((c, self._intern_ast(e)) for c, e in stmt.sets)
+            for _, e in sets:
+                n_params = max(n_params, P.collect_params(e))
+        pm = [self._prep_params(params_list[min(i, n - 1)])
+              for i in range(b)]
+        param_cols = tuple(
+            np.asarray([pm[i][j] for i in range(b)]) for j in range(n_params)
+        )
+        active = np.arange(b) < n
+        plan = T._fused_plan(schema, where) if is_delete else None
+        eq_term = (plan.terms[0]
+                   if plan is not None and len(plan.terms) == 1
+                   and plan.terms[0].op == "==" else None)
+        if (eq_term is not None and eq_term.value[0] == "param"
+                and not np.issubdtype(param_cols[eq_term.value[1]].dtype,
+                                      np.integer)):
+            eq_term = None  # float param: keep exact-compare semantics
+        key = ("dml", schema, is_delete, where, sets, b, eq_term)
+
+        def build():
+            if eq_term is not None:
+                kind, v = eq_term.value
+
+                def base(state, param_cols, active):
+                    vals = (jnp.asarray(param_cols[v], jnp.int32)
+                            if kind == "param"
+                            else jnp.full((b,), v, jnp.int32))
+                    return T.delete_many_eq(schema, state, eq_term.col,
+                                            vals, active)
+
+                return self._jit_with_expiry(schema, base)
+
+            def base(state, param_cols, active):
+                if is_delete:
+                    def one_mask(pr, act):
+                        return T._match_mask(schema, state, where, pr) & act
+
+                    m = jax.vmap(one_mask)(param_cols, active)  # [b, cap]
+                    hit = jnp.any(m, axis=0)
+                    n_hit = jnp.sum(hit.astype(jnp.int32))
+                    # clock advances by the REAL statement count (from the
+                    # runtime active mask — the executor is cached per
+                    # bucket, so n must not be baked in at trace time);
+                    # padding must not age TTLs
+                    nact = jnp.sum(active.astype(jnp.int32))
+                    state = dict(state, valid=state["valid"] & ~hit,
+                                 clock=state["clock"] + nact,
+                                 ops=state["ops"] + nact)
+                    return state, n_hit
+
+                def body(st, xs):
+                    pr, act = xs
+                    return T.update(schema, st, where, dict(sets), pr,
+                                    extra_mask=act)
+
+                state, ns = jax.lax.scan(body, state, (param_cols, active))
+                # un-tick the padded scan iterations (runtime count — see
+                # the delete branch note on executor caching)
+                pad = b - jnp.sum(active.astype(jnp.int32))
+                state = dict(state, clock=state["clock"] - pad,
+                             ops=state["ops"] - pad)
+                return state, jnp.sum(ns)
+
+            return self._jit_with_expiry(schema, base)
+
+        fn = self._executor(key, build)
+        flag = self._expire_flag(t)
+        t.state, total = fn(t.state, flag, param_cols, active)
+        return Result(dev={"count": total})
+
+    def _do_batch_select(self, stmt: S.Select,
+                         params_list: Sequence[Sequence[Any]]
+                         ) -> list[Result]:
+        """Micro-batch N same-statement SELECTs into ONE dispatch (the
+        pipelined read path): the read is vmapped over the parameter rows,
+        so W statements cost ONE [W, capacity] broadcast pass over the
+        table instead of W sequential scans. Returns one lazy Result per
+        statement — all index views into the stacked device outputs,
+        sharing a single device→host transfer.
+
+        Semantics vs N separate executes: reads don't interleave with
+        writes inside a batch, the logical clock advances once per batch
+        (by the batch size), and LRU touch covers the *returned* rows
+        (up to LIMIT per statement) rather than every matching row."""
+        if stmt.agg is not None:
+            raise S.SQLError("executemany SELECT does not support "
+                             "aggregates")
+        t = self._table(stmt.table)
+        schema = t.schema
+        n = len(params_list)
+        if n == 0:
+            return []
+        b = _bucket(n)
+        where = self._intern_ast(stmt.where)
+        columns = stmt.columns or schema.column_names
+        limit = stmt.limit if stmt.limit is not None else schema.max_select
+        n_params = P.collect_params(where)
+        pm = [self._prep_params(params_list[min(i, n - 1)])
+              for i in range(b)]
+        param_cols = tuple(
+            np.asarray([pm[i][j] for i in range(b)]) for j in range(n_params)
+        )
+        active = np.arange(b) < n
+        key = ("select_batch", schema, where, tuple(columns), stmt.payloads,
+               stmt.order_by, stmt.descending, limit, b)
+
+        def build():
+            def base(state, param_cols, active):
+                def one(pr, act):
+                    _, res = T.select(
+                        schema, state, where, pr,
+                        columns=columns, order_by=stmt.order_by,
+                        descending=stmt.descending, limit=limit,
+                        with_payloads=stmt.payloads, active=act,
+                        touch=False, fused_mode="ref",
+                    )
+                    return res
+
+                res = jax.vmap(one)(param_cols, active)
+                # one fused epilogue for the whole batch: touch the
+                # returned rows and advance the clock by the REAL
+                # statement count (padding must not age TTLs)
+                now = state["clock"].astype(jnp.int32)
+                tgt = jnp.where(res["present"], res["row_ids"],
+                                schema.capacity)
+                cols_d = dict(state["cols"])
+                cols_d["_accessed"] = cols_d["_accessed"].at[
+                    tgt.reshape(-1)].set(now, mode="drop")
+                nact = jnp.sum(active.astype(jnp.int32))
+                state = dict(state, cols=cols_d,
+                             clock=state["clock"] + nact,
+                             ops=state["ops"] + nact)
+                return state, res
+
+            return self._jit_with_expiry(schema, base)
+
+        fn = self._executor(key, build)
+        flag = self._expire_flag(t)
+        t.state, res = fn(t.state, flag, param_cols, active)
+        stack = _HostStack({"count": res["count"], "rows": res["rows"],
+                            "present": res["present"],
+                            "row_ids": res["row_ids"]})
+        ctx = {"columns": tuple(columns), "limit": limit,
+               "text_cols": set(schema.text_columns()),
+               "interner": self.interner, "stack": stack}
+        if stmt.payloads:
+            ctx["payload_stack"] = dict(res["payloads"])
+        return [Result(ctx=dict(ctx, index=i)) for i in range(n)]
 
     def _do_select(self, stmt: S.Select, params: tuple) -> Result:
         t = self._table(stmt.table)
@@ -240,57 +635,40 @@ class SQLCached:
             key = ("agg", schema, agg, col, where)
             fn = self._executor(
                 key,
-                lambda: jax.jit(
-                    lambda st, pr: T.aggregate(schema, st, agg, col, where, pr)
+                lambda: self._jit_with_expiry(
+                    schema,
+                    lambda st, pr: T.aggregate(schema, st, agg, col, where,
+                                               pr),
                 ),
             )
-            t.state, val = fn(t.state, params)
-            self._post_op(t)
-            return Result(value=np.asarray(val).item())
+            flag = self._expire_flag(t)
+            t.state, val = fn(t.state, flag, params)
+            return Result(dev={"value": val})
         columns = stmt.columns or schema.column_names
         limit = stmt.limit if stmt.limit is not None else schema.max_select
         key = ("select", schema, where, tuple(columns), stmt.payloads,
                stmt.order_by, stmt.descending, limit)
 
         def build():
-            def fn(st, pr):
+            def base(st, pr):
                 return T.select(
                     schema, st, where, pr,
                     columns=columns, order_by=stmt.order_by,
                     descending=stmt.descending, limit=limit,
                     with_payloads=stmt.payloads,
                 )
-            return jax.jit(fn, donate_argnums=0)
+            return self._jit_with_expiry(schema, base)
 
         fn = self._executor(key, build)
-        t.state, res = fn(t.state, params)
-        self._post_op(t)
-        return self._materialize(schema, columns, res, limit)
-
-    def _materialize(self, schema, columns, res, limit) -> Result:
-        count = int(res["count"])
-        shown = min(count, limit)
-        present = np.asarray(res["present"])
-        arrays = {}
-        for c in columns:
-            a = np.asarray(res["rows"][c])[:shown]
-            arrays[c] = a
-        rows = []
-        text_cols = set(schema.text_columns())
-        for i in range(shown):
-            if not present[i]:
-                continue
-            row = {}
-            for c in columns:
-                v = arrays[c][i].item()
-                if c in text_cols:
-                    v = self.interner.lookup(int(v))
-                row[c] = v
-            rows.append(row)
+        flag = self._expire_flag(t)
+        t.state, res = fn(t.state, flag, params)
         return Result(
-            count=count, rows=rows, arrays=arrays,
             payloads=dict(res["payloads"]),
-            row_ids=np.asarray(res["row_ids"])[:shown],
+            dev={"count": res["count"], "rows": res["rows"],
+                 "present": res["present"], "row_ids": res["row_ids"]},
+            ctx={"columns": tuple(columns), "limit": limit,
+                 "text_cols": set(schema.text_columns()),
+                 "interner": self.interner},
         )
 
     def _do_update(self, stmt: S.Update, params: tuple) -> Result:
@@ -301,30 +679,43 @@ class SQLCached:
         key = ("update", schema, where, sets)
 
         def build():
-            def fn(st, pr):
+            def base(st, pr):
                 return T.update(schema, st, where, dict(sets), pr)
-            return jax.jit(fn, donate_argnums=0)
+            return self._jit_with_expiry(schema, base)
 
         fn = self._executor(key, build)
-        t.state, n = fn(t.state, params)
-        self._post_op(t)
-        return Result(count=int(n))
+        flag = self._expire_flag(t)
+        t.state, n = fn(t.state, flag, params)
+        return Result(dev={"count": n})
 
     def _do_delete(self, stmt: S.Delete, params: tuple) -> Result:
         t = self._table(stmt.table)
         schema = t.schema
         where = self._intern_ast(stmt.where)
-        key = ("delete", schema, where)
+        # fusable deletes on payload-bearing tables also report WHICH rows
+        # went (row_ids feeds incremental index maintenance, e.g. the
+        # serving page table); scalar tables keep the mask-only path —
+        # nothing indexes their rows, so the compaction would be pure cost
+        returning = (T._fused_plan(schema, where) is not None
+                     and bool(schema.payloads))
+        key = ("delete", schema, where, returning)
 
         def build():
-            def fn(st, pr):
+            def base(st, pr):
+                if returning:
+                    return T.delete_returning(schema, st, where, pr)
                 return T.delete(schema, st, where, pr)
-            return jax.jit(fn, donate_argnums=0)
+            return self._jit_with_expiry(schema, base)
 
         fn = self._executor(key, build)
-        t.state, n = fn(t.state, params)
-        self._post_op(t)
-        return Result(count=int(n))
+        flag = self._expire_flag(t)
+        if returning:
+            t.state, n, ids, present = fn(t.state, flag, params)
+            return Result(dev={"count": n, "row_ids": ids,
+                               "present": present},
+                          ctx={"limit": schema.max_select})
+        t.state, n = fn(t.state, flag, params)
+        return Result(dev={"count": n})
 
     def _do_expire(self, name: str) -> Result:
         t = self._table(name)
@@ -334,14 +725,7 @@ class SQLCached:
                                  donate_argnums=0)
         )
         t.state, n = fn(t.state)
-        return Result(count=int(n))
-
-    def _post_op(self, t: _Table):
-        """Paper §4.3 condition 3: run auto-expiry every N operations."""
-        t.host_ops += 1
-        iv = t.schema.expiry.ops_interval
-        if self.auto_expire and iv > 0 and t.host_ops % iv == 0:
-            self._do_expire(t.schema.name)
+        return Result(dev={"count": n})
 
     # ----------------------------------------------------- serving-plane API
     def table_state(self, name: str) -> dict:

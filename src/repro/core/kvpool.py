@@ -121,6 +121,98 @@ def seq_lengths(schema: TableSchema, state: dict, *, max_slots: int,
     return counts[:max_slots] * block_size
 
 
+# ------------------------------------------------- incremental maintenance
+#
+# Rebuilding the page table / length vector is one O(capacity) scatter per
+# tick. The serving engine instead keeps both *incrementally*: inserts and
+# deletes report the row ids they touched (T.insert slots / Result.row_ids
+# from the fused DELETE path), and these updates scatter only O(k) entries.
+# The full rebuilds above stay as the bootstrap/fallback (and the parity
+# oracle in tests).
+
+
+def _pt_coords(state: dict, row_ids, ok, *, max_slots: int, max_blocks: int):
+    slot = state["cols"]["slot"][row_ids]
+    pos = state["cols"]["pos_block"][row_ids]
+    ok = ok & (slot >= 0) & (slot < max_slots) & (pos >= 0) & (pos < max_blocks)
+    return jnp.where(ok, slot, max_slots), jnp.where(ok, pos, 0)
+
+
+def page_table_insert(
+    schema: TableSchema, state: dict, pt: jax.Array, row_ids: jax.Array,
+    evicted: jax.Array, *, max_slots: int, max_blocks: int,
+) -> jax.Array:
+    """Incremental page-table update after inserting ``row_ids`` (the slots
+    T.insert returned): O(k) scatter of the new (slot, pos_block) entries.
+
+    ``evicted`` is the insert's eviction count (a device scalar — no host
+    sync). When the allocator LRU-evicted live rows their old coordinates
+    are unrecoverable from the new state, so a device-side ``lax.cond``
+    falls back to the full O(capacity) rebuild — the steady-state serving
+    path (deletes precede reuse) never takes it.
+    """
+    def inc(_):
+        ok = jnp.ones(row_ids.shape, dtype=bool)
+        s, b = _pt_coords(state, row_ids, ok,
+                          max_slots=max_slots, max_blocks=max_blocks)
+        return pt.at[s, b].set(row_ids.astype(jnp.int32), mode="drop")
+
+    def rebuild(_):
+        return page_table(schema, state, max_slots=max_slots,
+                          max_blocks=max_blocks)
+
+    return jax.lax.cond(evicted > 0, rebuild, inc, None)
+
+
+def page_table_delete(
+    schema: TableSchema, state: dict, pt: jax.Array, row_ids: jax.Array,
+    present: jax.Array, *, max_slots: int, max_blocks: int,
+) -> jax.Array:
+    """Incremental page-table update after a DELETE: clear the entries of
+    the deleted ``row_ids`` (``present`` masks the padded tail). DELETE only
+    flips validity bits, so the rows' coordinates are still readable."""
+    s, b = _pt_coords(state, row_ids, present,
+                      max_slots=max_slots, max_blocks=max_blocks)
+    return pt.at[s, b].set(schema.capacity, mode="drop")
+
+
+def seq_lengths_insert(
+    schema: TableSchema, state: dict, lengths: jax.Array,
+    row_ids: jax.Array, evicted: jax.Array, *, block_size: int,
+    max_slots: int,
+) -> jax.Array:
+    """Incremental per-slot cached-length update after inserting rows.
+    Same eviction contract as :func:`page_table_insert`: O(k) adds in the
+    steady state, device-side fallback to the full recount on eviction."""
+    def inc(_):
+        slot = state["cols"]["slot"][row_ids]
+        ok = (slot >= 0) & (slot < max_slots)
+        s = jnp.where(ok, slot, max_slots)
+        padded = jnp.concatenate([lengths, jnp.zeros((1,), lengths.dtype)])
+        padded = padded.at[s].add(jnp.where(ok, block_size, 0), mode="drop")
+        return padded[:max_slots]
+
+    def rebuild(_):
+        return seq_lengths(schema, state, max_slots=max_slots,
+                           block_size=block_size)
+
+    return jax.lax.cond(evicted > 0, rebuild, inc, None)
+
+
+def seq_lengths_delete(
+    schema: TableSchema, state: dict, lengths: jax.Array,
+    row_ids: jax.Array, present: jax.Array, *, block_size: int,
+    max_slots: int,
+) -> jax.Array:
+    """Incremental per-slot cached-length update after a DELETE."""
+    slot = state["cols"]["slot"][row_ids]
+    ok = present & (slot >= 0) & (slot < max_slots)
+    s = jnp.where(ok, slot, max_slots)
+    padded = jnp.concatenate([lengths, jnp.zeros((1,), lengths.dtype)])
+    padded = padded.at[s].add(jnp.where(ok, -block_size, 0), mode="drop")
+    return padded[:max_slots]
+
+
 def gather_blocks(state: dict, pages: jax.Array) -> jax.Array:
     """Gather KV payloads through a page table. pages: [slots, blocks] row
     ids (sentinel = capacity → zeros). Returns

@@ -172,6 +172,114 @@ def eval_predicate(node: Node | None, cols: dict, params: Sequence[Any], capacit
     return jnp.broadcast_to(mask, (capacity,))
 
 
+# ------------------------------------------------------- fusable WHERE plans
+#
+# The daemon's hot predicates are conjunctions of equality/range terms over
+# integer metadata columns (``seq_id = ?``, ``slot = ? AND pos_block = ?``,
+# ``ts BETWEEN ? AND ?``). These lower to the fused Pallas relscan kernel
+# (kernels/relscan.py) instead of the generic jnp masked-scan: one pass over
+# the table evaluates every term, the validity bitmap, per-tile counts, and
+# the compaction to row ids. ``classify_fusable`` recognizes that shape;
+# anything else falls back to :func:`eval_predicate`.
+
+FUSABLE_OPS = ("==", "!=", "<", "<=", ">", ">=")
+
+_OP_NORM = {"=": "==", "==": "==", "!=": "!=", "<>": "!=",
+            "<": "<", "<=": "<=", ">": ">", ">=": ">="}
+_OP_FLIP = {"==": "==", "!=": "!=", "<": ">", "<=": ">=", ">": "<",
+            ">=": "<="}
+
+
+@dataclasses.dataclass(frozen=True)
+class FusedTerm:
+    """One ``col OP value`` conjunct. ``value`` is either ("const", v) for a
+    literal int or ("param", i) for the i-th `?` placeholder."""
+
+    col: str
+    op: str  # one of FUSABLE_OPS
+    value: tuple[str, Any]
+
+    def resolve(self, params: Sequence[Any]):
+        kind, v = self.value
+        return params[v] if kind == "param" else v
+
+
+@dataclasses.dataclass(frozen=True)
+class FusedScan:
+    """Conjunction of up to ``max_terms`` FusedTerms over int32 columns."""
+
+    terms: tuple[FusedTerm, ...]
+
+    @property
+    def columns(self) -> tuple[str, ...]:
+        return tuple(t.col for t in self.terms)
+
+    @property
+    def ops(self) -> tuple[str, ...]:
+        return tuple(t.op for t in self.terms)
+
+
+def _as_term(node: BinOp, int_columns) -> FusedTerm | None:
+    op = _OP_NORM.get(node.op)
+    if op is None:
+        return None
+    left, right = node.left, node.right
+    if isinstance(right, Col) and not isinstance(left, Col):
+        left, right = right, left
+        op = _OP_FLIP[op]
+    if not isinstance(left, Col) or left.name not in int_columns:
+        return None
+    if isinstance(right, Const):
+        v = right.value
+        if isinstance(v, bool) or not isinstance(v, int):
+            return None
+        return FusedTerm(left.name, op, ("const", v))
+    if isinstance(right, Param):
+        return FusedTerm(left.name, op, ("param", right.index))
+    return None
+
+
+def classify_fusable(
+    node: Node | None, int_columns, max_terms: int = 4
+) -> FusedScan | None:
+    """Return a FusedScan plan if ``node`` is a conjunction of <= max_terms
+    equality/range terms over columns in ``int_columns``; None otherwise.
+    ``None`` input (no WHERE) is not fusable — the match-all path is already
+    a single jnp op."""
+    if node is None:
+        return None
+    terms: list[FusedTerm] = []
+
+    def walk(n) -> bool:
+        if isinstance(n, And):
+            return walk(n.left) and walk(n.right)
+        if isinstance(n, BinOp):
+            t = _as_term(n, int_columns)
+            if t is None:
+                return False
+            terms.append(t)
+            return True
+        if isinstance(n, Between):
+            if not isinstance(n.expr, Col) or n.expr.name not in int_columns:
+                return False
+            for bound, op in ((n.low, ">="), (n.high, "<=")):
+                if isinstance(bound, Const) and isinstance(bound.value, int) \
+                        and not isinstance(bound.value, bool):
+                    terms.append(FusedTerm(n.expr.name, op,
+                                           ("const", int(bound.value))))
+                elif isinstance(bound, Param):
+                    terms.append(FusedTerm(n.expr.name, op,
+                                           ("param", bound.index)))
+                else:
+                    return False
+            return True
+        return False
+
+    if not walk(node) or not terms or len(terms) > max_terms:
+        return None
+    return FusedScan(tuple(terms))
+
+
 def collect_params(node: Node | None) -> int:
     """Number of `?` placeholders in an AST (max index + 1)."""
     mx = -1

@@ -29,7 +29,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import predicate as P
-from repro.core.schema import RESERVED_COLUMNS, TableSchema
+from repro.core.schema import RESERVED_COLUMNS, SQL_TYPES, TableSchema
+from repro.kernels import ops as OPS
 
 CLOCK_DTYPE = jnp.int64 if jax.config.read("jax_enable_x64") else jnp.int32
 # NOTE: we keep clocks in int32 unless x64 is enabled; the daemon widens by
@@ -63,15 +64,15 @@ def _tick(state: dict) -> dict:
 def _alloc_slots(state: dict, n: int):
     """Pick ``n`` slots: invalid rows first, then LRU-evict valid rows.
 
-    Returns (slots[n], evicted_count). One top_k does both jobs — the
-    free-list and the paper's capacity-pressure expiry."""
+    Returns slots[n]. One top_k does both jobs — the free-list and the
+    paper's capacity-pressure expiry. (The eviction count is computed by
+    the caller, which knows the row mask.)"""
     valid = state["valid"]
     accessed = state["cols"]["_accessed"]
     # invalid rows get key -1 (< any clock stamp, clocks start at 0)
     key = jnp.where(valid, accessed, -1)
     _, slots = jax.lax.top_k(-key, n)  # n smallest keys
-    evicted = jnp.sum(valid[slots].astype(jnp.int32))
-    return slots, evicted
+    return slots
 
 
 def insert(
@@ -97,7 +98,7 @@ def insert(
         break
     if n is None:
         raise ValueError("insert needs at least one column or payload")
-    slots, evicted = _alloc_slots(state, n)
+    slots = _alloc_slots(state, n)
     if row_mask is None:
         row_mask = jnp.ones((n,), dtype=bool)
     # Rows whose mask is off write to a scratch slot? No — we redirect them
@@ -139,14 +140,41 @@ def _match_mask(schema: TableSchema, state: dict, where: P.Node | None, params):
     return mask & state["valid"]
 
 
+@functools.lru_cache(maxsize=4096)
+def _fused_plan(schema: TableSchema, where) -> P.FusedScan | None:
+    """Classify a WHERE clause against this schema's int32 columns (the
+    relscan-fusable set: INT/TEXT user columns + the reserved clocks)."""
+    int_cols = frozenset(
+        c.name for c in schema.columns
+        if np.dtype(SQL_TYPES[c.sql_type.upper()]) == np.int32
+    ) | frozenset(RESERVED_COLUMNS)
+    return P.classify_fusable(where, int_cols)
+
+
+def _fused_scan(schema, state, plan: P.FusedScan, params, *, limit,
+                want_ids=True, mode=None):
+    """Dispatch a classified predicate to the fused relscan path. Returns
+    (ids, present, mask, count) or None if a runtime param has a non-int
+    dtype (decided at trace time — dtypes are static under jit)."""
+    vals = [t.resolve(params) for t in plan.terms]
+    if not all(
+        jnp.issubdtype(jnp.result_type(v), jnp.integer) for v in vals
+    ):
+        return None
+    cols_t = tuple(state["cols"][c] for c in plan.columns)
+    return OPS.predicate_scan(
+        cols_t, state["valid"], jnp.asarray(vals, jnp.int32),
+        ops=plan.ops, limit=limit, want_ids=want_ids, mode=mode)
+
+
 def _compact(mask: jax.Array, limit: int, capacity: int):
     """Indices of the first ``limit`` set bits (row order), padded.
 
-    Pure-jnp path; the Pallas ``relscan`` kernel implements the same
-    contract for on-TPU pools (see kernels/relscan.py)."""
-    idx = jnp.nonzero(mask, size=limit, fill_value=capacity)[0]
-    present = idx < capacity
-    return jnp.where(present, idx, 0).astype(jnp.int32), present
+    Pure-jnp path (argmax / one-hot contraction — see kernels/relscan
+    ``compact``); the Pallas ``relscan`` kernel implements the same
+    contract in-kernel for on-TPU pools."""
+    from repro.kernels.relscan import compact
+    return compact(mask, limit=min(limit, capacity))
 
 
 def select(
@@ -161,24 +189,51 @@ def select(
     limit: int | None = None,
     with_payloads: Sequence[str] = (),
     touch: bool = True,
+    active: jax.Array | None = None,
+    fused_mode: str | None = None,
 ):
     """SELECT. Returns (state, result dict).
 
     result = {"count": scalar, "rows": {col: [limit]}, "present": bool[limit],
               "payloads": {name: [limit, *shape]}}
+
+    ``active`` (scalar bool) no-ops the whole statement — count 0, nothing
+    present, no touch — so the daemon's micro-batch executor can pad its
+    scan to a fixed bucket without side effects.
     """
     limit = schema.max_select if limit is None else min(limit, schema.max_select)
-    mask = _match_mask(schema, state, where, params)
-    count = jnp.sum(mask.astype(jnp.int32))
-    if order_by is not None:
-        key = state["cols"][order_by].astype(jnp.float32)
-        key = key if descending else -key
-        key = jnp.where(mask, key, -jnp.inf)
+    fused = None
+    if order_by is None:
+        plan = _fused_plan(schema, where)
+        if plan is not None:
+            fused = _fused_scan(schema, state, plan, params, limit=limit,
+                                mode=fused_mode)
+    if fused is not None:
+        idx, present, mask, count = fused
+    elif order_by is not None:
+        mask = _match_mask(schema, state, where, params)
+        count = jnp.sum(mask.astype(jnp.int32))
+        key = state["cols"][order_by]
+        if jnp.issubdtype(key.dtype, jnp.integer):
+            # monotone integer key: ~k = -k-1 flips the order without the
+            # float32 cast (which collapses int32 values above 2^24) and
+            # without the -k overflow at iinfo.min
+            key = key if descending else ~key
+            key = jnp.where(mask, key, jnp.iinfo(key.dtype).min)
+        else:
+            key = key if descending else -key
+            key = jnp.where(mask, key, -jnp.inf)
         _, idx = jax.lax.top_k(key, limit)
         present = mask[idx]
         idx = idx.astype(jnp.int32)
     else:
+        mask = _match_mask(schema, state, where, params)
+        count = jnp.sum(mask.astype(jnp.int32))
         idx, present = _compact(mask, limit, schema.capacity)
+    if active is not None:
+        count = jnp.where(active, count, 0)
+        present = present & active
+        mask = mask & active  # gates the touch below
     columns = tuple(columns) if columns is not None else schema.column_names
     rows = {c: state["cols"][c][idx] for c in columns}
     pls = {p: state["payloads"][p][idx] for p in with_payloads}
@@ -204,9 +259,22 @@ def update(
     where: P.Node | None,
     set_exprs: Mapping[str, P.Node],
     params: Sequence[Any] = (),
+    *,
+    extra_mask: jax.Array | None = None,
 ):
-    """UPDATE t SET col = expr ... WHERE pred. Returns (state, n_updated)."""
-    mask = _match_mask(schema, state, where, params)
+    """UPDATE t SET col = expr ... WHERE pred. Returns (state, n_updated).
+    ``extra_mask`` gates the match (micro-batch padding support)."""
+    plan = _fused_plan(schema, where)
+    fused = None
+    if plan is not None:
+        fused = _fused_scan(schema, state, plan, params, limit=1,
+                            want_ids=False)
+    if fused is not None:
+        mask = fused[2]
+    else:
+        mask = _match_mask(schema, state, where, params)
+    if extra_mask is not None:
+        mask = mask & extra_mask
     cols = dict(state["cols"])
     for name, expr in set_exprs.items():
         tgt = "_ttl" if name.upper() == "TTL" else name
@@ -220,19 +288,92 @@ def update(
     return state, n
 
 
+def _delete_mask(schema, state, where, params, *, want_ids, limit):
+    plan = _fused_plan(schema, where)
+    fused = None
+    if plan is not None:
+        fused = _fused_scan(schema, state, plan, params,
+                            limit=limit, want_ids=want_ids)
+    if fused is not None:
+        return fused
+    mask = _match_mask(schema, state, where, params)
+    n = jnp.sum(mask.astype(jnp.int32))
+    if not want_ids:
+        return None, None, mask, n
+    ids, present = _compact(mask, limit, schema.capacity)
+    return ids, present, mask, n
+
+
 def delete(
     schema: TableSchema,
     state: dict,
     where: P.Node | None,
     params: Sequence[Any] = (),
+    *,
+    extra_mask: jax.Array | None = None,
 ):
     """DELETE FROM t WHERE pred — flips validity bits only; payload bytes
-    never move (the 0.2 ms-vs-1000 ms effect from the paper's Table 2)."""
-    mask = _match_mask(schema, state, where, params)
-    n = jnp.sum(mask.astype(jnp.int32))
+    never move (the 0.2 ms-vs-1000 ms effect from the paper's Table 2).
+    ``extra_mask`` (scalar or [cap] bool) further gates the match — the
+    daemon's micro-batch executor uses it to no-op padded statements."""
+    _, _, mask, n = _delete_mask(schema, state, where, params,
+                                 want_ids=False, limit=1)
+    if extra_mask is not None:
+        mask = mask & extra_mask
+        n = jnp.sum(mask.astype(jnp.int32))
     state = dict(state, valid=state["valid"] & ~mask)
     state = _tick(state)
     return state, n
+
+
+def delete_many_eq(
+    schema: TableSchema,
+    state: dict,
+    column: str,
+    vals: jax.Array,
+    active: jax.Array,
+):
+    """One-pass multi-value equality DELETE: flip every valid row whose
+    ``column`` equals ANY active entry of ``vals`` — W statements, ONE scan
+    over the table (sort the W values, binary-search each row into them).
+    The count equals the sequential per-statement total because deletes
+    commute. INT32_MAX is reserved as the padding sentinel. The logical
+    clock advances by the number of ACTIVE statements (padding is free),
+    matching the sequential path's TTL semantics.
+
+    Returns (state, n_deleted)."""
+    w = vals.shape[0]
+    sentinel = jnp.iinfo(jnp.int32).max
+    sv = jnp.sort(jnp.where(active, vals.astype(jnp.int32), sentinel))
+    n_act = jnp.sum(active.astype(jnp.int32))
+    col = state["cols"][column]
+    pos = jnp.clip(jnp.searchsorted(sv, col), 0, w - 1)
+    hit = state["valid"] & (sv[pos] == col) & (pos < n_act)
+    n = jnp.sum(hit.astype(jnp.int32))
+    state = dict(state, valid=state["valid"] & ~hit)
+    state["clock"] = state["clock"] + n_act
+    state["ops"] = state["ops"] + n_act
+    return state, n
+
+
+def delete_returning(
+    schema: TableSchema,
+    state: dict,
+    where: P.Node | None,
+    params: Sequence[Any] = (),
+    *,
+    limit: int | None = None,
+):
+    """DELETE that also reports which rows went: returns
+    (state, n, row_ids[limit], present[limit]). Row ids feed incremental
+    index maintenance (kvpool.page_table_update) — the metadata columns of
+    deleted rows stay intact, so callers can still read slot/pos there."""
+    limit = schema.max_select if limit is None else limit
+    ids, present, mask, n = _delete_mask(schema, state, where, params,
+                                         want_ids=True, limit=limit)
+    state = dict(state, valid=state["valid"] & ~mask)
+    state = _tick(state)
+    return state, n, ids, present
 
 
 _AGGS = {

@@ -15,7 +15,7 @@ import jax
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.paged_attention import paged_attention as _paged
-from repro.kernels.relscan import compact, relscan as _relscan
+from repro.kernels.relscan import relscan as _relscan
 from repro.kernels.mamba_scan import mamba2_scan as _mamba2
 
 
@@ -48,23 +48,22 @@ def paged_attention(q, arena, pages, lengths, **kw):
                   interpret=(mode == "interpret"), **kw)
 
 
-def predicate_scan(col_a, valid, *, val_a, col_b=None, val_b=None,
-                   limit=None, **kw):
-    """Fused WHERE scan + compaction. Returns (row_ids, present, count)."""
-    mode = _mode()
+def predicate_scan(cols, valid, vals, *, ops, limit, want_ids=True,
+                   mode=None, **kw):
+    """Fused WHERE scan + compaction for a conjunction of up to 4
+    equality/range terms over integer columns (the relscan hot path).
+
+    cols: per-term [cap] int32 column arrays; ops: static comparison codes;
+    vals: [nterms] runtime values. Returns (ids, present, mask, count) —
+    see kernels/relscan.relscan for the full contract. ``mode`` overrides
+    the REPRO_KERNELS selection (the vmapped micro-batch executor pins
+    ``ref``: a [batch, cap] broadcast compare IS the fused form there)."""
+    mode = mode or _mode()
     if mode == "ref":
-        cols = {"a": col_a, "b": col_b if col_b is not None else col_a}
-        mask, n = ref.relscan_ref(cols, valid, "a", val_a,
-                                  "b" if col_b is not None else None, val_b)
-    else:
-        mask, cnt = _relscan(col_a, valid, val_a=val_a, col_b=col_b,
-                             val_b=val_b, interpret=(mode == "interpret"),
-                             **kw)
-        import jax.numpy as jnp
-        n = jnp.sum(cnt)
-    limit = limit or mask.shape[0]
-    ids, present = compact(mask, limit=limit)
-    return ids, present, n
+        return ref.relscan_ref(cols, valid, vals, ops=ops, limit=limit,
+                               want_ids=want_ids)
+    return _relscan(tuple(cols), valid, vals, ops=ops, limit=limit,
+                    interpret=(mode == "interpret"), want_ids=want_ids, **kw)
 
 
 def mamba2_scan(x, dt, dA, B, C, **kw):

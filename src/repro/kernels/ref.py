@@ -57,13 +57,32 @@ def paged_attention_ref(q, arena, pages, lengths, *, scale, softcap=0.0,
     return o.reshape(b, h, hd).astype(q.dtype)
 
 
-def relscan_ref(cols, valid, col_a, val_a, col_b=None, val_b=None):
-    """Predicate bitmap oracle: valid & (cols[a]==va) [& (cols[b]==vb)].
-    cols: dict name -> [cap] int32. Returns (mask [cap] bool, count)."""
-    m = valid & (cols[col_a] == val_a)
-    if col_b is not None:
-        m = m & (cols[col_b] == val_b)
-    return m, jnp.sum(m.astype(jnp.int32))
+_RELSCAN_CMP = {
+    "==": lambda a, b: a == b,
+    "!=": lambda a, b: a != b,
+    "<": lambda a, b: a < b,
+    "<=": lambda a, b: a <= b,
+    ">": lambda a, b: a > b,
+    ">=": lambda a, b: a >= b,
+}
+
+
+def relscan_ref(cols, valid, vals, *, ops, limit, want_ids=True):
+    """Fused-conjunction oracle with the exact relscan contract: valid &
+    AND_t (cols[t] OP_t vals[t]). cols: per-term [cap] int32 arrays (a
+    column may repeat). Returns (ids, present, mask, count) — see
+    kernels/relscan.relscan. XLA fuses this into one masked pass, so it
+    doubles as the fast `ref` mode on non-TPU backends."""
+    mask = valid
+    vals = jnp.asarray(vals, jnp.int32)
+    for t, op in enumerate(ops):
+        mask = mask & _RELSCAN_CMP[op](cols[t].astype(jnp.int32), vals[t])
+    count = jnp.sum(mask.astype(jnp.int32))
+    if not want_ids:
+        return None, None, mask, count
+    from repro.kernels.relscan import compact
+    ids, present = compact(mask, limit=limit)
+    return ids, present, mask, count
 
 
 def mamba2_scan_ref(x, dt, dA, B, C, h0):

@@ -1,79 +1,209 @@
-"""Pallas TPU relscan: fused predicate evaluation over RelTable metadata
-columns — the ``SELECT/DELETE ... WHERE`` hot path of the cache daemon.
+"""Pallas TPU relscan: fused predicate scan + compaction over RelTable
+metadata columns — the ``SELECT/DELETE ... WHERE`` hot path of the daemon.
 
-The daemon's dominant predicates are 1- and 2-column equality scans
-(``seq_id = ?``, ``user_id = ?``, ``slot = ? AND pos_block = ?``). The
-kernel fuses: load column tiles into VMEM -> vector compare -> bitmap +
-per-tile match counts, one pass over the table (the B-tree replacement
-from DESIGN.md §2 — at 10^3..10^6 rows a vectorized scan beats pointer
-chasing on this hardware). Compaction of the bitmap into row ids is a
-cheap jnp epilogue on the (tiny) result.
+The daemon's dominant predicates are conjunctions of equality/range terms
+over 1..4 integer columns (``seq_id = ?``, ``slot = ? AND pos_block = ?``,
+``ts BETWEEN ? AND ?``). Two grid-tiled passes, both fused:
+
+pass 1 (``_scan_kernel``)     load column tiles into VMEM -> evaluate every
+                              term against the SMEM value vector -> AND with
+                              the validity bitmap -> bitmap tile + per-tile
+                              match count (SMEM scalar per tile).
+pass 2 (``_compact_kernel``)  a prefix-sum over the tile counts (tiny jnp op
+                              between the passes) gives each tile its output
+                              offset; the kernel turns its bitmap tile into
+                              global row positions with a 2D row-major
+                              cumsum and accumulates the first ``limit``
+                              matching row ids into a resident output block
+                              (one-hot dot against the output lane index) —
+                              no O(capacity) ``jnp.nonzero`` epilogue.
+
+At 10^3..10^6 rows a vectorized scan beats pointer chasing on this
+hardware (DESIGN.md §2 — the B-tree replacement). Operator codes are
+compile-time constants (the prepared-statement cache); comparison values
+arrive at runtime, so one compiled kernel serves every execution of a
+statement shape. Mode selection (kernel/interpret/ref) lives in
+``kernels/ops.predicate_scan``.
 """
 from __future__ import annotations
 
 import functools
+from typing import Sequence
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+LANES = 128
+MAX_TERMS = 4
 
-def _kernel(col_a_ref, col_b_ref, valid_ref, out_mask_ref, out_cnt_ref, *,
-            val_a: int, val_b, two_cols: bool):
-    a = col_a_ref[...]
-    m = valid_ref[...] & (a == val_a)
-    if two_cols:
-        m = m & (col_b_ref[...] == val_b)
-    out_mask_ref[...] = m
-    out_cnt_ref[0] = jnp.sum(m.astype(jnp.int32))
+_CMP = {
+    "==": lambda a, b: a == b,
+    "!=": lambda a, b: a != b,
+    "<": lambda a, b: a < b,
+    "<=": lambda a, b: a <= b,
+    ">": lambda a, b: a > b,
+    ">=": lambda a, b: a >= b,
+}
+
+
+def _scan_kernel(vals_ref, *refs, ops: tuple[str, ...]):
+    """refs = (col_ref * nterms, valid_ref, mask_ref, cnt_ref)."""
+    nt = len(ops)
+    valid_ref, mask_ref, cnt_ref = refs[nt], refs[nt + 1], refs[nt + 2]
+    m = valid_ref[...]
+    for t, op in enumerate(ops):
+        m = m & _CMP[op](refs[t][...], vals_ref[0, t])
+    mask_ref[...] = m
+    cnt_ref[0, 0] = jnp.sum(m.astype(jnp.int32))
+
+
+def _compact_kernel(off_ref, mask_ref, ids_ref, *, block: int, limitp: int,
+                    rows: int):
+    """Accumulate this tile's matching row ids into the resident [1, limitp]
+    output at positions off..off+count (row-major order)."""
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        ids_ref[...] = jnp.zeros_like(ids_ref)
+
+    m = mask_ref[...]                                   # (rows, LANES) bool
+    mi = m.astype(jnp.int32)
+    lane_c = jnp.cumsum(mi, axis=1)                     # inclusive, per row
+    row_tot = jnp.sum(mi, axis=1, keepdims=True)        # (rows, 1)
+    row_pre = jnp.cumsum(row_tot, axis=0) - row_tot     # exclusive, per row
+    off = off_ref[0, 0]
+    pos = lane_c - 1 + row_pre + off                    # global out position
+    pos = jnp.where(m, pos, -1)
+    rr = jax.lax.broadcasted_iota(jnp.int32, (rows, LANES), 0)
+    ll = jax.lax.broadcasted_iota(jnp.int32, (rows, LANES), 1)
+    rid = i * block + rr * LANES + ll                   # global row id
+    jj = jax.lax.broadcasted_iota(jnp.int32, (1, limitp), 1)
+
+    @pl.when(off < limitp)
+    def _accumulate():
+        acc = jnp.zeros((1, limitp), jnp.int32)
+        for r in range(rows):                           # static unroll
+            eq = pos[r][:, None] == jj                  # (LANES, limitp)
+            acc = acc + jnp.sum(
+                jnp.where(eq, rid[r][:, None], 0), axis=0, keepdims=True)
+        ids_ref[...] = ids_ref[...] + acc
+
+
+def _pad_to(x, n, fill):
+    if x.shape[0] == n:
+        return x
+    return jnp.pad(x, (0, n - x.shape[0]), constant_values=fill)
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("val_a", "val_b", "block", "interpret"))
-def relscan(col_a, valid, *, val_a: int, col_b=None, val_b=None,
-            block: int = 1024, interpret: bool = True):
-    """col_a/col_b: [cap] int32; valid: [cap] bool. Returns (mask [cap]
-    bool, counts [nblk] int32) for ``valid & col_a==val_a [& col_b==val_b]``.
-    """
-    cap = col_a.shape[0]
-    block = min(block, cap)
-    while cap % block:
-        block //= 2
-    nblk = cap // block
-    two = col_b is not None
-    if col_b is None:
-        col_b = col_a  # dummy operand, ignored by the kernel
-        val_b = 0
+    static_argnames=("ops", "limit", "block", "interpret", "want_ids"))
+def relscan(cols: Sequence[jax.Array], valid: jax.Array, vals: jax.Array, *,
+            ops: tuple[str, ...], limit: int, block: int = 2048,
+            interpret: bool = False, want_ids: bool = True):
+    """Fused conjunction scan over up to MAX_TERMS integer columns.
 
-    kern = functools.partial(_kernel, val_a=val_a, val_b=val_b,
-                             two_cols=two)
-    mask, cnt = pl.pallas_call(
-        kern,
+    cols:  one [cap] int32 array per term (a column may repeat, e.g. for
+           BETWEEN ranges); ops: per-term comparison codes (static);
+    vals:  [nterms] int32 runtime comparison values;
+    valid: [cap] bool validity bitmap, ANDed into the match.
+
+    Returns (ids, present, mask, count):
+      ids [limit] int32     first ``limit`` matching row ids in row order
+                            (0-padded — same contract as table._compact),
+      present [limit] bool  which of those slots hold a real match,
+      mask [cap] bool       full match bitmap (for touch/delete fusion),
+      count int32 scalar    total matches (unclamped).
+    When ``want_ids`` is False pass 2 is skipped and ids/present are None.
+    """
+    if not 1 <= len(ops) <= MAX_TERMS or len(cols) != len(ops):
+        raise ValueError(f"relscan supports 1..{MAX_TERMS} terms")
+    cap = valid.shape[0]
+    block = max(LANES * 8, (block // LANES) * LANES)
+    nblk = -(-cap // block)
+    capp = nblk * block
+    rows = block // LANES
+
+    cols2 = [_pad_to(c.astype(jnp.int32), capp, 0).reshape(-1, LANES)
+             for c in cols]
+    valid2 = _pad_to(valid, capp, False).reshape(-1, LANES)
+    vals2 = jnp.zeros((1, MAX_TERMS), jnp.int32).at[0, : len(ops)].set(
+        jnp.asarray(vals, jnp.int32)[: len(ops)])
+
+    tile = pl.BlockSpec((rows, LANES), lambda i: (i, 0))
+    mask2, cnt = pl.pallas_call(
+        functools.partial(_scan_kernel, ops=ops),
         grid=(nblk,),
         in_specs=[
-            pl.BlockSpec((block,), lambda i: (i,)),
-            pl.BlockSpec((block,), lambda i: (i,)),
-            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1, MAX_TERMS), lambda i: (0, 0),
+                         memory_space=pltpu.SMEM),
+            *([tile] * (len(ops) + 1)),
         ],
         out_specs=[
-            pl.BlockSpec((block,), lambda i: (i,)),
-            pl.BlockSpec((1,), lambda i: (i,)),
+            tile,
+            pl.BlockSpec((1, 1), lambda i: (i, 0),
+                         memory_space=pltpu.SMEM),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((cap,), jnp.bool_),
-            jax.ShapeDtypeStruct((nblk,), jnp.int32),
+            jax.ShapeDtypeStruct((capp // LANES, LANES), jnp.bool_),
+            jax.ShapeDtypeStruct((nblk, 1), jnp.int32),
         ],
         interpret=interpret,
-    )(col_a, col_b, valid)
-    return mask, cnt
+    )(vals2, *cols2, valid2)
+
+    count = jnp.sum(cnt)
+    mask = mask2.reshape(capp)[:cap]
+    if not want_ids:
+        return None, None, mask, count
+
+    # tile offsets: exclusive prefix-sum over per-tile counts (nblk-sized)
+    offs = (jnp.cumsum(cnt[:, 0]) - cnt[:, 0]).astype(jnp.int32)[:, None]
+    limitp = -(-limit // LANES) * LANES
+    ids_p = pl.pallas_call(
+        functools.partial(_compact_kernel, block=block, limitp=limitp,
+                          rows=rows),
+        grid=(nblk,),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (i, 0),
+                         memory_space=pltpu.SMEM),
+            tile,
+        ],
+        out_specs=pl.BlockSpec((1, limitp), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, limitp), jnp.int32),
+        interpret=interpret,
+    )(offs, mask2)
+
+    ids = ids_p[0, :limit]
+    present = jnp.arange(limit, dtype=jnp.int32) < count
+    return ids, present, mask, count
 
 
 def compact(mask, *, limit: int):
-    """Bitmap -> first ``limit`` row ids (jnp epilogue; same contract as
-    core/table._compact)."""
+    """Bitmap -> first ``limit`` row ids (row order, 0-padded) + presence.
+
+    Replaces the ``jnp.nonzero(size=...)`` epilogue, whose scatter lowering
+    is slow on CPU and pathological under vmap (the micro-batched read
+    path). LIMIT 1 is a single argmax; the general case assigns each set
+    bit its within-limit position by cumsum and pulls the row ids through
+    a one-hot contraction — VPU/MXU friendly and vmap friendly."""
     cap = mask.shape[0]
-    idx = jnp.nonzero(mask, size=limit, fill_value=cap)[0]
-    present = idx < cap
-    return jnp.where(present, idx, 0).astype(jnp.int32), present
+    n = jnp.sum(mask.astype(jnp.int32))
+    if limit == 1:
+        ids = jnp.argmax(mask).astype(jnp.int32)[None]
+        present = jnp.arange(1, dtype=jnp.int32) < n
+        return jnp.where(present, ids, 0), present
+    pos = jnp.cumsum(mask.astype(jnp.int32)) - 1
+    pos = jnp.where(mask, pos, -1)
+    jj = jnp.arange(limit, dtype=jnp.int32)
+    if cap < (1 << 24):  # row ids exact in f32 -> use the matmul unit
+        eq = (pos[:, None] == jj[None, :]).astype(jnp.float32)
+        ids = (jnp.arange(cap, dtype=jnp.float32) @ eq).astype(jnp.int32)
+    else:
+        ids = jnp.sum(
+            jnp.where(pos[:, None] == jj[None, :],
+                      jnp.arange(cap, dtype=jnp.int32)[:, None], 0), axis=0)
+    present = jj < n
+    return jnp.where(present, ids, 0), present

@@ -213,7 +213,8 @@ def _seqpar_attention(cfg, q, k, v, *, causal, window, mesh):
     # fp32 island boundary: the XLA CPU backend miscompiles bf16 sharding
     # transitions around shard_map regions ("invalid binary opcode copy");
     # on TPU the casts fuse into the adjacent reshards.
-    out = jax.shard_map(
+    from repro.parallel import sharding as _SHDM
+    out = _SHDM.shard_map(
         body, mesh=mesh,
         in_specs=(P(bspec, "model", None, None),
                   P(bspec, None, None, None),

@@ -276,7 +276,7 @@ def embed_tokens(params, cfg: ModelConfig, tokens):
             out = jnp.where(ok, out, 0.0)
             return jax.lax.psum(out, "model").astype(emb_local.dtype)
 
-        x = jax.shard_map(
+        x = _SHD.shard_map(
             lookup, mesh=mesh,
             in_specs=(_P("model", None), _P(dp or None)),
             out_specs=_P(dp or None),

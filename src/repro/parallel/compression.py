@@ -71,7 +71,8 @@ def make_compressed_grad_fn(loss_grad_fn, mesh, *, axis: str = "pod"):
                     jax.tree.map(lambda _: P(), err_tree))
         out_specs = (P(), jax.tree.map(lambda _: P(), err_tree),
                      jax.tree.map(lambda _: P(), err_tree))
-        return jax.shard_map(
+        from repro.parallel import sharding as _SHDM
+        return _SHDM.shard_map(
             per_pod, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
             axis_names={axis}, check_vma=False,
         )(params, batch, err_tree)

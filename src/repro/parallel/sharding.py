@@ -25,6 +25,22 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 # mesh axis groups
 _DP = ("pod", "data")  # batch-parallel axes (outer pod, inner data/fsdp)
 
+
+def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None,
+              check_vma=True):
+    """``jax.shard_map`` across jax versions: newer releases expose it at
+    the top level (axis_names/check_vma); 0.4.x only has the experimental
+    form (auto/check_rep). One call site API, either backend."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, axis_names=axis_names,
+                             check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _sm
+    auto = frozenset(mesh.axis_names) - frozenset(
+        axis_names if axis_names is not None else mesh.axis_names)
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=check_vma, auto=auto)
+
 # Default logical-axis -> mesh-axis rules (single- and multi-pod; missing
 # mesh axes in a rule are silently dropped against the actual mesh).
 DEFAULT_RULES: dict[str, tuple[str, ...]] = {

@@ -424,7 +424,21 @@ class ServeEngine:
         self._prefill = jax.jit(lambda p, b: TF.prefill(p, cfg, b))
         self.requests: dict[int, Request] = {}   # slot -> request
         self.lengths = np.zeros(max_slots, np.int32)
-        self.tail_row = np.full(max_slots, -1, np.int32)
+        # device-resident tick state: page table (cap = missing sentinel)
+        # and per-slot tail row, maintained INCREMENTALLY from the row ids
+        # each INSERT/DELETE reports — no per-tick O(capacity) rebuild and
+        # no device->host sync on the SQL path.
+        self._sch = self.daemon.schema("kv")
+        self.tail_row = jnp.full(max_slots, -1, jnp.int32)
+        self._pt = jnp.full((max_slots, self.geom.nblk), cap, jnp.int32)
+        self._blk_start = jnp.asarray(build_blk_start(
+            dataclasses.replace(self.geom, batch=max_slots)))
+        self._pt_insert = jax.jit(functools.partial(
+            kvpool.page_table_insert, self._sch,
+            max_slots=max_slots, max_blocks=self.geom.nblk))
+        self._pt_delete = jax.jit(functools.partial(
+            kvpool.page_table_delete, self._sch,
+            max_slots=max_slots, max_blocks=self.geom.nblk))
         self._next_seq = 1
         self.decode_steps = 0
 
@@ -436,8 +450,10 @@ class ServeEngine:
         raise RuntimeError("no free slot")
 
     def _insert_blocks(self, slot, seq_id, user_id, pos_blocks,
-                       hashes=None) -> np.ndarray:
-        rows = []
+                       hashes=None) -> jax.Array:
+        """Sync-free block allocation: one micro-batched INSERT, device row
+        ids out, incremental page-table maintenance. Nothing here waits on
+        the device."""
         params_list = []
         for i, pb in enumerate(pos_blocks):
             h = int(hashes[i]) if hashes is not None else 0
@@ -445,7 +461,10 @@ class ServeEngine:
         res = self.daemon.executemany(
             "INSERT INTO kv (slot, seq_id, user_id, pos_block, prefix_hash)"
             " VALUES (?, ?, ?, ?, ?)", params_list)
-        return np.asarray(res.row_ids)
+        rows = res.row_ids_device[: len(params_list)]
+        self._pt = self._pt_insert(self.daemon.table_state("kv"), self._pt,
+                                   rows, res.value_device)
+        return rows
 
     # ------------------------------------------------------------- publics
     def add_request(self, prompt_tokens, *, user_id: int = 0,
@@ -472,7 +491,7 @@ class ServeEngine:
                 np.asarray(kvpool.rolling_prefix_hashes(
                     jnp.asarray(np.pad(toks, (0, max(pad - n, 0)))),
                     self.block)) if n >= self.block else None)
-            self.tail_row[slot] = rows[-1]
+            self.tail_row = self.tail_row.at[slot].set(rows[-1])
 
             quant = getattr(cfg, "kv_quant_int8", False)
 
@@ -487,7 +506,7 @@ class ServeEngine:
                 return jnp.stack([kb, vb], axis=2)
 
             def install(arena, k, v):
-                return arena.at[:, jnp.asarray(rows)].set(blockify(k, v))
+                return arena.at[:, rows].set(blockify(k, v))
 
             def install_q(arena, scales, k, v):
                 kv = blockify(k, v).astype(jnp.float32)
@@ -495,8 +514,7 @@ class ServeEngine:
                 sc = jnp.maximum(amax, 1e-8) / 127.0
                 q = jnp.clip(jnp.round(kv / sc[..., None]), -127, 127
                              ).astype(jnp.int8)
-                r = jnp.asarray(rows)
-                return arena.at[:, r].set(q), scales.at[:, r].set(sc)
+                return arena.at[:, rows].set(q), scales.at[:, rows].set(sc)
 
             if "k" in cache:
                 if quant:
@@ -552,25 +570,20 @@ class ServeEngine:
                   "write_off": jnp.asarray(lengths % self.block)}
         has_attn = ("arena" in self.state) or ("shared_arena" in self.state)
         if has_attn:
-            # allocate / locate the write row per active slot
-            wr = np.full((b, 1), -1, np.int32)
+            # allocate the write row for slots at a block boundary — the
+            # whole SQL path is async: device row ids flow straight into
+            # the (incrementally maintained) page table and tail rows
             for s, r in self.requests.items():
                 off = self.lengths[s] % self.block
                 if off == 0:
                     rows = self._insert_blocks(
                         s, r.seq_id, r.user_id,
                         [self.lengths[s] // self.block])
-                    self.tail_row[s] = rows[-1]
-                wr[s, 0] = self.tail_row[s]
-            # page table straight from the relational columns (device op)
-            ts = self.daemon.table_state("kv")
-            pt = kvpool.page_table(self.daemon.schema("kv"), ts,
-                                   max_slots=b, max_blocks=g.nblk)
-            pt = jnp.where(pt >= self.cap, -1, pt)
+                    self.tail_row = self.tail_row.at[s].set(rows[-1])
+            pt = jnp.where(self._pt >= self.cap, -1, self._pt)
             inputs["pt"] = pt[:, None, :]
-            inputs["blk_start"] = jnp.asarray(build_blk_start(
-                dataclasses.replace(g, batch=b)))
-            inputs["write_rows"] = jnp.asarray(wr)
+            inputs["blk_start"] = self._blk_start
+            inputs["write_rows"] = self.tail_row[:, None]
         if self.cfg.is_encdec:
             inputs["enc_valid"] = jnp.full((b,), cfg.frontend_len, jnp.int32)
         return inputs
@@ -594,24 +607,40 @@ class ServeEngine:
         return out
 
     # ------------------------------------------- fine-grained expiry (SQL)
+    def _apply_delete(self, res) -> None:
+        """Incremental page-table removal from a DELETE's reported row ids
+        (fused-relscan path); full rebuild if the ids were truncated or the
+        predicate wasn't fusable."""
+        ts = self.daemon.table_state("kv")
+        ids = res.row_ids_device
+        if ids is not None and res.count <= int(ids.shape[0]):
+            self._pt = self._pt_delete(ts, self._pt, ids,
+                                       res.present_device)
+        else:
+            self._pt = kvpool.page_table(self._sch, ts,
+                                         max_slots=self.max_slots,
+                                         max_blocks=self.geom.nblk)
+
     def finish_request(self, slot: int) -> int:
         """Paper Table 2 'single page': expire one request's blocks."""
         r = self.requests.pop(slot)
         res = self.daemon.execute("DELETE FROM kv WHERE seq_id = ?",
                                   (r.seq_id,))
+        self._apply_delete(res)
         self.lengths[slot] = 0
-        self.tail_row[slot] = -1
+        self.tail_row = self.tail_row.at[slot].set(-1)
         return res.count
 
     def evict_user(self, user_id: int) -> int:
         """Paper Table 2 'single user': end every session of one user."""
         res = self.daemon.execute("DELETE FROM kv WHERE user_id = ?",
                                   (user_id,))
+        self._apply_delete(res)
         for s in [s for s, r in self.requests.items()
                   if r.user_id == user_id]:
             self.requests.pop(s)
             self.lengths[s] = 0
-            self.tail_row[s] = -1
+            self.tail_row = self.tail_row.at[s].set(-1)
         return res.count
 
     def flush(self) -> int:
@@ -620,7 +649,8 @@ class ServeEngine:
         res = self.daemon.execute("FLUSH kv")
         self.requests.clear()
         self.lengths[:] = 0
-        self.tail_row[:] = -1
+        self.tail_row = jnp.full_like(self.tail_row, -1)
+        self._pt = jnp.full_like(self._pt, self.cap)
         return res.count
 
     def live_blocks(self) -> int:

@@ -157,3 +157,86 @@ def test_eviction_under_capacity_pressure():
     assert db.live_rows("s") == 8
     r = db.execute("SELECT a FROM s ORDER BY a ASC")
     assert [row["a"] for row in r.rows] == list(range(4, 12))  # oldest evicted
+
+
+def test_executemany_payload_padding_non_pow2():
+    """Regression: payload batches whose size is not a power of two used to
+    be np.concatenate'd along the first payload axis instead of stacked."""
+    db = SQLCached()
+    db.execute(
+        "CREATE TABLE kv (seq INT, PAYLOAD blk TENSOR(4,8) F32) CAPACITY 32"
+    )
+    n = 3  # pads to bucket 4
+    blks = [np.full((4, 8), float(i), np.float32) for i in range(n)]
+    db.executemany("INSERT INTO kv (seq) VALUES (?)",
+                   [(i,) for i in range(n)],
+                   [{"blk": b} for b in blks])
+    for i in range(n):
+        r = db.execute("SELECT PAYLOAD(blk), seq FROM kv WHERE seq = ?", (i,))
+        assert r.count == 1
+        np.testing.assert_allclose(np.asarray(r.payloads["blk"])[0], blks[i])
+
+
+def test_order_by_int_above_2pow24():
+    """Regression: float32 sort keys collapse int32 values above 2^24."""
+    db = SQLCached()
+    db.execute("CREATE TABLE t (a INT) CAPACITY 16 MAX_SELECT 8")
+    base = 1 << 24
+    vals = [base + 3, base + 1, base + 2, base + 4]
+    db.executemany("INSERT INTO t (a) VALUES (?)", [(v,) for v in vals])
+    r = db.execute("SELECT a FROM t ORDER BY a ASC")
+    assert [row["a"] for row in r.rows] == sorted(vals)
+    r = db.execute("SELECT a FROM t ORDER BY a DESC LIMIT 2")
+    assert [row["a"] for row in r.rows] == sorted(vals, reverse=True)[:2]
+
+
+def test_executemany_micro_batch_delete_update(db):
+    fill(db)
+    # 3 deletes (non-power-of-two -> padded; padding must not double-count)
+    r = db.executemany("DELETE FROM cache WHERE page_id = ?",
+                       [(1,), (3,), (1,)])
+    assert r.count == 8
+    assert db.live_rows("cache") == 12
+    # non-idempotent UPDATE: padding must not re-apply the last row
+    r = db.executemany("UPDATE cache SET val = val * 3 WHERE page_id = ?",
+                       [(0,), (2,), (4,)])
+    assert r.count == 12
+    vals = sorted(row["val"] for row in
+                  db.execute("SELECT val FROM cache WHERE page_id = 4").rows)
+    assert vals == [12.0, 27.0, 42.0, 57.0]
+
+
+def test_lazy_result_no_sync_until_access(db):
+    """execute() must not block on the device; materialization happens on
+    first attribute access and is cached."""
+    fill(db)
+    r = db.execute("SELECT val FROM cache WHERE page_id = ?", [2])
+    from repro.core.daemon import _UNSET
+    assert r._count is _UNSET and r._rows is None  # nothing materialized yet
+    db.drain("cache")
+    assert r.count == 4 and r._count == 4  # cached after first access
+    assert {row["val"] for row in r.rows} == {2.0, 7.0, 12.0, 17.0}
+    # INSERT results are lazy too (value = eviction count, device-side)
+    r2 = db.execute("INSERT INTO cache (page_id, user_id, key, val) "
+                    "VALUES (?, ?, ?, ?)", (9, 9, "kx", 1.0))
+    assert r2._value is _UNSET
+    assert r2.value == 0 and r2.row_ids.shape == (1,)
+
+
+def test_micro_batch_clock_advances_by_real_count(db):
+    """Padding to the power-of-two bucket must not age TTLs: the logical
+    clock advances by the number of real statements, not the bucket."""
+    fill(db)
+    t = db.tables["cache"]
+    before = int(t.state["clock"])
+    db.executemany("DELETE FROM cache WHERE page_id = ?", [(1,), (2,), (3,)])
+    assert int(t.state["clock"]) == before + 3  # bucket is 4
+    before = int(t.state["clock"])
+    db.executemany("UPDATE cache SET val = val + 1 WHERE page_id = ?",
+                   [(0,), (4,), (0,)])
+    assert int(t.state["clock"]) == before + 3
+    before = int(t.state["clock"])
+    rs = db.executemany("SELECT val FROM cache WHERE page_id = ?",
+                        [(0,), (4,), (0,), (4,), (0,)])
+    assert len(rs) == 5
+    assert int(t.state["clock"]) == before + 5  # bucket is 8

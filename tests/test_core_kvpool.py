@@ -114,3 +114,91 @@ def test_find_prefix_lookup():
     stt, res = KV.find_prefix(sch, stt, int(hashes[1]))
     assert int(res["count"]) == 1
     assert int(res["rows"]["pos_block"][0]) == 1
+
+
+# ------------------------------------------------- incremental maintenance
+
+def test_page_table_insert_incremental_matches_rebuild():
+    sch, stt = mk_pool()
+    pt = jnp.full((4, 8), sch.capacity, jnp.int32)
+    lens = jnp.zeros((4,), jnp.int32)
+    for slot, seq, pos in [(0, 100, [0, 1]), (2, 200, [0]), (0, 100, [2])]:
+        prev = stt
+        stt, rows, ev = KV.append_blocks(
+            sch, stt,
+            slot=jnp.full((len(pos),), slot, jnp.int32),
+            seq_id=jnp.full((len(pos),), seq, jnp.int32),
+            user_id=jnp.full((len(pos),), 7, jnp.int32),
+            pos_block=jnp.asarray(pos, jnp.int32),
+            prefix_hash=jnp.zeros((len(pos),), jnp.int32),
+            kv=blocks(len(pos)),
+        )
+        pt = KV.page_table_insert(sch, stt, pt, rows, ev,
+                                  max_slots=4, max_blocks=8)
+        lens = KV.seq_lengths_insert(sch, stt, lens, rows, ev,
+                                     block_size=BLOCK, max_slots=4)
+        np.testing.assert_array_equal(
+            np.asarray(pt),
+            np.asarray(KV.page_table(sch, stt, max_slots=4, max_blocks=8)))
+        np.testing.assert_array_equal(
+            np.asarray(lens),
+            np.asarray(KV.seq_lengths(sch, stt, max_slots=4,
+                                      block_size=BLOCK)))
+
+
+def test_page_table_insert_eviction_triggers_rebuild():
+    """Under capacity pressure the allocator overwrites live rows whose old
+    coordinates are unrecoverable — the evicted>0 branch must rebuild."""
+    sch = KV.kv_schema(layers=LAYERS, block_size=BLOCK, kv_heads=KVH,
+                       head_dim=HD, capacity=4, dtype=jnp.float32)
+    stt = KV.init_pool(sch)
+    pt = jnp.full((4, 8), sch.capacity, jnp.int32)
+    for slot, pos in [(0, [0, 1, 2, 3]), (1, [0, 1])]:  # 2nd insert evicts
+        stt, rows, ev = KV.append_blocks(
+            sch, stt,
+            slot=jnp.full((len(pos),), slot, jnp.int32),
+            seq_id=jnp.full((len(pos),), 1, jnp.int32),
+            user_id=jnp.full((len(pos),), 1, jnp.int32),
+            pos_block=jnp.asarray(pos, jnp.int32),
+            prefix_hash=jnp.zeros((len(pos),), jnp.int32),
+            kv=blocks(len(pos)),
+        )
+        pt = KV.page_table_insert(sch, stt, pt, rows, ev,
+                                  max_slots=4, max_blocks=8)
+    assert int(ev) > 0  # the scenario actually exercised the rebuild branch
+    np.testing.assert_array_equal(
+        np.asarray(pt),
+        np.asarray(KV.page_table(sch, stt, max_slots=4, max_blocks=8)))
+
+
+def test_page_table_delete_incremental_matches_rebuild():
+    from repro.core import predicate as P
+    sch, stt = mk_pool()
+    pt = jnp.full((4, 8), sch.capacity, jnp.int32)
+    lens = jnp.zeros((4,), jnp.int32)
+    stt, rows, ev = KV.append_blocks(
+        sch, stt,
+        slot=jnp.asarray([0, 0, 1, 2], jnp.int32),
+        seq_id=jnp.asarray([100, 100, 200, 300], jnp.int32),
+        user_id=jnp.asarray([7, 7, 7, 9], jnp.int32),
+        pos_block=jnp.asarray([0, 1, 0, 0], jnp.int32),
+        prefix_hash=jnp.zeros((4,), jnp.int32),
+        kv=blocks(4),
+    )
+    pt = KV.page_table_insert(sch, stt, pt, rows, ev,
+                              max_slots=4, max_blocks=8)
+    lens = KV.seq_lengths_insert(sch, stt, lens, rows, ev,
+                                 block_size=BLOCK, max_slots=4)
+    stt, n, ids, present = T.delete_returning(
+        sch, stt, P.BinOp("=", P.Col("seq_id"), P.Param(0)), (100,))
+    assert int(n) == 2
+    pt = KV.page_table_delete(sch, stt, pt, ids, present,
+                              max_slots=4, max_blocks=8)
+    lens = KV.seq_lengths_delete(sch, stt, lens, ids, present,
+                                 block_size=BLOCK, max_slots=4)
+    np.testing.assert_array_equal(
+        np.asarray(pt),
+        np.asarray(KV.page_table(sch, stt, max_slots=4, max_blocks=8)))
+    np.testing.assert_array_equal(
+        np.asarray(lens),
+        np.asarray(KV.seq_lengths(sch, stt, max_slots=4, block_size=BLOCK)))

@@ -7,8 +7,8 @@ state — the central invariant of the cache plane.
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import HealthCheck, given, settings
-from hypothesis import strategies as st
+
+from _hypothesis_compat import HealthCheck, given, settings, st
 
 from repro.core import predicate as P
 from repro.core import table as T

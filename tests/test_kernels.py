@@ -105,25 +105,32 @@ def test_paged_attention_matches_island_body():
 
 
 # ----------------------------------------------------------------- relscan
-@pytest.mark.parametrize("cap,block", [(64, 16), (1024, 256), (100, 32)])
+@pytest.mark.parametrize("cap", [64, 1024, 1000])
 @pytest.mark.parametrize("two_cols", [False, True])
-def test_relscan_matches_ref(cap, block, two_cols):
+def test_relscan_matches_ref(cap, two_cols):
     rng = np.random.default_rng(3)
     col_a = jnp.asarray(rng.integers(0, 5, cap), jnp.int32)
     col_b = jnp.asarray(rng.integers(0, 3, cap), jnp.int32)
     valid = jnp.asarray(rng.random(cap) < 0.7)
-    kw = dict(col_b=col_b, val_b=1) if two_cols else {}
-    mask, cnt = relscan(col_a, valid, val_a=2, block=block,
-                        interpret=True, **kw)
-    want_mask, want_n = R.relscan_ref(
-        {"a": col_a, "b": col_b}, valid, "a", 2,
-        "b" if two_cols else None, 1 if two_cols else None)
-    np.testing.assert_array_equal(mask, want_mask)
-    assert int(jnp.sum(cnt)) == int(want_n)
-    # compaction epilogue agrees with the table's _compact contract
-    ids, present = compact(mask, limit=16)
-    want_ids = np.nonzero(np.asarray(want_mask))[0][:16]
-    np.testing.assert_array_equal(np.asarray(ids)[present], want_ids)
+    cols = (col_a, col_b) if two_cols else (col_a,)
+    ops = ("==", "==") if two_cols else ("==",)
+    vals = jnp.asarray([2, 1][: len(ops)], jnp.int32)
+    ids, present, mask, cnt = relscan(cols, valid, vals, ops=ops, limit=16,
+                                      interpret=True)
+    wids, wpres, wmask, wcnt = R.relscan_ref(cols, valid, vals, ops=ops,
+                                             limit=16)
+    np.testing.assert_array_equal(mask, wmask)
+    assert int(cnt) == int(wcnt)
+    # in-kernel compaction agrees with the table's _compact contract
+    want_ids = np.nonzero(np.asarray(wmask))[0][:16]
+    np.testing.assert_array_equal(np.asarray(ids)[np.asarray(present)],
+                                  want_ids)
+    np.testing.assert_array_equal(np.asarray(ids), np.asarray(wids))
+    # mask-only pass (DELETE path) skips the compaction kernel
+    nids, npres, mask2, cnt2 = relscan(cols, valid, vals, ops=ops, limit=16,
+                                       interpret=True, want_ids=False)
+    assert nids is None and npres is None
+    np.testing.assert_array_equal(mask2, wmask)
 
 
 # -------------------------------------------------------------- mamba scan

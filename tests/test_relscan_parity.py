@@ -1,0 +1,209 @@
+"""relscan <-> jnp parity: the fused Pallas query engine must agree with
+the generic masked-scan path for every fusable predicate shape, and the
+table must fall back cleanly for everything else.
+
+Property-style: random tables x predicate shapes (1/2/4-column, eq and
+range terms) x limits, asserting the full (ids, present, mask, count)
+contract of ``table._compact(_match_mask(...))``.
+"""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core import predicate as P
+from repro.core import table as T
+from repro.core.schema import make_schema
+from repro.kernels import ops as OPS
+from repro.kernels import ref as R
+from repro.kernels.relscan import relscan
+
+
+def mk(capacity=192, max_select=32):
+    return make_schema(
+        "t",
+        [("a", "INT"), ("b", "INT"), ("c", "INT"), ("d", "INT"),
+         ("f", "FLOAT")],
+        capacity=capacity,
+        max_select=max_select,
+    )
+
+
+def fill(sch, rng, n):
+    stt = T.init_state(sch)
+    vals = {
+        "a": jnp.asarray(rng.integers(0, 4, n), jnp.int32),
+        "b": jnp.asarray(rng.integers(0, 3, n), jnp.int32),
+        "c": jnp.asarray(rng.integers(-5, 6, n), jnp.int32),
+        "d": jnp.asarray(rng.integers(0, 2, n), jnp.int32),
+        "f": jnp.asarray(rng.standard_normal(n), jnp.float32),
+    }
+    stt, *_ = T.insert(sch, stt, vals)
+    # punch some holes so validity participates in the scan
+    stt, _ = T.delete(sch, stt, P.BinOp("=", P.Col("d"), P.Const(1)))
+    return stt
+
+
+WHERES = {
+    "1col_eq": (P.BinOp("=", P.Col("a"), P.Param(0)), (2,)),
+    "2col_eq": (P.And(P.BinOp("=", P.Col("a"), P.Param(0)),
+                      P.BinOp("=", P.Col("b"), P.Param(1))), (1, 2)),
+    "4col_mixed": (
+        P.And(
+            P.And(P.BinOp("=", P.Col("a"), P.Param(0)),
+                  P.BinOp(">=", P.Col("c"), P.Param(1))),
+            P.And(P.BinOp("<=", P.Col("c"), P.Param(2)),
+                  P.BinOp("!=", P.Col("b"), P.Param(3))),
+        ),
+        (1, -3, 3, 0),
+    ),
+    "between": (P.Between(P.Col("c"), P.Param(0), P.Param(1)), (-2, 2)),
+    "empty": (P.BinOp("=", P.Col("a"), P.Const(999)), ()),
+    "full": (P.BinOp(">=", P.Col("c"), P.Const(-100)), ()),
+}
+
+
+@pytest.mark.parametrize("name", sorted(WHERES))
+@pytest.mark.parametrize("limit", [4, 32])
+@pytest.mark.parametrize("seed", [0, 1])
+def test_select_fused_matches_jnp(name, limit, seed, monkeypatch):
+    """select via the fused path (kernel body, interpret mode) must equal
+    the generic jnp path bit-for-bit, including limit truncation."""
+    where, params = WHERES[name]
+    sch = mk(max_select=limit)
+    rng = np.random.default_rng(seed)
+    stt = fill(sch, rng, 150)
+
+    plan = T._fused_plan(sch, where)
+    assert plan is not None, f"{name} should classify as fusable"
+
+    # generic jnp oracle
+    mask = T._match_mask(sch, stt, where, params)
+    want_ids, want_present = T._compact(mask, limit, sch.capacity)
+    want_count = int(jnp.sum(mask.astype(jnp.int32)))
+
+    monkeypatch.setenv("REPRO_KERNELS", "interpret")
+    _, res = T.select(sch, stt, where, params, limit=limit, touch=False)
+    assert int(res["count"]) == want_count
+    np.testing.assert_array_equal(np.asarray(res["row_ids"]),
+                                  np.asarray(want_ids))
+    np.testing.assert_array_equal(np.asarray(res["present"]),
+                                  np.asarray(want_present))
+
+    monkeypatch.setenv("REPRO_KERNELS", "ref")
+    _, res2 = T.select(sch, stt, where, params, limit=limit, touch=False)
+    assert int(res2["count"]) == want_count
+    np.testing.assert_array_equal(np.asarray(res2["row_ids"]),
+                                  np.asarray(want_ids))
+
+
+@pytest.mark.parametrize("name", ["1col_eq", "2col_eq", "4col_mixed"])
+def test_delete_fused_matches_jnp(name, monkeypatch):
+    where, params = WHERES[name]
+    sch = mk()
+    rng = np.random.default_rng(7)
+    stt = fill(sch, rng, 150)
+    mask = T._match_mask(sch, stt, where, params)
+    want_n = int(jnp.sum(mask.astype(jnp.int32)))
+    want_valid = np.asarray(stt["valid"] & ~mask)
+
+    monkeypatch.setenv("REPRO_KERNELS", "interpret")
+    new, n = T.delete(sch, stt, where, params)
+    assert int(n) == want_n
+    np.testing.assert_array_equal(np.asarray(new["valid"]), want_valid)
+
+    # delete_returning reports exactly the flipped rows
+    new2, n2, ids, present = T.delete_returning(sch, stt, where, params)
+    assert int(n2) == want_n
+    got = np.sort(np.asarray(ids)[np.asarray(present)])
+    np.testing.assert_array_equal(got, np.nonzero(np.asarray(mask))[0][
+        : sch.max_select])
+
+
+def test_default_mode_exercises_fused_path(monkeypatch):
+    """1- and 2-column equality WHEREs must route through predicate_scan
+    by default (no env override) in table.select and table.delete."""
+    monkeypatch.delenv("REPRO_KERNELS", raising=False)
+    sch = mk()
+    stt = fill(sch, np.random.default_rng(3), 100)  # before the spy: fill
+    calls = []                                      # itself deletes fused
+    real = OPS.predicate_scan
+
+    def spy(*a, **k):
+        calls.append(k.get("ops"))
+        return real(*a, **k)
+
+    monkeypatch.setattr(T.OPS, "predicate_scan", spy)
+    one = P.BinOp("=", P.Col("a"), P.Param(0))
+    two = P.And(P.BinOp("=", P.Col("a"), P.Param(0)),
+                P.BinOp("=", P.Col("b"), P.Param(1)))
+    T.select(sch, stt, one, (1,))
+    T.select(sch, stt, two, (1, 2))
+    T.delete(sch, stt, one, (2,))
+    assert calls == [("==",), ("==", "=="), ("==",)]
+
+
+def test_unfusable_predicates_fall_back(monkeypatch):
+    """OR / float-column / arithmetic predicates are not fusable and must
+    take the generic jnp path — with correct results."""
+    sch = mk()
+    rng = np.random.default_rng(5)
+    stt = fill(sch, rng, 120)  # before the spy: fill deletes via fused path
+    monkeypatch.setattr(T.OPS, "predicate_scan",
+                        lambda *a, **k: pytest.fail("fused path taken"))
+    for where, params in [
+        (P.Or(P.BinOp("=", P.Col("a"), P.Const(1)),
+              P.BinOp("=", P.Col("b"), P.Const(2))), ()),
+        (P.BinOp(">", P.Col("f"), P.Const(0.0)), ()),
+        (P.BinOp("=", P.BinOp("+", P.Col("a"), P.Col("b")), P.Const(3)), ()),
+        (P.Not(P.BinOp("=", P.Col("a"), P.Const(1))), ()),
+        # 5 conjuncts exceed the 4-term kernel budget
+        (P.And(P.And(P.BinOp("=", P.Col("a"), P.Const(1)),
+                     P.BinOp("=", P.Col("b"), P.Const(1))),
+               P.And(P.BinOp("=", P.Col("c"), P.Const(1)),
+                     P.And(P.BinOp("=", P.Col("d"), P.Const(0)),
+                           P.BinOp(">=", P.Col("a"), P.Const(0))))), ()),
+    ]:
+        assert T._fused_plan(sch, where) is None
+        mask = T._match_mask(sch, stt, where, params)
+        _, res = T.select(sch, stt, where, params, touch=False)
+        assert int(res["count"]) == int(jnp.sum(mask.astype(jnp.int32)))
+
+
+def test_float_param_falls_back_at_trace_time():
+    """An int-column term with a float runtime param must not hit the
+    int32 kernel (silent cast) — the dtype check routes it to jnp."""
+    sch = mk()
+    stt = fill(sch, np.random.default_rng(9), 50)
+    where = P.BinOp("=", P.Col("a"), P.Param(0))
+    _, res = T.select(sch, stt, where, (1.5,), touch=False)
+    assert int(res["count"]) == 0  # nothing equals 1.5 exactly
+
+
+@pytest.mark.parametrize("cap", [64, 100, 777, 4096])
+def test_kernel_vs_oracle_property(cap):
+    """Direct kernel-vs-oracle sweep across capacities (padding paths) and
+    random predicates, including degenerate all/none matches."""
+    rng = np.random.default_rng(cap)
+    cols = tuple(
+        jnp.asarray(rng.integers(0, 5, cap), jnp.int32) for _ in range(4))
+    valid = jnp.asarray(rng.random(cap) < 0.8)
+    for ops, vals in [
+        (("==",), [2]),
+        (("==", "!="), [0, 1]),
+        ((">=", "<=", "==", "!="), [1, 3, 2, 9]),
+        (("<",), [0]),          # no matches
+        ((">=",), [0]),         # everything valid matches
+    ]:
+        vals = jnp.asarray(vals, jnp.int32)
+        for limit in (8, 128):
+            got = relscan(cols[: len(ops)], valid, vals, ops=ops,
+                          limit=limit, interpret=True)
+            want = R.relscan_ref(cols[: len(ops)], valid, vals, ops=ops,
+                                 limit=limit)
+            assert int(got[3]) == int(want[3])
+            np.testing.assert_array_equal(np.asarray(got[2]),
+                                          np.asarray(want[2]))
+            np.testing.assert_array_equal(np.asarray(got[0]),
+                                          np.asarray(want[0]))
+            np.testing.assert_array_equal(np.asarray(got[1]),
+                                          np.asarray(want[1]))

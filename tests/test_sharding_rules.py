@@ -6,7 +6,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_compat import given, settings, st
 from jax.sharding import PartitionSpec as P
 
 from repro.parallel import sharding as SHD
@@ -29,7 +30,9 @@ def test_spec_mesh_axis_used_once():
 def test_spec_filters_missing_mesh_axes():
     rules = SHD.DEFAULT_RULES
     spec = SHD.spec_for_axes(("batch",), rules, ("data", "model"))
-    assert spec == P(("data",))  # 'pod' dropped on the single-pod mesh
+    # 'pod' dropped on the single-pod mesh; single-axis entries collapse to
+    # the bare name (newer jax no longer equates P(("data",)) and P("data"))
+    assert spec == P("data")
 
 
 def test_specs_for_tree_trims_nondividing():
