@@ -1,0 +1,195 @@
+"""Paper §3 wire path: statement throughput through the daemon's socket.
+
+N concurrent TCP clients drive the SAME mixed INSERT/SELECT/DELETE
+workload through three protocol regimes:
+
+  sync       one blocking EXEC…GO round trip per statement — the seed
+             behavior (and the paper's original single-stream regime);
+  pipelined  tagged wire pipelining: clients stream statements without
+             waiting, the server executes them one by one (cross-
+             connection batching disabled);
+  batched    pipelining + the BatchScheduler fusing same-shape runs from
+             every connection into single ``executemany`` dispatches —
+             the network finally rides the micro-batched engine.
+
+Statement shapes repeat across clients on purpose (a web-app cache tier
+hammers the same handful of prepared statements), phased in windows of
+32 INSERT / 16 SELECT / 16 DELETE per 64-statement chunk so admission
+runs are groupable. Executors are pre-compiled for every power-of-two
+bucket before timing, so the numbers measure the protocol, not jit.
+
+Output: human-readable table, or ``--json`` -> BENCH_protocol.json at
+the repo root (stmts/s, p50/p99 µs per mode + speedups), checked in each
+PR so the perf trajectory is diffable. ``--quick`` shrinks statements
+per connection, keeping the 8-connection shape.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+import threading
+import time
+from collections import deque
+
+import numpy as np
+
+from repro.core.daemon import SQLCached
+from repro.core.protocol import SQLCachedClient, ThreadedServer
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+N_CONN = 8
+N_STMTS = 384          # per connection; multiple of the chunk size
+N_STMTS_QUICK = 128
+WINDOW = 64            # pipeline chunk: 32 inserts, 16 selects, 16 deletes
+
+_CREATE = "CREATE TABLE bench (k INT, w INT) CAPACITY 4096 MAX_SELECT 8"
+_INSERT = "INSERT INTO bench (k, w) VALUES (?, ?)"
+_SELECT = "SELECT w FROM bench WHERE k = ? LIMIT 1"
+_DELETE = "DELETE FROM bench WHERE k = ?"
+
+
+def _client_ops(w: int, m: int) -> list[tuple[str, tuple]]:
+    """The per-client statement sequence: phased 32/16/16 windows. Keys
+    are client-disjoint; SELECTs hit live rows, DELETEs retire the
+    oldest, so every statement has a deterministic expected result."""
+    ops: list[tuple[str, tuple]] = []
+    next_k = w * 1_000_000
+    live: deque[int] = deque()
+    while len(ops) < m:
+        for _ in range(WINDOW // 2):
+            ops.append((_INSERT, (next_k, w)))
+            live.append(next_k)
+            next_k += 1
+        for j in range(WINDOW // 4):
+            ops.append((_SELECT, (live[j % len(live)],)))
+        for _ in range(WINDOW // 4):
+            ops.append((_DELETE, (live.popleft(),)))
+    return ops[:m]
+
+
+def _warm(db: SQLCached) -> None:
+    """Compile every executor the run can hit (singleton paths + all
+    power-of-two batch buckets up to the scheduler's max group) so the
+    timed region measures dispatch, not tracing."""
+    db.execute(_CREATE)
+    db.execute(_INSERT, (0, 0))
+    db.execute(_SELECT, (0,)).rows
+    db.execute(_DELETE, (0,))
+    b = 1
+    while b <= WINDOW:
+        db.executemany(_INSERT, [(i + 10, 0) for i in range(b)],
+                       per_statement=True)
+        for r in db.executemany(_SELECT, [(10,)] * b):
+            r.rows
+        db.executemany(_DELETE, [(i + 10,) for i in range(b)],
+                       per_statement=True)
+        b *= 2
+    db.execute("FLUSH bench")
+    db.drain("bench")
+
+
+def _drive_sync(addr, w: int, m: int, lats: list) -> None:
+    c = SQLCachedClient(*addr)
+    for sql, params in _client_ops(w, m):
+        t0 = time.perf_counter()
+        c.execute(sql, params)
+        lats.append((time.perf_counter() - t0) * 1e6)
+    c.close()
+
+
+def _drive_pipelined(addr, w: int, m: int, lats: list) -> None:
+    c = SQLCachedClient(*addr)
+    ops = _client_ops(w, m)
+    for i in range(0, m, WINDOW):
+        chunk = ops[i:i + WINDOW]
+        t0 = time.perf_counter()
+        p = c.pipeline()
+        for sql, params in chunk:
+            p.execute(sql, params)
+        p.collect()
+        per = (time.perf_counter() - t0) / len(chunk) * 1e6
+        lats.extend([per] * len(chunk))
+    c.close()
+
+
+def _run_mode(mode: str, n_conn: int, m: int) -> dict:
+    db = SQLCached()
+    _warm(db)
+    drive = _drive_sync if mode == "sync" else _drive_pipelined
+    with ThreadedServer(db=db, batching=(mode == "batched"),
+                        max_batch=WINDOW) as s:
+        lat_lists: list[list] = [[] for _ in range(n_conn)]
+        threads = [threading.Thread(target=drive,
+                                    args=(s.addr, w, m, lat_lists[w]))
+                   for w in range(n_conn)]
+        t0 = time.perf_counter()
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        wall = time.perf_counter() - t0
+        sched = dict(s.server.scheduler.stats)
+        errors = s.server.stats["errors"]
+    lats = np.asarray([u for ls in lat_lists for u in ls])
+    total = n_conn * m
+    return {
+        "stmts_per_s": round(total / wall, 1),
+        "p50_us": round(float(np.percentile(lats, 50)), 1),
+        "p99_us": round(float(np.percentile(lats, 99)), 1),
+        # sync times every statement's round trip; pipelined modes only
+        # observe whole-chunk walls, so their percentiles are amortized
+        # per-statement chunk averages — not comparable tail-for-tail
+        "latency_basis": ("per_statement" if mode == "sync"
+                          else "chunk_amortized"),
+        "wall_s": round(wall, 3),
+        "errors": errors,
+        "scheduler": {k: sched[k] for k in
+                      ("batches", "grouped_statements", "singles",
+                       "max_group")},
+    }
+
+
+def run(n_conn: int = N_CONN, m: int = N_STMTS) -> dict:
+    out = {
+        "bench": "protocol_pipeline",
+        "n_connections": n_conn,
+        "stmts_per_connection": m,
+        "pipeline_window": WINDOW,
+        "modes": {},
+    }
+    for mode in ("sync", "pipelined", "batched"):
+        out["modes"][mode] = _run_mode(mode, n_conn, m)
+    sync_rate = out["modes"]["sync"]["stmts_per_s"]
+    out["pipelined_speedup_vs_sync"] = round(
+        out["modes"]["pipelined"]["stmts_per_s"] / sync_rate, 2)
+    out["batched_speedup_vs_sync"] = round(
+        out["modes"]["batched"]["stmts_per_s"] / sync_rate, 2)
+    return out
+
+
+def main(argv=None):
+    argv = sys.argv[1:] if argv is None else argv
+    quick = "--quick" in argv
+    m = N_STMTS_QUICK if quick else N_STMTS
+    res = run(m=m)
+    if "--json" in argv:
+        path = REPO_ROOT / "BENCH_protocol.json"
+        path.write_text(json.dumps(res, indent=2) + "\n")
+        print(json.dumps(res, indent=2))
+        print(f"# wrote {path}")
+        return res
+    print(f"# protocol: {res['n_connections']} connections x "
+          f"{res['stmts_per_connection']} mixed statements")
+    print("mode,stmts_per_s,p50_us,p99_us")
+    for mode, r in res["modes"].items():
+        print(f"{mode},{r['stmts_per_s']},{r['p50_us']},{r['p99_us']}")
+    print(f"# pipelined {res['pipelined_speedup_vs_sync']}x, "
+          f"batched {res['batched_speedup_vs_sync']}x vs sync "
+          f"(max group {res['modes']['batched']['scheduler']['max_group']})")
+    return res
+
+
+if __name__ == "__main__":
+    main()

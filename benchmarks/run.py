@@ -2,13 +2,16 @@
 
 ``python -m benchmarks.run [--json] [--quick]``
 
---json   run fig1 + table2 in JSON mode and write ``BENCH_fig1.json`` /
-         ``BENCH_table2.json`` to the repo root (ops/s, p50/p99 µs); these
-         files are checked in so every PR's numbers are comparable.
---quick  tier-1-friendly smoke sizes — finishes in seconds on CPU.
+--json   run fig1 + table2 + protocol in JSON mode and write
+         ``BENCH_fig1.json`` / ``BENCH_table2.json`` /
+         ``BENCH_protocol.json`` to the repo root (ops/s resp. stmts/s,
+         p50/p99 µs); these files are checked in so every PR's numbers
+         are comparable.
+--quick  tier-1-friendly smoke sizes — finishes in seconds on CPU (the
+         protocol bench keeps its 8-connection shape, fewer statements).
 
 Without flags, the full human-readable suite runs: every paper
-table/figure plus the serving and roofline sections.
+table/figure plus the wire protocol, serving and roofline sections.
 """
 from __future__ import annotations
 
@@ -20,7 +23,7 @@ def main() -> None:
     as_json = "--json" in sys.argv
 
     if as_json:
-        from benchmarks import fig1_kv_read, table2_expiry
+        from benchmarks import fig1_kv_read, protocol_bench, table2_expiry
         args = ["--json"] + (["--quick"] if quick else [])
         print("=" * 72)
         print("== Paper Fig. 1 (JSON) -> BENCH_fig1.json")
@@ -28,6 +31,9 @@ def main() -> None:
         print("=" * 72)
         print("== Paper Table 2 (JSON) -> BENCH_table2.json")
         table2_expiry.main(args)
+        print("=" * 72)
+        print("== Wire protocol §3 (JSON) -> BENCH_protocol.json")
+        protocol_bench.main(args)
         return
 
     print("=" * 72)
@@ -45,6 +51,11 @@ def main() -> None:
               f"flush+regen={res['memcached_flush_regen_ms']:.1f}ms")
     else:
         table2_expiry.main([])
+
+    print("=" * 72)
+    print("== Paper §3: wire protocol (sync vs pipelined vs batched)")
+    from benchmarks import protocol_bench
+    protocol_bench.main(["--quick"] if quick else [])
 
     if quick:
         return

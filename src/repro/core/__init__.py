@@ -6,14 +6,19 @@ Public API:
     make_schema    — schema constructor
     table          — functional table ops (jit-composable)
     MemcachedLike  — the opaque-KV baseline from the paper's comparison
+    BatchScheduler — cross-connection admission queue / batch dispatcher
+    StatementShape — shape_key() grouping descriptor for the scheduler
 """
 from repro.core.baseline import MemcachedLike
-from repro.core.daemon import Result, SQLCached
+from repro.core.daemon import Result, SQLCached, StatementShape
 from repro.core.schema import ExpiryPolicy, TableSchema, make_schema
+from repro.core.scheduler import BatchScheduler
 
 __all__ = [
     "SQLCached",
     "Result",
+    "StatementShape",
+    "BatchScheduler",
     "TableSchema",
     "ExpiryPolicy",
     "make_schema",

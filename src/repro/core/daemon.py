@@ -45,6 +45,7 @@ zero copies.
 from __future__ import annotations
 
 import dataclasses
+import threading
 from typing import Any, Iterable, Mapping, Sequence
 
 import jax
@@ -84,17 +85,22 @@ _UNSET = object()
 class _HostStack:
     """One device→host transfer shared by every Result of a micro-batched
     SELECT: the per-statement Results are index views into the stacked
-    [batch, ...] outputs, so materializing any of them syncs once for all."""
+    [batch, ...] outputs, so materializing any of them syncs once for all.
+    Thread-safe: the protocol layer's per-connection flushers may
+    materialize sibling Results of one batch concurrently."""
 
-    __slots__ = ("dev", "_np")
+    __slots__ = ("dev", "_np", "_lock")
 
     def __init__(self, dev: dict):
         self.dev = dev
         self._np = None
+        self._lock = threading.Lock()
 
     def host(self) -> dict:
         if self._np is None:
-            self._np = jax.tree.map(np.asarray, self.dev)
+            with self._lock:
+                if self._np is None:
+                    self._np = jax.tree.map(np.asarray, self.dev)
         return self._np
 
 
@@ -240,6 +246,23 @@ class _Table:
     host_ops: int = 0
 
 
+@dataclasses.dataclass(frozen=True)
+class StatementShape:
+    """Grouping descriptor for one SQL text (see :meth:`SQLCached.shape_key`).
+
+    ``key`` is hashable and equal exactly when two statements can ride the
+    same batched executor (same parsed AST — LIMIT, ORDER BY, aggregate
+    function and WHERE shape all included, only the ``?`` bindings vary).
+    ``batchable`` marks shapes ``executemany`` accepts; ``is_write`` drives
+    the scheduler's read/write reordering barriers."""
+
+    key: tuple
+    table: str | None
+    kind: str  # "select" | "insert" | "delete" | "update" | "admin"
+    batchable: bool
+    is_write: bool
+
+
 def _bucket(n: int) -> int:
     """Pad batch sizes to powers of two to bound executor retraces."""
     b = 1
@@ -309,12 +332,18 @@ class SQLCached:
                 return base(state, *args)
         return jax.jit(fn, donate_argnums=0)
 
-    def _expire_flag(self, t: _Table) -> bool:
+    def _expire_flag(self, t: _Table, n: int = 1) -> bool:
         """Paper §4.3 condition 3: expire every N cache operations. Counted
-        host-side; the flag rides into the fused executor."""
-        t.host_ops += 1
+        host-side; the flag rides into the fused executor. ``n`` is the
+        number of STATEMENTS the dispatch carries — a micro-batched
+        executemany advances the op count by its batch size, so expiry
+        cadence doesn't depend on how the scheduler grouped the traffic
+        (the flag fires once per crossed interval boundary)."""
         iv = t.schema.expiry.ops_interval
-        return bool(self.auto_expire and iv > 0 and t.host_ops % iv == 0)
+        before = t.host_ops
+        t.host_ops += n
+        return bool(self.auto_expire and iv > 0
+                    and before // iv != t.host_ops // iv)
 
     # ----------------------------------------------------------- statements
     def execute(
@@ -345,6 +374,28 @@ class SQLCached:
             t.state, n = jax.jit(T.flush, static_argnums=0)(t.schema, t.state)
             return Result(dev={"count": n})
         raise S.SQLError(f"unhandled statement {stmt!r}")
+
+    def shape_key(self, sql: str) -> StatementShape:
+        """Classify ``sql`` for cross-connection batching (the scheduler's
+        grouping hook): statements whose ``.key`` compare equal share one
+        jitted executor and may be dispatched together through
+        :meth:`executemany`, so a heterogeneous admission batch splits into
+        the minimal number of dispatches. Raises ``SQLError`` on bad SQL."""
+        stmt = self._parse(sql)
+        if isinstance(stmt, S.Select):
+            return StatementShape(("select", stmt), stmt.table, "select",
+                                  True, False)
+        if isinstance(stmt, S.Insert):
+            return StatementShape(("insert", stmt), stmt.table, "insert",
+                                  True, True)
+        if isinstance(stmt, S.Delete):
+            return StatementShape(("delete", stmt), stmt.table, "delete",
+                                  True, True)
+        if isinstance(stmt, S.Update):
+            return StatementShape(("update", stmt), stmt.table, "update",
+                                  True, True)
+        table = getattr(stmt, "table", None)
+        return StatementShape(("admin", stmt), table, "admin", False, True)
 
     def execute_async(
         self,
@@ -384,18 +435,30 @@ class SQLCached:
         sql: str,
         params_list: Sequence[Sequence[Any]],
         payloads_list: Sequence[Mapping[str, Any]] | None = None,
+        *,
+        per_statement: bool = False,
     ) -> "Result | list[Result]":
         """Micro-batch one statement over many parameter rows — ONE device
         dispatch per call (rows are padded to a power-of-two bucket so one
         compiled executor serves many batch sizes).
 
         INSERT/DELETE/UPDATE return a single aggregate :class:`Result`.
-        SELECT returns ``list[Result]`` — one per parameter row (empty
-        list for an empty ``params_list``), all views into one stacked
-        transfer."""
+        SELECT (row reads AND aggregates) returns ``list[Result]`` — one
+        per parameter row (empty list for an empty ``params_list``), all
+        views into one stacked transfer.
+
+        ``per_statement=True`` makes EVERY statement kind return
+        ``list[Result]`` with per-statement counts under sequential
+        semantics (the wire scheduler needs one response per client
+        statement): DELETE counts credit overlapping rows to the earliest
+        statement, UPDATE counts come from the scan, INSERT rows count 1
+        each with the batch's eviction total as ``value``. Per-statement
+        DELETE takes the vectorized union path (the one-pass
+        sorted-membership fast path only reports a total)."""
         stmt = self._parse(sql)
         if isinstance(stmt, (S.Delete, S.Update)):
-            return self._do_batch_dml(stmt, params_list)
+            return self._do_batch_dml(stmt, params_list,
+                                      per_statement=per_statement)
         if isinstance(stmt, S.Select):
             return self._do_batch_select(stmt, params_list)
         if not isinstance(stmt, S.Insert):
@@ -408,7 +471,7 @@ class SQLCached:
             raise S.SQLError("INSERT column/value count mismatch")
         n = len(params_list)
         if n == 0:
-            return Result(count=0)
+            return [] if per_statement else Result(count=0)
         b = _bucket(n)
         # host-side param matrix [b, n_params]
         n_params = max((P.collect_params(v) for v in stmt.values), default=0)
@@ -450,14 +513,22 @@ class SQLCached:
             return self._jit_with_expiry(schema, base)
 
         fn = self._executor(key, build)
-        flag = self._expire_flag(t)
+        flag = self._expire_flag(t, n)
         t.state, slots, evicted = fn(t.state, flag, param_cols, pl_args,
                                      row_mask)
+        if per_statement:
+            # one row per statement; evictions have no per-statement
+            # attribution, so each Result reports the batch's eviction
+            # total as its (lazy, shared-sync) value — the wire response
+            # keeps the same COUNT/VALUE shape whether or not a statement
+            # rode a cross-connection group
+            return [Result(count=1, dev={"value": evicted})
+                    for _ in range(n)]
         return Result(count=n, dev={"row_ids": slots, "value": evicted},
                       ctx={"nshow": n})
 
-    def _do_batch_dml(self, stmt, params_list: Sequence[Sequence[Any]]
-                      ) -> Result:
+    def _do_batch_dml(self, stmt, params_list: Sequence[Sequence[Any]],
+                      per_statement: bool = False) -> "Result | list[Result]":
         """Micro-batch same-executor DELETE/UPDATE statements into ONE
         dispatch. Single-column equality DELETEs (the Table 2 hot shape,
         ``... WHERE page_id = ?``) collapse into ONE pass over the table
@@ -465,12 +536,17 @@ class SQLCached:
         DELETEs vectorize to a [W, capacity] union (deletes commute, so
         the union count equals the sequential total). UPDATEs keep a
         ``lax.scan`` so later statements observe earlier SETs. Padded rows
-        are deactivated via ``extra_mask``/``active``."""
+        are deactivated via ``extra_mask``/``active``.
+
+        ``per_statement=True`` returns ``list[Result]`` whose counts match
+        sequential execution: a row deleted by several statements in the
+        batch is credited to the earliest (exclusive-claim cumsum over the
+        [W, capacity] masks), so the eq fast path is skipped."""
         t = self._table(stmt.table)
         schema = t.schema
         n = len(params_list)
         if n == 0:
-            return Result(count=0)
+            return [] if per_statement else Result(count=0)
         b = _bucket(n)
         is_delete = isinstance(stmt, S.Delete)
         where = self._intern_ast(stmt.where)
@@ -494,6 +570,8 @@ class SQLCached:
                 and not np.issubdtype(param_cols[eq_term.value[1]].dtype,
                                       np.integer)):
             eq_term = None  # float param: keep exact-compare semantics
+        if per_statement:
+            eq_term = None  # the one-pass path only yields a total count
         key = ("dml", schema, is_delete, where, sets, b, eq_term)
 
         def build():
@@ -517,6 +595,12 @@ class SQLCached:
                     m = jax.vmap(one_mask)(param_cols, active)  # [b, cap]
                     hit = jnp.any(m, axis=0)
                     n_hit = jnp.sum(hit.astype(jnp.int32))
+                    # sequential attribution: a row hit by several
+                    # statements counts for the EARLIEST one (by the time
+                    # the later ones run it is already gone)
+                    mi = m.astype(jnp.int32)
+                    claimed = (jnp.cumsum(mi, axis=0) - mi) > 0
+                    ns = jnp.sum((m & ~claimed).astype(jnp.int32), axis=1)
                     # clock advances by the REAL statement count (from the
                     # runtime active mask — the executor is cached per
                     # bucket, so n must not be baked in at trace time);
@@ -525,7 +609,7 @@ class SQLCached:
                     state = dict(state, valid=state["valid"] & ~hit,
                                  clock=state["clock"] + nact,
                                  ops=state["ops"] + nact)
-                    return state, n_hit
+                    return state, n_hit, ns
 
                 def body(st, xs):
                     pr, act = xs
@@ -538,13 +622,20 @@ class SQLCached:
                 pad = b - jnp.sum(active.astype(jnp.int32))
                 state = dict(state, clock=state["clock"] - pad,
                              ops=state["ops"] - pad)
-                return state, jnp.sum(ns)
+                return state, jnp.sum(ns), ns
 
             return self._jit_with_expiry(schema, base)
 
         fn = self._executor(key, build)
-        flag = self._expire_flag(t)
-        t.state, total = fn(t.state, flag, param_cols, active)
+        flag = self._expire_flag(t, n)
+        if eq_term is not None:
+            t.state, total = fn(t.state, flag, param_cols, active)
+            return Result(dev={"count": total})
+        t.state, total, ns = fn(t.state, flag, param_cols, active)
+        if per_statement:
+            stack = _HostStack({"count": ns})
+            return [Result(ctx={"stack": stack, "index": i})
+                    for i in range(n)]
         return Result(dev={"count": total})
 
     def _do_batch_select(self, stmt: S.Select,
@@ -560,10 +651,14 @@ class SQLCached:
         Semantics vs N separate executes: reads don't interleave with
         writes inside a batch, the logical clock advances once per batch
         (by the batch size), and LRU touch covers the *returned* rows
-        (up to LIMIT per statement) rather than every matching row."""
+        (up to LIMIT per statement) rather than every matching row.
+
+        Aggregate SELECTs (COUNT/SUM/MIN/MAX/AVG ... WHERE ?) batch too:
+        the aggregate is vmapped over the parameter rows and each Result
+        carries its own ``value`` — the wire scheduler relies on this to
+        group per-connection aggregate polls into one dispatch."""
         if stmt.agg is not None:
-            raise S.SQLError("executemany SELECT does not support "
-                             "aggregates")
+            return self._do_batch_agg(stmt, params_list)
         t = self._table(stmt.table)
         schema = t.schema
         n = len(params_list)
@@ -614,7 +709,7 @@ class SQLCached:
             return self._jit_with_expiry(schema, base)
 
         fn = self._executor(key, build)
-        flag = self._expire_flag(t)
+        flag = self._expire_flag(t, n)
         t.state, res = fn(t.state, flag, param_cols, active)
         stack = _HostStack({"count": res["count"], "rows": res["rows"],
                             "present": res["present"],
@@ -625,6 +720,53 @@ class SQLCached:
         if stmt.payloads:
             ctx["payload_stack"] = dict(res["payloads"])
         return [Result(ctx=dict(ctx, index=i)) for i in range(n)]
+
+    def _do_batch_agg(self, stmt: S.Select,
+                      params_list: Sequence[Sequence[Any]]) -> list[Result]:
+        """Micro-batch N same-shape aggregate SELECTs into ONE dispatch:
+        the aggregate is vmapped over the parameter rows; the logical
+        clock advances by the number of ACTIVE statements (padded rows
+        are free). Returns one lazy Result per statement (``value``
+        views into one stacked transfer)."""
+        t = self._table(stmt.table)
+        schema = t.schema
+        n = len(params_list)
+        if n == 0:
+            return []
+        b = _bucket(n)
+        agg, col = stmt.agg
+        where = self._intern_ast(stmt.where)
+        n_params = P.collect_params(where)
+        pm = [self._prep_params(params_list[min(i, n - 1)])
+              for i in range(b)]
+        param_cols = tuple(
+            np.asarray([pm[i][j] for i in range(b)]) for j in range(n_params)
+        )
+        active = np.arange(b) < n
+        key = ("agg_batch", schema, agg, col, where, b)
+
+        def build():
+            def base(state, param_cols, active):
+                def one(pr, act):
+                    # `act` only carries the batch axis for parameterless
+                    # aggregates (vmap needs >=1 mapped argument); padded
+                    # rows are never exposed, so their values don't matter
+                    _, v = T.aggregate(schema, state, agg, col, where, pr)
+                    return v
+
+                vals = jax.vmap(one)(param_cols, jnp.asarray(active))
+                nact = jnp.sum(active.astype(jnp.int32))
+                state = dict(state, clock=state["clock"] + nact,
+                             ops=state["ops"] + nact)
+                return state, vals
+
+            return self._jit_with_expiry(schema, base)
+
+        fn = self._executor(key, build)
+        flag = self._expire_flag(t, n)
+        t.state, vals = fn(t.state, flag, param_cols, active)
+        stack = _HostStack({"value": vals})
+        return [Result(ctx={"stack": stack, "index": i}) for i in range(n)]
 
     def _do_select(self, stmt: S.Select, params: tuple) -> Result:
         t = self._table(stmt.table)

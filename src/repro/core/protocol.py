@@ -3,22 +3,43 @@
 Faithful to the paper's §3: a daemon reachable over TCP *and* unix
 sockets, line-based text protocol (in the spirit of early TCP protocols),
 asynchronous connection handling with a **single execution stream** —
-at any moment only one request is being executed against the store
-(SQLcached used poll(); we use asyncio, the modern POSIX equivalent).
+the cross-connection :class:`~repro.core.scheduler.BatchScheduler`
+admits statements from every connection into one ordered stream and
+dispatches same-shape runs as fused ``executemany`` batches (SQLcached
+used poll(); we use asyncio, the modern POSIX equivalent).
 
-Wire format (CRLF or LF tolerated):
+Wire format (CRLF or LF tolerated; every verb optionally carries a
+``#<tag>`` suffix — an opaque client token that pipelines statements):
 
     client:  EXEC <sql>                 -- start a statement
-             ARG I <int>                -- bind next `?` (integer)
-             ARG F <float>              --   (float)
+             EXEC#<id> <sql>            -- start a TAGGED statement
+             ARG I <int>                -- bind next `?` of the most
+             ARG F <float>                 recent EXEC (integer/float)
              ARG S <base64(utf-8)>      --   (text)
-             GO                         -- execute
+             ARG#<id> ...               -- bind an explicit statement
+             GO / GO#<id>               -- submit for execution
+             PING                       -- liveness probe
+             QUIT                       -- close the connection
 
-    server:  COUNT <n>                  -- rows affected / matched
-             VALUE <v>                  -- aggregate result (if any)
-             ROW <json>                 -- one line per returned row
-             END                        -- statement finished
-             ERR <message>              -- on any failure
+    server:  COUNT#<id> <n>             -- rows affected / matched
+             VALUE#<id> <v>             -- aggregate result (if any; for
+                                           INSERT it is the eviction count
+                                           of the DISPATCH that carried
+                                           the statement — a fused group
+                                           reports the group total)
+             ROW#<id> <json>            -- one line per returned row
+             END#<id>                   -- statement finished
+             ERR#<id> <message>         -- statement failed
+             PONG / BYE                 -- control replies
+             (untagged statements get untagged COUNT/ROW/.../ERR lines —
+              the original one-round-trip-per-statement dialect)
+
+Pipelining: a client may stream any number of tagged EXEC…GO frames
+without reading; the server replies **strictly in GO-submission order**
+on each connection (control replies included), so responses match up
+positionally as well as by tag. Statements from all connections meet in
+the batch scheduler, which fuses same-shape runs into single jitted
+dispatches — this is how network clients reach the micro-batched engine.
 
 Tensor payloads never cross this socket — they live on the accelerator;
 the protocol is the management/metadata plane (DESIGN.md §2).
@@ -29,11 +50,17 @@ import asyncio
 import base64
 import json
 import socket
+import threading
+from collections import deque
 from typing import Any, Sequence
 
 from repro.core.daemon import Result, SQLCached
+from repro.core.scheduler import BatchScheduler
 
 _MAX_LINE = 1 << 20
+# half-assembled statements (EXEC seen, GO not yet) allowed per connection —
+# bounds server memory against clients that stream EXEC#n without ever GOing
+_MAX_PENDING = 256
 
 
 def _encode_arg(v: Any) -> str:
@@ -58,18 +85,210 @@ def _decode_arg(kind: str, raw: str) -> Any:
     raise ValueError(f"bad ARG kind {kind!r}")
 
 
+def _line(text: str, tag: str | None) -> bytes:
+    """One response line, the verb tagged when the request was."""
+    if tag is not None:
+        verb, sep, rest = text.partition(" ")
+        text = f"{verb}#{tag}{sep}{rest}"
+    return text.encode() + b"\r\n"
+
+
+def _render_result(res: Result, tag: str | None) -> bytes:
+    """COUNT/VALUE/ROW.../END block for one Result. Forces the lazy
+    device→host sync — call off the event loop."""
+    sfx = "" if tag is None else f"#{tag}"
+    out = [f"COUNT{sfx} {res.count}".encode()]
+    if res.value is not None:
+        out.append(f"VALUE{sfx} {res.value}".encode())
+    for row in res.rows or []:
+        out.append(f"ROW{sfx} ".encode() + json.dumps(row).encode())
+    out.append(f"END{sfx}".encode())
+    return b"\r\n".join(out) + b"\r\n"
+
+
+def _render_burst(items: list) -> tuple[bytes, int, int]:
+    """Render a burst of resolved responses in ONE worker-thread hop:
+    ``items`` holds (tag, Result | Exception | str) in response order.
+    Returns (wire bytes, n statements ok, n statement errors). Sibling
+    Results of one batch share a device→host sync here."""
+    parts: list[bytes] = []
+    stmts = errs = 0
+    for tag, payload in items:
+        if isinstance(payload, Exception):
+            msg = str(payload).replace("\n", " ")[:500]
+            parts.append(_line(f"ERR {msg}", tag))
+            errs += 1
+        elif isinstance(payload, str):
+            parts.append(_line(payload, tag))
+        else:
+            try:
+                parts.append(_render_result(payload, tag))
+                stmts += 1
+            except Exception as e:  # noqa: BLE001
+                msg = str(e).replace("\n", " ")[:500]
+                parts.append(_line(f"ERR {msg}", tag))
+                errs += 1
+    return b"".join(parts), stmts, errs
+
+
+class _LineTooLong(Exception):
+    """Raised once per oversized line; ``prefix`` preserves the line's
+    first bytes so the handler can still identify the verb and tag and
+    answer the right statement."""
+
+    def __init__(self, prefix: bytes = b""):
+        super().__init__("line too long")
+        self.prefix = prefix
+
+
+class _LineReader:
+    """Own line framing on top of ``StreamReader.read``.
+
+    asyncio's ``readline`` raises ``ValueError`` once a line passes the
+    stream limit and loses buffered bytes past the separator when you try
+    to recover; we keep our own buffer so an oversized line is skipped
+    *exactly* (→ one ``ERR line too long``) and the connection survives.
+    """
+
+    def __init__(self, reader: asyncio.StreamReader, max_line: int = _MAX_LINE):
+        self._r = reader
+        self._max = max_line
+        self._buf = bytearray()
+        self._skip = False
+
+    async def readline(self) -> bytes | None:
+        """Next line without its terminator; None on EOF. Raises
+        :class:`_LineTooLong` once per oversized line."""
+        while True:
+            i = self._buf.find(b"\n")
+            if i >= 0:
+                skipped, self._skip = self._skip, False
+                too_long = i > self._max
+                line = b"" if (skipped or too_long) else bytes(self._buf[:i])
+                prefix = bytes(self._buf[:128]) if too_long else b""
+                del self._buf[: i + 1]
+                if skipped:
+                    continue  # tail of an already-reported oversized line
+                if too_long:
+                    raise _LineTooLong(prefix)
+                return line.rstrip(b"\r")
+            if self._skip:
+                del self._buf[:]
+            elif len(self._buf) > self._max:
+                prefix = bytes(self._buf[:128])
+                del self._buf[:]
+                self._skip = True
+                raise _LineTooLong(prefix)
+            chunk = await self._r.read(65536)
+            if not chunk:
+                if self._buf and not self._skip:
+                    line = bytes(self._buf).rstrip(b"\r")
+                    del self._buf[:]
+                    if len(line) > self._max:
+                        raise _LineTooLong(line[:128])
+                    return line
+                return None
+            self._buf += chunk
+
+
+class _ResponseQueue:
+    """Per-connection ordered response flusher.
+
+    Every reply — immediate control replies and lazy statement futures
+    alike — enters ONE FIFO and is written strictly in submission order,
+    so pipelined clients can match responses positionally. Statement
+    rendering (which syncs the lazy Result) runs in a worker thread, off
+    the event loop. This per-connection ordering is what replaced the old
+    global ``_exec_lock``."""
+
+    def __init__(self, writer: asyncio.StreamWriter, server: "SQLCachedServer"):
+        self._writer = writer
+        self._server = server
+        self._q: asyncio.Queue = asyncio.Queue(maxsize=1024)
+        self._task = asyncio.create_task(self._run())
+
+    async def put_raw(self, tag: str | None, text: str) -> None:
+        if text.startswith("ERR"):
+            self._server.stats["errors"] += 1
+        await self._q.put((tag, text))
+
+    async def put_future(self, tag: str | None, fut: asyncio.Future) -> None:
+        await self._q.put((tag, fut))
+
+    async def _run(self) -> None:
+        closing = False
+        while not closing:
+            burst = [await self._q.get()]
+            while not self._q.empty() and len(burst) < 64:
+                burst.append(self._q.get_nowait())
+            # resolve in order (responses must flush in submission order,
+            # so waiting on the head future never reorders anything)
+            items: list[tuple[str | None, Any]] = []
+            for entry in burst:
+                if entry is None:
+                    closing = True
+                    break
+                tag, payload = entry
+                if isinstance(payload, asyncio.Future):
+                    try:
+                        items.append((tag, await payload))
+                    except asyncio.CancelledError:
+                        raise
+                    except Exception as e:  # noqa: BLE001
+                        items.append((tag, e))
+                else:
+                    items.append((tag, payload))
+            if not items:
+                continue
+            try:
+                data, stmts, errs = await asyncio.to_thread(
+                    _render_burst, items)
+                self._server.stats["statements"] += stmts
+                self._server.stats["errors"] += errs
+                self._writer.write(data)
+                await self._writer.drain()
+            except (ConnectionError, OSError):
+                # peer went away mid-write. Keep CONSUMING until the close
+                # sentinel — the handler may be parked on the bounded
+                # put() and must not deadlock — and retrieve future
+                # exceptions so they don't surface as asyncio warnings.
+                while True:
+                    item = await self._q.get()
+                    if item is None:
+                        return
+                    payload = item[1]
+                    if isinstance(payload, asyncio.Future):
+                        try:
+                            await payload
+                        except Exception:  # noqa: BLE001
+                            pass
+
+    async def close(self) -> None:
+        await self._q.put(None)
+        try:
+            await self._task
+        except asyncio.CancelledError:
+            pass
+
+
 class SQLCachedServer:
     """Asyncio daemon wrapping one SQLCached store.
 
     ``serve_forever`` listens on TCP and/or a unix socket. Connection
-    handling is async; statement execution is serialized through
-    ``self._exec_lock`` (single execution stream, as in the paper).
-    """
+    handling is async; statements from every connection are admitted
+    into the :class:`~repro.core.scheduler.BatchScheduler`, which fuses
+    same-shape runs into single ``executemany`` dispatches while per-
+    connection response queues flush the lazy Results in submission
+    order. ``batching=False`` keeps the single execution stream strictly
+    per-statement (the paper's original regime)."""
 
-    def __init__(self, db: SQLCached | None = None):
+    def __init__(self, db: SQLCached | None = None, *, batching: bool = True,
+                 max_batch: int = 64):
         self.db = db or SQLCached()
-        self._exec_lock = asyncio.Lock()
+        self.scheduler = BatchScheduler(self.db, batching=batching,
+                                        max_batch=max_batch)
         self._servers: list[asyncio.AbstractServer] = []
+        self._conn_tasks: set[asyncio.Task] = set()
         self.stats = {"connections": 0, "statements": 0, "errors": 0}
 
     # ------------------------------------------------------------ lifecycle
@@ -79,13 +298,16 @@ class SQLCachedServer:
         port: int | None = 0,
         unix_path: str | None = None,
     ) -> tuple[str, int] | None:
+        await self.scheduler.start()
         addr = None
         if host is not None and port is not None:
-            srv = await asyncio.start_server(self._handle, host, port)
+            srv = await asyncio.start_server(self._handle, host, port,
+                                             limit=_MAX_LINE)
             self._servers.append(srv)
             addr = srv.sockets[0].getsockname()[:2]
         if unix_path is not None:
-            srv = await asyncio.start_unix_server(self._handle, unix_path)
+            srv = await asyncio.start_unix_server(self._handle, unix_path,
+                                                  limit=_MAX_LINE)
             self._servers.append(srv)
         return addr
 
@@ -94,78 +316,159 @@ class SQLCachedServer:
             srv.close()
             await srv.wait_closed()
         self._servers.clear()
+        for t in list(self._conn_tasks):
+            t.cancel()
+        if self._conn_tasks:
+            await asyncio.gather(*self._conn_tasks, return_exceptions=True)
+        await self.scheduler.stop()
 
     # ------------------------------------------------------------- protocol
     async def _handle(self, reader: asyncio.StreamReader,
                       writer: asyncio.StreamWriter) -> None:
         self.stats["connections"] += 1
-        sql: str | None = None
-        args: list[Any] = []
+        task = asyncio.current_task()
+        if task is not None:
+            self._conn_tasks.add(task)
+        resp = _ResponseQueue(writer, self)
+        lines = _LineReader(reader)
+        # statements being assembled, keyed by tag (None = untagged);
+        # `cur` is the most recent EXEC's tag — untagged ARG/GO bind to it
+        pending: dict[str | None, tuple[str, list]] = {}
+        cur: str | None = None
+        # response invariant: every submitted statement gets EXACTLY ONE
+        # response block, or pipelined clients desync. A statement that
+        # already drew its ERR (too-long line, bad ARG, pending-cap
+        # rejection) must have its remaining ARG/GO lines swallowed:
+        # `dropped` covers the known-tag cases; `poisoned` covers an
+        # untagged dropped line and swallows only UNTAGGED ARG/GO (tagged
+        # lines always belong to an identifiable statement).
+        poisoned = False
+        dropped: set[str | None] = set()
+
+        def _mark_dropped(key: str | None) -> bool:
+            """False when the drop-tracking budget is exhausted (protocol
+            abuse) — the caller must close the connection rather than
+            risk emitting a second response for a statement."""
+            if len(dropped) >= _MAX_PENDING:
+                return False
+            dropped.add(key)
+            return True
+
         try:
             while True:
-                line = await reader.readline()
-                if not line:
+                try:
+                    line = await lines.readline()
+                except _LineTooLong as tl:
+                    head = tl.prefix.decode("utf-8", "replace")
+                    hverb, _, _ = head.partition(" ")
+                    hverb, _, htag = hverb.partition("#")
+                    hverb = hverb.upper()
+                    htag = htag or None
+                    if hverb in ("EXEC", "ARG", "GO"):
+                        # the oversized line's statement is identifiable
+                        # (its tag, or — for an untagged ARG/GO — the most
+                        # recent EXEC): answer THAT statement once and
+                        # retire it; cur moves onto the dropped key so its
+                        # remaining untagged ARG/GO lines are swallowed
+                        key = htag if htag is not None else (
+                            None if hverb == "EXEC" else cur)
+                        pending.pop(key, None)
+                        if hverb != "GO":
+                            if not _mark_dropped(key):
+                                await resp.put_raw(None,
+                                                   "ERR pipeline abuse")
+                                break
+                            cur = key
+                        await resp.put_raw(key, "ERR line too long")
+                    else:
+                        await resp.put_raw(None, "ERR line too long")
+                        poisoned = True
+                    continue
+                if line is None:
                     break
-                if len(line) > _MAX_LINE:
-                    writer.write(b"ERR line too long\r\n")
-                    break
-                text = line.decode("utf-8", "replace").rstrip("\r\n")
+                text = line.decode("utf-8", "replace")
                 if not text:
                     continue
                 verb, _, rest = text.partition(" ")
+                verb, _, tag = verb.partition("#")
                 verb = verb.upper()
+                tag = tag or None
                 if verb == "EXEC":
-                    sql, args = rest, []
+                    poisoned = False
+                    dropped.discard(tag)
+                    if tag not in pending and len(pending) >= _MAX_PENDING:
+                        await resp.put_raw(
+                            tag, "ERR too many in-flight statements")
+                        if not _mark_dropped(tag):
+                            await resp.put_raw(None, "ERR pipeline abuse")
+                            break
+                        cur = tag
+                        continue
+                    pending[tag] = (rest, [])
+                    cur = tag
                 elif verb == "ARG":
+                    if poisoned and tag is None:
+                        continue
+                    key = tag if tag is not None else cur
+                    if key in dropped:
+                        continue  # statement already answered with ERR
+                    st = pending.get(key)
+                    if st is None:
+                        await resp.put_raw(key, "ERR ARG without EXEC")
+                        continue
                     kind, _, raw = rest.partition(" ")
                     try:
-                        args.append(_decode_arg(kind, raw))
+                        st[1].append(_decode_arg(kind, raw))
                     except Exception as e:  # noqa: BLE001
-                        writer.write(f"ERR bad arg: {e}\r\n".encode())
-                        sql = None
+                        # drop the whole half-bound statement — its later
+                        # ARGs and its GO are swallowed, so the ONE error
+                        # response keeps the pipeline in sync
+                        pending.pop(key, None)
+                        if not _mark_dropped(key):
+                            await resp.put_raw(None, "ERR pipeline abuse")
+                            break
+                        await resp.put_raw(key, f"ERR bad arg: {e}")
                 elif verb == "GO":
-                    await self._run(sql, args, writer)
-                    sql, args = None, []
+                    if poisoned and tag is None:
+                        poisoned = False
+                        continue
+                    key = tag if tag is not None else cur
+                    if key in dropped:
+                        dropped.discard(key)
+                        continue  # statement already answered with ERR
+                    st = pending.pop(key, None)
+                    if st is None or not st[0]:
+                        await resp.put_raw(key, "ERR no statement")
+                        continue
+                    fut = self.scheduler.submit(st[0], st[1])
+                    await resp.put_future(key, fut)
                 elif verb == "PING":
-                    writer.write(b"PONG\r\n")
+                    await resp.put_raw(tag, "PONG")
                 elif verb == "QUIT":
-                    writer.write(b"BYE\r\n")
+                    await resp.put_raw(tag, "BYE")
                     break
                 else:
-                    writer.write(f"ERR unknown verb {verb!r}\r\n".encode())
-                await writer.drain()
+                    await resp.put_raw(tag, f"ERR unknown verb {verb!r}")
         finally:
+            try:
+                await resp.close()
+            except asyncio.CancelledError:
+                resp._task.cancel()
             writer.close()
             try:
                 await writer.wait_closed()
-            except Exception:  # noqa: BLE001
+            except BaseException:  # noqa: BLE001 — incl. CancelledError
                 pass
-
-    async def _run(self, sql: str | None, args: list[Any],
-                   writer: asyncio.StreamWriter) -> None:
-        if not sql:
-            writer.write(b"ERR no statement\r\n")
-            self.stats["errors"] += 1
-            return
-        async with self._exec_lock:  # single execution stream
-            try:
-                res: Result = await asyncio.to_thread(self.db.execute, sql, args)
-            except Exception as e:  # noqa: BLE001
-                self.stats["errors"] += 1
-                msg = str(e).replace("\n", " ")[:500]
-                writer.write(f"ERR {msg}\r\n".encode())
-                return
-        self.stats["statements"] += 1
-        writer.write(f"COUNT {res.count}\r\n".encode())
-        if res.value is not None:
-            writer.write(f"VALUE {res.value}\r\n".encode())
-        for row in res.rows or []:
-            writer.write(b"ROW " + json.dumps(row).encode() + b"\r\n")
-        writer.write(b"END\r\n")
+            if task is not None:
+                self._conn_tasks.discard(task)
 
 
 class SQLCachedClient:
-    """Small synchronous client (what a web app's cache layer would embed)."""
+    """Small synchronous client (what a web app's cache layer would embed).
+
+    ``execute`` keeps the original one-round-trip-per-statement dialect;
+    :meth:`pipeline` opens a tagged pipeline that streams statements
+    without waiting and collects all responses at once."""
 
     def __init__(self, host: str = "127.0.0.1", port: int = 0,
                  unix_path: str | None = None, timeout: float = 10.0):
@@ -176,6 +479,11 @@ class SQLCachedClient:
             self._sock = socket.create_connection((host, port), timeout=timeout)
         self._sock.settimeout(timeout)
         self._buf = b""
+        self._tag = 0
+
+    def _next_tag(self) -> str:
+        self._tag += 1
+        return str(self._tag)
 
     def _readline(self) -> str:
         while b"\n" not in self._buf:
@@ -186,15 +494,20 @@ class SQLCachedClient:
         line, _, self._buf = self._buf.partition(b"\n")
         return line.decode().rstrip("\r")
 
-    def execute(self, sql: str, params: Sequence[Any] = ()) -> dict:
-        out = [f"EXEC {sql}"]
-        out += [_encode_arg(p) for p in params]
-        out.append("GO")
-        self._sock.sendall(("\r\n".join(out) + "\r\n").encode())
+    def _read_result(self, tag: str | None = None) -> dict:
+        """Read one COUNT/VALUE/ROW.../END response block. ``tag`` is the
+        expected response tag (None = untagged). Stray control lines
+        (PONG/BYE), mismatched tags and unknown verbs raise — a desynced
+        connection must never masquerade as a successful empty result."""
         result: dict = {"count": 0, "value": None, "rows": []}
         while True:
             line = self._readline()
             verb, _, rest = line.partition(" ")
+            verb, _, rtag = verb.partition("#")
+            rtag = rtag or None
+            if verb in ("COUNT", "VALUE", "ROW", "END", "ERR") and rtag != tag:
+                raise RuntimeError(
+                    f"protocol desync: expected tag {tag!r}, got {line!r}")
             if verb == "COUNT":
                 result["count"] = int(rest)
             elif verb == "VALUE":
@@ -208,10 +521,20 @@ class SQLCachedClient:
                 return result
             elif verb == "ERR":
                 raise RuntimeError(f"server error: {rest}")
-            elif verb in ("PONG", "BYE"):
-                return result
             else:
-                raise RuntimeError(f"bad server line: {line!r}")
+                raise RuntimeError(f"protocol desync: unexpected {line!r}")
+
+    def execute(self, sql: str, params: Sequence[Any] = ()) -> dict:
+        out = [f"EXEC {sql}"]
+        out += [_encode_arg(p) for p in params]
+        out.append("GO")
+        self._sock.sendall(("\r\n".join(out) + "\r\n").encode())
+        return self._read_result(None)
+
+    def pipeline(self) -> "Pipeline":
+        """Open a client-side pipeline (usable as a context manager —
+        leaving the ``with`` block collects into ``.results``)."""
+        return Pipeline(self)
 
     def ping(self) -> bool:
         self._sock.sendall(b"PING\r\n")
@@ -223,6 +546,241 @@ class SQLCachedClient:
         except OSError:
             pass
         self._sock.close()
+
+
+class Pipeline:
+    """Client-side pipelining over the tagged dialect: queue statements
+    without waiting, flush them in one write, then :meth:`collect` all
+    responses in submission order (the server guarantees that order)."""
+
+    def __init__(self, client: SQLCachedClient):
+        self._c = client
+        self._out: list[str] = []
+        self._tags: list[str] = []
+        self.results: list = []
+
+    def __len__(self) -> int:
+        return len(self._tags)
+
+    def execute(self, sql: str, params: Sequence[Any] = ()) -> int:
+        """Queue one statement; returns its index into :meth:`collect`'s
+        result list."""
+        tag = self._c._next_tag()
+        self._out.append(f"EXEC#{tag} {sql}")
+        self._out += [_encode_arg(p) for p in params]
+        self._out.append(f"GO#{tag}")
+        self._tags.append(tag)
+        return len(self._tags) - 1
+
+    def flush(self) -> None:
+        """Stream every queued frame to the server without reading."""
+        if self._out:
+            self._c._sock.sendall(("\r\n".join(self._out) + "\r\n").encode())
+            self._out.clear()
+
+    def collect(self, return_exceptions: bool = False) -> list:
+        """Flush, then read one response per queued statement, in order.
+        Statement errors become RuntimeError entries (``return_exceptions=
+        True``) or raise after the whole pipeline has drained."""
+        self.flush()
+        out: list = []
+        errs: list[RuntimeError] = []
+        for tag in self._tags:
+            try:
+                out.append(self._c._read_result(tag))
+            except RuntimeError as e:
+                out.append(e)
+                errs.append(e)
+        self._tags.clear()
+        self.results = out
+        if errs and not return_exceptions:
+            raise errs[0]
+        return out
+
+    def __enter__(self) -> "Pipeline":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        if exc_type is None:
+            self.collect(return_exceptions=True)
+
+
+class AsyncSQLCachedClient:
+    """Asyncio client speaking the tagged dialect.
+
+    ``execute`` coroutines may be issued concurrently (``gather``) — each
+    statement streams out immediately and its future resolves when the
+    tagged response arrives, so N outstanding statements cost one round
+    trip instead of N. Responses arrive in per-connection submission
+    order; a background reader task matches them to the FIFO of pending
+    futures (tags are verified, desync fails every pending call)."""
+
+    def __init__(self, reader: asyncio.StreamReader,
+                 writer: asyncio.StreamWriter):
+        self._r = reader
+        self._w = writer
+        self._tag = 0
+        self._fifo: deque[tuple[str | None, asyncio.Future]] = deque()
+        self._reader_task = asyncio.create_task(self._read_loop())
+
+    @classmethod
+    async def connect(cls, host: str = "127.0.0.1", port: int = 0,
+                      unix_path: str | None = None) -> "AsyncSQLCachedClient":
+        if unix_path is not None:
+            r, w = await asyncio.open_unix_connection(unix_path)
+        else:
+            r, w = await asyncio.open_connection(host, port)
+        return cls(r, w)
+
+    async def execute(self, sql: str, params: Sequence[Any] = ()) -> dict:
+        self._tag += 1
+        tag = str(self._tag)
+        lines = [f"EXEC#{tag} {sql}"]
+        lines += [_encode_arg(p) for p in params]
+        lines.append(f"GO#{tag}")
+        fut = asyncio.get_running_loop().create_future()
+        self._fifo.append((tag, fut))
+        self._w.write(("\r\n".join(lines) + "\r\n").encode())
+        await self._w.drain()
+        return await fut
+
+    async def ping(self) -> bool:
+        fut = asyncio.get_running_loop().create_future()
+        self._fifo.append((None, fut))
+        self._w.write(b"PING\r\n")
+        await self._w.drain()
+        return await fut
+
+    async def _read_loop(self) -> None:
+        cur: dict | None = None
+        err: Exception = ConnectionError("server closed connection")
+        try:
+            while True:
+                raw = await self._r.readline()
+                if not raw:
+                    break
+                text = raw.decode("utf-8", "replace").rstrip("\r\n")
+                if not text:
+                    continue
+                verb, _, rest = text.partition(" ")
+                verb, _, rtag = verb.partition("#")
+                rtag = rtag or None
+                if verb == "BYE":
+                    break
+                head = self._fifo[0] if self._fifo else None
+                if verb == "PONG":
+                    if head is None or head[0] is not None:
+                        raise RuntimeError(f"protocol desync: stray {text!r}")
+                    self._fifo.popleft()
+                    if not head[1].done():
+                        head[1].set_result(True)
+                    continue
+                if head is None or head[0] != rtag:
+                    raise RuntimeError(
+                        f"protocol desync: unexpected {text!r}")
+                if cur is None:
+                    cur = {"count": 0, "value": None, "rows": []}
+                if verb == "COUNT":
+                    cur["count"] = int(rest)
+                elif verb == "VALUE":
+                    try:
+                        cur["value"] = json.loads(rest)
+                    except json.JSONDecodeError:
+                        cur["value"] = rest
+                elif verb == "ROW":
+                    cur["rows"].append(json.loads(rest))
+                elif verb == "END":
+                    self._fifo.popleft()
+                    if not head[1].done():
+                        head[1].set_result(cur)
+                    cur = None
+                elif verb == "ERR":
+                    self._fifo.popleft()
+                    if not head[1].done():
+                        head[1].set_exception(
+                            RuntimeError(f"server error: {rest}"))
+                    cur = None
+                else:
+                    raise RuntimeError(f"protocol desync: unexpected {text!r}")
+        except Exception as e:  # noqa: BLE001
+            err = e
+        finally:
+            while self._fifo:
+                _, fut = self._fifo.popleft()
+                if not fut.done():
+                    fut.set_exception(err)
+
+    async def close(self) -> None:
+        try:
+            self._w.write(b"QUIT\r\n")
+            await self._w.drain()
+        except (ConnectionError, OSError):
+            pass
+        try:
+            await asyncio.wait_for(self._reader_task, timeout=5)
+        except (asyncio.TimeoutError, asyncio.CancelledError):
+            self._reader_task.cancel()
+        self._w.close()
+        try:
+            await self._w.wait_closed()
+        except Exception:  # noqa: BLE001
+            pass
+
+
+class ThreadedServer:
+    """Run an :class:`SQLCachedServer` on its own event-loop thread —
+    for synchronous tests, benchmarks and embedding in non-async apps.
+    Usable as a context manager; ``addr`` is the TCP (host, port)."""
+
+    def __init__(self, unix_path: str | None = None, host: str = "127.0.0.1",
+                 port: int = 0, db: SQLCached | None = None, **server_kw):
+        self.unix_path = unix_path
+        self.addr: tuple[str, int] | None = None
+        self.server: SQLCachedServer | None = None
+        self._host, self._port = host, port
+        self._db, self._server_kw = db, server_kw
+        self._loop: asyncio.AbstractEventLoop | None = None
+        self._boot_error: BaseException | None = None
+        self._started = threading.Event()
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+        if not self._started.wait(10):
+            raise RuntimeError("server thread did not start in 10 s")
+        if self._boot_error is not None:
+            self._thread.join(5)
+            raise self._boot_error
+
+    def _run(self) -> None:
+        self._loop = asyncio.new_event_loop()
+        asyncio.set_event_loop(self._loop)
+        self.server = SQLCachedServer(self._db, **self._server_kw)
+
+        async def boot():
+            try:
+                self.addr = await self.server.start(
+                    self._host, self._port, unix_path=self.unix_path)
+            except BaseException as e:  # noqa: BLE001 — rethrown in __init__
+                self._boot_error = e
+            finally:
+                self._started.set()
+
+        self._loop.run_until_complete(boot())
+        if self._boot_error is None:
+            self._loop.run_forever()
+
+    def stop(self) -> None:
+        async def down():
+            await self.server.stop()
+
+        asyncio.run_coroutine_threadsafe(down(), self._loop).result(10)
+        self._loop.call_soon_threadsafe(self._loop.stop)
+        self._thread.join(10)
+
+    def __enter__(self) -> "ThreadedServer":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.stop()
 
 
 def run_server_forever(host: str, port: int, unix_path: str | None = None,

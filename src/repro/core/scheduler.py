@@ -1,0 +1,211 @@
+"""Cross-connection batch scheduler — the daemon's admission queue.
+
+The paper's daemon multiplexes every web-app connection into a single
+execution stream (§3). PR 1 made that stream cheap to batch
+(``SQLCached.executemany`` dispatches W same-shape statements in ONE
+jitted call); this module is the piece that *fills* those batches from
+the network: an admission queue collects in-flight statements across ALL
+connections, groups them by (table, statement shape) via the daemon's
+:meth:`~repro.core.daemon.SQLCached.shape_key` hook, and dispatches each
+group through ``executemany`` (``per_statement=True``, so every client
+still gets its own COUNT/ROW/VALUE response). Singleton and unbatchable
+groups fall back to plain ``execute``. Together with the protocol
+layer's per-connection response flushing this replaces the old global
+``_exec_lock``.
+
+Ordering contract
+-----------------
+Admission order is preserved wherever it is observable:
+
+* a READ joins its shape's open group iff no WRITE group on the same
+  table opened after that group (reads commute with reads);
+* a WRITE joins its shape's open group iff NO group at all on the same
+  table opened after it (same-shape writes batch through ``executemany``,
+  whose executors keep sequential semantics among themselves);
+* admin statements (CREATE/DROP/EXPIRE/FLUSH) and unparseable SQL are
+  barriers — they never merge and nothing reorders across them.
+
+Groups dispatch strictly in open order, so per-connection and per-table
+orderings both hold; cross-table reordering (which no client can observe
+through the wire protocol) is allowed. Results are lazy, so a dispatch
+returns as soon as the device work is enqueued — the response flushers
+materialize rows off the event loop.
+"""
+from __future__ import annotations
+
+import asyncio
+from collections import deque
+from typing import Any, Sequence
+
+from repro.core.daemon import SQLCached, StatementShape
+
+
+class _Item:
+    __slots__ = ("sql", "params", "future", "shape")
+
+    def __init__(self, sql: str, params: tuple, future: asyncio.Future,
+                 shape: StatementShape | None):
+        self.sql = sql
+        self.params = params
+        self.future = future
+        self.shape = shape
+
+
+class _Group:
+    __slots__ = ("seq", "shape", "items")
+
+    def __init__(self, seq: int, shape: StatementShape | None, items: list):
+        self.seq = seq
+        self.shape = shape
+        self.items = items
+
+
+class BatchScheduler:
+    """Admission queue + shape-grouping dispatcher over one SQLCached.
+
+    ``batching=False`` degrades to a per-statement serial executor (every
+    statement its own group) — the wire protocol stays pipelined, but no
+    cross-connection fusion happens; benchmarks use this to separate the
+    two effects. ``max_batch`` bounds group size (and therefore the
+    executor bucket sizes that get compiled)."""
+
+    def __init__(self, db: SQLCached, *, batching: bool = True,
+                 max_batch: int = 64, max_admit: int = 4096):
+        self.db = db
+        self.batching = batching
+        self.max_batch = max_batch
+        self.max_admit = max_admit
+        self._q: deque[_Item] = deque()
+        self._wake = asyncio.Event()
+        self._task: asyncio.Task | None = None
+        self._closed = False
+        self.stats = {"admitted": 0, "batches": 0, "grouped_statements": 0,
+                      "singles": 0, "max_group": 0}
+
+    # ------------------------------------------------------------ lifecycle
+    async def start(self) -> None:
+        if self._task is None:
+            self._closed = False
+            self._task = asyncio.create_task(self._loop())
+
+    async def stop(self) -> None:
+        self._closed = True
+        self._wake.set()
+        if self._task is not None:
+            try:
+                await self._task
+            finally:
+                self._task = None
+        while self._q:
+            it = self._q.popleft()
+            if not it.future.done():
+                it.future.set_exception(
+                    ConnectionError("scheduler stopped"))
+
+    # ------------------------------------------------------------ admission
+    def submit(self, sql: str, params: Sequence[Any] = ()) -> asyncio.Future:
+        """Enqueue one statement; returns a future resolving to its lazy
+        :class:`~repro.core.daemon.Result` (or raising the statement's
+        error). Must be called from the scheduler's event loop."""
+        fut = asyncio.get_running_loop().create_future()
+        if self._closed:
+            fut.set_exception(ConnectionError("scheduler stopped"))
+            return fut
+        try:
+            shape = self.db.shape_key(sql)
+        except Exception:
+            shape = None  # unparseable: barrier; execute() re-raises for us
+        self._q.append(_Item(sql, tuple(params), fut, shape))
+        self.stats["admitted"] += 1
+        self._wake.set()
+        return fut
+
+    # ------------------------------------------------------------- planning
+    def _plan(self, items: list[_Item]) -> list[_Group]:
+        groups: list[_Group] = []
+        open_by_key: dict[tuple, _Group] = {}
+        last_any: dict[str, int] = {}
+        last_write: dict[str, int] = {}
+        barrier = -1
+        for it in items:
+            sh = it.shape
+            if sh is None or not sh.batchable or not self.batching:
+                seq = len(groups)
+                groups.append(_Group(seq, sh, [it]))
+                if sh is None:
+                    barrier = seq
+                else:
+                    last_any[sh.table] = seq
+                    last_write[sh.table] = seq
+                continue
+            tbl = sh.table
+            g = open_by_key.get(sh.key)
+            fence = last_any.get(tbl, -1) if sh.is_write \
+                else last_write.get(tbl, -1)
+            if (g is not None and len(g.items) < self.max_batch
+                    and g.seq >= barrier and g.seq >= fence):
+                g.items.append(it)
+            else:
+                seq = len(groups)
+                g = _Group(seq, sh, [it])
+                groups.append(g)
+                open_by_key[sh.key] = g
+                last_any[tbl] = seq
+                if sh.is_write:
+                    last_write[tbl] = seq
+        return groups
+
+    # ------------------------------------------------------------- dispatch
+    async def _run_single(self, it: _Item) -> None:
+        try:
+            res = await asyncio.to_thread(self.db.execute, it.sql, it.params)
+        except Exception as e:  # noqa: BLE001 — statement error, not ours
+            if not it.future.done():
+                it.future.set_exception(e)
+        else:
+            if not it.future.done():
+                it.future.set_result(res)
+
+    async def _dispatch(self, g: _Group) -> None:
+        items = g.items
+        self.stats["batches"] += 1
+        if len(items) > self.stats["max_group"]:
+            self.stats["max_group"] = len(items)
+        if len(items) == 1:
+            self.stats["singles"] += 1
+            await self._run_single(items[0])
+            return
+        self.stats["grouped_statements"] += len(items)
+        try:
+            params_list = [it.params for it in items]
+            results = await asyncio.to_thread(
+                self.db.executemany, items[0].sql, params_list,
+                per_statement=True)
+        except Exception:  # noqa: BLE001
+            # one member's bad binding (wrong arity, bad type) must not
+            # fail its groupmates: the batch raised before any state
+            # mutation, so replay each statement alone — only the
+            # offenders error (rare slow path)
+            for it in items:
+                await self._run_single(it)
+            return
+        for it, res in zip(items, results):
+            if not it.future.done():
+                it.future.set_result(res)
+
+    async def _loop(self) -> None:
+        while True:
+            await self._wake.wait()
+            self._wake.clear()
+            if self._closed:
+                return
+            # one scheduling tick: let every runnable connection handler
+            # drain its read buffer into the queue before cutting batches
+            await asyncio.sleep(0)
+            items: list[_Item] = []
+            while self._q and len(items) < self.max_admit:
+                items.append(self._q.popleft())
+            if self._q:
+                self._wake.set()  # leftovers past max_admit: next tick
+            for g in self._plan(items):
+                await self._dispatch(g)

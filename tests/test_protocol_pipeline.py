@@ -1,0 +1,302 @@
+"""Protocol-layer tests for the tagged/pipelined wire dialect: client
+pipelining, async clients interleaving statements over TCP and unix
+sockets, per-connection response ordering, stats counters (including the
+error path), and the line-length / desync / half-bound-ARG fixes."""
+import asyncio
+
+import pytest
+
+from repro.core.protocol import (_MAX_LINE, AsyncSQLCachedClient,
+                                 SQLCachedClient, ThreadedServer)
+
+
+@pytest.fixture()
+def server():
+    with ThreadedServer() as s:
+        yield s
+
+
+@pytest.fixture()
+def client(server):
+    c = SQLCachedClient(*server.addr)
+    yield c
+    c.close()
+
+
+def test_pipeline_roundtrip_ordered(server, client):
+    client.execute("CREATE TABLE p (a INT, b INT) CAPACITY 64")
+    p = client.pipeline()
+    for i in range(10):
+        p.execute("INSERT INTO p (a, b) VALUES (?, ?)", [i, i * 2])
+    for i in range(10):
+        p.execute("SELECT b FROM p WHERE a = ? LIMIT 1", [i])
+    out = p.collect()
+    assert [r["count"] for r in out[:10]] == [1] * 10
+    # responses in submission order: select i returns row i
+    assert [r["rows"][0]["b"] for r in out[10:]] == [2 * i for i in range(10)]
+    # the same-shape runs were fused by the cross-connection scheduler
+    assert server.server.scheduler.stats["max_group"] >= 10
+    assert server.server.stats["statements"] == 21
+    assert server.server.stats["errors"] == 0
+
+
+def test_pipeline_context_manager(server, client):
+    client.execute("CREATE TABLE q (a INT) CAPACITY 16")
+    with client.pipeline() as p:
+        p.execute("INSERT INTO q (a) VALUES (?)", [7])
+        p.execute("SELECT COUNT(*) FROM q")
+    assert p.results[0]["count"] == 1
+    assert p.results[1]["value"] == 1
+
+
+def test_pipeline_error_keeps_order(server, client):
+    client.execute("CREATE TABLE e (a INT) CAPACITY 16")
+    p = client.pipeline()
+    p.execute("INSERT INTO e (a) VALUES (?)", [1])
+    p.execute("SELECT a FROM no_such_table")
+    p.execute("SELECT COUNT(*) FROM e")
+    out = p.collect(return_exceptions=True)
+    assert out[0]["count"] == 1
+    assert isinstance(out[1], RuntimeError) and "server error" in str(out[1])
+    assert out[2]["value"] == 1
+    assert server.server.stats["errors"] == 1
+    assert server.server.stats["statements"] == 3  # create + 2 good
+    # collect() without return_exceptions raises but still drains
+    p2 = client.pipeline()
+    p2.execute("SELECT a FROM no_such_table")
+    p2.execute("SELECT COUNT(*) FROM e")
+    with pytest.raises(RuntimeError, match="server error"):
+        p2.collect()
+    # connection still in sync afterwards
+    assert client.execute("SELECT COUNT(*) FROM e")["value"] == 1
+
+
+def test_pipeline_mixed_dml_counts(server, client):
+    client.execute("CREATE TABLE d (k INT, w INT) CAPACITY 64")
+    with client.pipeline() as p:
+        for i in range(8):
+            p.execute("INSERT INTO d (k, w) VALUES (?, ?)", [i, i % 2])
+    p = client.pipeline()
+    p.execute("DELETE FROM d WHERE k = ?", [3])
+    p.execute("DELETE FROM d WHERE k = ?", [3])  # already gone -> 0
+    p.execute("DELETE FROM d WHERE k = ?", [4])
+    p.execute("UPDATE d SET w = 9 WHERE k = ?", [0])
+    p.execute("UPDATE d SET w = 9 WHERE k = ?", [77])
+    out = p.collect()
+    assert [r["count"] for r in out] == [1, 0, 1, 1, 0]
+    assert client.execute("SELECT COUNT(*) FROM d")["value"] == 6
+
+
+def test_line_too_long_recovers(server, client):
+    # one oversized line (split across many TCP writes), then a PING in
+    # the same stream: the server must reply ERR and keep the connection
+    client._sock.sendall(b"EXEC " + b"x" * (_MAX_LINE + 64) + b"\r\nPING\r\n")
+    assert client._readline() == "ERR line too long"
+    assert client._readline() == "PONG"
+    assert client.ping()
+
+
+def test_line_too_long_statement_fails_cleanly(server, client):
+    client.execute("CREATE TABLE lt (a INT) CAPACITY 16")
+    # the whole EXEC/ARG/GO frame goes out; the oversized EXEC draws ONE
+    # ERR and its trailing ARG + GO are swallowed, so the connection stays
+    # in sync for the next statement
+    huge = "SELECT a FROM lt WHERE a = ? -- " + "x" * (_MAX_LINE + 16)
+    with pytest.raises(RuntimeError, match="line too long"):
+        client.execute(huge, [1])
+    assert client.execute("INSERT INTO lt (a) VALUES (?)", [5])["count"] == 1
+    assert client.execute("SELECT COUNT(*) FROM lt")["value"] == 1
+
+
+def test_line_too_long_tagged_keeps_pipeline_sync(server, client):
+    client.execute("CREATE TABLE lt2 (a INT) CAPACITY 16")
+    # an oversized TAGGED statement mid-pipeline draws a tagged ERR (the
+    # reader keeps the line's prefix, so the server knows which statement
+    # to answer) and its trailing ARG/GO are swallowed — groupmates and
+    # later statements are unaffected
+    huge = "INSERT INTO lt2 (a) VALUES (?) -- " + "x" * (_MAX_LINE + 16)
+    p = client.pipeline()
+    p.execute(huge, [1])
+    p.execute("INSERT INTO lt2 (a) VALUES (?)", [2])
+    out = p.collect(return_exceptions=True)
+    assert isinstance(out[0], RuntimeError) and "line too long" in str(out[0])
+    assert out[1]["count"] == 1
+    assert client.execute("SELECT COUNT(*) FROM lt2")["value"] == 1
+
+
+def test_line_too_long_arg_keeps_pipeline_sync(server, client):
+    client.execute("CREATE TABLE la (a INT, s TEXT) CAPACITY 16")
+    # the oversized line is an UNTAGGED ARG of a tagged statement (the
+    # pipeline dialect): the ERR must carry that statement's tag and its
+    # GO must be swallowed, so the next statement stays in sync
+    p = client.pipeline()
+    p.execute("INSERT INTO la (a, s) VALUES (?, ?)", [1, "y" * (_MAX_LINE)])
+    p.execute("INSERT INTO la (a, s) VALUES (?, ?)", [2, "ok"])
+    out = p.collect(return_exceptions=True)
+    assert isinstance(out[0], RuntimeError) and "line too long" in str(out[0])
+    assert out[1]["count"] == 1
+    assert client.execute("SELECT COUNT(*) FROM la")["value"] == 1
+
+
+def test_threaded_server_boot_failure_raises(tmp_path):
+    # a bad listen address must raise in the constructor, not hand back a
+    # half-dead server with addr=None
+    with pytest.raises(OSError):
+        ThreadedServer(unix_path=str(tmp_path / "missing" / "dir" / "x.sock"))
+
+
+def test_pending_statement_cap(server, client):
+    # EXEC#n spam without GO must not grow server memory unboundedly
+    frames = "".join(f"EXEC#{i} SELECT COUNT(*) FROM x\r\n"
+                     for i in range(300)) + "PING\r\n"
+    client._sock.sendall(frames.encode())
+    errs = 0
+    while True:
+        line = client._readline()
+        if line == "PONG":
+            break
+        assert "too many in-flight statements" in line
+        errs += 1
+    assert errs == 300 - 256
+
+
+def test_stray_pong_raises_desync(server, client):
+    client._sock.sendall(b"PING\r\n")  # response intentionally unread
+    with pytest.raises(RuntimeError, match="desync"):
+        client.execute("SELECT COUNT(*) FROM anything")
+
+
+def test_bad_arg_clears_half_bound_statement(server, client):
+    client.execute("CREATE TABLE ba (a INT, b INT) CAPACITY 16")
+    client._sock.sendall(
+        b"EXEC INSERT INTO ba (a, b) VALUES (?, ?)\r\n"
+        b"ARG I 1\r\nARG Z 9\r\nGO\r\n")
+    assert client._readline().startswith("ERR bad arg")
+    # the GO is swallowed (ONE response per statement) and must not
+    # execute the half-bound statement; the connection stays in sync
+    assert client.execute("SELECT COUNT(*) FROM ba")["value"] == 0
+    # and a clean statement works right after
+    assert client.execute("INSERT INTO ba (a, b) VALUES (?, ?)",
+                          [1, 2])["count"] == 1
+
+
+def test_bad_arg_mid_pipeline_keeps_sync(server, client):
+    client.execute("CREATE TABLE bp (a INT, b INT) CAPACITY 16")
+    # a tagged statement with a bad ARG among its bindings, followed by a
+    # valid statement: exactly one ERR#2, then statement 3's responses
+    client._sock.sendall(
+        b"EXEC#2 INSERT INTO bp (a, b) VALUES (?, ?)\r\n"
+        b"ARG Z bad\r\nARG I 5\r\nGO#2\r\n"
+        b"EXEC#3 SELECT COUNT(*) FROM bp\r\nGO#3\r\n")
+    with pytest.raises(RuntimeError, match="bad arg"):
+        client._read_result("2")
+    assert client._read_result("3")["value"] == 0
+
+
+def test_arg_without_exec(server, client):
+    client._sock.sendall(b"ARG I 5\r\nPING\r\n")
+    assert client._readline() == "ERR ARG without EXEC"
+    assert client._readline() == "PONG"
+
+
+def _async_workload(server, addr=None, unix_path=None, n_clients=6, n=8):
+    """N async clients interleaving INSERT/SELECT/DELETE concurrently;
+    returns per-client delete counts. Asserts per-connection response
+    ordering (each future resolves with ITS statement's rows)."""
+
+    async def one(w):
+        if unix_path:
+            c = await AsyncSQLCachedClient.connect(unix_path=unix_path)
+        else:
+            c = await AsyncSQLCachedClient.connect(*addr)
+        try:
+            for i in range(n):
+                r = await c.execute("INSERT INTO conc (k, w) VALUES (?, ?)",
+                                    [w * 100 + i, w])
+                assert r["count"] == 1
+            rs = await asyncio.gather(*[
+                c.execute("SELECT k FROM conc WHERE k = ? LIMIT 1",
+                          [w * 100 + i]) for i in range(n)])
+            assert [r["rows"][0]["k"] for r in rs] == \
+                [w * 100 + i for i in range(n)]
+            assert await c.ping()
+            d = await c.execute("DELETE FROM conc WHERE w = ?", [w])
+            return d["count"]
+        finally:
+            await c.close()
+
+    async def main():
+        return await asyncio.gather(*[one(w) for w in range(n_clients)])
+
+    return asyncio.run(main())
+
+
+def test_async_clients_interleaved_tcp(server):
+    boot = SQLCachedClient(*server.addr)
+    boot.execute("CREATE TABLE conc (k INT, w INT) CAPACITY 256")
+    boot.close()
+    counts = _async_workload(server, addr=server.addr)
+    assert counts == [8] * 6
+    st = server.server.stats
+    assert st["statements"] == 1 + 6 * (8 + 8 + 1)
+    assert st["errors"] == 0
+    assert st["connections"] == 7
+    sched = server.server.scheduler.stats
+    assert sched["admitted"] == st["statements"]
+    # concurrent same-shape statements actually fused across connections
+    assert sched["max_group"] >= 2
+
+
+def test_async_clients_interleaved_unix(tmp_path):
+    path = str(tmp_path / "sqlcached.sock")
+    with ThreadedServer(unix_path=path) as s:
+        boot = SQLCachedClient(unix_path=path)
+        boot.execute("CREATE TABLE conc (k INT, w INT) CAPACITY 128")
+        boot.close()
+        counts = _async_workload(s, unix_path=path, n_clients=3, n=5)
+        assert counts == [5] * 3
+        assert s.server.stats["errors"] == 0
+
+
+def test_async_client_error_path(server):
+    boot = SQLCachedClient(*server.addr)
+    boot.execute("CREATE TABLE ae (k INT) CAPACITY 16")
+    boot.close()
+
+    async def main():
+        c = await AsyncSQLCachedClient.connect(*server.addr)
+        try:
+            with pytest.raises(RuntimeError, match="server error"):
+                await c.execute("SELECT k FROM missing_table")
+            # connection survives a statement error
+            r = await c.execute("INSERT INTO ae (k) VALUES (?)", [1])
+            assert r["count"] == 1
+        finally:
+            await c.close()
+
+    asyncio.run(main())
+    assert server.server.stats["errors"] == 1
+    assert server.server.stats["statements"] == 2
+
+
+def test_untagged_dialect_still_batches(server):
+    """Old-style clients on separate threads still go through the
+    scheduler (singleton groups) with correct results."""
+    boot = SQLCachedClient(*server.addr)
+    boot.execute("CREATE TABLE ut (a INT) CAPACITY 64")
+    import threading
+
+    def work(w):
+        c = SQLCachedClient(*server.addr)
+        for i in range(5):
+            assert c.execute("INSERT INTO ut (a) VALUES (?)",
+                             [w * 10 + i])["count"] == 1
+        c.close()
+
+    ts = [threading.Thread(target=work, args=(w,)) for w in range(4)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert boot.execute("SELECT COUNT(*) FROM ut")["value"] == 20
+    boot.close()

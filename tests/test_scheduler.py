@@ -1,0 +1,287 @@
+"""Tests for the cross-connection batch scheduler and the daemon-level
+batching hooks it relies on (shape_key, per-statement executemany,
+batched aggregates)."""
+import asyncio
+
+import pytest
+
+from repro.core.daemon import Result, SQLCached
+from repro.core.scheduler import BatchScheduler
+
+
+def _mkdb(rows=12):
+    db = SQLCached()
+    db.execute("CREATE TABLE t (k INT, w INT) CAPACITY 128")
+    if rows:
+        db.executemany("INSERT INTO t (k, w) VALUES (?, ?)",
+                       [(i, i % 3) for i in range(rows)])
+    return db
+
+
+# ------------------------------------------------------- daemon-level hooks
+
+def test_executemany_aggregate_select():
+    db = _mkdb()
+    res = db.executemany("SELECT COUNT(*) FROM t WHERE w = ?",
+                         [(0,), (1,), (2,), (9,)])
+    assert [r.value for r in res] == [4, 4, 4, 0]
+    res = db.executemany("SELECT MAX(k) FROM t WHERE w = ?", [(0,), (1,)])
+    assert [r.value for r in res] == [9, 10]
+    assert db.executemany("SELECT SUM(k) FROM t", []) == []
+
+
+def test_executemany_parameterless_aggregate():
+    # no '?' in the WHERE: the vmap axis must come from the active mask
+    db = _mkdb()
+    res = db.executemany("SELECT COUNT(*) FROM t", [(), ()])
+    assert [r.value for r in res] == [12, 12]
+    res = db.executemany("SELECT MIN(k) FROM t WHERE w = 1", [()])
+    assert res[0].value == 1
+
+
+def test_executemany_insert_per_statement_reports_value():
+    # the wire response shape (COUNT + VALUE) must not depend on whether
+    # an INSERT rode a batched group or the singleton path
+    db = _mkdb(rows=0)
+    single = db.execute("INSERT INTO t (k, w) VALUES (?, ?)", (0, 0))
+    batch = db.executemany("INSERT INTO t (k, w) VALUES (?, ?)",
+                           [(1, 0), (2, 0)], per_statement=True)
+    assert single.value is not None
+    assert all(r.value == 0 for r in batch)
+
+
+def test_executemany_aggregate_matches_single():
+    db = _mkdb()
+    batched = db.executemany("SELECT SUM(k) FROM t WHERE w = ?",
+                             [(w,) for w in range(3)])
+    singles = [db.execute("SELECT SUM(k) FROM t WHERE w = ?", (w,)).value
+               for w in range(3)]
+    assert [r.value for r in batched] == singles
+
+
+def test_executemany_delete_per_statement_counts():
+    db = _mkdb()
+    # duplicate target: sequential semantics credit the FIRST statement
+    res = db.executemany("DELETE FROM t WHERE k = ?", [(1,), (1,), (2,)],
+                         per_statement=True)
+    assert [r.count for r in res] == [1, 0, 1]
+    # aggregate mode unchanged
+    agg = db.executemany("DELETE FROM t WHERE k = ?", [(3,), (4,)])
+    assert isinstance(agg, Result) and agg.count == 2
+    assert db.execute("SELECT COUNT(*) FROM t").value == 8
+
+
+def test_executemany_delete_range_per_statement():
+    db = _mkdb()
+    res = db.executemany("DELETE FROM t WHERE k < ?", [(4,), (6,)],
+                         per_statement=True)
+    # first takes rows 0..3, second only the remaining 4..5
+    assert [r.count for r in res] == [4, 2]
+
+
+def test_executemany_update_per_statement_counts():
+    db = _mkdb()
+    res = db.executemany("UPDATE t SET w = 9 WHERE k = ?", [(3,), (99,)],
+                         per_statement=True)
+    assert [r.count for r in res] == [1, 0]
+    assert db.execute("SELECT COUNT(*) FROM t WHERE w = 9").value == 1
+
+
+def test_executemany_insert_per_statement():
+    db = _mkdb(rows=0)
+    res = db.executemany("INSERT INTO t (k, w) VALUES (?, ?)",
+                         [(i, 0) for i in range(5)], per_statement=True)
+    assert [r.count for r in res] == [1] * 5
+    assert db.execute("SELECT COUNT(*) FROM t").value == 5
+
+
+def test_expire_flag_counts_statements_not_dispatches():
+    # §4.3 ops-interval expiry must fire on the same statement cadence
+    # whether traffic arrives as singles or as scheduler-fused batches
+    db = SQLCached()
+    db.execute("CREATE TABLE ex (k INT) CAPACITY 64 OPS_INTERVAL 8")
+    t = db.tables["ex"]
+    assert not db._expire_flag(t, 6)
+    assert db._expire_flag(t, 6)       # 6 -> 12 crosses 8
+    assert not db._expire_flag(t, 3)   # 15
+    assert db._expire_flag(t, 1)       # 16
+    assert db._expire_flag(t, 20)      # several boundaries -> fires once
+    # executemany advances by its batch size
+    before = t.host_ops
+    db.executemany("INSERT INTO ex (k) VALUES (?)", [(i,) for i in range(6)])
+    assert t.host_ops == before + 6
+
+
+def test_shape_key_classification():
+    db = _mkdb(rows=0)
+    a = db.shape_key("SELECT k FROM t WHERE w = ?")
+    b = db.shape_key("SELECT k FROM t WHERE w = ?")
+    assert a.key == b.key and not a.is_write and a.batchable
+    # different LIMIT -> different executor -> different group
+    c = db.shape_key("SELECT k FROM t WHERE w = ? LIMIT 1")
+    assert c.key != a.key
+    ins = db.shape_key("INSERT INTO t (k, w) VALUES (?, ?)")
+    assert ins.is_write and ins.batchable and ins.table == "t"
+    adm = db.shape_key("FLUSH t")
+    assert adm.is_write and not adm.batchable
+
+
+# --------------------------------------------------------- scheduler proper
+
+def _run(coro):
+    return asyncio.run(coro)
+
+
+def test_scheduler_groups_same_shape():
+    async def main():
+        db = _mkdb(rows=0)
+        sched = BatchScheduler(db)
+        await sched.start()
+        futs = [sched.submit("INSERT INTO t (k, w) VALUES (?, ?)", (i, 0))
+                for i in range(16)]
+        res = await asyncio.gather(*futs)
+        assert all(r.count == 1 for r in res)
+        assert db.execute("SELECT COUNT(*) FROM t").value == 16
+        # all 16 were in the queue before the loop ran -> ONE batch
+        assert sched.stats["max_group"] == 16
+        assert sched.stats["grouped_statements"] == 16
+        await sched.stop()
+
+    _run(main())
+
+
+def test_scheduler_write_read_barriers():
+    async def main():
+        db = _mkdb(rows=0)
+        sched = BatchScheduler(db)
+        await sched.start()
+        # submitted back-to-back: INSERT, SELECT, DELETE, SELECT — the
+        # second SELECT must NOT merge into the first one's group (a
+        # write group opened in between) or it would see the row gone
+        f1 = sched.submit("INSERT INTO t (k, w) VALUES (?, ?)", (5, 1))
+        f2 = sched.submit("SELECT k FROM t WHERE k = ?", (5,))
+        f3 = sched.submit("DELETE FROM t WHERE k = ?", (5,))
+        f4 = sched.submit("SELECT k FROM t WHERE k = ?", (5,))
+        r1, r2, r3, r4 = await asyncio.gather(f1, f2, f3, f4)
+        assert r1.count == 1
+        assert r2.count == 1 and r2.rows[0]["k"] == 5
+        assert r3.count == 1
+        assert r4.count == 0
+        await sched.stop()
+
+    _run(main())
+
+
+def test_scheduler_read_groups_merge_across_writes_elsewhere():
+    async def main():
+        db = _mkdb()
+        db.execute("CREATE TABLE other (x INT) CAPACITY 8")
+        sched = BatchScheduler(db)
+        await sched.start()
+        # reads on t interleaved with a write on ANOTHER table still merge
+        futs = [sched.submit("SELECT COUNT(*) FROM t WHERE w = ?", (0,)),
+                sched.submit("INSERT INTO other (x) VALUES (?)", (1,)),
+                sched.submit("SELECT COUNT(*) FROM t WHERE w = ?", (1,))]
+        r = await asyncio.gather(*futs)
+        assert (r[0].value, r[1].count, r[2].value) == (4, 1, 4)
+        assert sched.stats["max_group"] == 2  # both t-reads in one group
+        await sched.stop()
+
+    _run(main())
+
+
+def test_scheduler_statement_error_and_barrier():
+    async def main():
+        db = _mkdb(rows=0)
+        sched = BatchScheduler(db)
+        await sched.start()
+        bad = sched.submit("SELECT nope FROM no_such_table")
+        unparse = sched.submit("THIS IS NOT SQL")
+        good = sched.submit("INSERT INTO t (k, w) VALUES (?, ?)", (1, 1))
+        with pytest.raises(Exception):
+            await bad
+        with pytest.raises(Exception):
+            await unparse
+        assert (await good).count == 1
+        await sched.stop()
+
+    _run(main())
+
+
+def test_scheduler_group_failure_isolated():
+    async def main():
+        db = _mkdb()
+        sched = BatchScheduler(db)
+        await sched.start()
+        # same shape, but the second statement has a missing binding: the
+        # fused dispatch fails and must be replayed singly, so only the
+        # offender errors — its groupmates still succeed
+        good1 = sched.submit("SELECT COUNT(*) FROM t WHERE w = ?", (0,))
+        bad = sched.submit("SELECT COUNT(*) FROM t WHERE w = ?", ())
+        good2 = sched.submit("SELECT COUNT(*) FROM t WHERE w = ?", (1,))
+        r1, r2 = await asyncio.gather(good1, good2)
+        assert r1.value == 4 and r2.value == 4
+        with pytest.raises(Exception):
+            await bad
+        await sched.stop()
+
+    _run(main())
+
+
+def test_scheduler_max_batch_cap():
+    async def main():
+        db = _mkdb(rows=0)
+        sched = BatchScheduler(db, max_batch=4)
+        await sched.start()
+        futs = [sched.submit("INSERT INTO t (k, w) VALUES (?, ?)", (i, 0))
+                for i in range(10)]
+        await asyncio.gather(*futs)
+        assert sched.stats["max_group"] <= 4
+        assert db.execute("SELECT COUNT(*) FROM t").value == 10
+        await sched.stop()
+
+    _run(main())
+
+
+def test_scheduler_drains_past_max_admit():
+    async def main():
+        db = _mkdb(rows=0)
+        sched = BatchScheduler(db, max_admit=4)
+        await sched.start()
+        # more than one admission tick's worth, no further submits after:
+        # the leftovers must still dispatch (the tick re-arms itself)
+        futs = [sched.submit("INSERT INTO t (k, w) VALUES (?, ?)", (i, 0))
+                for i in range(11)]
+        res = await asyncio.wait_for(asyncio.gather(*futs), timeout=10)
+        assert all(r.count == 1 for r in res)
+        await sched.stop()
+
+    _run(main())
+
+
+def test_scheduler_batching_disabled():
+    async def main():
+        db = _mkdb(rows=0)
+        sched = BatchScheduler(db, batching=False)
+        await sched.start()
+        futs = [sched.submit("INSERT INTO t (k, w) VALUES (?, ?)", (i, 0))
+                for i in range(6)]
+        await asyncio.gather(*futs)
+        assert sched.stats["max_group"] == 1
+        assert sched.stats["singles"] == 6
+        await sched.stop()
+
+    _run(main())
+
+
+def test_scheduler_stop_fails_leftovers():
+    async def main():
+        db = _mkdb(rows=0)
+        sched = BatchScheduler(db)
+        # never started: submitted futures must fail on stop, not hang
+        fut = sched.submit("INSERT INTO t (k, w) VALUES (?, ?)", (1, 0))
+        await sched.stop()
+        with pytest.raises(ConnectionError):
+            await fut
+
+    _run(main())
