@@ -1,0 +1,147 @@
+"""Hash-index probe vs fused relscan vs generic scan — the plan-executor
+latency ladder at growing table capacities.
+
+The point of the device-resident hash index (kernels/hashidx) is that an
+equality lookup's latency stops depending on table capacity: the fused
+relscan and the generic jnp scan both walk every row, the probe reads
+ONE 128-lane bucket. This bench measures all three routes over the SAME
+indexed table state by forcing the plan (``table.select(plan=...)``), so
+the comparison isolates the execution strategy.
+
+Latency basis: one jitted ``table.select`` executor per route (touch=True
+— the production SELECT shape), timed per call with
+``block_until_ready``, on whatever backend/mode REPRO_KERNELS selects
+(CPU default: ref). Probe latencies include the staleness ``lax.cond``
+that production probes carry.
+
+``--json`` writes BENCH_index.json at the repo root (checked in per PR);
+``--quick`` trims sizes/reps but keeps the 65536-row point the --check
+regression gate compares.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+import time
+
+import jax
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import planner as PL
+from repro.core import predicate as P
+from repro.core import table as T
+from repro.core.schema import make_schema
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+SIZES = [4096, 65536, 262144]
+QUICK_SIZES = [4096, 65536]
+
+
+def _pcts(us):
+    us = np.asarray(us)
+    return (round(float(np.percentile(us, 50)), 2),
+            round(float(np.percentile(us, 99)), 2))
+
+
+def _mk_state(rows: int):
+    cols = [("k", "INT"), ("w", "INT")]
+    sch = make_schema("ix", cols, capacity=rows, max_select=8,
+                      indexes=("k",))
+    plain = make_schema("ix", cols, capacity=rows, max_select=8)
+    rng = np.random.default_rng(rows)
+    # ~90% full, unique keys
+    n = int(rows * 0.9)
+    keys = rng.permutation(rows).astype(np.int32)[:n]
+    # bulk-load: plain insert (no per-row maintenance), then ONE bulk
+    # index build — the CREATE-with-data path
+    stt, _, _ = T.insert(
+        plain, T.init_state(plain),
+        {"k": jnp.asarray(keys), "w": jnp.arange(n, dtype=jnp.int32)})
+    stt["indexes"] = T.init_state(sch)["indexes"]
+    stt = T.build_index(sch, stt)
+    jax.block_until_ready(stt)
+    return sch, stt, keys
+
+
+def _time_route(sch, stt, plan, qkeys, reps: int):
+    where = P.BinOp("=", P.Col("k"), P.Param(0))
+
+    def fn(state, k):
+        _, res = T.select(sch, state, where, (k,),
+                          plan=plan, touch=True)
+        return res["count"], res["row_ids"]
+
+    # AOT-compile so the measurement is the EXECUTOR latency (dispatch +
+    # device work), not jax.jit's python argument processing
+    compiled = jax.jit(fn).lower(stt, jnp.int32(0)).compile()
+    ks = [jnp.int32(int(k)) for k in qkeys]
+    jax.block_until_ready(compiled(stt, ks[0]))  # warm
+    lats = []
+    for i in range(reps):
+        k = ks[i % len(ks)]
+        t0 = time.perf_counter()
+        jax.block_until_ready(compiled(stt, k))
+        lats.append((time.perf_counter() - t0) * 1e6)
+    return lats
+
+
+def run(sizes=None, reps: int = 150) -> dict:
+    sizes = sizes or SIZES
+    out = []
+    for rows in sizes:
+        sch, stt, keys = _mk_state(rows)
+        rng = np.random.default_rng(7)
+        qkeys = keys[rng.integers(0, len(keys), 64)]
+        probe_plan = PL.plan_where(
+            sch, P.BinOp("=", P.Col("k"), P.Param(0)))
+        assert isinstance(probe_plan, PL.IndexProbe)
+        r = max(20, reps // (1 + rows // 131072))  # fewer reps at 256k
+        routes = {
+            # None = production routing (probe + staleness cond)
+            "probe": None,
+            "fused": probe_plan.fallback,
+            "generic": PL.GenericScan(),
+        }
+        entry = {"rows": rows}
+        for name, plan in routes.items():
+            p50, p99 = _pcts(_time_route(sch, stt, plan, qkeys, r))
+            entry[f"{name}_p50_us"] = p50
+            entry[f"{name}_p99_us"] = p99
+        entry["speedup_probe_vs_fused"] = round(
+            entry["fused_p50_us"] / entry["probe_p50_us"], 2)
+        entry["speedup_probe_vs_generic"] = round(
+            entry["generic_p50_us"] / entry["probe_p50_us"], 2)
+        out.append(entry)
+    return {
+        "bench": "index_probe",
+        "bucket_cap": 128,
+        "latency_basis": "jitted table.select executor, block_until_ready, "
+                         "plan forced per route (probe = default routing)",
+        "backend": jax.default_backend(),
+        "sizes": out,
+    }
+
+
+def main(argv=None):
+    argv = sys.argv[1:] if argv is None else argv
+    quick = "--quick" in argv
+    res = run(QUICK_SIZES if quick else SIZES, reps=60 if quick else 150)
+    if "--json" in argv:
+        path = REPO_ROOT / "BENCH_index.json"
+        path.write_text(json.dumps(res, indent=2) + "\n")
+        print(json.dumps(res, indent=2))
+        print(f"# wrote {path}")
+        return res
+    print("# indexed eq-lookup latency by table size (p50 us)")
+    print("rows,probe_us,fused_us,generic_us,probe_vs_fused")
+    for e in res["sizes"]:
+        print(f"{e['rows']},{e['probe_p50_us']},{e['fused_p50_us']},"
+              f"{e['generic_p50_us']},{e['speedup_probe_vs_fused']}x")
+    return res
+
+
+if __name__ == "__main__":
+    main()

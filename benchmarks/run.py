@@ -1,29 +1,132 @@
 """Benchmark driver — the single entry point for the perf trajectory.
 
-``python -m benchmarks.run [--json] [--quick]``
+``python -m benchmarks.run [--json] [--quick] [--check]``
 
---json   run fig1 + table2 + protocol in JSON mode and write
+--json   run fig1 + table2 + protocol + index in JSON mode and write
          ``BENCH_fig1.json`` / ``BENCH_table2.json`` /
-         ``BENCH_protocol.json`` to the repo root (ops/s resp. stmts/s,
-         p50/p99 µs); these files are checked in so every PR's numbers
-         are comparable.
+         ``BENCH_protocol.json`` / ``BENCH_index.json`` to the repo root
+         (ops/s resp. stmts/s, p50/p99 µs); these files are checked in so
+         every PR's numbers are comparable.
 --quick  tier-1-friendly smoke sizes — finishes in seconds on CPU (the
-         protocol bench keeps its 8-connection shape, fewer statements).
+         protocol bench keeps its 8-connection shape, fewer statements;
+         the index bench keeps the 65536-row point --check compares).
+--check  regression gate: re-run the benches at quick sizes IN MEMORY
+         (nothing is overwritten) and fail (exit 1) if any curated
+         metric regressed more than 2x vs the checked-in files. Every
+         curated metric is a SAME-RUN ratio (async/sync speedup, probe
+         vs fused, probe latency flatness across capacities, batched vs
+         sync wire rate), so absolute machine speed and background load
+         cancel to first order — raw per-op latencies are NOT gated
+         because they swing arbitrarily with host load. A failing bench
+         gets one re-run before the gate reports a regression.
 
 Without flags, the full human-readable suite runs: every paper
 table/figure plus the wire protocol, serving and roofline sections.
 """
 from __future__ import annotations
 
+import json
+import pathlib
 import sys
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def _ix_size(doc, rows):
+    return next(e for e in doc["sizes"] if e["rows"] == rows)
+
+
+# (file, label, extractor(json)->float, direction). "higher" means the
+# fresh value must be at least checked-in/2; "lower" at most 2x.
+CHECK_METRICS = [
+    ("BENCH_fig1.json", "async_speedup_vs_sync",
+     lambda d: d["async_speedup_vs_sync"], "higher"),
+    ("BENCH_index.json", "speedup_probe_vs_fused@65536",
+     lambda d: _ix_size(d, 65536)["speedup_probe_vs_fused"], "higher"),
+    ("BENCH_index.json", "probe_p50_flatness_64k_over_4k",
+     lambda d: (_ix_size(d, 65536)["probe_p50_us"]
+                / _ix_size(d, 4096)["probe_p50_us"]), "lower"),
+    ("BENCH_protocol.json", "batched_speedup_vs_sync",
+     lambda d: d["batched_speedup_vs_sync"], "higher"),
+]
+
+REGRESS_FACTOR = 2.0
+
+
+def _extract(doc, fn):
+    try:
+        return fn(doc)
+    except (KeyError, StopIteration, TypeError, ZeroDivisionError):
+        return None
+
+
+def _evaluate(fresh) -> list:
+    """[(fname, label, ref, new, ratio)] for every failing metric."""
+    failing = []
+    for fname, label, fn, direction in CHECK_METRICS:
+        ref_file = REPO_ROOT / fname
+        if not ref_file.exists():
+            print(f"CHECK skip  {fname}:{label}: no checked-in file")
+            continue
+        ref = _extract(json.loads(ref_file.read_text()), fn)
+        new = _extract(fresh[fname], fn)
+        if not ref or new is None:
+            print(f"CHECK skip  {fname}:{label}: metric absent")
+            continue
+        if direction == "lower":
+            ratio = new / ref
+        else:  # a zeroed speedup is an unbounded regression, not a crash
+            ratio = (ref / new) if new > 0 else float("inf")
+        ok = ratio <= REGRESS_FACTOR
+        print(f"CHECK {'ok   ' if ok else 'REGRESSION'} {fname}:{label}: "
+              f"checked-in={ref:.2f} fresh={new:.2f} ({ratio:.2f}x, "
+              f"{direction} is better)")
+        if not ok:
+            failing.append((fname, label, ref, new, ratio))
+    return failing
+
+
+def check() -> int:
+    """Compare fresh quick-run ratio metrics against the checked-in BENCH
+    files; return the number of >2x regressions after one retry."""
+    from benchmarks import fig1_kv_read, index_bench, protocol_bench
+
+    runners = {
+        "BENCH_fig1.json": lambda: fig1_kv_read.run_json(quick=True),
+        "BENCH_index.json": lambda: index_bench.run(
+            index_bench.QUICK_SIZES, reps=60),
+        "BENCH_protocol.json": lambda: protocol_bench.run(
+            m=protocol_bench.N_STMTS_QUICK),
+    }
+    fresh = {name: fn() for name, fn in runners.items()}
+    failing = _evaluate(fresh)
+    if failing:
+        # flaky-gate retry: re-run just the failing benches once (a load
+        # spike during one run must not fail the tree)
+        retry = sorted({f[0] for f in failing})
+        print(f"# retrying after transient failures: {', '.join(retry)}")
+        for fname in retry:
+            fresh[fname] = runners[fname]()
+        failing = _evaluate(fresh)
+    return len(failing)
 
 
 def main() -> None:
     quick = "--quick" in sys.argv
     as_json = "--json" in sys.argv
 
+    if "--check" in sys.argv:
+        failures = check()
+        if failures:
+            print(f"# {failures} BENCH metric(s) regressed > "
+                  f"{REGRESS_FACTOR}x")
+            sys.exit(1)
+        print("# all checked BENCH metrics within bounds")
+        return
+
     if as_json:
-        from benchmarks import fig1_kv_read, protocol_bench, table2_expiry
+        from benchmarks import (fig1_kv_read, index_bench, protocol_bench,
+                                table2_expiry)
         args = ["--json"] + (["--quick"] if quick else [])
         print("=" * 72)
         print("== Paper Fig. 1 (JSON) -> BENCH_fig1.json")
@@ -34,6 +137,9 @@ def main() -> None:
         print("=" * 72)
         print("== Wire protocol §3 (JSON) -> BENCH_protocol.json")
         protocol_bench.main(args)
+        print("=" * 72)
+        print("== Hash-index probe ladder (JSON) -> BENCH_index.json")
+        index_bench.main(args)
         return
 
     print("=" * 72)
@@ -56,6 +162,11 @@ def main() -> None:
     print("== Paper §3: wire protocol (sync vs pipelined vs batched)")
     from benchmarks import protocol_bench
     protocol_bench.main(["--quick"] if quick else [])
+
+    print("=" * 72)
+    print("== Plan executor: index probe vs fused vs generic scan")
+    from benchmarks import index_bench
+    index_bench.main(["--quick"] if quick else [])
 
     if quick:
         return

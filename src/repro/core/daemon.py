@@ -31,12 +31,25 @@ table (or every table) has retired. ``executemany`` additionally
 micro-batches same-statement DELETE/UPDATE parameter lists into ONE
 dispatch (a ``lax.scan`` over the parameter rows).
 
-The WHERE hot path (conjunctions of equality/range terms on integer
-columns) lowers to the fused Pallas relscan kernel; the env var
-``REPRO_KERNELS`` selects ``kernel`` (TPU), ``interpret`` (kernel body on
-CPU) or ``ref`` (pure-jnp oracle, the non-TPU default) — see
-kernels/ops.py. Unfusable predicates fall back to the generic jnp
-masked scan automatically.
+Plan-based execution
+--------------------
+
+Every WHERE is lowered ONCE by ``core/planner.plan_where`` into a plan —
+IndexProbe (O(1) bucket probe of a device-resident hash index,
+kernels/hashidx), FusedScan (the grid-tiled Pallas relscan) or
+GenericScan (jnp masked scan) — and the table-level executors in
+``core/table.py`` run that plan. The planner memoizes per statement
+shape (schema x WHERE AST — the same granularity as the compiled
+executor cache), and the daemon's executors, its batched probe routing
+and ``EXPLAIN <stmt>`` all read through that one cache; EXPLAIN reports
+the plan as a ``VALUE`` row so selection is observable from a socket
+client. ``executemany`` routes
+micro-batched SELECT/aggregate statements through *vmapped* index probes
+(one ``lax.cond`` on index freshness hoisted outside the vmap), so W
+indexed lookups cost O(W x bucket_cap) instead of O(W x capacity). The
+env var ``REPRO_KERNELS`` selects ``kernel`` (TPU), ``interpret`` (kernel
+body on CPU) or ``ref`` (pure-jnp oracle, the non-TPU default) — see
+kernels/ops.py.
 
 The daemon is also the serving plane's metadata engine: `table_state` /
 `swap_table_state` hand the device arrays to jitted serving steps with
@@ -45,6 +58,7 @@ zero copies.
 from __future__ import annotations
 
 import dataclasses
+import json
 import threading
 from typing import Any, Iterable, Mapping, Sequence
 
@@ -52,6 +66,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import planner as PL
 from repro.core import predicate as P
 from repro.core import sqlparse as S
 from repro.core import table as T
@@ -254,13 +269,22 @@ class StatementShape:
     same batched executor (same parsed AST — LIMIT, ORDER BY, aggregate
     function and WHERE shape all included, only the ``?`` bindings vary).
     ``batchable`` marks shapes ``executemany`` accepts; ``is_write`` drives
-    the scheduler's read/write reordering barriers."""
+    the scheduler's read/write reordering barriers.
+
+    ``reads``/``writes`` are the statement's column footprints (reused
+    from the planner's AST walk): the batch scheduler fences at column
+    rather than table granularity, so e.g. an UPDATE on ``w`` no longer
+    bars a SELECT that only touches ``k``. ``None`` means "the whole
+    table" — unknown footprints, validity-changing writes (INSERT/DELETE
+    churn every read's row set), or anything touching reserved columns."""
 
     key: tuple
     table: str | None
-    kind: str  # "select" | "insert" | "delete" | "update" | "admin"
+    kind: str  # "select" | "insert" | "delete" | "update" | "admin" | ...
     batchable: bool
     is_write: bool
+    reads: frozenset | None = None
+    writes: frozenset | None = None
 
 
 def _bucket(n: int) -> int:
@@ -269,6 +293,18 @@ def _bucket(n: int) -> int:
     while b < n:
         b *= 2
     return b
+
+
+def _np_terms_int(terms, param_cols) -> bool:
+    """Host-side dtype gate for the batched probe route: every `?`-bound
+    term value must be integer (floats keep exact-compare semantics on
+    the scan path — same rule table._int_values applies at trace time)."""
+    for t in terms:
+        kind, v = t.value
+        if kind == "param" and not np.issubdtype(param_cols[v].dtype,
+                                                 np.integer):
+            return False
+    return True
 
 
 class SQLCached:
@@ -373,27 +409,75 @@ class SQLCached:
             t = self._table(stmt.table)
             t.state, n = jax.jit(T.flush, static_argnums=0)(t.schema, t.state)
             return Result(dev={"count": n})
+        if isinstance(stmt, S.Reindex):
+            return self._do_reindex(stmt.table)
+        if isinstance(stmt, S.Explain):
+            return self._do_explain(stmt.inner)
         raise S.SQLError(f"unhandled statement {stmt!r}")
+
+    @staticmethod
+    def _clean_footprint(cols) -> frozenset | None:
+        """None (whole-table) when a footprint touches reserved columns —
+        their cross-statement couplings (touch stamps, TTL aging) are not
+        worth modelling at the scheduler."""
+        fp = frozenset(cols)
+        if any(c.startswith("_") for c in fp):
+            return None
+        return fp
 
     def shape_key(self, sql: str) -> StatementShape:
         """Classify ``sql`` for cross-connection batching (the scheduler's
         grouping hook): statements whose ``.key`` compare equal share one
         jitted executor and may be dispatched together through
         :meth:`executemany`, so a heterogeneous admission batch splits into
-        the minimal number of dispatches. Raises ``SQLError`` on bad SQL."""
+        the minimal number of dispatches. The read/write column footprints
+        ride along (planner AST walk) for column-level fencing.
+        Raises ``SQLError`` on bad SQL."""
         stmt = self._parse(sql)
+        clean = self._clean_footprint
         if isinstance(stmt, S.Select):
+            reads = set(PL.columns_of(stmt.where))
+            if stmt.agg is not None:
+                if stmt.agg[1] is not None:
+                    reads.add(stmt.agg[1])
+            elif stmt.columns:
+                reads |= set(stmt.columns)
+            else:
+                # SELECT *: whole-table reads. The footprint must come
+                # from the statement TEXT alone — expanding `*` against
+                # the live schema goes stale when a DROP/CREATE for the
+                # same table is queued ahead of this statement, and a
+                # stale expansion could merge the read past a write to a
+                # column that exists only in the new schema.
+                reads = None
+            if reads is not None and stmt.order_by is not None:
+                reads.add(stmt.order_by)
+            if reads is not None:
+                reads |= set(stmt.payloads)
+                reads = clean(reads)
             return StatementShape(("select", stmt), stmt.table, "select",
-                                  True, False)
+                                  True, False, reads, frozenset())
         if isinstance(stmt, S.Insert):
+            # inserts write validity (and may LRU-evict): every read's row
+            # set is at stake -> whole-table write footprint
             return StatementShape(("insert", stmt), stmt.table, "insert",
-                                  True, True)
+                                  True, True, frozenset(), None)
         if isinstance(stmt, S.Delete):
             return StatementShape(("delete", stmt), stmt.table, "delete",
-                                  True, True)
+                                  True, True,
+                                  clean(PL.columns_of(stmt.where)), None)
         if isinstance(stmt, S.Update):
+            reads = set(PL.columns_of(stmt.where))
+            writes = set()
+            for col, expr in stmt.sets:
+                writes.add("_ttl" if col.upper() == "TTL" else col)
+                reads |= set(PL.columns_of(expr))
             return StatementShape(("update", stmt), stmt.table, "update",
-                                  True, True)
+                                  True, True, clean(reads), clean(writes))
+        if isinstance(stmt, S.Explain):
+            # pure metadata: never merges, never fences
+            return StatementShape(("explain", stmt), None, "explain",
+                                  False, False, frozenset(), frozenset())
         table = getattr(stmt, "table", None)
         return StatementShape(("admin", stmt), table, "admin", False, True)
 
@@ -426,9 +510,50 @@ class SQLCached:
             capacity=stmt.capacity,
             max_select=stmt.max_select,
             expiry=ExpiryPolicy(stmt.ttl, stmt.max_rows, stmt.ops_interval),
+            indexes=stmt.indexes,
         )
         self.tables[stmt.table] = _Table(schema, T.init_state(schema))
         return Result()
+
+    def _do_reindex(self, name: str) -> Result:
+        """REINDEX t: bulk-rebuild every hash index from the live rows —
+        the recovery path after a bucket overflow (``stale``) once the
+        offending duplicate burst has been deleted or expired. Returns
+        the residual overflow count as ``value`` (0 = probes are back)."""
+        t = self._table(name)
+        if not t.schema.indexes:
+            return Result(count=0, value=0)
+        key = ("reindex", t.schema)
+        fn = self._executor(
+            key, lambda: jax.jit(
+                lambda st: T.build_index(t.schema, st), donate_argnums=0))
+        t.state = fn(t.state)
+        residual = sum(int(t.state["indexes"][c]["stale"])
+                       for c in t.schema.indexes)
+        return Result(count=len(t.schema.indexes), value=residual)
+
+    def _do_explain(self, stmt: S.Statement) -> Result:
+        """EXPLAIN <stmt>: report (don't run) the inner statement's plan
+        as one VALUE row of JSON — index-probe / fused-scan / generic-scan
+        plus the column footprint, observable from any socket client."""
+        if isinstance(stmt, (S.Select, S.Update, S.Delete)):
+            t = self._table(stmt.table)
+            where = self._intern_ast(stmt.where)
+            ranked = isinstance(stmt, S.Select) and stmt.order_by is not None
+            info = PL.explain(t.schema, where, ranked=ranked)
+            info["statement"] = type(stmt).__name__.lower()
+            if info["plan"] == "index-probe":
+                # surface index health: stale > 0 means every probe is
+                # currently taking the scan fallback (REINDEX recovers)
+                info["stale"] = int(
+                    t.state["indexes"][info["index"]]["stale"])
+            return Result(count=1, value=json.dumps(info, sort_keys=True))
+        info = {"statement": type(stmt).__name__.lower(),
+                "plan": "insert" if isinstance(stmt, S.Insert) else "admin"}
+        table = getattr(stmt, "table", None)
+        if table is not None:
+            info["table"] = table
+        return Result(count=1, value=json.dumps(info, sort_keys=True))
 
     def executemany(
         self,
@@ -562,17 +687,34 @@ class SQLCached:
             np.asarray([pm[i][j] for i in range(b)]) for j in range(n_params)
         )
         active = np.arange(b) < n
-        plan = T._fused_plan(schema, where) if is_delete else None
-        eq_term = (plan.terms[0]
-                   if plan is not None and len(plan.terms) == 1
-                   and plan.terms[0].op == "==" else None)
+        fused = T._fused_plan(schema, where) if is_delete else None
+        eq_term = (fused.terms[0]
+                   if fused is not None and len(fused.terms) == 1
+                   and fused.terms[0].op == "==" else None)
         if (eq_term is not None and eq_term.value[0] == "param"
                 and not np.issubdtype(param_cols[eq_term.value[1]].dtype,
                                       np.integer)):
             eq_term = None  # float param: keep exact-compare semantics
         if per_statement:
             eq_term = None  # the one-pass path only yields a total count
-        key = ("dml", schema, is_delete, where, sets, b, eq_term)
+        update_plan = None
+        idx_rebuild = ()
+        if not is_delete:
+            set_cols = {("_ttl" if c.upper() == "TTL" else c)
+                        for c, _ in sets}
+            idx_rebuild = tuple(c for c in schema.indexes if c in set_cols)
+            update_plan = T.plan_for(schema, where)
+            if isinstance(update_plan, PL.IndexProbe) and (
+                    idx_rebuild
+                    or not _np_terms_int(
+                        (update_plan.key,) + update_plan.residual,
+                        param_cols)):
+                # rewriting the key column mid-scan would strand the index
+                # entries the later iterations probe — take the scan route
+                # and rebuild once after the batch
+                update_plan = update_plan.fallback
+        key = ("dml", schema, is_delete, where, sets, b, eq_term,
+               update_plan)
 
         def build():
             if eq_term is not None:
@@ -611,12 +753,28 @@ class SQLCached:
                                  ops=state["ops"] + nact)
                     return state, n_hit, ns
 
-                def body(st, xs):
-                    pr, act = xs
-                    return T.update(schema, st, where, dict(sets), pr,
-                                    extra_mask=act)
+                def run(route):
+                    def body(st, xs):
+                        pr, act = xs
+                        return T.update(schema, st, where, dict(sets), pr,
+                                        extra_mask=act, plan=route,
+                                        probe_mode="ref",
+                                        maintain_indexes=False)
 
-                state, ns = jax.lax.scan(body, state, (param_cols, active))
+                    return jax.lax.scan(body, state, (param_cols, active))
+
+                if isinstance(update_plan, PL.IndexProbe):
+                    # freshness cond hoisted outside the scan: W indexed
+                    # UPDATEs cost W bucket probes, not W full scans
+                    state, ns = jax.lax.cond(
+                        T.index_fresh(state, update_plan.column),
+                        lambda _: run(update_plan),
+                        lambda _: run(update_plan.fallback),
+                        None)
+                else:
+                    state, ns = run(update_plan)
+                for c in idx_rebuild:  # deferred: ONE rebuild per dispatch
+                    state = T.build_index(schema, state, c, mode="ref")
                 # un-tick the padded scan iterations (runtime count — see
                 # the delete branch note on executor caching)
                 pad = b - jnp.sum(active.astype(jnp.int32))
@@ -675,22 +833,42 @@ class SQLCached:
             np.asarray([pm[i][j] for i in range(b)]) for j in range(n_params)
         )
         active = np.arange(b) < n
+        plan = T.plan_for(schema, where, ranked=stmt.order_by is not None)
+        if (isinstance(plan, PL.IndexProbe)
+                and not _np_terms_int((plan.key,) + plan.residual,
+                                      param_cols)):
+            plan = plan.fallback
+        probe = isinstance(plan, PL.IndexProbe)
         key = ("select_batch", schema, where, tuple(columns), stmt.payloads,
-               stmt.order_by, stmt.descending, limit, b)
+               stmt.order_by, stmt.descending, limit, b, probe)
 
         def build():
             def base(state, param_cols, active):
-                def one(pr, act):
-                    _, res = T.select(
-                        schema, state, where, pr,
-                        columns=columns, order_by=stmt.order_by,
-                        descending=stmt.descending, limit=limit,
-                        with_payloads=stmt.payloads, active=act,
-                        touch=False, fused_mode="ref",
-                    )
-                    return res
+                def run(route):
+                    def one(pr, act):
+                        _, res = T.select(
+                            schema, state, where, pr,
+                            columns=columns, order_by=stmt.order_by,
+                            descending=stmt.descending, limit=limit,
+                            with_payloads=stmt.payloads, active=act,
+                            touch=False, fused_mode="ref",
+                            probe_mode="ref", plan=route,
+                        )
+                        return res
 
-                res = jax.vmap(one)(param_cols, active)
+                    return jax.vmap(one)(param_cols, active)
+
+                if probe:
+                    # ONE freshness cond hoisted outside the vmap: W
+                    # indexed lookups cost O(W x bucket_cap) gathers, or
+                    # the whole batch falls back to the broadcast scan
+                    res = jax.lax.cond(
+                        T.index_fresh(state, plan.column),
+                        lambda _: run(plan),
+                        lambda _: run(plan.fallback),
+                        None)
+                else:
+                    res = run(plan)
                 # one fused epilogue for the whole batch: touch the
                 # returned rows and advance the clock by the REAL
                 # statement count (padding must not age TTLs)
@@ -743,18 +921,37 @@ class SQLCached:
             np.asarray([pm[i][j] for i in range(b)]) for j in range(n_params)
         )
         active = np.arange(b) < n
-        key = ("agg_batch", schema, agg, col, where, b)
+        plan = T.plan_for(schema, where)
+        if (isinstance(plan, PL.IndexProbe)
+                and not _np_terms_int((plan.key,) + plan.residual,
+                                      param_cols)):
+            plan = plan.fallback
+        probe = isinstance(plan, PL.IndexProbe)
+        key = ("agg_batch", schema, agg, col, where, b, probe)
 
         def build():
             def base(state, param_cols, active):
-                def one(pr, act):
-                    # `act` only carries the batch axis for parameterless
-                    # aggregates (vmap needs >=1 mapped argument); padded
-                    # rows are never exposed, so their values don't matter
-                    _, v = T.aggregate(schema, state, agg, col, where, pr)
-                    return v
+                def run(route):
+                    def one(pr, act):
+                        # `act` only carries the batch axis for
+                        # parameterless aggregates (vmap needs >=1 mapped
+                        # argument); padded rows are never exposed, so
+                        # their values don't matter
+                        _, v = T.aggregate(schema, state, agg, col, where,
+                                           pr, plan=route, fused_mode="ref",
+                                           probe_mode="ref")
+                        return v
 
-                vals = jax.vmap(one)(param_cols, jnp.asarray(active))
+                    return jax.vmap(one)(param_cols, jnp.asarray(active))
+
+                if probe:
+                    vals = jax.lax.cond(
+                        T.index_fresh(state, plan.column),
+                        lambda _: run(plan),
+                        lambda _: run(plan.fallback),
+                        None)
+                else:
+                    vals = run(plan)
                 nact = jnp.sum(active.astype(jnp.int32))
                 state = dict(state, clock=state["clock"] + nact,
                              ops=state["ops"] + nact)

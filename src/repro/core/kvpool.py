@@ -56,11 +56,18 @@ def kv_schema(
     name: str = "kv",
     expiry: ExpiryPolicy = ExpiryPolicy(),
     max_select: int = 256,
+    indexes: tuple[str, ...] = (),
 ) -> TableSchema:
+    """``indexes`` (e.g. ``("seq_id", "user_id")``) puts a device-resident
+    hash index on the named columns, turning the Table 2 fine-grained
+    expiry shapes (``DELETE ... WHERE seq_id = ?``) into O(1) bucket
+    probes at the cost of per-insert index maintenance — worth it once
+    the pool outgrows a few thousand blocks."""
     payload = ("kv", (layers, 2, block_size, kv_heads, head_dim), dtype)
     return make_schema(
         name, list(KV_COLUMNS), [payload],
         capacity=capacity, max_select=max_select, expiry=expiry,
+        indexes=indexes,
     )
 
 

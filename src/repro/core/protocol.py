@@ -283,10 +283,11 @@ class SQLCachedServer:
     per-statement (the paper's original regime)."""
 
     def __init__(self, db: SQLCached | None = None, *, batching: bool = True,
-                 max_batch: int = 64):
+                 max_batch: int = 64, max_wait_us: int = 0):
         self.db = db or SQLCached()
         self.scheduler = BatchScheduler(self.db, batching=batching,
-                                        max_batch=max_batch)
+                                        max_batch=max_batch,
+                                        max_wait_us=max_wait_us)
         self._servers: list[asyncio.AbstractServer] = []
         self._conn_tasks: set[asyncio.Task] = set()
         self.stats = {"connections": 0, "statements": 0, "errors": 0}

@@ -15,25 +15,44 @@ layer's per-connection response flushing this replaces the old global
 
 Ordering contract
 -----------------
-Admission order is preserved wherever it is observable:
+Admission order is preserved wherever it is observable. Fencing is at
+COLUMN granularity, reusing the plan's table/column footprint that
+``shape_key`` stamps on each statement (``reads``/``writes``; ``None`` =
+whole table — INSERT/DELETE churn validity, admin is a hard barrier):
 
-* a READ joins its shape's open group iff no WRITE group on the same
-  table opened after that group (reads commute with reads);
-* a WRITE joins its shape's open group iff NO group at all on the same
-  table opened after it (same-shape writes batch through ``executemany``,
-  whose executors keep sequential semantics among themselves);
+* a READ joins its shape's open group iff no group that WRITES a column
+  it reads opened after that group (reads commute with reads, and with
+  writes to columns they never look at);
+* a WRITE joins its shape's open group iff no group that touches its
+  write set — or writes its read set — opened after it (same-shape
+  writes batch through ``executemany``, whose executors keep sequential
+  semantics among themselves);
 * admin statements (CREATE/DROP/EXPIRE/FLUSH) and unparseable SQL are
-  barriers — they never merge and nothing reorders across them.
+  barriers — they never merge and nothing reorders across them; EXPLAIN
+  (no reads, no writes) merges with nothing but fences nothing.
 
-Groups dispatch strictly in open order, so per-connection and per-table
-orderings both hold; cross-table reordering (which no client can observe
-through the wire protocol) is allowed. Results are lazy, so a dispatch
+Groups dispatch strictly in open order, so per-connection orderings and
+every column-level data dependency hold; reordering that no client can
+observe through the wire protocol (cross-table, or across writes to
+disjoint columns) is allowed. Auto-expiry cadence is per-statement
+(PR 2), so regrouping does not change TTL semantics beyond the already
+documented batch-boundary flexibility. Results are lazy, so a dispatch
 returns as soon as the device work is enqueued — the response flushers
 materialize rows off the event loop.
+
+Admission window
+----------------
+``max_wait_us > 0`` holds the batch cut open while the OLDEST admitted
+statement is younger than the window, letting groupmates arrive from
+other connections; the deadline is per-statement, so a lone statement is
+never held past ``max_wait_us`` and the default (0) dispatches every
+tick exactly as before. The clock (``_now``) and the wait primitive
+(``_wait_for_arrivals``) are injectable for deterministic tests.
 """
 from __future__ import annotations
 
 import asyncio
+import time
 from collections import deque
 from typing import Any, Sequence
 
@@ -41,14 +60,15 @@ from repro.core.daemon import SQLCached, StatementShape
 
 
 class _Item:
-    __slots__ = ("sql", "params", "future", "shape")
+    __slots__ = ("sql", "params", "future", "shape", "admitted_at")
 
     def __init__(self, sql: str, params: tuple, future: asyncio.Future,
-                 shape: StatementShape | None):
+                 shape: StatementShape | None, admitted_at: float = 0.0):
         self.sql = sql
         self.params = params
         self.future = future
         self.shape = shape
+        self.admitted_at = admitted_at
 
 
 class _Group:
@@ -60,6 +80,63 @@ class _Group:
         self.items = items
 
 
+class _TableFences:
+    """Per-table column-granular fence bookkeeping for one planning pass.
+
+    Tracks, per column, the latest group that WROTE it and the latest
+    group that TOUCHED it (read or wrote); ``*_all`` carry the groups
+    whose footprint was unknown (None = whole table)."""
+
+    __slots__ = ("write_col", "touch_col", "write_all", "touch_all",
+                 "write_any")
+
+    def __init__(self):
+        self.write_col: dict[str, int] = {}
+        self.touch_col: dict[str, int] = {}
+        self.write_all = -1   # latest whole-table write
+        self.touch_all = -1   # latest whole-table read-or-write
+        self.write_any = -1   # latest write of ANY column
+
+    def read_fence(self, reads) -> int:
+        """Latest group a read with footprint ``reads`` must not precede."""
+        if reads is None:
+            return max(self.write_all, self.write_any)
+        f = self.write_all
+        for c in reads:
+            f = max(f, self.write_col.get(c, -1))
+        return f
+
+    def write_fence(self, reads, writes) -> int:
+        """Latest group a write (reads/writes footprints) must not
+        precede: anything touching its write set, any write to its read
+        set, and every whole-table group."""
+        if reads is None or writes is None:
+            f = self.touch_all
+            for c in self.touch_col:
+                f = max(f, self.touch_col[c])
+            return max(f, self.write_any)
+        f = max(self.write_all, self.touch_all)
+        for c in writes:
+            f = max(f, self.touch_col.get(c, -1))
+        for c in reads:
+            f = max(f, self.write_col.get(c, -1))
+        return f
+
+    def record(self, seq: int, reads, writes, is_write: bool) -> None:
+        for fp, isw in ((reads, False), (writes, True)):
+            if fp is None:
+                self.touch_all = max(self.touch_all, seq)
+                if isw or is_write:
+                    self.write_all = max(self.write_all, seq)
+                    self.write_any = max(self.write_any, seq)
+                continue
+            for c in fp:
+                self.touch_col[c] = max(self.touch_col.get(c, -1), seq)
+                if isw:
+                    self.write_col[c] = max(self.write_col.get(c, -1), seq)
+                    self.write_any = max(self.write_any, seq)
+
+
 class BatchScheduler:
     """Admission queue + shape-grouping dispatcher over one SQLCached.
 
@@ -67,20 +144,24 @@ class BatchScheduler:
     statement its own group) — the wire protocol stays pipelined, but no
     cross-connection fusion happens; benchmarks use this to separate the
     two effects. ``max_batch`` bounds group size (and therefore the
-    executor bucket sizes that get compiled)."""
+    executor bucket sizes that get compiled). ``max_wait_us`` bounds how
+    long an admitted statement may wait for groupmates (0 = never)."""
 
     def __init__(self, db: SQLCached, *, batching: bool = True,
-                 max_batch: int = 64, max_admit: int = 4096):
+                 max_batch: int = 64, max_admit: int = 4096,
+                 max_wait_us: int = 0):
         self.db = db
         self.batching = batching
         self.max_batch = max_batch
         self.max_admit = max_admit
+        self.max_wait_us = max_wait_us
+        self._now = time.monotonic  # injectable (fake clocks in tests)
         self._q: deque[_Item] = deque()
         self._wake = asyncio.Event()
         self._task: asyncio.Task | None = None
         self._closed = False
         self.stats = {"admitted": 0, "batches": 0, "grouped_statements": 0,
-                      "singles": 0, "max_group": 0}
+                      "singles": 0, "max_group": 0, "window_waits": 0}
 
     # ------------------------------------------------------------ lifecycle
     async def start(self) -> None:
@@ -115,7 +196,7 @@ class BatchScheduler:
             shape = self.db.shape_key(sql)
         except Exception:
             shape = None  # unparseable: barrier; execute() re-raises for us
-        self._q.append(_Item(sql, tuple(params), fut, shape))
+        self._q.append(_Item(sql, tuple(params), fut, shape, self._now()))
         self.stats["admitted"] += 1
         self._wake.set()
         return fut
@@ -124,8 +205,7 @@ class BatchScheduler:
     def _plan(self, items: list[_Item]) -> list[_Group]:
         groups: list[_Group] = []
         open_by_key: dict[tuple, _Group] = {}
-        last_any: dict[str, int] = {}
-        last_write: dict[str, int] = {}
+        fences: dict[str, _TableFences] = {}
         barrier = -1
         for it in items:
             sh = it.shape
@@ -134,25 +214,27 @@ class BatchScheduler:
                 groups.append(_Group(seq, sh, [it]))
                 if sh is None:
                     barrier = seq
-                else:
-                    last_any[sh.table] = seq
-                    last_write[sh.table] = seq
+                elif sh.is_write or sh.reads is None or sh.reads:
+                    # a statement with nothing to read or write (EXPLAIN)
+                    # fences nothing; everything else unbatchable is a
+                    # whole-table barrier
+                    fences.setdefault(sh.table, _TableFences()).record(
+                        seq, None, None, True)
                 continue
-            tbl = sh.table
+            tf = fences.setdefault(sh.table, _TableFences())
             g = open_by_key.get(sh.key)
-            fence = last_any.get(tbl, -1) if sh.is_write \
-                else last_write.get(tbl, -1)
+            fence = (tf.write_fence(sh.reads, sh.writes) if sh.is_write
+                     else tf.read_fence(sh.reads))
             if (g is not None and len(g.items) < self.max_batch
                     and g.seq >= barrier and g.seq >= fence):
                 g.items.append(it)
+                tf.record(g.seq, sh.reads, sh.writes, sh.is_write)
             else:
                 seq = len(groups)
                 g = _Group(seq, sh, [it])
                 groups.append(g)
                 open_by_key[sh.key] = g
-                last_any[tbl] = seq
-                if sh.is_write:
-                    last_write[tbl] = seq
+                tf.record(seq, sh.reads, sh.writes, sh.is_write)
         return groups
 
     # ------------------------------------------------------------- dispatch
@@ -193,6 +275,32 @@ class BatchScheduler:
             if not it.future.done():
                 it.future.set_result(res)
 
+    # ------------------------------------------------------------- windowing
+    async def _wait_for_arrivals(self, timeout: float) -> None:
+        """Park until new admissions or the window deadline (injectable —
+        the fake-clock tests replace this and ``_now``)."""
+        try:
+            await asyncio.wait_for(self._wake.wait(), timeout)
+        except asyncio.TimeoutError:
+            pass
+
+    async def _hold_window(self) -> None:
+        """Latency-bounded admission: keep the cut open while the OLDEST
+        waiter is younger than ``max_wait_us`` and the queue is not full.
+        The deadline belongs to the oldest statement, so nobody — least
+        of all a lone statement — waits past the window."""
+        while (self._q and not self._closed
+               and len(self._q) < self.max_admit):
+            deadline = self._q[0].admitted_at + self.max_wait_us / 1e6
+            remain = deadline - self._now()
+            if remain <= 0:
+                break
+            self.stats["window_waits"] += 1
+            self._wake.clear()
+            await self._wait_for_arrivals(remain)
+            # let every runnable connection handler drain its read buffer
+            await asyncio.sleep(0)
+
     async def _loop(self) -> None:
         while True:
             await self._wake.wait()
@@ -202,6 +310,10 @@ class BatchScheduler:
             # one scheduling tick: let every runnable connection handler
             # drain its read buffer into the queue before cutting batches
             await asyncio.sleep(0)
+            if self.max_wait_us > 0:
+                await self._hold_window()
+                if self._closed:
+                    return
             items: list[_Item] = []
             while self._q and len(items) < self.max_admit:
                 items.append(self._q.popleft())

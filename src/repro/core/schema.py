@@ -77,6 +77,10 @@ class TableSchema:
     capacity: int = 4096
     max_select: int = 1024  # fixed upper bound on rows a SELECT returns
     expiry: ExpiryPolicy = ExpiryPolicy()
+    # columns carrying a device-resident hash index (kernels/hashidx):
+    # int32-typed only (INT, or TEXT via the interner). Equality lookups
+    # on these lower to an O(1) bucket probe instead of a full scan.
+    indexes: tuple[str, ...] = ()
 
     def __post_init__(self):
         names = [c.name for c in self.columns] + [p.name for p in self.payloads]
@@ -87,6 +91,13 @@ class TableSchema:
                 raise ValueError(f"{r} is a reserved column name")
         if self.max_select > self.capacity:
             object.__setattr__(self, "max_select", self.capacity)
+        for ix in self.indexes:
+            if np.dtype(self.column(ix).dtype) != np.int32:
+                raise ValueError(
+                    f"index on {ix!r}: only int32 (INT/TEXT) columns are "
+                    f"indexable")
+        if len(set(self.indexes)) != len(self.indexes):
+            raise ValueError(f"duplicate index in table {self.name!r}")
 
     @property
     def column_names(self) -> tuple[str, ...]:
@@ -124,9 +135,11 @@ def make_schema(
     capacity: int = 4096,
     max_select: int = 1024,
     expiry: ExpiryPolicy = ExpiryPolicy(),
+    indexes: Sequence[str] = (),
 ) -> TableSchema:
     cols = tuple(
         ColumnSpec(n, t, is_text=(t.upper() == "TEXT")) for n, t in columns
     )
     pls = tuple(PayloadSpec(n, tuple(s), d) for n, s, d in payloads)
-    return TableSchema(name, cols, pls, capacity, max_select, expiry)
+    return TableSchema(name, cols, pls, capacity, max_select, expiry,
+                       tuple(indexes))

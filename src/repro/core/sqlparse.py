@@ -5,7 +5,8 @@ over a text protocol. We implement the subset that a cache plane needs
 (the paper itself notes n-way joins are a performance anti-pattern in a
 cache daemon and we exclude them):
 
-  CREATE TABLE t (a INT, b TEXT, ..., PAYLOAD kv TENSOR(16,2,8,64) BF16)
+  CREATE TABLE t (a INT, b TEXT, INDEX(a), ...,
+                  PAYLOAD kv TENSOR(16,2,8,64) BF16)
       [CAPACITY 4096] [MAX_SELECT 256] [TTL 100] [MAX_ROWS 1000]
       [OPS_INTERVAL 64]
   INSERT INTO t (a, b) VALUES (?, 'x') [TTL 50]
@@ -17,7 +18,16 @@ cache daemon and we exclude them):
   DELETE FROM t WHERE user_id = ?
   EXPIRE t            -- run automatic expiry now
   FLUSH t             -- drop all rows (the memcached way)
+  REINDEX t           -- rebuild t's hash indexes (recovers a stale,
+                         i.e. overflowed, index once the duplicate
+                         burst that overflowed it is gone)
   DROP TABLE t
+  EXPLAIN <stmt>      -- report the chosen query plan (index-probe /
+                         fused-scan / generic-scan) without executing
+
+``INDEX(col)`` in a CREATE column list declares a device-resident hash
+index on an INT/TEXT column; equality WHEREs on it become O(1) bucket
+probes (core/planner.py decides, EXPLAIN shows the decision).
 
 Statements parse to frozen dataclasses (hashable → usable as static jit
 arguments); `?` placeholders become Param nodes so one parse+jit serves
@@ -90,6 +100,7 @@ class CreateTable:
     ttl: int = 0
     max_rows: int = 0
     ops_interval: int = 0
+    indexes: tuple[str, ...] = ()  # hash-indexed columns (INDEX(col))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -136,12 +147,28 @@ class Flush:
 
 
 @dataclasses.dataclass(frozen=True)
+class Reindex:
+    """REINDEX t: bulk-rebuild the table's hash indexes from the current
+    rows, clearing the stale flag when the rebuild fits its buckets."""
+
+    table: str
+
+
+@dataclasses.dataclass(frozen=True)
 class DropTable:
     table: str
 
 
+@dataclasses.dataclass(frozen=True)
+class Explain:
+    """EXPLAIN <stmt>: report the inner statement's query plan."""
+
+    inner: "Statement"
+
+
 Statement = (
-    CreateTable | Insert | Select | Update | Delete | Expire | Flush | DropTable
+    CreateTable | Insert | Select | Update | Delete | Expire | Flush
+    | Reindex | DropTable | Explain
 )
 
 
@@ -292,22 +319,31 @@ class _Parser:
 
     # -- statements
     def statement(self) -> Statement:
+        explain = self.accept_kw("EXPLAIN") is not None
         kw = self.expect_kw(
-            "CREATE", "INSERT", "SELECT", "UPDATE", "DELETE", "EXPIRE", "FLUSH", "DROP"
+            "CREATE", "INSERT", "SELECT", "UPDATE", "DELETE", "EXPIRE",
+            "FLUSH", "REINDEX", "DROP"
         )
         fn = getattr(self, f"_stmt_{kw.lower()}")
         stmt = fn()
         if self.peek()[0] != "eof":
             raise SQLError(f"trailing tokens: {self.peek()[1]!r}")
-        return stmt
+        return Explain(stmt) if explain else stmt
 
     def _stmt_create(self) -> CreateTable:
         self.expect_kw("TABLE")
         table = self.name()
         self.expect_op("(")
-        columns, payloads = [], []
+        columns, payloads, indexes = [], [], []
         while True:
-            if self.accept_kw("PAYLOAD"):
+            nk, nv = self.peek()
+            follows_paren = (nk == "name" and nv.upper() == "INDEX"
+                             and self.toks[self.i + 1][1] == "(")
+            if follows_paren and self.accept_kw("INDEX"):
+                self.expect_op("(")
+                indexes.append(self.name())
+                self.expect_op(")")
+            elif self.accept_kw("PAYLOAD"):
                 pname = self.name()
                 self.expect_kw("TENSOR")
                 self.expect_op("(")
@@ -337,7 +373,8 @@ class _Parser:
             if not kw:
                 break
             opts[kw.lower()] = self.integer()
-        return CreateTable(table, tuple(columns), tuple(payloads), **opts)
+        return CreateTable(table, tuple(columns), tuple(payloads),
+                           indexes=tuple(indexes), **opts)
 
     def _stmt_insert(self) -> Insert:
         self.expect_kw("INTO")
@@ -425,6 +462,9 @@ class _Parser:
 
     def _stmt_flush(self) -> Flush:
         return Flush(self.name())
+
+    def _stmt_reindex(self) -> Reindex:
+        return Reindex(self.name())
 
     def _stmt_drop(self) -> DropTable:
         self.expect_kw("TABLE")

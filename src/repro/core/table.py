@@ -1,35 +1,55 @@
-"""RelTable: a fixed-capacity, device-resident relational cache table.
+"""RelTable: a fixed-capacity, device-resident relational cache table,
+executed as *plans*.
 
-The TPU-native reimagining of SQLcached's SQLite-backed store (DESIGN.md §2):
+The TPU-native reimagining of SQLcached's SQLite-backed store (DESIGN.md
+§2): storage is struct-of-arrays with a validity bitmap; every operation
+is a *pure function* ``(state, ...) -> (state, result)`` so the daemon can
+jit + donate it and thread it through pjit programs; slot allocation
+unifies the free list with LRU eviction (one ``top_k``); a logical clock
+stamps ``_created`` / ``_accessed`` and drives the paper's three automatic
+expiry conditions (§4.3, :func:`expire`).
 
-- storage is struct-of-arrays with a validity bitmap — no pointers, no
-  B-trees; every query is a vectorized masked scan (VPU-friendly, jit-able
-  with fixed shapes);
-- every operation is a *pure function* ``(state, ...) -> (state, result)``
-  so the daemon can jit + donate it and thread it through pjit programs;
-- slot allocation unifies the free list with LRU eviction: one ``top_k``
-  over ``where(valid, _accessed, -1)`` picks invalid rows first, then the
-  least-recently-used valid rows (the paper's "number of records" expiry
-  becomes the allocator itself);
-- a logical clock stamps ``_created`` / ``_accessed``; the paper's three
-  automatic expiry conditions (age / row count / op count, §4.3) are
-  implemented in :func:`expire`.
+Query execution is a two-stage affair since the planner split:
 
-Row results of SELECT are fixed-size (``schema.max_select``) with an exact
-``count`` — the host slices; payload gathers stay on device for zero-copy
-hand-off to compute (e.g. paged attention reading KV blocks).
+1. ``core/planner.plan_where`` lowers the WHERE AST into a Plan —
+   IndexProbe | FusedScan | GenericScan (memoized per schema × AST; the
+   prepared-statement planner cache).
+2. ``select`` / ``update`` / ``delete`` / ``aggregate`` here are thin
+   *plan executors*: they route the plan to the matching device program —
+   a hash-bucket probe (kernels/hashidx), the fused Pallas relscan
+   (kernels/relscan), or the generic jnp masked scan — and share one
+   epilogue (touch, compaction contract, clock tick).
+
+Index-probe execution is O(bucket_cap), independent of table capacity.
+Because a bucket can overflow (``stale``), every probing executor embeds
+its fallback scan behind a device-side ``lax.cond`` on the index's stale
+flag — plan revalidation costs zero host syncs. Index maintenance is
+fused into the mutating executors: ``insert`` re-homes each written slot
+(clearing the overwritten row's entry via its still-readable old key —
+the kvpool page-table trick), ``update`` rebuilds any index whose column
+it sets, and DELETE/FLUSH/EXPIRE touch nothing (dead entries are masked
+by the validity gather at probe time and reclaimed on slot reuse).
+
+Callers may pass ``plan=`` explicitly to force a route (the parity suite
+and the daemon's batched executors do); a forced IndexProbe skips the
+staleness cond and trusts the caller.
+
+Row results of SELECT are fixed-size (``schema.max_select``) with an
+exact ``count`` — the host slices; payload gathers stay on device for
+zero-copy hand-off to compute (e.g. paged attention reading KV blocks).
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Mapping, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import planner as PL
 from repro.core import predicate as P
-from repro.core.schema import RESERVED_COLUMNS, SQL_TYPES, TableSchema
+from repro.core.schema import RESERVED_COLUMNS, TableSchema
+from repro.kernels import hashidx as HX
 from repro.kernels import ops as OPS
 
 CLOCK_DTYPE = jnp.int64 if jax.config.read("jax_enable_x64") else jnp.int32
@@ -45,12 +65,15 @@ def init_state(schema: TableSchema) -> dict:
     payloads = {
         p.name: jnp.zeros((cap,) + p.shape, dtype=p.dtype) for p in schema.payloads
     }
+    nb = HX.n_buckets_for(cap)
+    indexes = {c: HX.empty_index(nb) for c in schema.indexes}
     return {
         "cols": cols,
         "payloads": payloads,
         "valid": jnp.zeros((cap,), dtype=bool),
         "clock": jnp.zeros((), dtype=jnp.int32),
         "ops": jnp.zeros((), dtype=jnp.int32),
+        "indexes": indexes,
     }
 
 
@@ -85,7 +108,8 @@ def insert(
 ):
     """Insert a batch of rows. ``values[col]`` has shape [n]; all columns
     not supplied default to 0. ``row_mask`` ([n] bool) lets a fixed-width
-    executor insert fewer than n rows (padding support).
+    executor insert fewer than n rows (padding support). Hash-index
+    maintenance for ``schema.indexes`` is fused in (O(batch x bucket_cap)).
 
     Returns (state, slots[n], evicted_count)."""
     payloads = payloads or {}
@@ -128,7 +152,19 @@ def insert(
             pls[p.name] = pls[p.name].at[tgt].set(pv, mode="drop")
 
     valid = state["valid"].at[tgt].set(True, mode="drop")
-    new_state = dict(state, cols=cols, payloads=pls, valid=valid)
+    indexes = state.get("indexes", {})
+    if schema.indexes and indexes:
+        row_mask_b = jnp.asarray(row_mask, dtype=bool)
+        upd = {}
+        for ixc in schema.indexes:
+            # old keys come from the PRE-insert column (they name the
+            # bucket holding the overwritten slot's entry)
+            upd[ixc] = HX.insert_update(
+                indexes[ixc], slots, state["cols"][ixc][slots],
+                cols[ixc][slots], row_mask_b, valid)
+        indexes = dict(indexes, **upd)
+    new_state = dict(state, cols=cols, payloads=pls, valid=valid,
+                     indexes=indexes)
     new_state = _tick(new_state)
     # only count evictions of rows we actually overwrote
     evicted = jnp.sum((state["valid"][slots] & row_mask).astype(jnp.int32))
@@ -140,15 +176,17 @@ def _match_mask(schema: TableSchema, state: dict, where: P.Node | None, params):
     return mask & state["valid"]
 
 
-@functools.lru_cache(maxsize=4096)
+def plan_for(schema: TableSchema, where, ranked: bool = False) -> PL.Plan:
+    """The memoized plan for one WHERE against this schema (``ranked``
+    marks ORDER BY statements — the planner sends those to the scan)."""
+    return PL.plan_where(schema, where, ranked)
+
+
 def _fused_plan(schema: TableSchema, where) -> P.FusedScan | None:
-    """Classify a WHERE clause against this schema's int32 columns (the
-    relscan-fusable set: INT/TEXT user columns + the reserved clocks)."""
-    int_cols = frozenset(
-        c.name for c in schema.columns
-        if np.dtype(SQL_TYPES[c.sql_type.upper()]) == np.int32
-    ) | frozenset(RESERVED_COLUMNS)
-    return P.classify_fusable(where, int_cols)
+    """Legacy shim: the <=4-term fused-conjunction view of the plan (what
+    ``classify_fusable`` used to return) — still used by the batched-DML
+    eq-shape detection and the parity suites."""
+    return PL.as_fused(PL.plan_where(schema, where))
 
 
 def _fused_scan(schema, state, plan: P.FusedScan, params, *, limit,
@@ -177,6 +215,93 @@ def _compact(mask: jax.Array, limit: int, capacity: int):
     return compact(mask, limit=min(limit, capacity))
 
 
+# ------------------------------------------------------ index-probe pieces
+
+def index_fresh(state: dict, column: str) -> jax.Array:
+    """Scalar bool: the hash index on ``column`` has never overflowed (a
+    probe is complete). Executors cond their scan fallback on this."""
+    return state["indexes"][column]["stale"] == 0
+
+
+def _int_values(terms, params) -> bool:
+    """Trace-time check: every term's runtime value has an integer dtype
+    (a float bound to an int column must keep exact-compare semantics and
+    demotes the plan to its scan fallback)."""
+    return all(
+        jnp.issubdtype(jnp.result_type(t.resolve(params)), jnp.integer)
+        for t in terms
+    )
+
+
+def _probe_candidates(schema, state, plan: PL.IndexProbe, params, *,
+                      mode=None, extra_mask=None):
+    """One hash-bucket probe + candidate verification.
+
+    Returns (safe [bucket_cap] clipped row ids, ok [bucket_cap] match
+    bits): ``ok`` ANDs the bucket hit (lane occupied, stored key equal),
+    the live key column (belt and braces for the entry invariant), the
+    validity bitmap and every residual term — all gathers over one
+    bucket, O(bucket_cap) regardless of capacity."""
+    cap = schema.capacity
+    idx = state["indexes"][plan.column]
+    qv = jnp.asarray(plan.key.resolve(params), jnp.int32)
+    cand, hit = OPS.hash_probe(idx["rid"], idx["key"], qv[None], mode=mode)
+    cand, hit = cand[0], hit[0]
+    safe = jnp.clip(cand, 0, cap - 1)
+    ok = hit & state["valid"][safe] & (state["cols"][plan.column][safe] == qv)
+    for t in plan.residual:
+        tv = jnp.asarray(t.resolve(params), jnp.int32)
+        ok = ok & P._CMP[t.op](state["cols"][t.col][safe], tv)
+    if extra_mask is not None:
+        ok = ok & jnp.broadcast_to(extra_mask, (cap,))[safe]
+    return safe, ok
+
+
+def _probe_ids(safe, ok, limit: int, capacity: int):
+    """Candidate matches -> the scan compaction contract: first ``limit``
+    matching row ids in ROW ORDER (0-padded) + presence + count. A fresh
+    probe has count <= bucket_cap by construction (one key, one bucket)."""
+    count = jnp.sum(ok.astype(jnp.int32))
+    ordered = jnp.sort(jnp.where(ok, safe, capacity))
+    if limit <= ordered.shape[0]:
+        ids = ordered[:limit]
+    else:
+        ids = jnp.concatenate([
+            ordered,
+            jnp.full((limit - ordered.shape[0],), capacity, jnp.int32)])
+    present = jnp.arange(limit, dtype=jnp.int32) < count
+    return jnp.where(present, ids, 0).astype(jnp.int32), present, count
+
+
+def _route(schema, where, params, plan):
+    """Resolve the executor's route: caller-forced plan wins verbatim;
+    otherwise the planner's choice, demoted to its fallback when a probe
+    term is bound to a non-integer runtime value (trace-time)."""
+    if plan is not None:
+        return plan, True
+    route = plan_for(schema, where)
+    if isinstance(route, PL.IndexProbe) and not _int_values(
+            (route.key,) + route.residual, params):
+        route = route.fallback
+    return route, False
+
+
+def build_index(schema: TableSchema, state: dict, column: str | None = None,
+                *, mode=None) -> dict:
+    """(Re)build the hash index(es) from the current column/validity state
+    — the bulk path behind CREATE-with-data, UPDATEs that rewrite an
+    indexed column, and explicit recovery from a stale (overflowed)
+    index. Pure function of the state; jit/fuse freely."""
+    cols = [column] if column is not None else list(schema.indexes)
+    indexes = dict(state["indexes"])
+    nb = HX.n_buckets_for(schema.capacity)
+    for c in cols:
+        rid, key, overflow = OPS.hash_build(
+            state["cols"][c], state["valid"], n_buckets=nb, mode=mode)
+        indexes[c] = {"rid": rid, "key": key, "stale": overflow}
+    return dict(state, indexes=indexes)
+
+
 def select(
     schema: TableSchema,
     state: dict,
@@ -191,26 +316,62 @@ def select(
     touch: bool = True,
     active: jax.Array | None = None,
     fused_mode: str | None = None,
+    probe_mode: str | None = None,
+    plan: PL.Plan | None = None,
 ):
-    """SELECT. Returns (state, result dict).
+    """SELECT, executed by plan. Returns (state, result dict).
 
     result = {"count": scalar, "rows": {col: [limit]}, "present": bool[limit],
               "payloads": {name: [limit, *shape]}}
 
     ``active`` (scalar bool) no-ops the whole statement — count 0, nothing
     present, no touch — so the daemon's micro-batch executor can pad its
-    scan to a fixed bucket without side effects.
+    scan to a fixed bucket without side effects. ``plan`` forces a route
+    (see module docstring); ``fused_mode``/``probe_mode`` pin the kernel
+    implementation (the vmapped batch executor uses ``ref``).
+
+    Every route returns through one epilogue: (new ``_accessed`` column,
+    ids, present, count) — which is also what lets the index-probe route
+    and its staleness-fallback scan share a ``lax.cond``.
     """
     limit = schema.max_select if limit is None else min(limit, schema.max_select)
-    fused = None
-    if order_by is None:
-        plan = _fused_plan(schema, where)
-        if plan is not None:
-            fused = _fused_scan(schema, state, plan, params, limit=limit,
+    cap = schema.capacity
+    now = state["clock"].astype(jnp.int32)
+    accessed = state["cols"]["_accessed"]
+
+    def finish_mask(mask, idx, present, count):
+        if active is not None:
+            count = jnp.where(active, count, 0)
+            present = present & active
+            mask = mask & active  # gates the touch below
+        acc = jnp.where(mask, now, accessed) if touch else accessed
+        return acc, idx.astype(jnp.int32), present, count
+
+    def scan_route(r):
+        fused = None
+        if isinstance(r, PL.FusedScan):
+            fused = _fused_scan(schema, state, r.scan, params, limit=limit,
                                 mode=fused_mode)
-    if fused is not None:
-        idx, present, mask, count = fused
-    elif order_by is not None:
+        if fused is not None:
+            idx, present, mask, count = fused
+        else:
+            mask = _match_mask(schema, state, where, params)
+            count = jnp.sum(mask.astype(jnp.int32))
+            idx, present = _compact(mask, limit, cap)
+        return finish_mask(mask, idx, present, count)
+
+    def probe_route(r):
+        safe, ok = _probe_candidates(schema, state, r, params,
+                                     mode=probe_mode)
+        if active is not None:
+            ok = ok & active
+        ids, present, count = _probe_ids(safe, ok, limit, cap)
+        acc = (accessed.at[jnp.where(ok, safe, cap)].set(now, mode="drop")
+               if touch else accessed)
+        return acc, ids, present, count
+
+    if order_by is not None:
+        # ranked reads stay on the scan path: top_k needs the full mask
         mask = _match_mask(schema, state, where, params)
         count = jnp.sum(mask.astype(jnp.int32))
         key = state["cols"][order_by]
@@ -225,24 +386,26 @@ def select(
             key = jnp.where(mask, key, -jnp.inf)
         _, idx = jax.lax.top_k(key, limit)
         present = mask[idx]
-        idx = idx.astype(jnp.int32)
+        acc, idx, present, count = finish_mask(mask, idx, present, count)
     else:
-        mask = _match_mask(schema, state, where, params)
-        count = jnp.sum(mask.astype(jnp.int32))
-        idx, present = _compact(mask, limit, schema.capacity)
-    if active is not None:
-        count = jnp.where(active, count, 0)
-        present = present & active
-        mask = mask & active  # gates the touch below
+        route, forced = _route(schema, where, params, plan)
+        if isinstance(route, PL.IndexProbe):
+            if forced:
+                acc, idx, present, count = probe_route(route)
+            else:
+                acc, idx, present, count = jax.lax.cond(
+                    index_fresh(state, route.column),
+                    lambda _: probe_route(route),
+                    lambda _: scan_route(route.fallback),
+                    None)
+        else:
+            acc, idx, present, count = scan_route(route)
+
     columns = tuple(columns) if columns is not None else schema.column_names
     rows = {c: state["cols"][c][idx] for c in columns}
     pls = {p: state["payloads"][p][idx] for p in with_payloads}
     if touch:
-        cols = dict(state["cols"])
-        now = state["clock"].astype(jnp.int32)
-        touched = jnp.where(mask, now, cols["_accessed"])
-        cols["_accessed"] = touched
-        state = dict(state, cols=cols)
+        state = dict(state, cols=dict(state["cols"], _accessed=acc))
     state = _tick(state)
     return state, {
         "count": count,
@@ -261,47 +424,129 @@ def update(
     params: Sequence[Any] = (),
     *,
     extra_mask: jax.Array | None = None,
+    plan: PL.Plan | None = None,
+    probe_mode: str | None = None,
+    maintain_indexes: bool = True,
 ):
-    """UPDATE t SET col = expr ... WHERE pred. Returns (state, n_updated).
-    ``extra_mask`` gates the match (micro-batch padding support)."""
-    plan = _fused_plan(schema, where)
-    fused = None
-    if plan is not None:
-        fused = _fused_scan(schema, state, plan, params, limit=1,
-                            want_ids=False)
-    if fused is not None:
-        mask = fused[2]
+    """UPDATE t SET col = expr ... WHERE pred, executed by plan. Returns
+    (state, n_updated). ``extra_mask`` gates the match (micro-batch
+    padding support). The probe route evaluates SET expressions in
+    candidate space (per-bucket gathers + scatters, never a full-column
+    where). An UPDATE that writes an indexed column rebuilds that index
+    in the same dispatch (``maintain_indexes=False`` lets a batched
+    executor defer ONE rebuild to after its scan)."""
+    cap = schema.capacity
+    set_items = [("_ttl" if name.upper() == "TTL" else name, expr)
+                 for name, expr in set_exprs.items()]
+
+    def scan_route(r):
+        fused = None
+        if isinstance(r, PL.FusedScan):
+            fused = _fused_scan(schema, state, r.scan, params, limit=1,
+                                want_ids=False)
+        mask = (fused[2] if fused is not None
+                else _match_mask(schema, state, where, params))
+        if extra_mask is not None:
+            mask = mask & extra_mask
+        cols = dict(state["cols"])
+        for tgt, expr in set_items:
+            spec_dtype = cols[tgt].dtype
+            newv = P.eval_expr(expr, state["cols"], params)
+            newv = jnp.broadcast_to(jnp.asarray(newv, dtype=spec_dtype),
+                                    (cap,))
+            cols[tgt] = jnp.where(mask, newv, cols[tgt])
+        return cols, jnp.sum(mask.astype(jnp.int32))
+
+    def probe_route(r):
+        safe, ok = _probe_candidates(schema, state, r, params,
+                                     mode=probe_mode,
+                                     extra_mask=extra_mask)
+        gathered = {c: v[safe] for c, v in state["cols"].items()}
+        tgt_rows = jnp.where(ok, safe, cap)
+        cols = dict(state["cols"])
+        for tgt, expr in set_items:
+            spec_dtype = cols[tgt].dtype
+            newv = P.eval_expr(expr, gathered, params)
+            newv = jnp.broadcast_to(jnp.asarray(newv, dtype=spec_dtype),
+                                    (safe.shape[0],))
+            cols[tgt] = cols[tgt].at[tgt_rows].set(newv, mode="drop")
+        return cols, jnp.sum(ok.astype(jnp.int32))
+
+    route, forced = _route(schema, where, params, plan)
+    if isinstance(route, PL.IndexProbe):
+        if forced:
+            cols, n = probe_route(route)
+        else:
+            cols, n = jax.lax.cond(
+                index_fresh(state, route.column),
+                lambda _: probe_route(route),
+                lambda _: scan_route(route.fallback),
+                None)
     else:
-        mask = _match_mask(schema, state, where, params)
-    if extra_mask is not None:
-        mask = mask & extra_mask
-    cols = dict(state["cols"])
-    for name, expr in set_exprs.items():
-        tgt = "_ttl" if name.upper() == "TTL" else name
-        spec_dtype = cols[tgt].dtype
-        newv = P.eval_expr(expr, state["cols"], params)
-        newv = jnp.broadcast_to(jnp.asarray(newv, dtype=spec_dtype), (schema.capacity,))
-        cols[tgt] = jnp.where(mask, newv, cols[tgt])
-    n = jnp.sum(mask.astype(jnp.int32))
+        cols, n = scan_route(route)
     state = dict(state, cols=cols)
+    if maintain_indexes and schema.indexes:
+        written = {tgt for tgt, _ in set_items}
+        for ixc in schema.indexes:
+            if ixc in written:
+                state = build_index(schema, state, ixc, mode=probe_mode)
     state = _tick(state)
     return state, n
 
 
-def _delete_mask(schema, state, where, params, *, want_ids, limit):
-    plan = _fused_plan(schema, where)
-    fused = None
-    if plan is not None:
-        fused = _fused_scan(schema, state, plan, params,
-                            limit=limit, want_ids=want_ids)
-    if fused is not None:
-        return fused
-    mask = _match_mask(schema, state, where, params)
-    n = jnp.sum(mask.astype(jnp.int32))
-    if not want_ids:
-        return None, None, mask, n
-    ids, present = _compact(mask, limit, schema.capacity)
-    return ids, present, mask, n
+def _delete_core(schema, state, where, params, *, want_ids, limit,
+                 extra_mask=None, plan=None, probe_mode=None):
+    """Shared DELETE executor: returns (valid', n, ids, present) — ids and
+    present are None when ``want_ids`` is False. Probe route flips only
+    the candidate rows' validity bits (O(bucket_cap) scatter)."""
+    cap = schema.capacity
+    no_ids = (jnp.zeros((limit,), jnp.int32),
+              jnp.zeros((limit,), dtype=bool))
+
+    def scan_route(r):
+        # ids must reflect the FINAL (extra_mask-gated) match, identically
+        # to probe_route, so the in-kernel compaction serves them only
+        # when no extra_mask applies afterwards
+        kernel_ids = want_ids and extra_mask is None
+        fused = None
+        if isinstance(r, PL.FusedScan):
+            fused = _fused_scan(schema, state, r.scan, params, limit=limit,
+                                want_ids=kernel_ids)
+        if fused is not None:
+            ids, present, mask, _ = fused
+        else:
+            mask = _match_mask(schema, state, where, params)
+            ids = present = None
+        if extra_mask is not None:
+            mask = mask & extra_mask
+        n = jnp.sum(mask.astype(jnp.int32))
+        if want_ids and ids is None:
+            ids, present = _compact(mask, limit, cap)
+        if not want_ids:
+            ids, present = no_ids
+        return state["valid"] & ~mask, n, ids, present
+
+    def probe_route(r):
+        safe, ok = _probe_candidates(schema, state, r, params,
+                                     mode=probe_mode,
+                                     extra_mask=extra_mask)
+        n = jnp.sum(ok.astype(jnp.int32))
+        valid = state["valid"].at[jnp.where(ok, safe, cap)].set(
+            False, mode="drop")
+        ids, present = (_probe_ids(safe, ok, limit, cap)[:2] if want_ids
+                        else no_ids)
+        return valid, n, ids, present
+
+    route, forced = _route(schema, where, params, plan)
+    if isinstance(route, PL.IndexProbe):
+        if forced:
+            return probe_route(route)
+        return jax.lax.cond(
+            index_fresh(state, route.column),
+            lambda _: probe_route(route),
+            lambda _: scan_route(route.fallback),
+            None)
+    return scan_route(route)
 
 
 def delete(
@@ -311,17 +556,20 @@ def delete(
     params: Sequence[Any] = (),
     *,
     extra_mask: jax.Array | None = None,
+    plan: PL.Plan | None = None,
+    probe_mode: str | None = None,
 ):
     """DELETE FROM t WHERE pred — flips validity bits only; payload bytes
     never move (the 0.2 ms-vs-1000 ms effect from the paper's Table 2).
     ``extra_mask`` (scalar or [cap] bool) further gates the match — the
-    daemon's micro-batch executor uses it to no-op padded statements."""
-    _, _, mask, n = _delete_mask(schema, state, where, params,
-                                 want_ids=False, limit=1)
-    if extra_mask is not None:
-        mask = mask & extra_mask
-        n = jnp.sum(mask.astype(jnp.int32))
-    state = dict(state, valid=state["valid"] & ~mask)
+    daemon's micro-batch executor uses it to no-op padded statements.
+    Hash indexes need no maintenance here: dead entries are masked by the
+    validity gather at probe time."""
+    valid, n, _, _ = _delete_core(schema, state, where, params,
+                                  want_ids=False, limit=1,
+                                  extra_mask=extra_mask, plan=plan,
+                                  probe_mode=probe_mode)
+    state = dict(state, valid=valid)
     state = _tick(state)
     return state, n
 
@@ -363,15 +611,18 @@ def delete_returning(
     params: Sequence[Any] = (),
     *,
     limit: int | None = None,
+    plan: PL.Plan | None = None,
+    probe_mode: str | None = None,
 ):
     """DELETE that also reports which rows went: returns
     (state, n, row_ids[limit], present[limit]). Row ids feed incremental
     index maintenance (kvpool.page_table_update) — the metadata columns of
     deleted rows stay intact, so callers can still read slot/pos there."""
     limit = schema.max_select if limit is None else limit
-    ids, present, mask, n = _delete_mask(schema, state, where, params,
-                                         want_ids=True, limit=limit)
-    state = dict(state, valid=state["valid"] & ~mask)
+    valid, n, ids, present = _delete_core(schema, state, where, params,
+                                          want_ids=True, limit=limit,
+                                          plan=plan, probe_mode=probe_mode)
+    state = dict(state, valid=valid)
     state = _tick(state)
     return state, n, ids, present
 
@@ -397,14 +648,49 @@ def aggregate(
     column: str | None,
     where: P.Node | None,
     params: Sequence[Any] = (),
+    *,
+    plan: PL.Plan | None = None,
+    fused_mode: str | None = None,
+    probe_mode: str | None = None,
 ):
-    """COUNT/SUM/MIN/MAX/AVG over the matching rows. Returns (state, value)."""
-    mask = _match_mask(schema, state, where, params)
+    """COUNT/SUM/MIN/MAX/AVG over the matching rows, executed by plan
+    (an indexed eq WHERE aggregates over one bucket's candidates instead
+    of a full column). Returns (state, value)."""
     agg = agg.upper()
-    if agg == "COUNT" or column is None:
-        val = _AGGS["COUNT"](None, mask)
+
+    def reduce(vals, mask):
+        if agg == "COUNT" or column is None:
+            return _AGGS["COUNT"](None, mask)
+        return _AGGS[agg](vals, mask)
+
+    def scan_route(r):
+        fused = None
+        if isinstance(r, PL.FusedScan):
+            fused = _fused_scan(schema, state, r.scan, params, limit=1,
+                                want_ids=False, mode=fused_mode)
+        mask = (fused[2] if fused is not None
+                else _match_mask(schema, state, where, params))
+        return reduce(state["cols"][column] if column is not None else None,
+                      mask)
+
+    def probe_route(r):
+        safe, ok = _probe_candidates(schema, state, r, params,
+                                     mode=probe_mode)
+        return reduce(state["cols"][column][safe]
+                      if column is not None else None, ok)
+
+    route, forced = _route(schema, where, params, plan)
+    if isinstance(route, PL.IndexProbe):
+        if forced:
+            val = probe_route(route)
+        else:
+            val = jax.lax.cond(
+                index_fresh(state, route.column),
+                lambda _: probe_route(route),
+                lambda _: scan_route(route.fallback),
+                None)
     else:
-        val = _AGGS[agg](state["cols"][column], mask)
+        val = scan_route(route)
     state = _tick(state)
     return state, val
 
@@ -456,9 +742,14 @@ def expire(schema: TableSchema, state: dict):
 
 
 def flush(schema: TableSchema, state: dict):
-    """Drop every row (memcached's only bulk invalidation mode)."""
+    """Drop every row (memcached's only bulk invalidation mode). Hash
+    indexes reset to empty — an empty table's index is trivially exact,
+    so FLUSH also recovers from a stale (overflowed) index."""
     n = jnp.sum(state["valid"].astype(jnp.int32))
     state = dict(state, valid=jnp.zeros_like(state["valid"]))
+    if schema.indexes:
+        nb = HX.n_buckets_for(schema.capacity)
+        state["indexes"] = {c: HX.empty_index(nb) for c in schema.indexes}
     state = _tick(state)
     return state, n
 

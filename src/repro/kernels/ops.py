@@ -12,6 +12,7 @@ import os
 
 import jax
 
+from repro.kernels import hashidx as _hashidx
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.paged_attention import paged_attention as _paged
@@ -64,6 +65,30 @@ def predicate_scan(cols, valid, vals, *, ops, limit, want_ids=True,
                                want_ids=want_ids)
     return _relscan(tuple(cols), valid, vals, ops=ops, limit=limit,
                     interpret=(mode == "interpret"), want_ids=want_ids, **kw)
+
+
+def hash_build(keys, valid, *, n_buckets, mode=None):
+    """Bulk (re)build of a bucketed hash index over one int32 key column.
+    Returns (rid [nb, cap_b], key [nb, cap_b], overflow scalar) — see
+    kernels/hashidx. ``mode`` overrides REPRO_KERNELS (executors that
+    rebuild inside vmapped/batched dispatches pin ``ref``)."""
+    mode = mode or _mode()
+    if mode == "ref":
+        return _hashidx.build_ref(keys, valid, n_buckets=n_buckets)
+    return _hashidx.build(keys, valid, n_buckets=n_buckets,
+                          interpret=(mode == "interpret"))
+
+
+def hash_probe(rid, key, qkeys, *, mode=None):
+    """Batched hash-index probe: one bucket tile per query key. Returns
+    (cand [w, cap_b] row ids, hit [w, cap_b]) — see kernels/hashidx.
+    ``mode`` as in :func:`hash_build` (the vmapped micro-batch executor
+    pins ``ref``: batched gathers ARE the fused form there)."""
+    mode = mode or _mode()
+    if mode == "ref":
+        return _hashidx.probe_ref(rid, key, qkeys)
+    return _hashidx.probe(rid, key, qkeys,
+                          interpret=(mode == "interpret"))
 
 
 def mamba2_scan(x, dt, dA, B, C, **kw):

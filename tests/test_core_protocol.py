@@ -83,6 +83,22 @@ def test_delete_where_over_wire(client):
     assert client.execute("SELECT COUNT(*) FROM wire")["value"] == 5
 
 
+def test_explain_over_wire(client):
+    client.execute(
+        "CREATE TABLE exw (k INT, w INT, INDEX(k)) CAPACITY 64")
+    r = client.execute("EXPLAIN SELECT w FROM exw WHERE k = ?")
+    # the VALUE row is JSON: plan selection observable from a socket
+    assert r["value"]["plan"] == "index-probe"
+    assert r["value"]["index"] == "k"
+    r = client.execute("EXPLAIN SELECT w FROM exw WHERE w = ?")
+    assert r["value"]["plan"] == "fused-scan"
+    # indexed tables answer the probed shape over the wire too
+    client.execute("INSERT INTO exw (k, w) VALUES (?, ?)", [1, 10])
+    client.execute("INSERT INTO exw (k, w) VALUES (?, ?)", [2, 20])
+    r = client.execute("SELECT w FROM exw WHERE k = ?", [2])
+    assert r["count"] == 1 and r["rows"][0]["w"] == 20
+
+
 def test_error_reporting(client):
     with pytest.raises(RuntimeError, match="server error"):
         client.execute("SELECT a FROM no_such_table")

@@ -61,6 +61,7 @@ def test_delete_expire_flush_drop():
     assert isinstance(S.parse("DELETE FROM t WHERE u = 3"), S.Delete)
     assert isinstance(S.parse("EXPIRE t"), S.Expire)
     assert isinstance(S.parse("FLUSH t"), S.Flush)
+    assert isinstance(S.parse("REINDEX t"), S.Reindex)
     assert isinstance(S.parse("DROP TABLE t"), S.DropTable)
 
 
@@ -112,6 +113,29 @@ def test_statements_are_hashable():
     a = S.parse("SELECT a FROM t WHERE a = ?")
     b = S.parse("SELECT a FROM t WHERE a = ?")
     assert a == b and hash(a) == hash(b)
+
+
+def test_create_table_indexes():
+    st = S.parse("CREATE TABLE t (a INT, INDEX(a), b TEXT, INDEX(b)) "
+                 "CAPACITY 64")
+    assert st.columns == (("a", "INT"), ("b", "TEXT"))
+    assert st.indexes == ("a", "b")
+    # a column legitimately named `index` still parses as a column
+    st = S.parse("CREATE TABLE t (index INT)")
+    assert st.columns == (("index", "INT"),) and st.indexes == ()
+
+
+def test_explain_statement():
+    st = S.parse("EXPLAIN SELECT a FROM t WHERE a = ?")
+    assert isinstance(st, S.Explain) and isinstance(st.inner, S.Select)
+    st = S.parse("EXPLAIN DELETE FROM t WHERE a = 1")
+    assert isinstance(st.inner, S.Delete)
+    st = S.parse("EXPLAIN FLUSH t")
+    assert isinstance(st.inner, S.Flush)
+    with pytest.raises(S.SQLError):
+        S.parse("EXPLAIN")
+    with pytest.raises(S.SQLError):
+        S.parse("EXPLAIN EXPLAIN SELECT a FROM t")
 
 
 def test_negative_numbers_and_floats():

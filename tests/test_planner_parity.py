@@ -1,0 +1,303 @@
+"""Planner/executor parity: the three plan routes — index-probe, fused
+relscan and generic jnp scan — must return identical rows/counts for any
+statement they can all execute, across randomized insert/delete/update
+interleavings, TTL-expired rows, and stale-index fallbacks.
+
+The forced-``plan=`` hook in the table executors is the test lever: one
+state, three routes, bit-equal results.
+"""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core import planner as PL
+from repro.core import predicate as P
+from repro.core import table as T
+from repro.core.daemon import SQLCached
+from repro.core.schema import ExpiryPolicy, make_schema
+
+
+def mk(capacity=192, max_select=32, indexes=("k",), ttl=0):
+    return make_schema(
+        "t",
+        [("k", "INT"), ("w", "INT"), ("f", "FLOAT")],
+        capacity=capacity,
+        max_select=max_select,
+        expiry=ExpiryPolicy(ttl=ttl),
+        indexes=indexes,
+    )
+
+
+def _forced_plans(sch, where):
+    """The same WHERE as all three plans (probe requires an indexed eq)."""
+    plan = PL.plan_where(sch, where)
+    assert isinstance(plan, PL.IndexProbe), plan
+    fused = PL.as_fused(plan)
+    out = [plan, PL.GenericScan()]
+    if fused is not None:
+        out.insert(1, PL.FusedScan(fused))
+    return out
+
+
+WHERES = {
+    "eq": (P.BinOp("=", P.Col("k"), P.Param(0)), (3,)),
+    "eq_const": (P.BinOp("=", P.Col("k"), P.Const(5)), ()),
+    "eq_plus_residual": (
+        P.And(P.BinOp("=", P.Col("k"), P.Param(0)),
+              P.BinOp(">=", P.Col("w"), P.Param(1))), (2, 10)),
+    "eq_plus_range": (
+        P.And(P.BinOp("=", P.Col("k"), P.Param(0)),
+              P.Between(P.Col("w"), P.Param(1), P.Param(2))), (1, 5, 40)),
+}
+
+
+def _random_state(sch, rng, n_ops=8, ttl=False):
+    """A table state after a random insert/delete/update interleaving
+    (plans forced OFF the index here would defeat the point: mutations go
+    through the real executors, so index maintenance is exercised)."""
+    stt = T.init_state(sch)
+    for _ in range(n_ops):
+        op = rng.integers(0, 4)
+        if op <= 1:  # insert (weighted: tables need rows)
+            m = int(rng.integers(5, 30))
+            stt, _, _ = T.insert(
+                sch, stt,
+                {"k": jnp.asarray(rng.integers(0, 8, m), jnp.int32),
+                 "w": jnp.asarray(rng.integers(0, 60, m), jnp.int32),
+                 "f": jnp.asarray(rng.standard_normal(m), jnp.float32)},
+                ttl=int(rng.integers(1, 6)) if ttl else 0)
+        elif op == 2:  # delete a key's rows
+            stt, _ = T.delete(sch, stt,
+                              P.BinOp("=", P.Col("k"), P.Const(
+                                  int(rng.integers(0, 8)))))
+        else:  # update w for one key
+            stt, _ = T.update(sch, stt,
+                              P.BinOp("=", P.Col("k"), P.Const(
+                                  int(rng.integers(0, 8)))),
+                              {"w": P.BinOp("+", P.Col("w"), P.Const(7))})
+    if ttl:
+        # age the clock so some per-row TTLs have lapsed, then expire
+        st = dict(stt)
+        st["clock"] = st["clock"] + 4
+        stt, _ = T.expire(sch, st)
+    return stt
+
+
+@pytest.mark.parametrize("name", sorted(WHERES))
+@pytest.mark.parametrize("seed", [0, 1, 2])
+@pytest.mark.parametrize("ttl", [False, True])
+def test_select_three_routes_agree(name, seed, ttl):
+    where, params = WHERES[name]
+    sch = mk(ttl=1 if ttl else 0)
+    stt = _random_state(sch, np.random.default_rng(seed), ttl=ttl)
+    results = []
+    for plan in _forced_plans(sch, where):
+        _, res = T.select(sch, stt, where, params, touch=False, plan=plan)
+        results.append(res)
+    base = results[0]
+    for other in results[1:]:
+        assert int(base["count"]) == int(other["count"])
+        np.testing.assert_array_equal(np.asarray(base["row_ids"]),
+                                      np.asarray(other["row_ids"]))
+        np.testing.assert_array_equal(np.asarray(base["present"]),
+                                      np.asarray(other["present"]))
+
+
+@pytest.mark.parametrize("name", ["eq", "eq_plus_residual"])
+@pytest.mark.parametrize("seed", [3, 4])
+def test_delete_three_routes_agree(name, seed):
+    where, params = WHERES[name]
+    sch = mk()
+    stt = _random_state(sch, np.random.default_rng(seed))
+    outs = []
+    for plan in _forced_plans(sch, where):
+        new, n = T.delete(sch, stt, where, params, plan=plan)
+        outs.append((int(n), np.asarray(new["valid"])))
+    for n, valid in outs[1:]:
+        assert n == outs[0][0]
+        np.testing.assert_array_equal(valid, outs[0][1])
+
+
+@pytest.mark.parametrize("seed", [5, 6])
+def test_update_and_aggregate_routes_agree(seed):
+    where, params = WHERES["eq"]
+    sch = mk()
+    stt = _random_state(sch, np.random.default_rng(seed))
+    sets = {"w": P.BinOp("*", P.Col("w"), P.Const(2))}
+    outs = [T.update(sch, stt, where, sets, params, plan=plan)
+            for plan in _forced_plans(sch, where)]
+    for new, n in outs[1:]:
+        assert int(n) == int(outs[0][1])
+        np.testing.assert_array_equal(np.asarray(new["cols"]["w"]),
+                                      np.asarray(outs[0][0]["cols"]["w"]))
+    for agg, col in [("COUNT", None), ("SUM", "w"), ("MIN", "w"),
+                     ("MAX", "w"), ("AVG", "w")]:
+        vals = [T.aggregate(sch, stt, agg, col, where, params, plan=plan)[1]
+                for plan in _forced_plans(sch, where)]
+        for v in vals[1:]:
+            np.testing.assert_allclose(np.asarray(vals[0]), np.asarray(v),
+                                       rtol=1e-6)
+
+
+def test_planner_routing_decisions():
+    """The planner must pick IndexProbe/FusedScan/GenericScan correctly."""
+    sch = mk()
+    eq_k = P.BinOp("=", P.Col("k"), P.Param(0))
+    eq_w = P.BinOp("=", P.Col("w"), P.Param(0))
+    assert isinstance(PL.plan_where(sch, eq_k), PL.IndexProbe)
+    assert isinstance(PL.plan_where(sch, eq_w), PL.FusedScan)
+    # range-only on the indexed column: no eq anchor -> fused scan
+    assert isinstance(PL.plan_where(sch, P.BinOp("<", P.Col("k"),
+                                                 P.Param(0))), PL.FusedScan)
+    # float column term -> generic
+    assert isinstance(PL.plan_where(sch, P.BinOp(">", P.Col("f"),
+                                                 P.Const(0.0))),
+                      PL.GenericScan)
+    # OR -> generic
+    assert isinstance(PL.plan_where(sch, P.Or(eq_k, eq_w)), PL.GenericScan)
+    # no WHERE -> generic
+    assert isinstance(PL.plan_where(sch, None), PL.GenericScan)
+    # indexed eq + 5 residual conjuncts: still a probe, fallback generic
+    big = eq_k
+    for i in range(5):
+        big = P.And(big, P.BinOp(">=", P.Col("w"), P.Const(i)))
+    plan = PL.plan_where(sch, big)
+    assert isinstance(plan, PL.IndexProbe)
+    assert isinstance(plan.fallback, PL.GenericScan)
+    _, res = T.select(sch, _random_state(sch, np.random.default_rng(9)),
+                      big, (1,), touch=False, plan=plan)
+    assert int(res["count"]) >= 0  # executes
+
+
+def test_probe_route_taken_and_float_demotes(monkeypatch):
+    """Default routing must call hash_probe for an indexed eq; a float
+    param must demote to the scan fallback (exact-compare semantics)."""
+    sch = mk()
+    stt = _random_state(sch, np.random.default_rng(1))
+    calls = []
+    real = T.OPS.hash_probe
+
+    def spy(*a, **k):
+        calls.append(1)
+        return real(*a, **k)
+
+    monkeypatch.setattr(T.OPS, "hash_probe", spy)
+    where = P.BinOp("=", P.Col("k"), P.Param(0))
+    _, res = T.select(sch, stt, where, (3,), touch=False)
+    assert calls, "indexed eq SELECT did not probe"
+    _, res_f = T.select(sch, stt, where, (1.5,), touch=False)
+    assert int(res_f["count"]) == 0  # nothing equals 1.5 exactly
+
+
+def test_stale_index_falls_back_correctly():
+    """Force >bucket_cap duplicates of one key: the insert path must set
+    the stale flag and every probe-planned executor must still return
+    scan-exact results through its lax.cond fallback."""
+    sch = mk(capacity=512, max_select=256)
+    stt = T.init_state(sch)
+    n = 200  # one key, > BUCKET_CAP (128) rows -> bucket overflow
+    stt, _, _ = T.insert(
+        sch, stt, {"k": jnp.full((n,), 7, jnp.int32),
+                   "w": jnp.arange(n, dtype=jnp.int32)})
+    assert int(stt["indexes"]["k"]["stale"]) > 0
+    where = P.BinOp("=", P.Col("k"), P.Param(0))
+    _, res = T.select(sch, stt, where, (7,), touch=False)  # un-forced
+    assert int(res["count"]) == n
+    _, res_g = T.select(sch, stt, where, (7,), touch=False,
+                        plan=PL.GenericScan())
+    np.testing.assert_array_equal(np.asarray(res["row_ids"]),
+                                  np.asarray(res_g["row_ids"]))
+    new, n_del = T.delete(sch, stt, where, (7,))
+    assert int(n_del) == n
+
+
+def test_stale_index_recovery_reindex_and_flush():
+    """A duplicate-key burst must not disable probes forever: REINDEX
+    recovers once the burst is gone, FLUSH resets outright, and EXPLAIN
+    surfaces the stale counter in between."""
+    import json
+    db = SQLCached()
+    db.execute("CREATE TABLE r (k INT, w INT, INDEX(k)) CAPACITY 512 "
+               "MAX_SELECT 256")
+    db.executemany("INSERT INTO r (k, w) VALUES (?, ?)",
+                   [(7, i) for i in range(200)])  # > bucket_cap -> stale
+    db.executemany("INSERT INTO r (k, w) VALUES (?, ?)",
+                   [(100 + i, i) for i in range(20)])
+    info = json.loads(db.execute("EXPLAIN SELECT w FROM r WHERE k = ?").value)
+    assert info["plan"] == "index-probe" and info["stale"] > 0
+    # REINDEX while the burst is live: rebuild still overflows (honest)
+    assert db.execute("REINDEX r").value > 0
+    # delete the burst, REINDEX again: probes come back
+    assert db.execute("DELETE FROM r WHERE k = ?", (7,)).count == 200
+    r = db.execute("REINDEX r")
+    assert r.count == 1 and r.value == 0
+    info = json.loads(db.execute("EXPLAIN SELECT w FROM r WHERE k = ?").value)
+    assert info["stale"] == 0
+    assert db.execute("SELECT COUNT(*) FROM r WHERE k = ?", (103,)).value == 1
+    # FLUSH resets the index with the rows
+    db.executemany("INSERT INTO r (k, w) VALUES (?, ?)",
+                   [(9, i) for i in range(200)])
+    t = db.tables["r"]
+    assert int(t.state["indexes"]["k"]["stale"]) > 0
+    db.execute("FLUSH r")
+    assert int(t.state["indexes"]["k"]["stale"]) == 0
+    db.execute("INSERT INTO r (k, w) VALUES (?, ?)", (1, 1))
+    assert db.execute("SELECT COUNT(*) FROM r WHERE k = ?", (1,)).value == 1
+
+
+def test_update_of_indexed_column_rebuilds():
+    sch = mk()
+    stt = _random_state(sch, np.random.default_rng(11))
+    where = P.BinOp("=", P.Col("k"), P.Param(0))
+    _, before = T.select(sch, stt, where, (2,), touch=False)
+    moved = int(before["count"])
+    stt2, n = T.update(sch, stt, where, {"k": P.Const(200)}, (2,))
+    assert int(n) == moved
+    assert int(stt2["indexes"]["k"]["stale"]) == 0
+    _, after_old = T.select(sch, stt2, where, (2,), touch=False)
+    _, after_new = T.select(sch, stt2, where, (200,), touch=False)
+    assert int(after_old["count"]) == 0
+    assert int(after_new["count"]) == moved
+
+
+def test_daemon_executemany_probes_match_singles():
+    """The vmapped batched probe path must agree with singleton executes
+    (rows AND aggregates), through real SQL on an indexed table."""
+    db = SQLCached()
+    db.execute("CREATE TABLE t (k INT, w INT, INDEX(k)) CAPACITY 256")
+    db.executemany("INSERT INTO t (k, w) VALUES (?, ?)",
+                   [(i % 10, i) for i in range(80)])
+    qs = [(k,) for k in (0, 3, 9, 42)]
+    batched = db.executemany("SELECT w FROM t WHERE k = ?", qs)
+    singles = [db.execute("SELECT w FROM t WHERE k = ?", q) for q in qs]
+    for b, s in zip(batched, singles):
+        assert b.count == s.count
+        assert sorted(r["w"] for r in b.rows) == \
+            sorted(r["w"] for r in s.rows)
+    agg_b = db.executemany("SELECT SUM(w) FROM t WHERE k = ?", qs)
+    agg_s = [db.execute("SELECT SUM(w) FROM t WHERE k = ?", q) for q in qs]
+    assert [r.value for r in agg_b] == [r.value for r in agg_s]
+    # batched UPDATE through the probe-in-scan path
+    upd = db.executemany("UPDATE t SET w = w + 100 WHERE k = ?",
+                         [(0,), (3,), (77,)], per_statement=True)
+    assert [r.count for r in upd] == [8, 8, 0]
+
+
+def test_explain_reports_plan_over_sql():
+    db = SQLCached()
+    db.execute("CREATE TABLE t (k INT, w INT, INDEX(k)) CAPACITY 64")
+    import json
+    r = db.execute("EXPLAIN SELECT w FROM t WHERE k = ?")
+    info = json.loads(r.value)
+    assert info["plan"] == "index-probe" and info["index"] == "k"
+    info = json.loads(db.execute(
+        "EXPLAIN SELECT w FROM t WHERE w = ?").value)
+    assert info["plan"] == "fused-scan"
+    info = json.loads(db.execute(
+        "EXPLAIN DELETE FROM t WHERE k = 1 OR w = 2").value)
+    assert info["plan"] == "generic-scan"
+    info = json.loads(db.execute(
+        "EXPLAIN SELECT w FROM t WHERE k = ? ORDER BY w").value)
+    assert info["plan"] == "generic-scan"  # ranked reads scan
+    info = json.loads(db.execute("EXPLAIN FLUSH t").value)
+    assert info["plan"] == "admin"

@@ -285,3 +285,169 @@ def test_scheduler_stop_fails_leftovers():
             await fut
 
     _run(main())
+
+
+# ------------------------------------------------ column-footprint fencing
+
+def test_shape_key_footprints():
+    db = _mkdb(rows=0)
+    sel = db.shape_key("SELECT k FROM t WHERE k = ?")
+    assert sel.reads == frozenset({"k"}) and sel.writes == frozenset()
+    agg = db.shape_key("SELECT COUNT(*) FROM t WHERE w = ?")
+    assert agg.reads == frozenset({"w"})
+    upd = db.shape_key("UPDATE t SET w = w + 1 WHERE k = ?")
+    assert upd.reads == frozenset({"k", "w"})
+    assert upd.writes == frozenset({"w"})
+    # TTL writes a reserved column -> conservative whole-table footprint
+    assert db.shape_key("UPDATE t SET TTL = 5 WHERE k = ?").writes is None
+    # INSERT/DELETE churn validity -> whole-table writes
+    assert db.shape_key("INSERT INTO t (k, w) VALUES (?, ?)").writes is None
+    assert db.shape_key("DELETE FROM t WHERE k = ?").writes is None
+    exp = db.shape_key("EXPLAIN SELECT k FROM t WHERE k = ?")
+    assert not exp.is_write and not exp.batchable
+    assert exp.reads == frozenset() and exp.writes == frozenset()
+
+
+def test_scheduler_reads_merge_across_disjoint_column_write():
+    async def main():
+        db = _mkdb()
+        sched = BatchScheduler(db)
+        await sched.start()
+        # the UPDATE writes only `w`; the second SELECT reads only `k`,
+        # so it may merge into the FIRST select group (executing before
+        # the update cannot change its result)
+        f1 = sched.submit("SELECT k FROM t WHERE k = ?", (3,))
+        f2 = sched.submit("UPDATE t SET w = 9 WHERE k = ?", (3,))
+        f3 = sched.submit("SELECT k FROM t WHERE k = ?", (4,))
+        r1, r2, r3 = await asyncio.gather(f1, f2, f3)
+        assert (r1.count, r2.count, r3.count) == (1, 1, 1)
+        assert sched.stats["max_group"] == 2  # both k-reads fused
+        await sched.stop()
+
+    _run(main())
+
+
+def test_scheduler_reads_fence_on_conflicting_column_write():
+    async def main():
+        db = _mkdb()
+        sched = BatchScheduler(db)
+        await sched.start()
+        # here the second SELECT READS w, which the UPDATE writes: it must
+        # NOT merge past the update
+        f1 = sched.submit("SELECT w FROM t WHERE k = ?", (3,))
+        f2 = sched.submit("UPDATE t SET w = 77 WHERE k = ?", (4,))
+        f3 = sched.submit("SELECT w FROM t WHERE k = ?", (4,))
+        r1, r2, r3 = await asyncio.gather(f1, f2, f3)
+        assert r1.rows[0]["w"] == 0
+        assert r3.rows[0]["w"] == 77  # saw the update
+        assert sched.stats["max_group"] == 1
+        await sched.stop()
+
+    _run(main())
+
+
+# ------------------------------------------- latency-bounded admission window
+
+class _FakeClock:
+    def __init__(self):
+        self.t = 100.0
+        self.waits: list[float] = []
+
+    def now(self) -> float:
+        return self.t
+
+
+def _windowed(db, clock, **kw):
+    """A scheduler on a fake clock whose wait primitive records the
+    timeout and advances the clock (as if nothing arrived)."""
+    sched = BatchScheduler(db, **kw)
+    sched._now = clock.now
+
+    async def fake_wait(timeout):
+        clock.waits.append(timeout)
+        clock.t += timeout  # deadline reached, no arrivals
+        sched._wake.clear()
+
+    sched._wait_for_arrivals = fake_wait
+    return sched
+
+
+def test_window_lone_statement_not_held_past_deadline():
+    async def main():
+        db = _mkdb(rows=0)
+        clock = _FakeClock()
+        sched = _windowed(db, clock, max_wait_us=500)
+        await sched.start()
+        fut = sched.submit("INSERT INTO t (k, w) VALUES (?, ?)", (1, 0))
+        res = await asyncio.wait_for(fut, timeout=10)
+        assert res.count == 1
+        # exactly one bounded wait, for (about) the whole window
+        assert len(clock.waits) == 1
+        assert clock.waits[0] == pytest.approx(500e-6)
+        assert sched.stats["window_waits"] == 1
+        await sched.stop()
+
+    _run(main())
+
+
+def test_window_collects_late_groupmates():
+    async def main():
+        db = _mkdb(rows=0)
+        clock = _FakeClock()
+        sched = BatchScheduler(db, max_wait_us=10_000)
+        sched._now = clock.now
+        arrivals = []
+
+        async def fake_wait(timeout):
+            # halfway through the window a groupmate arrives on another
+            # "connection"; the deadline stays with the OLDEST statement
+            clock.t += timeout / 2
+            if not arrivals:
+                arrivals.append(
+                    sched.submit("INSERT INTO t (k, w) VALUES (?, ?)",
+                                 (2, 0)))
+            else:
+                clock.t += timeout  # let the deadline lapse
+            sched._wake.clear()
+
+        sched._wait_for_arrivals = fake_wait
+        await sched.start()
+        fut = sched.submit("INSERT INTO t (k, w) VALUES (?, ?)", (1, 0))
+        r1 = await asyncio.wait_for(fut, timeout=10)
+        r2 = await asyncio.wait_for(arrivals[0], timeout=10)
+        assert r1.count == 1 and r2.count == 1
+        # both inserts rode ONE fused group thanks to the window
+        assert sched.stats["max_group"] == 2
+        assert sched.stats["grouped_statements"] == 2
+        await sched.stop()
+
+    _run(main())
+
+
+def test_window_disabled_never_waits():
+    async def main():
+        db = _mkdb(rows=0)
+        clock = _FakeClock()
+        sched = _windowed(db, clock, max_wait_us=0)
+        await sched.start()
+        await asyncio.wait_for(
+            sched.submit("INSERT INTO t (k, w) VALUES (?, ?)", (1, 0)), 10)
+        assert clock.waits == [] and sched.stats["window_waits"] == 0
+        await sched.stop()
+
+    _run(main())
+
+
+def test_window_full_queue_cuts_immediately():
+    async def main():
+        db = _mkdb(rows=0)
+        clock = _FakeClock()
+        sched = _windowed(db, clock, max_wait_us=1_000_000, max_admit=4)
+        await sched.start()
+        futs = [sched.submit("INSERT INTO t (k, w) VALUES (?, ?)", (i, 0))
+                for i in range(4)]
+        await asyncio.wait_for(asyncio.gather(*futs), timeout=10)
+        assert clock.waits == []  # queue hit max_admit: no hold
+        await sched.stop()
+
+    _run(main())
