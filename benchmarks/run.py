@@ -2,11 +2,12 @@
 
 ``python -m benchmarks.run [--json] [--quick] [--check]``
 
---json   run fig1 + table2 + protocol + index in JSON mode and write
-         ``BENCH_fig1.json`` / ``BENCH_table2.json`` /
-         ``BENCH_protocol.json`` / ``BENCH_index.json`` to the repo root
-         (ops/s resp. stmts/s, p50/p99 µs); these files are checked in so
-         every PR's numbers are comparable.
+--json   run fig1 + table2 + protocol + index + shard in JSON mode and
+         write ``BENCH_fig1.json`` / ``BENCH_table2.json`` /
+         ``BENCH_protocol.json`` / ``BENCH_index.json`` /
+         ``BENCH_shard.json`` to the repo root (ops/s resp. stmts/s,
+         p50/p99 µs); these files are checked in so every PR's numbers
+         are comparable.
 --quick  tier-1-friendly smoke sizes — finishes in seconds on CPU (the
          protocol bench keeps its 8-connection shape, fewer statements;
          the index bench keeps the 65536-row point --check compares).
@@ -48,6 +49,10 @@ CHECK_METRICS = [
                 / _ix_size(d, 4096)["probe_p50_us"]), "lower"),
     ("BENCH_protocol.json", "batched_speedup_vs_sync",
      lambda d: d["batched_speedup_vs_sync"], "higher"),
+    ("BENCH_shard.json", "pruned_flatness_4x",
+     lambda d: d["pruned_flatness_4x"], "lower"),
+    ("BENCH_shard.json", "write_speedup_4shard",
+     lambda d: d["write_speedup_4shard"], "higher"),
 ]
 
 REGRESS_FACTOR = 2.0
@@ -66,9 +71,19 @@ def _evaluate(fresh) -> list:
     for fname, label, fn, direction in CHECK_METRICS:
         ref_file = REPO_ROOT / fname
         if not ref_file.exists():
-            print(f"CHECK skip  {fname}:{label}: no checked-in file")
+            # bootstrap tolerance: a NEW bench file has nothing checked
+            # in to compare against on its first run — warn, never fail
+            print(f"CHECK WARN  {fname}:{label}: no checked-in file yet "
+                  f"(bootstrap — run `python -m benchmarks.run --json` "
+                  f"and commit it)")
             continue
-        ref = _extract(json.loads(ref_file.read_text()), fn)
+        try:
+            ref_doc = json.loads(ref_file.read_text())
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"CHECK WARN  {fname}:{label}: unreadable checked-in "
+                  f"file ({e}) — skipping")
+            continue
+        ref = _extract(ref_doc, fn)
         new = _extract(fresh[fname], fn)
         if not ref or new is None:
             print(f"CHECK skip  {fname}:{label}: metric absent")
@@ -89,7 +104,8 @@ def _evaluate(fresh) -> list:
 def check() -> int:
     """Compare fresh quick-run ratio metrics against the checked-in BENCH
     files; return the number of >2x regressions after one retry."""
-    from benchmarks import fig1_kv_read, index_bench, protocol_bench
+    from benchmarks import (fig1_kv_read, index_bench, protocol_bench,
+                            shard_bench)
 
     runners = {
         "BENCH_fig1.json": lambda: fig1_kv_read.run_json(quick=True),
@@ -97,6 +113,9 @@ def check() -> int:
             index_bench.QUICK_SIZES, reps=60),
         "BENCH_protocol.json": lambda: protocol_bench.run(
             m=protocol_bench.N_STMTS_QUICK),
+        "BENCH_shard.json": lambda: shard_bench.run(
+            shard_bench.QUICK_SHARD_COUNTS, shard_bench.QUICK_SHARD_ROWS,
+            m=shard_bench.N_STMTS_QUICK, reps=60),
     }
     fresh = {name: fn() for name, fn in runners.items()}
     failing = _evaluate(fresh)
@@ -126,7 +145,7 @@ def main() -> None:
 
     if as_json:
         from benchmarks import (fig1_kv_read, index_bench, protocol_bench,
-                                table2_expiry)
+                                shard_bench, table2_expiry)
         args = ["--json"] + (["--quick"] if quick else [])
         print("=" * 72)
         print("== Paper Fig. 1 (JSON) -> BENCH_fig1.json")
@@ -140,6 +159,9 @@ def main() -> None:
         print("=" * 72)
         print("== Hash-index probe ladder (JSON) -> BENCH_index.json")
         index_bench.main(args)
+        print("=" * 72)
+        print("== Sharded-table scaling ladder (JSON) -> BENCH_shard.json")
+        shard_bench.main(args)
         return
 
     print("=" * 72)
@@ -167,6 +189,11 @@ def main() -> None:
     print("== Plan executor: index probe vs fused vs generic scan")
     from benchmarks import index_bench
     index_bench.main(["--quick"] if quick else [])
+
+    print("=" * 72)
+    print("== Sharded tables: pruned flatness + write fan-out")
+    from benchmarks import shard_bench
+    shard_bench.main(["--quick"] if quick else [])
 
     if quick:
         return

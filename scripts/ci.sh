@@ -1,0 +1,21 @@
+#!/usr/bin/env bash
+# CI gate: tier-1 tests + quick benchmark regression check.
+#
+#   scripts/ci.sh
+#
+# 1. runs the full pytest suite (tier-1 verify from ROADMAP.md);
+# 2. re-runs the quick benches IN MEMORY and fails if any curated
+#    BENCH_*.json ratio metric regressed more than 2x vs the checked-in
+#    values (see benchmarks/run.py CHECK_METRICS — ratios, not absolute
+#    latencies, so machine speed cancels to first order). A bench file
+#    that does not exist yet only warns (bootstrap).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1: pytest"
+python -m pytest -x -q
+
+echo "== perf gate: benchmarks/run.py --quick --check"
+python -m benchmarks.run --quick --check

@@ -51,6 +51,28 @@ env var ``REPRO_KERNELS`` selects ``kernel`` (TPU), ``interpret`` (kernel
 body on CPU) or ``ref`` (pure-jnp oracle, the non-TPU default) — see
 kernels/ops.py.
 
+Sharded tables
+--------------
+
+``CREATE TABLE t (...) SHARDS n [PARTITION BY col]`` hash-partitions the
+table across ``n`` independent shard states (``core/shards.py``), each
+with its own validity mask, relscan tiles and hash indexes. The daemon
+stays shape-agnostic: every ``_Table`` carries an ``eng`` module —
+``core.table`` or ``core.shards`` — exposing one executor surface, and
+every path below (singleton executors, the micro-batched ``executemany``
+family, EXPLAIN, REINDEX, FLUSH, expiry) calls through it. Routing is
+value-directed and happens inside the jitted executors: an equality on
+the partition column executes on exactly ONE shard (flat latency however
+many shards exist — under the vmapped batch executors each statement
+routes to its own shard within one dispatch), INSERT splits its batch by
+shard device-side (``kernels/ops.shard_split``), everything else fans
+out via ``vmap`` over the stacked shard states and merges partials.
+``EXPLAIN`` reports the shard route (``pruned [-> shard k]`` /
+``fan-out x n`` / ``split x n``) next to the plan; wire examples live in
+``core/protocol.py``. The partition column cannot be UPDATEd in place
+(rows would land in the wrong shard — DELETE + INSERT moves them), and
+LRU eviction / MAX_ROWS act per shard.
+
 The daemon is also the serving plane's metadata engine: `table_state` /
 `swap_table_state` hand the device arrays to jitted serving steps with
 zero copies.
@@ -68,24 +90,34 @@ import numpy as np
 
 from repro.core import planner as PL
 from repro.core import predicate as P
+from repro.core import shards as SH
 from repro.core import sqlparse as S
 from repro.core import table as T
 from repro.core.schema import ExpiryPolicy, TableSchema, make_schema
 
 
 class Interner:
-    """Host-side string<->id map (TEXT columns / params)."""
+    """Host-side string<->id map (TEXT columns / params). ``intern`` is
+    locked: the batch scheduler dispatches disjoint-footprint statement
+    groups concurrently, and a string must never receive two ids."""
 
     def __init__(self):
         self._fwd: dict[str, int] = {}
         self._rev: list[str] = [""]  # id 0 = empty/NULL
+        self._lock = threading.Lock()
 
     def intern(self, s: str) -> int:
         i = self._fwd.get(s)
         if i is None:
-            i = len(self._rev)
-            self._fwd[s] = i
-            self._rev.append(s)
+            with self._lock:
+                i = self._fwd.get(s)
+                if i is None:
+                    i = len(self._rev)
+                    # append FIRST: the fast-path read above is lock-free,
+                    # so an id must never be published before its reverse
+                    # mapping exists
+                    self._rev.append(s)
+                    self._fwd[s] = i
         return i
 
     def lookup(self, i: int) -> str:
@@ -256,9 +288,16 @@ class Result:
 
 @dataclasses.dataclass
 class _Table:
+    """One live table: its schema, device state, and the ENGINE module
+    that executes statements against that state — ``core.table`` for a
+    monolithic table, ``core.shards`` for a hash-partitioned one
+    (``SHARDS n``). Both expose the same executor surface, so every
+    daemon path below is shape-agnostic."""
+
     schema: TableSchema
     state: dict
     host_ops: int = 0
+    eng: Any = T
 
 
 @dataclasses.dataclass(frozen=True)
@@ -314,6 +353,7 @@ class SQLCached:
         self.auto_expire = auto_expire
         self._stmts: dict[str, S.Statement] = {}
         self._execs: dict[tuple, Any] = {}
+        self._shapes: dict[str, StatementShape] = {}
 
     # ------------------------------------------------------------- plumbing
     def _parse(self, sql: str) -> S.Statement:
@@ -349,17 +389,19 @@ class SQLCached:
             self._execs[key] = fn
         return fn
 
-    def _jit_with_expiry(self, schema, base):
+    def _jit_with_expiry(self, schema, base, eng=T):
         """Jit a statement executor ``base(state, *args) -> (state, *outs)``
         with the §4.3 op-count expiry fused into the same dispatch: a
         device-side ``lax.cond`` on a host-computed flag replaces the former
-        separate ``_do_expire`` call, so auto-expiry is dispatch-free."""
+        separate ``_do_expire`` call, so auto-expiry is dispatch-free.
+        ``eng`` is the table's engine module (expiry must run the
+        matching state layout)."""
         if schema.expiry.ops_interval > 0:
             def fn(state, expire_flag, *args):
                 out = base(state, *args)
                 state = jax.lax.cond(
                     expire_flag,
-                    lambda s: T.expire(schema, s)[0],
+                    lambda s: eng.expire(schema, s)[0],
                     lambda s: s,
                     out[0])
                 return (state,) + tuple(out[1:])
@@ -407,7 +449,8 @@ class SQLCached:
             return self._do_expire(stmt.table)
         if isinstance(stmt, S.Flush):
             t = self._table(stmt.table)
-            t.state, n = jax.jit(T.flush, static_argnums=0)(t.schema, t.state)
+            t.state, n = jax.jit(t.eng.flush, static_argnums=0)(t.schema,
+                                                                t.state)
             return Result(dev={"count": n})
         if isinstance(stmt, S.Reindex):
             return self._do_reindex(stmt.table)
@@ -431,8 +474,17 @@ class SQLCached:
         jitted executor and may be dispatched together through
         :meth:`executemany`, so a heterogeneous admission batch splits into
         the minimal number of dispatches. The read/write column footprints
-        ride along (planner AST walk) for column-level fencing.
-        Raises ``SQLError`` on bad SQL."""
+        ride along (planner AST walk) for column-level fencing. Shapes are
+        pure functions of the statement TEXT, memoized — the scheduler
+        calls this on every admission. Raises ``SQLError`` on bad SQL."""
+        cached = self._shapes.get(sql)
+        if cached is not None:
+            return cached
+        shape = self._shape_key_uncached(sql)
+        self._shapes[sql] = shape
+        return shape
+
+    def _shape_key_uncached(self, sql: str) -> StatementShape:
         stmt = self._parse(sql)
         clean = self._clean_footprint
         if isinstance(stmt, S.Select):
@@ -481,6 +533,61 @@ class SQLCached:
         table = getattr(stmt, "table", None)
         return StatementShape(("admin", stmt), table, "admin", False, True)
 
+    def group_shard_ids(self, shape: StatementShape | None,
+                        params_list: Sequence[Sequence[Any]]
+                        ) -> frozenset | None:
+        """The exact set of shard ids a batch of same-shape statements
+        will touch, when that is provable host-side: the table is sharded
+        and every statement prunes (eq on the partition column, or an
+        INSERT whose partition value is a literal/placeholder). ``None``
+        means unknown / fan-out / unsharded — the scheduler treats it as
+        touching every shard. Two groups with disjoint id sets commute,
+        which lets the batch scheduler overlap independent-shard traffic
+        on one table."""
+        if shape is None or shape.table is None:
+            return None
+        t = self.tables.get(shape.table)
+        if t is None or not SH.is_sharded(t.schema):
+            return None
+        stmt = shape.key[1] if len(shape.key) == 2 else None
+        n, pcol = t.schema.shards, t.schema.partition_by
+        if isinstance(stmt, (S.Select, S.Update, S.Delete)):
+            route = PL.plan_shards(t.schema, self._intern_ast(stmt.where))
+            if route.key is None:
+                return None
+            kind, v = route.key.value
+        elif isinstance(stmt, S.Insert):
+            cols = stmt.columns or t.schema.column_names[: len(stmt.values)]
+            if pcol not in cols:
+                # omitted partition column inserts its default (0)
+                kind, v = "const", 0
+            else:
+                vast = stmt.values[list(cols).index(pcol)]
+                if isinstance(vast, P.Const) and isinstance(vast.value, int) \
+                        and not isinstance(vast.value, bool):
+                    kind, v = "const", int(vast.value)
+                elif isinstance(vast, P.Param):
+                    kind, v = "param", vast.index
+                else:
+                    return None
+        else:
+            return None
+        out = set()
+        for pr in params_list:
+            if kind == "const":
+                val = v
+            else:
+                if v >= len(pr):
+                    return None
+                val = pr[v]
+                if isinstance(val, str):
+                    val = self.interner.intern(val)
+                if isinstance(val, bool) or not isinstance(
+                        val, (int, np.integer)):
+                    return None
+            out.add(SH.shard_of_host(int(val), n))
+        return frozenset(out)
+
     def execute_async(
         self,
         sql: str,
@@ -511,8 +618,12 @@ class SQLCached:
             max_select=stmt.max_select,
             expiry=ExpiryPolicy(stmt.ttl, stmt.max_rows, stmt.ops_interval),
             indexes=stmt.indexes,
+            shards=stmt.shards,
+            partition_by=stmt.partition_by,
         )
-        self.tables[stmt.table] = _Table(schema, T.init_state(schema))
+        eng = SH if SH.is_sharded(schema) else T
+        self.tables[stmt.table] = _Table(schema, eng.init_state(schema),
+                                         eng=eng)
         return Result()
 
     def _do_reindex(self, name: str) -> Result:
@@ -526,10 +637,11 @@ class SQLCached:
         key = ("reindex", t.schema)
         fn = self._executor(
             key, lambda: jax.jit(
-                lambda st: T.build_index(t.schema, st), donate_argnums=0))
+                lambda st: t.eng.build_index(t.schema, st),
+                donate_argnums=0))
         t.state = fn(t.state)
-        residual = sum(int(t.state["indexes"][c]["stale"])
-                       for c in t.schema.indexes)
+        residual = sum(int(np.sum(np.asarray(
+            t.state["indexes"][c]["stale"]))) for c in t.schema.indexes)
         return Result(count=len(t.schema.indexes), value=residual)
 
     def _do_explain(self, stmt: S.Statement) -> Result:
@@ -544,15 +656,22 @@ class SQLCached:
             info["statement"] = type(stmt).__name__.lower()
             if info["plan"] == "index-probe":
                 # surface index health: stale > 0 means every probe is
-                # currently taking the scan fallback (REINDEX recovers)
-                info["stale"] = int(
-                    t.state["indexes"][info["index"]]["stale"])
+                # currently taking the scan fallback (REINDEX recovers).
+                # Sharded tables report the stale total across shards.
+                info["stale"] = int(np.sum(np.asarray(
+                    t.state["indexes"][info["index"]]["stale"])))
             return Result(count=1, value=json.dumps(info, sort_keys=True))
         info = {"statement": type(stmt).__name__.lower(),
                 "plan": "insert" if isinstance(stmt, S.Insert) else "admin"}
         table = getattr(stmt, "table", None)
         if table is not None:
             info["table"] = table
+            t = self.tables.get(table)
+            if (t is not None and SH.is_sharded(t.schema)
+                    and isinstance(stmt, S.Insert)):
+                # inserts always hash-route row-by-row (one device split)
+                info["shards"] = t.schema.shards
+                info["shard_route"] = f"split x {t.schema.shards}"
         return Result(count=1, value=json.dumps(info, sort_keys=True))
 
     def executemany(
@@ -576,10 +695,10 @@ class SQLCached:
         ``list[Result]`` with per-statement counts under sequential
         semantics (the wire scheduler needs one response per client
         statement): DELETE counts credit overlapping rows to the earliest
-        statement, UPDATE counts come from the scan, INSERT rows count 1
-        each with the batch's eviction total as ``value``. Per-statement
-        DELETE takes the vectorized union path (the one-pass
-        sorted-membership fast path only reports a total)."""
+        statement (the one-pass sorted-membership path attributes in the
+        same pass for the eq shape; other shapes take the vectorized
+        union path), UPDATE counts come from the scan, INSERT rows count
+        1 each with the batch's eviction total as ``value``."""
         stmt = self._parse(sql)
         if isinstance(stmt, (S.Delete, S.Update)):
             return self._do_batch_dml(stmt, params_list,
@@ -633,9 +752,10 @@ class SQLCached:
                 ttl = 0
                 if ttl_ast is not None:
                     ttl = P.eval_expr(ttl_ast, {}, param_cols)
-                return T.insert(schema, state, values, pl_args, row_mask, ttl)
+                return t.eng.insert(schema, state, values, pl_args,
+                                    row_mask, ttl)
 
-            return self._jit_with_expiry(schema, base)
+            return self._jit_with_expiry(schema, base, eng=t.eng)
 
         fn = self._executor(key, build)
         flag = self._expire_flag(t, n)
@@ -665,10 +785,12 @@ class SQLCached:
 
         ``per_statement=True`` returns ``list[Result]`` whose counts match
         sequential execution: a row deleted by several statements in the
-        batch is credited to the earliest (exclusive-claim cumsum over the
-        [W, capacity] masks), so the eq fast path is skipped."""
+        batch is credited to the earliest — the eq fast path attributes
+        via its stable sort in the same pass; other DELETE shapes use an
+        exclusive-claim cumsum over the [W, capacity] masks."""
         t = self._table(stmt.table)
         schema = t.schema
+        eng = t.eng
         n = len(params_list)
         if n == 0:
             return [] if per_statement else Result(count=0)
@@ -687,7 +809,7 @@ class SQLCached:
             np.asarray([pm[i][j] for i in range(b)]) for j in range(n_params)
         )
         active = np.arange(b) < n
-        fused = T._fused_plan(schema, where) if is_delete else None
+        fused = eng._fused_plan(schema, where) if is_delete else None
         eq_term = (fused.terms[0]
                    if fused is not None and len(fused.terms) == 1
                    and fused.terms[0].op == "==" else None)
@@ -695,15 +817,13 @@ class SQLCached:
                 and not np.issubdtype(param_cols[eq_term.value[1]].dtype,
                                       np.integer)):
             eq_term = None  # float param: keep exact-compare semantics
-        if per_statement:
-            eq_term = None  # the one-pass path only yields a total count
         update_plan = None
         idx_rebuild = ()
         if not is_delete:
             set_cols = {("_ttl" if c.upper() == "TTL" else c)
                         for c, _ in sets}
             idx_rebuild = tuple(c for c in schema.indexes if c in set_cols)
-            update_plan = T.plan_for(schema, where)
+            update_plan = eng.plan_for(schema, where)
             if isinstance(update_plan, PL.IndexProbe) and (
                     idx_rebuild
                     or not _np_terms_int(
@@ -714,7 +834,7 @@ class SQLCached:
                 # and rebuild once after the batch
                 update_plan = update_plan.fallback
         key = ("dml", schema, is_delete, where, sets, b, eq_term,
-               update_plan)
+               update_plan, per_statement)
 
         def build():
             if eq_term is not None:
@@ -724,17 +844,23 @@ class SQLCached:
                     vals = (jnp.asarray(param_cols[v], jnp.int32)
                             if kind == "param"
                             else jnp.full((b,), v, jnp.int32))
-                    return T.delete_many_eq(schema, state, eq_term.col,
-                                            vals, active)
+                    return eng.delete_many_eq(schema, state, eq_term.col,
+                                              vals, active,
+                                              per_statement=per_statement)
 
-                return self._jit_with_expiry(schema, base)
+                return self._jit_with_expiry(schema, base, eng=eng)
 
             def base(state, param_cols, active):
                 if is_delete:
                     def one_mask(pr, act):
-                        return T._match_mask(schema, state, where, pr) & act
+                        return eng._match_mask(schema, state, where,
+                                               pr) & act
 
-                    m = jax.vmap(one_mask)(param_cols, active)  # [b, cap]
+                    # [b, *mask_shape]: mask_shape is [cap] for monolithic
+                    # tables, [n_shards, shard_cap] for sharded ones — the
+                    # union/claim math below is layout-generic
+                    m = jax.vmap(one_mask)(param_cols, active)
+                    rest = tuple(range(1, m.ndim))
                     hit = jnp.any(m, axis=0)
                     n_hit = jnp.sum(hit.astype(jnp.int32))
                     # sequential attribution: a row hit by several
@@ -742,7 +868,8 @@ class SQLCached:
                     # the later ones run it is already gone)
                     mi = m.astype(jnp.int32)
                     claimed = (jnp.cumsum(mi, axis=0) - mi) > 0
-                    ns = jnp.sum((m & ~claimed).astype(jnp.int32), axis=1)
+                    ns = jnp.sum((m & ~claimed).astype(jnp.int32),
+                                 axis=rest)
                     # clock advances by the REAL statement count (from the
                     # runtime active mask — the executor is cached per
                     # bucket, so n must not be baked in at trace time);
@@ -756,10 +883,10 @@ class SQLCached:
                 def run(route):
                     def body(st, xs):
                         pr, act = xs
-                        return T.update(schema, st, where, dict(sets), pr,
-                                        extra_mask=act, plan=route,
-                                        probe_mode="ref",
-                                        maintain_indexes=False)
+                        return eng.update(schema, st, where, dict(sets), pr,
+                                          extra_mask=act, plan=route,
+                                          probe_mode="ref",
+                                          maintain_indexes=False)
 
                     return jax.lax.scan(body, state, (param_cols, active))
 
@@ -767,14 +894,14 @@ class SQLCached:
                     # freshness cond hoisted outside the scan: W indexed
                     # UPDATEs cost W bucket probes, not W full scans
                     state, ns = jax.lax.cond(
-                        T.index_fresh(state, update_plan.column),
+                        eng.index_fresh(state, update_plan.column),
                         lambda _: run(update_plan),
                         lambda _: run(update_plan.fallback),
                         None)
                 else:
                     state, ns = run(update_plan)
                 for c in idx_rebuild:  # deferred: ONE rebuild per dispatch
-                    state = T.build_index(schema, state, c, mode="ref")
+                    state = eng.build_index(schema, state, c, mode="ref")
                 # un-tick the padded scan iterations (runtime count — see
                 # the delete branch note on executor caching)
                 pad = b - jnp.sum(active.astype(jnp.int32))
@@ -782,11 +909,11 @@ class SQLCached:
                              ops=state["ops"] - pad)
                 return state, jnp.sum(ns), ns
 
-            return self._jit_with_expiry(schema, base)
+            return self._jit_with_expiry(schema, base, eng=eng)
 
         fn = self._executor(key, build)
         flag = self._expire_flag(t, n)
-        if eq_term is not None:
+        if eq_term is not None and not per_statement:
             t.state, total = fn(t.state, flag, param_cols, active)
             return Result(dev={"count": total})
         t.state, total, ns = fn(t.state, flag, param_cols, active)
@@ -819,6 +946,7 @@ class SQLCached:
             return self._do_batch_agg(stmt, params_list)
         t = self._table(stmt.table)
         schema = t.schema
+        eng = t.eng
         n = len(params_list)
         if n == 0:
             return []
@@ -833,7 +961,7 @@ class SQLCached:
             np.asarray([pm[i][j] for i in range(b)]) for j in range(n_params)
         )
         active = np.arange(b) < n
-        plan = T.plan_for(schema, where, ranked=stmt.order_by is not None)
+        plan = eng.plan_for(schema, where, ranked=stmt.order_by is not None)
         if (isinstance(plan, PL.IndexProbe)
                 and not _np_terms_int((plan.key,) + plan.residual,
                                       param_cols)):
@@ -846,7 +974,7 @@ class SQLCached:
             def base(state, param_cols, active):
                 def run(route):
                     def one(pr, act):
-                        _, res = T.select(
+                        _, res = eng.select(
                             schema, state, where, pr,
                             columns=columns, order_by=stmt.order_by,
                             descending=stmt.descending, limit=limit,
@@ -863,7 +991,7 @@ class SQLCached:
                     # indexed lookups cost O(W x bucket_cap) gathers, or
                     # the whole batch falls back to the broadcast scan
                     res = jax.lax.cond(
-                        T.index_fresh(state, plan.column),
+                        eng.index_fresh(state, plan.column),
                         lambda _: run(plan),
                         lambda _: run(plan.fallback),
                         None)
@@ -872,19 +1000,10 @@ class SQLCached:
                 # one fused epilogue for the whole batch: touch the
                 # returned rows and advance the clock by the REAL
                 # statement count (padding must not age TTLs)
-                now = state["clock"].astype(jnp.int32)
-                tgt = jnp.where(res["present"], res["row_ids"],
-                                schema.capacity)
-                cols_d = dict(state["cols"])
-                cols_d["_accessed"] = cols_d["_accessed"].at[
-                    tgt.reshape(-1)].set(now, mode="drop")
-                nact = jnp.sum(active.astype(jnp.int32))
-                state = dict(state, cols=cols_d,
-                             clock=state["clock"] + nact,
-                             ops=state["ops"] + nact)
+                state = eng.batch_touch(schema, state, res, active)
                 return state, res
 
-            return self._jit_with_expiry(schema, base)
+            return self._jit_with_expiry(schema, base, eng=eng)
 
         fn = self._executor(key, build)
         flag = self._expire_flag(t, n)
@@ -908,6 +1027,7 @@ class SQLCached:
         views into one stacked transfer)."""
         t = self._table(stmt.table)
         schema = t.schema
+        eng = t.eng
         n = len(params_list)
         if n == 0:
             return []
@@ -921,7 +1041,7 @@ class SQLCached:
             np.asarray([pm[i][j] for i in range(b)]) for j in range(n_params)
         )
         active = np.arange(b) < n
-        plan = T.plan_for(schema, where)
+        plan = eng.plan_for(schema, where)
         if (isinstance(plan, PL.IndexProbe)
                 and not _np_terms_int((plan.key,) + plan.residual,
                                       param_cols)):
@@ -937,16 +1057,17 @@ class SQLCached:
                         # parameterless aggregates (vmap needs >=1 mapped
                         # argument); padded rows are never exposed, so
                         # their values don't matter
-                        _, v = T.aggregate(schema, state, agg, col, where,
-                                           pr, plan=route, fused_mode="ref",
-                                           probe_mode="ref")
+                        _, v = eng.aggregate(schema, state, agg, col, where,
+                                             pr, plan=route,
+                                             fused_mode="ref",
+                                             probe_mode="ref")
                         return v
 
                     return jax.vmap(one)(param_cols, jnp.asarray(active))
 
                 if probe:
                     vals = jax.lax.cond(
-                        T.index_fresh(state, plan.column),
+                        eng.index_fresh(state, plan.column),
                         lambda _: run(plan),
                         lambda _: run(plan.fallback),
                         None)
@@ -957,7 +1078,7 @@ class SQLCached:
                              ops=state["ops"] + nact)
                 return state, vals
 
-            return self._jit_with_expiry(schema, base)
+            return self._jit_with_expiry(schema, base, eng=eng)
 
         fn = self._executor(key, build)
         flag = self._expire_flag(t, n)
@@ -968,6 +1089,7 @@ class SQLCached:
     def _do_select(self, stmt: S.Select, params: tuple) -> Result:
         t = self._table(stmt.table)
         schema = t.schema
+        eng = t.eng
         where = self._intern_ast(stmt.where)
         if stmt.agg is not None:
             agg, col = stmt.agg
@@ -976,8 +1098,9 @@ class SQLCached:
                 key,
                 lambda: self._jit_with_expiry(
                     schema,
-                    lambda st, pr: T.aggregate(schema, st, agg, col, where,
-                                               pr),
+                    lambda st, pr: eng.aggregate(schema, st, agg, col,
+                                                 where, pr),
+                    eng=eng,
                 ),
             )
             flag = self._expire_flag(t)
@@ -990,13 +1113,13 @@ class SQLCached:
 
         def build():
             def base(st, pr):
-                return T.select(
+                return eng.select(
                     schema, st, where, pr,
                     columns=columns, order_by=stmt.order_by,
                     descending=stmt.descending, limit=limit,
                     with_payloads=stmt.payloads,
                 )
-            return self._jit_with_expiry(schema, base)
+            return self._jit_with_expiry(schema, base, eng=eng)
 
         fn = self._executor(key, build)
         flag = self._expire_flag(t)
@@ -1013,14 +1136,15 @@ class SQLCached:
     def _do_update(self, stmt: S.Update, params: tuple) -> Result:
         t = self._table(stmt.table)
         schema = t.schema
+        eng = t.eng
         where = self._intern_ast(stmt.where)
         sets = tuple((c, self._intern_ast(e)) for c, e in stmt.sets)
         key = ("update", schema, where, sets)
 
         def build():
             def base(st, pr):
-                return T.update(schema, st, where, dict(sets), pr)
-            return self._jit_with_expiry(schema, base)
+                return eng.update(schema, st, where, dict(sets), pr)
+            return self._jit_with_expiry(schema, base, eng=eng)
 
         fn = self._executor(key, build)
         flag = self._expire_flag(t)
@@ -1030,12 +1154,15 @@ class SQLCached:
     def _do_delete(self, stmt: S.Delete, params: tuple) -> Result:
         t = self._table(stmt.table)
         schema = t.schema
+        eng = t.eng
         where = self._intern_ast(stmt.where)
         # fusable deletes on payload-bearing tables also report WHICH rows
         # went (row_ids feeds incremental index maintenance, e.g. the
         # serving page table); scalar tables keep the mask-only path —
-        # nothing indexes their rows, so the compaction would be pure cost
-        returning = (T._fused_plan(schema, where) is not None
+        # nothing indexes their rows, so the compaction would be pure
+        # cost. Sharded tables keep the mask-only path too (the serving
+        # page table is a monolithic-table integration).
+        returning = (eng is T and T._fused_plan(schema, where) is not None
                      and bool(schema.payloads))
         key = ("delete", schema, where, returning)
 
@@ -1043,8 +1170,8 @@ class SQLCached:
             def base(st, pr):
                 if returning:
                     return T.delete_returning(schema, st, where, pr)
-                return T.delete(schema, st, where, pr)
-            return self._jit_with_expiry(schema, base)
+                return eng.delete(schema, st, where, pr)
+            return self._jit_with_expiry(schema, base, eng=eng)
 
         fn = self._executor(key, build)
         flag = self._expire_flag(t)
@@ -1060,7 +1187,7 @@ class SQLCached:
         t = self._table(name)
         key = ("expire", t.schema)
         fn = self._executor(
-            key, lambda: jax.jit(lambda st: T.expire(t.schema, st),
+            key, lambda: jax.jit(lambda st: t.eng.expire(t.schema, st),
                                  donate_argnums=0)
         )
         t.state, n = fn(t.state)
@@ -1080,7 +1207,8 @@ class SQLCached:
         return self._table(name).schema
 
     def live_rows(self, name: str) -> int:
-        return int(T.live_count(self._table(name).state))
+        return int(self._table(name).eng.live_count(
+            self._table(name).state))
 
     def advance_clock(self, ticks: int, table: str | None = None) -> None:
         """Advance the logical clock (tests / wall-time sync)."""

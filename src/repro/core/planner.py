@@ -27,6 +27,15 @@ stay in the executors, which demote to the fallback at trace time.
 ``columns_of`` reports an AST's column footprint; the daemon reuses it to
 stamp read/write footprints onto ``StatementShape`` so the batch
 scheduler can fence at column rather than table granularity.
+
+Sharded tables (``schema.shards > 1``, core/shards.py) add one routing
+layer ABOVE the plan: :func:`plan_shards` lowers the same WHERE into a
+``ShardRoute`` — *pruned* when an equality conjunct anchors the
+statement to the hash of the partition column (execute on exactly ONE
+shard, so lookup latency is independent of the shard count), *fan-out*
+otherwise (execute on every shard via ``vmap`` over the stacked shard
+states and merge the partials). The within-shard plan is the ordinary
+``plan_where`` result; EXPLAIN reports both layers.
 """
 from __future__ import annotations
 
@@ -88,6 +97,27 @@ class IndexProbe:
 Plan = IndexProbe | FusedScan | GenericScan
 
 
+@dataclasses.dataclass(frozen=True)
+class ShardRoute:
+    """Shard routing for one WHERE against a sharded table (the layer
+    ABOVE the Plan IR): ``key`` is the equality term on the partition
+    column when the statement prunes to the single shard holding that
+    key's hash (None = fan-out across all ``n_shards``). The within-shard
+    execution still follows a :data:`Plan` (``plan_where``)."""
+
+    column: str                    # the partition column
+    key: P.FusedTerm | None        # eq term on it, None -> fan-out
+    n_shards: int
+
+    @property
+    def pruned(self) -> bool:
+        return self.key is not None
+
+    @property
+    def kind(self) -> str:
+        return "pruned" if self.pruned else f"fan-out x {self.n_shards}"
+
+
 def int_columns(schema: TableSchema) -> frozenset:
     """The relscan/hashidx-eligible column set: int32-typed user columns
     (INT and interned TEXT) plus the reserved clock columns."""
@@ -125,6 +155,29 @@ def plan_where(schema: TableSchema, where: P.Node | None,
     if small is not None:
         return FusedScan(small)
     return GenericScan("conjunction exceeds the 4-term kernel")
+
+
+@functools.lru_cache(maxsize=4096)
+def plan_shards(schema: TableSchema, where: P.Node | None) -> ShardRoute:
+    """Lower ``where`` to a ShardRoute for a sharded ``schema`` (memoized
+    like :func:`plan_where`). A statement prunes iff a top-level equality
+    conjunct anchors the partition column — exactly the rows that can
+    match live in ``shard_of(key)``; everything else (ranges on the
+    partition column, ORs, no WHERE) must visit every shard. Pruning is
+    value-directed: the shard id itself is computed from the bound value
+    at execution time (device-side, so batched statements route
+    per-row)."""
+    col = schema.partition_by
+    n = schema.shards
+    if where is None or col is None:
+        return ShardRoute(col or "", None, n)
+    ints = int_columns(schema)
+    fused = P.classify_fusable(where, ints, max_terms=1 + MAX_RESIDUAL)
+    key = None
+    if fused is not None:
+        key = next((t for t in fused.terms if t.op == "==" and t.col == col),
+                   None)
+    return ShardRoute(col, key, n)
 
 
 def as_fused(plan: Plan) -> P.FusedScan | None:
@@ -170,7 +223,10 @@ def columns_of(node: P.Node | None) -> frozenset:
 def explain(schema: TableSchema, where: P.Node | None,
             ranked: bool = False) -> dict:
     """EXPLAIN payload for one WHERE clause against ``schema``: the chosen
-    plan, the columns it reads, and (for probes) the fallback."""
+    plan, the columns it reads, (for probes) the fallback, and (for
+    sharded tables) the shard route — ``pruned -> shard k`` when the key
+    is a constant, ``pruned`` when it binds a ``?``, ``fan-out x n``
+    otherwise."""
     plan = plan_where(schema, where, ranked)
     out = {"plan": plan.kind, "table": schema.name,
            "columns": sorted(columns_of(where))}
@@ -182,4 +238,19 @@ def explain(schema: TableSchema, where: P.Node | None,
         out["terms"] = [f"{t.col} {t.op}" for t in plan.scan.terms]
     elif plan.reason:
         out["reason"] = plan.reason
+    if schema.shards > 1:
+        from repro.core import shards as SH  # late: shards imports planner
+
+        route = plan_shards(schema, where)
+        out["shards"] = schema.shards
+        out["partition_by"] = route.column
+        if route.pruned:
+            kind, v = route.key.value
+            if kind == "const":
+                sid = int(SH.shard_of_host(int(v), schema.shards))
+                out["shard_route"] = f"pruned -> shard {sid}"
+            else:
+                out["shard_route"] = "pruned"
+        else:
+            out["shard_route"] = route.kind
     return out

@@ -41,6 +41,29 @@ positionally as well as by tag. Statements from all connections meet in
 the batch scheduler, which fuses same-shape runs into single jitted
 dispatches — this is how network clients reach the micro-batched engine.
 
+Sharded tables ride the same wire verbatim — a client declares the
+partitioning at CREATE time and every later statement is routed
+transparently (core/shards.py):
+
+    EXEC CREATE TABLE pages (site INT, id INT, hits INT, INDEX(id))
+         CAPACITY 1048576 SHARDS 8 PARTITION BY site
+    GO
+    EXEC#1 SELECT hits FROM pages WHERE site = ? AND id = ?
+    ARG#1 I 7
+    ARG#1 I 123
+    GO#1                      -- eq on `site` prunes to ONE shard
+    EXEC#2 SELECT COUNT(*) FROM pages WHERE hits > ?
+    ARG#2 I 100
+    GO#2                      -- fans out, partials merge server-side
+    EXEC#3 EXPLAIN SELECT hits FROM pages WHERE site = 7
+    GO#3                      -- VALUE row includes "shard_route":
+                              --   "pruned -> shard k" / "fan-out x 8"
+
+The batch scheduler additionally overlaps groups whose footprints
+provably commute — different tables, disjoint columns, or pruned
+statements on disjoint shard sets — so independent-shard traffic from
+different connections no longer queues behind one dispatch.
+
 Tensor payloads never cross this socket — they live on the accelerator;
 the protocol is the management/metadata plane (DESIGN.md §2).
 """

@@ -31,14 +31,36 @@ whole table — INSERT/DELETE churn validity, admin is a hard barrier):
   barriers — they never merge and nothing reorders across them; EXPLAIN
   (no reads, no writes) merges with nothing but fences nothing.
 
-Groups dispatch strictly in open order, so per-connection orderings and
-every column-level data dependency hold; reordering that no client can
-observe through the wire protocol (cross-table, or across writes to
-disjoint columns) is allowed. Auto-expiry cadence is per-statement
-(PR 2), so regrouping does not change TTL semantics beyond the already
-documented batch-boundary flexibility. Results are lazy, so a dispatch
-returns as soon as the device work is enqueued — the response flushers
-materialize rows off the event loop.
+Groups whose footprints conflict dispatch strictly in open order, so
+per-connection orderings and every column-level data dependency hold;
+reordering that no client can observe through the wire protocol
+(cross-table, or across writes to disjoint columns) is allowed.
+Auto-expiry cadence is per-statement (PR 2), so regrouping does not
+change TTL semantics beyond the already documented batch-boundary
+flexibility. Results are lazy, so a dispatch returns as soon as the
+device work is enqueued — the response flushers materialize rows off the
+event loop.
+
+Concurrent waves
+----------------
+Groups are dispatched in *waves*: a wave is the longest prefix of
+consecutive groups that pairwise COMMUTE — different tables, same table
+with disjoint column footprints, or same (sharded) table with provably
+disjoint shard-route sets (``SQLCached.group_shard_ids``: every
+statement in each group prunes to a known shard set and the sets don't
+intersect — independent-shard traffic from different connections
+overlaps even when the column footprints collide). A wave's groups run
+concurrently (``asyncio.gather`` over worker threads — jax device work
+is enqueued asynchronously, so this overlaps the host-side dispatch
+cost that dominates small statements); a conflicting group ends the
+wave and waits. Admin statements and unparseable SQL stay hard
+barriers: they are always a wave of one. Same-table groups inside one
+wave additionally serialize on a per-table lock — commuting makes the
+order irrelevant, the lock just keeps the read-modify-write of the
+table's device state handle atomic. Shard-pruned statements on one
+table may observe a logical clock that differs by the wave's statement
+count from strict admission order (clock ticks commute; same TTL
+batch-boundary flexibility as above).
 
 Admission window
 ----------------
@@ -72,12 +94,28 @@ class _Item:
 
 
 class _Group:
-    __slots__ = ("seq", "shape", "items")
+    __slots__ = ("seq", "shape", "items", "_shard_ids")
+
+    _UNSET = object()
 
     def __init__(self, seq: int, shape: StatementShape | None, items: list):
         self.seq = seq
         self.shape = shape
         self.items = items
+        self._shard_ids = _Group._UNSET  # lazily computed, then cached
+
+    def shard_ids(self, db: SQLCached) -> frozenset | None:
+        """The provable shard-id set of this group's statements (None =
+        unknown / fan-out / unsharded table). Computed lazily at
+        wave-build time — i.e. after every preceding wave (including
+        CREATE/DROP barriers) has executed — and cached."""
+        if self._shard_ids is _Group._UNSET:
+            try:
+                self._shard_ids = db.group_shard_ids(
+                    self.shape, [it.params for it in self.items])
+            except Exception:  # noqa: BLE001 — routing is best effort
+                self._shard_ids = None
+        return self._shard_ids
 
 
 class _TableFences:
@@ -149,19 +187,22 @@ class BatchScheduler:
 
     def __init__(self, db: SQLCached, *, batching: bool = True,
                  max_batch: int = 64, max_admit: int = 4096,
-                 max_wait_us: int = 0):
+                 max_wait_us: int = 0, concurrency: bool = True):
         self.db = db
         self.batching = batching
         self.max_batch = max_batch
         self.max_admit = max_admit
         self.max_wait_us = max_wait_us
+        self.concurrency = concurrency  # overlap commuting groups (waves)
         self._now = time.monotonic  # injectable (fake clocks in tests)
         self._q: deque[_Item] = deque()
         self._wake = asyncio.Event()
         self._task: asyncio.Task | None = None
         self._closed = False
+        self._table_locks: dict[str, asyncio.Lock] = {}
         self.stats = {"admitted": 0, "batches": 0, "grouped_statements": 0,
-                      "singles": 0, "max_group": 0, "window_waits": 0}
+                      "singles": 0, "max_group": 0, "window_waits": 0,
+                      "waves": 0, "overlapped_groups": 0, "max_wave": 0}
 
     # ------------------------------------------------------------ lifecycle
     async def start(self) -> None:
@@ -249,6 +290,18 @@ class BatchScheduler:
                 it.future.set_result(res)
 
     async def _dispatch(self, g: _Group) -> None:
+        """Run one group. Same-table groups inside a concurrent wave
+        serialize on the table lock (commuting makes the order free; the
+        lock keeps the table-state read-modify-write atomic)."""
+        table = g.shape.table if g.shape is not None else None
+        if table is not None:
+            lock = self._table_locks.setdefault(table, asyncio.Lock())
+            async with lock:
+                await self._dispatch_inner(g)
+        else:
+            await self._dispatch_inner(g)
+
+    async def _dispatch_inner(self, g: _Group) -> None:
         items = g.items
         self.stats["batches"] += 1
         if len(items) > self.stats["max_group"]:
@@ -274,6 +327,53 @@ class BatchScheduler:
         for it, res in zip(items, results):
             if not it.future.done():
                 it.future.set_result(res)
+
+    # ------------------------------------------------------------- waves
+    @staticmethod
+    def _footprints_disjoint(a: StatementShape, b: StatementShape) -> bool:
+        """Column-level commutation on one table: neither side's writes
+        may touch what the other reads or writes (None = whole table)."""
+
+        def touch(s):  # columns a shape touches at all; None = whole table
+            if s.reads is None or s.writes is None:
+                return None
+            return s.reads | s.writes
+
+        def conflicts(w, t):  # one side's writes vs the other's touches
+            if w is not None and not w:
+                return False   # writes nothing (reads commute with reads)
+            if t is not None and not t:
+                return False   # other side touches nothing (EXPLAIN)
+            if w is None or t is None:
+                return True    # whole-table on either side
+            return bool(w & t)
+
+        return not (conflicts(a.writes, touch(b))
+                    or conflicts(b.writes, touch(a)))
+
+    def _compatible(self, g: _Group, h: _Group) -> bool:
+        """May ``g`` run concurrently with ``h``? Barriers never overlap;
+        different tables always do; same-table groups need disjoint
+        column footprints or provably disjoint shard routes."""
+        for x in (g, h):
+            if x.shape is None or x.shape.kind == "admin":
+                return False
+        if g.shape.table != h.shape.table:
+            return True
+        if self._footprints_disjoint(g.shape, h.shape):
+            return True
+        gs, hs = g.shard_ids(self.db), h.shard_ids(self.db)
+        return gs is not None and hs is not None and not (gs & hs)
+
+    async def _dispatch_wave(self, wave: list) -> None:
+        self.stats["waves"] += 1
+        if len(wave) > self.stats["max_wave"]:
+            self.stats["max_wave"] = len(wave)
+        if len(wave) == 1:
+            await self._dispatch(wave[0])
+            return
+        self.stats["overlapped_groups"] += len(wave)
+        await asyncio.gather(*(self._dispatch(g) for g in wave))
 
     # ------------------------------------------------------------- windowing
     async def _wait_for_arrivals(self, timeout: float) -> None:
@@ -319,5 +419,22 @@ class BatchScheduler:
                 items.append(self._q.popleft())
             if self._q:
                 self._wake.set()  # leftovers past max_admit: next tick
-            for g in self._plan(items):
-                await self._dispatch(g)
+            groups = self._plan(items)
+            if not self.concurrency:
+                for g in groups:
+                    await self._dispatch(g)
+                continue
+            # wave dispatch: run the longest prefix of pairwise-commuting
+            # groups concurrently; a conflicting group ends the wave and
+            # waits. Compatibility (including shard routes, which read
+            # the live schema) is evaluated AFTER the preceding wave has
+            # fully executed, so admin barriers can't be read around.
+            i = 0
+            while i < len(groups):
+                wave = [groups[i]]
+                i += 1
+                while i < len(groups) and all(
+                        self._compatible(groups[i], h) for h in wave):
+                    wave.append(groups[i])
+                    i += 1
+                await self._dispatch_wave(wave)

@@ -81,6 +81,15 @@ class TableSchema:
     # int32-typed only (INT, or TEXT via the interner). Equality lookups
     # on these lower to an O(1) bucket probe instead of a full scan.
     indexes: tuple[str, ...] = ()
+    # Horizontal partitioning (core/shards.py): ``shards > 1`` hash-
+    # partitions the rows across that many independent shard tables, each
+    # with its own validity mask / relscan tiles / hash indexes, by a
+    # multiplicative hash of ``partition_by`` (an int32 column — INT, or
+    # TEXT via the interner; defaults to the first indexed column, else
+    # the first int32 column). ``capacity`` stays the LOGICAL total; each
+    # shard holds ceil(capacity / shards) rows.
+    shards: int = 1
+    partition_by: str | None = None
 
     def __post_init__(self):
         names = [c.name for c in self.columns] + [p.name for p in self.payloads]
@@ -98,6 +107,30 @@ class TableSchema:
                     f"indexable")
         if len(set(self.indexes)) != len(self.indexes):
             raise ValueError(f"duplicate index in table {self.name!r}")
+        if self.shards < 1:
+            raise ValueError(f"table {self.name!r}: SHARDS must be >= 1")
+        if self.shards > 1:
+            if self.partition_by is None:
+                object.__setattr__(self, "partition_by",
+                                   self._default_partition_column())
+            if np.dtype(self.column(self.partition_by).dtype) != np.int32:
+                raise ValueError(
+                    f"PARTITION BY {self.partition_by!r}: only int32 "
+                    f"(INT/TEXT) columns are partitionable")
+        elif self.partition_by is not None:
+            if not self.has_column(self.partition_by):
+                raise KeyError(f"no column {self.partition_by!r} in table "
+                               f"{self.name!r}")
+
+    def _default_partition_column(self) -> str:
+        if self.indexes:
+            return self.indexes[0]
+        for c in self.columns:
+            if np.dtype(c.dtype) == np.int32:
+                return c.name
+        raise ValueError(
+            f"table {self.name!r}: SHARDS needs an int32 (INT/TEXT) column "
+            f"to PARTITION BY")
 
     @property
     def column_names(self) -> tuple[str, ...]:
@@ -136,10 +169,12 @@ def make_schema(
     max_select: int = 1024,
     expiry: ExpiryPolicy = ExpiryPolicy(),
     indexes: Sequence[str] = (),
+    shards: int = 1,
+    partition_by: str | None = None,
 ) -> TableSchema:
     cols = tuple(
         ColumnSpec(n, t, is_text=(t.upper() == "TEXT")) for n, t in columns
     )
     pls = tuple(PayloadSpec(n, tuple(s), d) for n, s, d in payloads)
     return TableSchema(name, cols, pls, capacity, max_select, expiry,
-                       tuple(indexes))
+                       tuple(indexes), shards, partition_by)

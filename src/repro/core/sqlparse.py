@@ -8,7 +8,7 @@ cache daemon and we exclude them):
   CREATE TABLE t (a INT, b TEXT, INDEX(a), ...,
                   PAYLOAD kv TENSOR(16,2,8,64) BF16)
       [CAPACITY 4096] [MAX_SELECT 256] [TTL 100] [MAX_ROWS 1000]
-      [OPS_INTERVAL 64]
+      [OPS_INTERVAL 64] [SHARDS 4 | SHARDS(4)] [PARTITION BY a]
   INSERT INTO t (a, b) VALUES (?, 'x') [TTL 50]
   SELECT a, b FROM t WHERE a = ? AND b BETWEEN 2 AND 7
       [ORDER BY a [ASC|DESC]] [LIMIT 10]
@@ -28,6 +28,14 @@ cache daemon and we exclude them):
 ``INDEX(col)`` in a CREATE column list declares a device-resident hash
 index on an INT/TEXT column; equality WHEREs on it become O(1) bucket
 probes (core/planner.py decides, EXPLAIN shows the decision).
+
+``SHARDS n`` (equivalently ``SHARDS(n)``) hash-partitions the table's
+rows across ``n`` independent shard tables (core/shards.py), split by a
+multiplicative hash of the ``PARTITION BY`` column (defaults to the
+first indexed column, else the first INT/TEXT column). An equality WHERE
+on the partition column prunes execution to exactly one shard;
+everything else fans out across all shards and merges the partials
+(EXPLAIN reports the shard route next to the plan).
 
 Statements parse to frozen dataclasses (hashable → usable as static jit
 arguments); `?` placeholders become Param nodes so one parse+jit serves
@@ -101,6 +109,8 @@ class CreateTable:
     max_rows: int = 0
     ops_interval: int = 0
     indexes: tuple[str, ...] = ()  # hash-indexed columns (INDEX(col))
+    shards: int = 1  # hash-partition count (SHARDS n)
+    partition_by: str | None = None  # PARTITION BY col (None = default)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -366,15 +376,26 @@ class _Parser:
                 break
         self.expect_op(")")
         opts = {"capacity": 4096, "max_select": 1024, "ttl": 0, "max_rows": 0,
-                "ops_interval": 0}
+                "ops_interval": 0, "shards": 1}
+        partition_by = None
         while True:
             kw = self.accept_kw("CAPACITY", "MAX_SELECT", "TTL", "MAX_ROWS",
-                                "OPS_INTERVAL")
+                                "OPS_INTERVAL", "SHARDS", "PARTITION")
             if not kw:
                 break
-            opts[kw.lower()] = self.integer()
+            if kw == "PARTITION":
+                self.expect_kw("BY")
+                partition_by = self.name()
+            elif kw == "SHARDS" and self.accept_op("("):
+                opts["shards"] = self.integer()  # SHARDS(n) form
+                self.expect_op(")")
+            else:
+                opts[kw.lower()] = self.integer()
+        if opts["shards"] < 1:
+            raise SQLError("SHARDS must be >= 1")
         return CreateTable(table, tuple(columns), tuple(payloads),
-                           indexes=tuple(indexes), **opts)
+                           indexes=tuple(indexes), partition_by=partition_by,
+                           **opts)
 
     def _stmt_insert(self) -> Insert:
         self.expect_kw("INTO")

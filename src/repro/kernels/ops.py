@@ -91,6 +91,36 @@ def hash_probe(rid, key, qkeys, *, mode=None):
                           interpret=(mode == "interpret"))
 
 
+def shard_split(shard_ids, n_shards: int, row_mask=None):
+    """Device-side partition split for the sharded-table INSERT path: one
+    XLA sort routes a [b]-row batch to its shards (the same sort+searchsorted
+    machinery as hashidx's bulk bucketing, reused at shard granularity).
+
+    shard_ids: [b] int32 target shard per row; row_mask: [b] bool (None =
+    all rows live). Returns (rows [n_shards, b], mask [n_shards, b]):
+    ``rows[s]`` are original batch indices (clipped), ``mask[s]`` marks
+    which of them really belong to shard ``s`` — the per-shard executors
+    consume them as a masked fixed-width batch, so ONE dispatch feeds all
+    shards. Pure jnp by design: the sort/gather shapes are ones XLA
+    already lowers well on every backend."""
+    import jax.numpy as jnp
+
+    b = shard_ids.shape[0]
+    sid = shard_ids.astype(jnp.int32)
+    if row_mask is not None:
+        sid = jnp.where(row_mask, sid, n_shards)  # masked rows -> sentinel
+    order = jnp.argsort(sid).astype(jnp.int32)    # stable: keeps row order
+    ssid = sid[order]
+    start = jnp.searchsorted(
+        ssid, jnp.arange(n_shards, dtype=jnp.int32)).astype(jnp.int32)
+    pos = start[:, None] + jnp.arange(b, dtype=jnp.int32)[None, :]
+    posc = jnp.clip(pos, 0, b - 1)
+    rows = order[posc]
+    mask = (ssid[posc] == jnp.arange(n_shards, dtype=jnp.int32)[:, None]) \
+        & (pos < b)
+    return rows, mask
+
+
 def mamba2_scan(x, dt, dA, B, C, **kw):
     mode = _mode()
     if mode == "ref":

@@ -125,6 +125,24 @@ def test_create_table_indexes():
     assert st.columns == (("index", "INT"),) and st.indexes == ()
 
 
+def test_create_table_shards():
+    st = S.parse("CREATE TABLE t (a INT, b INT) CAPACITY 128 SHARDS 4 "
+                 "PARTITION BY b")
+    assert st.shards == 4 and st.partition_by == "b"
+    # SHARDS(n) spelling and option-order independence
+    st = S.parse("CREATE TABLE t (a INT) SHARDS(2) CAPACITY 64")
+    assert st.shards == 2 and st.capacity == 64
+    st = S.parse("CREATE TABLE t (a INT) PARTITION BY a SHARDS 8")
+    assert st.shards == 8 and st.partition_by == "a"
+    # a column legitimately named `shards` still parses as a column
+    st = S.parse("CREATE TABLE t (shards INT)")
+    assert st.columns == (("shards", "INT"),) and st.shards == 1
+    with pytest.raises(S.SQLError):
+        S.parse("CREATE TABLE t (a INT) SHARDS")
+    with pytest.raises(S.SQLError):
+        S.parse("CREATE TABLE t (a INT) PARTITION BY")
+
+
 def test_explain_statement():
     st = S.parse("EXPLAIN SELECT a FROM t WHERE a = ?")
     assert isinstance(st, S.Explain) and isinstance(st.inner, S.Select)

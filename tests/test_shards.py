@@ -1,0 +1,405 @@
+"""Unit tests for the sharded-table subsystem (core/shards.py), its
+grammar/planner surface, the partition-split primitive, the bulk-load
+insert fast path, and the scheduler's concurrent wave dispatch."""
+import asyncio
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import planner as PL
+from repro.core import predicate as P
+from repro.core import shards as SH
+from repro.core import sqlparse as S
+from repro.core import table as T
+from repro.core.daemon import SQLCached
+from repro.core.scheduler import BatchScheduler
+from repro.core.schema import make_schema
+from repro.kernels import ops as OPS
+
+
+# ---------------------------------------------------------------- grammar
+
+def test_create_shards_grammar():
+    st = S.parse("CREATE TABLE t (a INT, b INT) CAPACITY 64 SHARDS 4 "
+                 "PARTITION BY a")
+    assert st.shards == 4 and st.partition_by == "a"
+    st = S.parse("CREATE TABLE t (a INT) SHARDS(8)")
+    assert st.shards == 8 and st.partition_by is None
+    st = S.parse("CREATE TABLE t (a INT)")
+    assert st.shards == 1
+    with pytest.raises(S.SQLError):
+        S.parse("CREATE TABLE t (a INT) SHARDS 0")
+    with pytest.raises(S.SQLError):
+        S.parse("CREATE TABLE t (a INT) PARTITION a")
+
+
+def test_schema_shard_validation():
+    # default partition column: first indexed, else first int32 column
+    sch = make_schema("t", [("f", "FLOAT"), ("a", "INT"), ("b", "INT")],
+                      shards=2, indexes=("b",))
+    assert sch.partition_by == "b"
+    sch = make_schema("t", [("f", "FLOAT"), ("a", "INT")], shards=2)
+    assert sch.partition_by == "a"
+    with pytest.raises(ValueError):
+        make_schema("t", [("f", "FLOAT")], shards=2)  # nothing partitionable
+    with pytest.raises(ValueError):
+        make_schema("t", [("f", "FLOAT"), ("a", "INT")], shards=2,
+                    partition_by="f")
+    s_sch = SH.shard_schema(make_schema("t", [("a", "INT")], capacity=100,
+                                        shards=4))
+    assert s_sch.capacity == 25 and s_sch.shards == 1
+
+
+def test_shard_of_host_matches_device():
+    keys = np.asarray([0, 1, 7, -5, 2**31 - 1, -2**31, 123456], np.int32)
+    for n in (2, 4, 8, 3):
+        dev = np.asarray(SH.shard_of(jnp.asarray(keys), n))
+        host = [SH.shard_of_host(int(k), n) for k in keys]
+        assert list(dev) == host
+
+
+def test_shard_split_routes_every_row_once():
+    rng = np.random.default_rng(0)
+    sid = jnp.asarray(rng.integers(0, 4, 33), jnp.int32)
+    mask = jnp.asarray(rng.random(33) < 0.8)
+    rows, m = OPS.shard_split(sid, 4, mask)
+    rows, m = np.asarray(rows), np.asarray(m)
+    seen = []
+    for s in range(4):
+        got = rows[s][m[s]]
+        assert all(np.asarray(sid)[g] == s for g in got)
+        seen.extend(got.tolist())
+    expect = [i for i in range(33) if bool(np.asarray(mask)[i])]
+    assert sorted(seen) == expect
+
+
+# ------------------------------------------------------------ shard router
+
+def test_plan_shards_pruning_rules():
+    sch = make_schema("t", [("k", "INT"), ("w", "INT")], shards=4,
+                      partition_by="k")
+    eq_k = P.BinOp("=", P.Col("k"), P.Param(0))
+    eq_w = P.BinOp("=", P.Col("w"), P.Param(0))
+    assert PL.plan_shards(sch, eq_k).pruned
+    assert PL.plan_shards(sch, P.And(eq_k, eq_w)).pruned
+    assert not PL.plan_shards(sch, eq_w).pruned
+    assert not PL.plan_shards(sch, None).pruned
+    assert not PL.plan_shards(sch, P.Or(eq_k, eq_w)).pruned
+    # range on the partition column cannot prune
+    assert not PL.plan_shards(sch, P.BinOp("<", P.Col("k"),
+                                           P.Param(0))).pruned
+
+
+def test_explain_reports_shard_route():
+    db = SQLCached()
+    db.execute("CREATE TABLE t (k INT, w INT, INDEX(k)) CAPACITY 64 "
+               "SHARDS 4 PARTITION BY k")
+    info = json.loads(db.execute("EXPLAIN SELECT w FROM t WHERE k = ?").value)
+    assert info["shard_route"] == "pruned" and info["shards"] == 4
+    assert info["partition_by"] == "k"
+    info = json.loads(db.execute("EXPLAIN SELECT w FROM t WHERE k = 7").value)
+    sid = SH.shard_of_host(7, 4)
+    assert info["shard_route"] == f"pruned -> shard {sid}"
+    info = json.loads(db.execute("EXPLAIN SELECT w FROM t WHERE w = ?").value)
+    assert info["shard_route"] == "fan-out x 4"
+    info = json.loads(db.execute(
+        "EXPLAIN INSERT INTO t (k, w) VALUES (?, ?)").value)
+    assert info["shard_route"] == "split x 4"
+    # unsharded tables keep the old payload (no shard keys)
+    db.execute("CREATE TABLE u (k INT)")
+    info = json.loads(db.execute("EXPLAIN SELECT k FROM u WHERE k = ?").value)
+    assert "shard_route" not in info
+
+
+def test_sharded_insert_globalizes_slots():
+    db = SQLCached()
+    db.execute("CREATE TABLE t (k INT, w INT) CAPACITY 64 SHARDS 4 "
+               "PARTITION BY k")
+    res = db.executemany("INSERT INTO t (k, w) VALUES (?, ?)",
+                         [(i, i) for i in range(10)])
+    assert res.count == 10
+    ids = np.asarray(res.row_ids)
+    cap_s = SH.shard_capacity(db.schema("t"))
+    for i, rid in enumerate(ids):
+        assert rid // cap_s == SH.shard_of_host(i, 4)
+
+
+def test_update_partition_column_refused():
+    db = SQLCached()
+    db.execute("CREATE TABLE t (k INT, w INT) CAPACITY 64 SHARDS 2")
+    db.execute("INSERT INTO t (k, w) VALUES (?, ?)", (1, 1))
+    with pytest.raises(ValueError, match="partition column"):
+        db.execute("UPDATE t SET k = 5 WHERE w = 1")
+    # non-partition columns still update fine
+    assert db.execute("UPDATE t SET w = 9 WHERE k = 1").count == 1
+
+
+def test_pruned_routes_only_touch_one_shard():
+    """A pruned DELETE must leave every other shard's validity bits
+    untouched (bit-identical)."""
+    sch = make_schema("t", [("k", "INT"), ("w", "INT")], capacity=64,
+                      shards=4, partition_by="k")
+    stt = SH.init_state(sch)
+    stt, _, _ = SH.insert(sch, stt,
+                          {"k": jnp.arange(32, dtype=jnp.int32),
+                           "w": jnp.arange(32, dtype=jnp.int32)})
+    sid = SH.shard_of_host(5, 4)
+    before = np.asarray(stt["valid"])
+    stt2, n = SH.delete(sch, stt, P.BinOp("=", P.Col("k"), P.Param(0)),
+                        (5,))
+    assert int(n) == 1
+    after = np.asarray(stt2["valid"])
+    for s in range(4):
+        if s == sid:
+            assert before[s].sum() - after[s].sum() == 1
+        else:
+            np.testing.assert_array_equal(before[s], after[s])
+
+
+# ------------------------------------------------- allocator + bulk insert
+
+def test_alloc_free_path_matches_topk():
+    sch = make_schema("t", [("k", "INT")], capacity=64)
+    stt = T.init_state(sch)
+    stt, _, _ = T.insert(sch, stt, {"k": jnp.arange(10, dtype=jnp.int32)})
+    free = np.asarray(T._free_slots(stt, 8))
+    lru = np.asarray(T._lru_slots(stt, 8))
+    np.testing.assert_array_equal(free, lru)
+    np.testing.assert_array_equal(free, np.arange(10, 18))
+
+
+def test_alloc_falls_back_to_lru_when_full():
+    sch = make_schema("t", [("k", "INT")], capacity=16)
+    stt = T.init_state(sch)
+    stt, _, _ = T.insert(sch, stt, {"k": jnp.arange(16, dtype=jnp.int32)})
+    # touch rows 0..7 so rows 8..15 are the LRU victims
+    stt, _ = T.select(sch, stt, P.BinOp("<", P.Col("k"), P.Const(8)))
+    slots = np.asarray(T._alloc_slots(stt, 4))
+    assert set(slots) <= set(range(8, 16))
+
+
+def test_bulk_insert_rebuild_matches_incremental():
+    """Wide indexed INSERT batches must produce an index equivalent to
+    the per-slot path: same probe results, fresh stale flag."""
+    sch = make_schema("t", [("k", "INT"), ("w", "INT")], capacity=512,
+                      max_select=64, indexes=("k",))
+    n = T.BULK_INDEX_THRESHOLD  # exactly at the threshold -> bulk path
+    keys = np.arange(n, dtype=np.int32)
+    stt, _, _ = T.insert(sch, T.init_state(sch),
+                         {"k": jnp.asarray(keys),
+                          "w": jnp.asarray(keys * 2)})
+    assert int(stt["indexes"]["k"]["stale"]) == 0
+    for k in (0, 3, int(n - 1), 999):
+        _, res = T.select(sch, stt, P.BinOp("=", P.Col("k"), P.Param(0)),
+                          (k,), touch=False)
+        assert int(res["count"]) == (1 if k < n else 0)
+    # narrow follow-up batches keep maintaining the same index
+    stt, _, _ = T.insert(sch, stt, {"k": jnp.asarray([1000], jnp.int32),
+                                    "w": jnp.asarray([7], jnp.int32)})
+    _, res = T.select(sch, stt, P.BinOp("=", P.Col("k"), P.Param(0)),
+                      (1000,), touch=False)
+    assert int(res["count"]) == 1
+
+
+def test_bulk_insert_still_detects_overflow():
+    sch = make_schema("t", [("k", "INT"), ("w", "INT")], capacity=512,
+                      max_select=256, indexes=("k",))
+    stt, _, _ = T.insert(sch, T.init_state(sch),
+                         {"k": jnp.full((200,), 7, jnp.int32),
+                          "w": jnp.arange(200, dtype=jnp.int32)})
+    assert int(stt["indexes"]["k"]["stale"]) > 0  # >bucket_cap duplicates
+    _, res = T.select(sch, stt, P.BinOp("=", P.Col("k"), P.Param(0)),
+                      (7,), touch=False)
+    assert int(res["count"]) == 200  # cond fell back to the scan
+
+
+# -------------------------------------------------- delete_many_eq counts
+
+@pytest.mark.parametrize("w", [4, 32])  # claim loop vs sorted attribution
+def test_delete_many_eq_per_statement_counts(w):
+    sch = make_schema("t", [("k", "INT")], capacity=128)
+    stt = T.init_state(sch)
+    keys = np.asarray([i % 5 for i in range(40)], np.int32)
+    stt, _, _ = T.insert(sch, stt, {"k": jnp.asarray(keys)})
+    vals = np.zeros(w, np.int32)
+    vals[:4] = [3, 1, 3, 9]  # duplicate 3: second statement finds nothing
+    active = np.zeros(w, bool)
+    active[:4] = True
+    stt2, n, ns = T.delete_many_eq(sch, stt, "k", jnp.asarray(vals),
+                                   jnp.asarray(active), per_statement=True)
+    ns = np.asarray(ns)
+    assert list(ns[:4]) == [8, 8, 0, 0]
+    assert int(n) == 16 and ns.sum() == 16
+
+
+def test_delete_many_eq_padding_never_hits_int32_max_rows():
+    """Inactive (padding) lanes carry the INT32_MAX sentinel — they must
+    not delete genuine INT32_MAX rows on the direct-compare paths."""
+    import jax.numpy as jnp
+
+    sch = make_schema("t", [("k", "INT")], capacity=64)
+    stt = T.init_state(sch)
+    stt, _, _ = T.insert(
+        sch, stt, {"k": jnp.asarray([1, 2**31 - 1, 5], jnp.int32)})
+    vals = jnp.asarray([1, 0, 0, 0], jnp.int32)
+    active = jnp.asarray([True, False, False, False])
+    st2, n = T.delete_many_eq(sch, stt, "k", vals, active)
+    assert int(n) == 1 and int(T.live_count(st2)) == 2
+    st3, n3, ns = T.delete_many_eq(sch, stt, "k", vals, active,
+                                   per_statement=True)
+    assert int(n3) == 1 and list(np.asarray(ns)) == [1, 0, 0, 0]
+    # an ACTIVE statement may still delete an INT32_MAX row directly
+    st4, n4 = T.delete_many_eq(
+        sch, stt, "k", jnp.asarray([2**31 - 1] * 4, jnp.int32),
+        jnp.asarray([True, False, False, False]))
+    assert int(n4) == 1
+
+
+def test_wire_per_statement_delete_counts_eq_shape():
+    db = SQLCached()
+    db.execute("CREATE TABLE t (k INT, w INT) CAPACITY 128")
+    db.executemany("INSERT INTO t (k, w) VALUES (?, ?)",
+                   [(i % 5, i) for i in range(40)])
+    res = db.executemany("DELETE FROM t WHERE k = ?",
+                         [(3,), (1,), (3,), (9,)], per_statement=True)
+    assert [r.count for r in res] == [8, 8, 0, 0]
+
+
+# -------------------------------------------------------- scheduler waves
+
+def _run(coro):
+    return asyncio.run(coro)
+
+
+def test_waves_overlap_disjoint_tables():
+    async def main():
+        db = SQLCached()
+        db.execute("CREATE TABLE a (k INT) CAPACITY 32")
+        db.execute("CREATE TABLE b (k INT) CAPACITY 32")
+        sched = BatchScheduler(db, batching=True)
+        await sched.start()
+        futs = [sched.submit("INSERT INTO a (k) VALUES (?)", (i,))
+                for i in range(3)]
+        futs += [sched.submit("INSERT INTO b (k) VALUES (?)", (i,))
+                 for i in range(3)]
+        res = await asyncio.gather(*futs)
+        await sched.stop()
+        assert all(r.count == 1 for r in res)
+        assert sched.stats["max_wave"] >= 2  # a-group ∥ b-group
+        return db
+
+    db = _run(main())
+    assert db.live_rows("a") == 3 and db.live_rows("b") == 3
+
+
+def test_waves_never_cross_admin_barrier():
+    async def main():
+        db = SQLCached()
+        db.execute("CREATE TABLE a (k INT) CAPACITY 32")
+        sched = BatchScheduler(db, batching=True)
+        await sched.start()
+        futs = [sched.submit("INSERT INTO a (k) VALUES (1)"),
+                sched.submit("DROP TABLE a"),
+                sched.submit("CREATE TABLE a (k INT) CAPACITY 32"),
+                sched.submit("INSERT INTO a (k) VALUES (2)")]
+        await asyncio.gather(*futs)
+        await sched.stop()
+        assert db.live_rows("a") == 1  # the post-recreate insert only
+        return sched
+
+    sched = _run(main())
+    assert sched.stats["admitted"] == 4
+
+
+def test_waves_overlap_disjoint_shard_routes():
+    """Same table, conflicting column footprints, but both groups prune
+    to disjoint shard sets -> they may share a wave."""
+    db = SQLCached()
+    db.execute("CREATE TABLE t (k INT, w INT) CAPACITY 64 SHARDS 4 "
+               "PARTITION BY k")
+    # find two keys on different shards
+    k0, k1 = 0, next(k for k in range(1, 50)
+                     if SH.shard_of_host(k, 4) != SH.shard_of_host(0, 4))
+    db.executemany("INSERT INTO t (k, w) VALUES (?, ?)",
+                   [(k0, 1), (k1, 2)])
+
+    async def main():
+        sched = BatchScheduler(db, batching=True)
+        await sched.start()
+        # distinct SQL texts -> distinct groups; conflicting column
+        # footprints (both write w) but disjoint shard sets
+        futs = [sched.submit("UPDATE t SET w = w + 1 WHERE k = ?", (k0,)),
+                sched.submit("UPDATE t SET w = w + 100 WHERE k = ?",
+                             (k1,))]
+        res = await asyncio.gather(*futs)
+        await sched.stop()
+        return sched, res
+
+    sched, res = _run(main())
+    assert [r.count for r in res] == [1, 1]
+    assert db.execute("SELECT w FROM t WHERE k = ?", (k0,)).rows[0]["w"] == 2
+    assert db.execute("SELECT w FROM t WHERE k = ?", (k1,)).rows[0]["w"] \
+        == 102
+    # the two distinct-SQL update groups pruned to disjoint shards
+    assert sched.stats["max_wave"] >= 2
+
+
+def test_group_shard_ids_hook():
+    db = SQLCached()
+    db.execute("CREATE TABLE t (k INT, w INT) CAPACITY 64 SHARDS 4 "
+               "PARTITION BY k")
+    shape = db.shape_key("UPDATE t SET w = 0 WHERE k = ?")
+    ids = db.group_shard_ids(shape, [(0,), (1,)])
+    assert ids == frozenset({SH.shard_of_host(0, 4), SH.shard_of_host(1, 4)})
+    # fan-out shapes and unsharded tables report None
+    assert db.group_shard_ids(db.shape_key("UPDATE t SET w = 0 WHERE w = ?"),
+                              [(0,)]) is None
+    db.execute("CREATE TABLE u (k INT)")
+    assert db.group_shard_ids(db.shape_key("SELECT k FROM u WHERE k = ?"),
+                              [(0,)]) is None
+    # INSERT routes by its partition value
+    ins = db.shape_key("INSERT INTO t (k, w) VALUES (?, ?)")
+    assert db.group_shard_ids(ins, [(5, 0)]) == frozenset(
+        {SH.shard_of_host(5, 4)})
+    # float key value -> unknown (exact-compare demotion)
+    assert db.group_shard_ids(shape, [(1.5,)]) is None
+
+
+def test_explain_shard_route_over_the_wire():
+    """EXPLAIN's shard route must be observable from a socket client."""
+    from repro.core.protocol import SQLCachedClient, ThreadedServer
+
+    db = SQLCached()
+    db.execute("CREATE TABLE t (k INT, w INT) CAPACITY 64 SHARDS 4 "
+               "PARTITION BY k")
+    with ThreadedServer(db=db) as s:
+        c = SQLCachedClient(*s.addr)
+        try:
+            # the VALUE payload is JSON; the client already decodes it
+            info = c.execute("EXPLAIN SELECT w FROM t WHERE k = ?")["value"]
+            assert info["shard_route"] == "pruned"
+            info = c.execute("EXPLAIN DELETE FROM t WHERE w = 3")["value"]
+            assert info["shard_route"] == "fan-out x 4"
+        finally:
+            c.close()
+
+
+def test_concurrency_off_still_correct():
+    async def main():
+        db = SQLCached()
+        db.execute("CREATE TABLE a (k INT) CAPACITY 32")
+        sched = BatchScheduler(db, batching=True, concurrency=False)
+        await sched.start()
+        futs = [sched.submit("INSERT INTO a (k) VALUES (?)", (i,))
+                for i in range(4)]
+        res = await asyncio.gather(*futs)
+        await sched.stop()
+        assert all(r.count == 1 for r in res)
+        assert sched.stats["waves"] == 0
+        return db
+
+    db = _run(main())
+    assert db.live_rows("a") == 4
