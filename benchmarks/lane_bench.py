@@ -1,0 +1,241 @@
+"""Per-shard execution lanes: same-table mixed writes, lane-locked
+scheduler vs the PR-4 single-table-lock wave scheduler.
+
+PR 4's wave dispatcher could *prove* that two same-table groups with
+disjoint shard routes commute, but still serialized them on one
+per-table lock — a hot table stayed a concurrency barrier no matter how
+many shards it had. PR 5 partitions the daemon state into per-shard
+execution lanes (each lane its own device-state handle and its own
+scheduler lock), so single-shard groups dispatch concurrently.
+
+Lane routing is not only a locking story: a statement group whose
+shard route is host-provable executes against ONE lane's state handle,
+so the batched eq-DELETE one-pass (``delete_many_eq``) scans one shard
+instead of running vmapped over every shard, and a single-shard INSERT
+batch skips the device-side split + all-shard vmapped insert. For an
+invalidation-heavy mixed-write window (the paper's Table 2 shape —
+caches burn most write traffic expiring entries) that is a ~n_shards
+reduction in device work per delete/insert group, on top of the
+scheduler-level overlap of disjoint-lane groups.
+
+This bench measures the system-level delta: one 4-shard table at fixed
+total capacity, driven by shard-affine client streams (every client
+speaks the SAME SQL texts; shard affinity comes only from the bound key
+values — sticky client->shard routing) with UPDATE / INSERT / DELETE
+phases, through two full configurations:
+
+* **lanes** — this PR: ``SQLCached(lane_exec=True)`` +
+  ``BatchScheduler(lane_locks=True)``;
+* **single-lock (PR-4)** — ``SQLCached(lane_exec=False)`` (every
+  sharded statement takes the stacked whole-table executors, as before
+  this PR) + ``BatchScheduler(lane_locks=False)`` (one per-table lock).
+
+Both batch, both run waves, both produce identical results.
+
+Measurement is PAIRED, consistent with the shard_bench convention: the
+two schedulers run against two identically warmed daemons inside one
+event loop and are driven in ALTERNATING rounds, so background load on
+a shared host moves both configurations together and the checked-in
+speedup ratio reflects the scheduler, not the weather.
+
+``--json`` writes BENCH_lane.json at the repo root (checked in per PR;
+``benchmarks/run.py --check`` gates ``lane_speedup_vs_single_lock``);
+``--quick`` trims the statement count but keeps the same shape.
+"""
+from __future__ import annotations
+
+import asyncio
+import json
+import pathlib
+import sys
+import time
+
+import jax
+import numpy as np
+
+from repro.core import shards as SH
+from repro.core.daemon import SQLCached
+from repro.core.scheduler import BatchScheduler
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+N_SHARDS = 4
+CAPACITY = 262144           # fixed TOTAL capacity (shard_bench writes)
+N_UPD = 12                  # per variant per round: update phase width
+N_INS = 12                  # insert phase width
+N_DEL = 12                  # delete phase width (invalidation-heavy mix)
+CHUNK = N_UPD + N_INS + N_DEL
+# cap groups at one variant's phase width: each client stream's phase
+# block becomes ONE full batched group, and because every stream is
+# shard-affine the group's route is a single shard (the natural result
+# of sticky client->shard routing — no special statement texts needed)
+MAX_BATCH = max(N_UPD, N_INS, N_DEL)
+N_ROUNDS = 24
+N_ROUNDS_QUICK = 10
+
+_CREATE = (f"CREATE TABLE lt (k INT, w INT) CAPACITY {CAPACITY} "
+           f"MAX_SELECT 8 SHARDS {N_SHARDS} PARTITION BY k")
+
+# ONE text per statement kind — every client speaks the same SQL; the
+# shard affinity comes entirely from the bound key values
+_INSERT = "INSERT INTO lt (k, w) VALUES (?, ?)"
+_UPDATE = "UPDATE lt SET w = w + 1 WHERE k = ?"
+_DELETE = "DELETE FROM lt WHERE k = ?"
+
+
+def _shard_keys(sid: int, count: int) -> list:
+    """``count`` distinct int keys hashing to shard ``sid``."""
+    out, k = [], sid  # start points staggered so key spaces stay disjoint
+    while len(out) < count:
+        if SH.shard_of_host(k, N_SHARDS) == sid:
+            out.append(k)
+        k += N_SHARDS + 1
+    return out
+
+
+def _variant_streams(sid: int, rounds: int) -> dict:
+    """Pruned mixed-write streams for one shard variant, phase-split per
+    round: N_UPD UPDATEs, N_INS INSERTs, N_DEL DELETEs over a rolling
+    live-key set — an invalidation-heavy cache-write mix (most deletes
+    retire recently inserted keys, Table 2 style). Phase-splitting
+    matters for the measurement: a round submits every variant's
+    updates first, then the inserts, then the deletes, so same-phase
+    groups of different variants are CONSECUTIVE — each phase becomes
+    one batched group per variant and the wave builder can overlap
+    them — exactly the traffic a shard-affine web tier produces."""
+    keys = _shard_keys(sid, rounds * N_INS + N_DEL + 4)
+    upd, ins, dele = [], [], []
+    live = list(keys[:4])
+    nxt = 4
+    for _ in range(rounds):
+        batch = keys[nxt:nxt + N_INS]
+        nxt += N_INS
+        ins.append([(_INSERT, (k, sid)) for k in batch])
+        live.extend(batch)
+        upd.append([(_UPDATE, (live[j % len(live)],))
+                    for j in range(N_UPD)])
+        dele.append([(_DELETE, (live.pop(0) if len(live) > 4
+                                else live[0],))
+                     for _ in range(N_DEL)])
+    return {"upd": upd, "ins": ins, "del": dele}
+
+
+def _warm(db: SQLCached) -> None:
+    """Compile every executor shape both regimes will hit (lane AND
+    stacked modes, all bucket sizes) before timing."""
+    db.execute(_CREATE)
+    for sid in range(N_SHARDS):
+        keys = _shard_keys(sid, 4)
+        db.execute(_INSERT, (keys[0], sid))
+        db.execute(_UPDATE, (keys[0],))
+        db.execute(_DELETE, (keys[0],))
+        b = 1
+        while b <= 2 * MAX_BATCH:  # covers the padded bucket sizes too
+            db.executemany(_INSERT, [(keys[0], sid)] * b,
+                           per_statement=True)
+            db.executemany(_UPDATE, [(keys[0],)] * b,
+                           per_statement=True)
+            db.executemany(_DELETE, [(keys[1],)] * b,
+                           per_statement=True)
+            b *= 2
+    db.execute("FLUSH lt")
+    db.drain("lt")
+
+
+async def _drive_round(sched: BatchScheduler, streams, r: int):
+    """Submit one round phase-blocked: every variant's UPDATE block,
+    then the INSERTs, then the DELETEs. Same-phase groups of different
+    variants commute (disjoint shard routes), so each phase forms one
+    wave of N_SHARDS groups — the lane-locked scheduler runs them
+    concurrently, the single-lock baseline serializes them."""
+    futs = []
+    for phase in ("upd", "ins", "del"):
+        for sv in streams:
+            for sql, params in sv[phase][r]:
+                futs.append(sched.submit(sql, params))
+    await asyncio.gather(*futs)
+
+
+def run(rounds: int = N_ROUNDS) -> dict:
+    dbs = {}
+    for lane in (False, True):
+        db = SQLCached(lane_exec=lane)
+        _warm(db)
+        dbs[lane] = db
+    streams = [_variant_streams(sid, rounds)
+               for sid in range(N_SHARDS)]
+    walls = {False: 0.0, True: 0.0}
+    stats = {}
+
+    async def main():
+        scheds = {lane: BatchScheduler(dbs[lane], batching=True,
+                                       max_batch=MAX_BATCH,
+                                       concurrency=True, lane_locks=lane)
+                  for lane in (False, True)}
+        for s in scheds.values():
+            await s.start()
+        # one unmeasured round warms the wave/lock paths of both
+        await _drive_round(scheds[False], streams, 0)
+        await _drive_round(scheds[True], streams, 0)
+        for lane in (False, True):
+            dbs[lane].drain("lt")
+        for r in range(1, rounds):  # ALTERNATING rounds: paired measure
+            for lane in (False, True):
+                t0 = time.perf_counter()
+                await _drive_round(scheds[lane], streams, r)
+                dbs[lane].drain("lt")
+                walls[lane] += time.perf_counter() - t0
+        for lane in (False, True):
+            stats[lane] = dict(scheds[lane].stats)
+            await scheds[lane].stop()
+
+    asyncio.run(main())
+    total = (rounds - 1) * CHUNK * N_SHARDS
+    out = {
+        "bench": "lane_scheduler",
+        "latency_basis": "wall-clock stmts/s through the BatchScheduler "
+                         "(in-process, paired alternating rounds)",
+        "backend": jax.default_backend(),
+        "shards": N_SHARDS,
+        "capacity_total": CAPACITY,
+        "write_mix_window": f"{N_UPD} UPDATE / {N_INS} INSERT / "
+                            f"{N_DEL} DELETE per shard variant per "
+                            f"round, all pruned routes",
+        "configs": [],
+    }
+    for lane in (False, True):
+        out["configs"].append({
+            "lane_locks": lane,
+            "stmts_per_s": round(total / walls[lane], 1),
+            "wall_s": round(walls[lane], 3),
+            "lane_dispatches": stats[lane]["lane_dispatches"],
+            "max_wave": stats[lane]["max_wave"],
+            "grouped_statements": stats[lane]["grouped_statements"],
+        })
+    out["lane_speedup_vs_single_lock"] = round(
+        out["configs"][1]["stmts_per_s"]
+        / max(out["configs"][0]["stmts_per_s"], 1e-9), 2)
+    return out
+
+
+def main(argv=None):
+    argv = sys.argv[1:] if argv is None else argv
+    quick = "--quick" in argv
+    res = run(rounds=N_ROUNDS_QUICK if quick else N_ROUNDS)
+    if "--json" in argv:
+        path = REPO_ROOT / "BENCH_lane.json"
+        path.write_text(json.dumps(res, indent=2) + "\n")
+        print(json.dumps(res, indent=2))
+        print(f"# wrote {path}")
+        return res
+    print("# same-table pruned writes, 4 shards, wave scheduler")
+    print("lane_locks,stmts_per_s,max_wave")
+    for c in res["configs"]:
+        print(f"{c['lane_locks']},{c['stmts_per_s']},{c['max_wave']}")
+    print(f"# lane speedup vs single-lock: "
+          f"{res['lane_speedup_vs_single_lock']}x")
+    return res
+
+
+if __name__ == "__main__":
+    main()

@@ -2,12 +2,12 @@
 
 ``python -m benchmarks.run [--json] [--quick] [--check]``
 
---json   run fig1 + table2 + protocol + index + shard in JSON mode and
-         write ``BENCH_fig1.json`` / ``BENCH_table2.json`` /
+--json   run fig1 + table2 + protocol + index + shard + lane in JSON
+         mode and write ``BENCH_fig1.json`` / ``BENCH_table2.json`` /
          ``BENCH_protocol.json`` / ``BENCH_index.json`` /
-         ``BENCH_shard.json`` to the repo root (ops/s resp. stmts/s,
-         p50/p99 µs); these files are checked in so every PR's numbers
-         are comparable.
+         ``BENCH_shard.json`` / ``BENCH_lane.json`` to the repo root
+         (ops/s resp. stmts/s, p50/p99 µs); these files are checked in
+         so every PR's numbers are comparable.
 --quick  tier-1-friendly smoke sizes — finishes in seconds on CPU (the
          protocol bench keeps its 8-connection shape, fewer statements;
          the index bench keeps the 65536-row point --check compares).
@@ -53,6 +53,8 @@ CHECK_METRICS = [
      lambda d: d["pruned_flatness_4x"], "lower"),
     ("BENCH_shard.json", "write_speedup_4shard",
      lambda d: d["write_speedup_4shard"], "higher"),
+    ("BENCH_lane.json", "lane_speedup_vs_single_lock",
+     lambda d: d["lane_speedup_vs_single_lock"], "higher"),
 ]
 
 REGRESS_FACTOR = 2.0
@@ -104,8 +106,8 @@ def _evaluate(fresh) -> list:
 def check() -> int:
     """Compare fresh quick-run ratio metrics against the checked-in BENCH
     files; return the number of >2x regressions after one retry."""
-    from benchmarks import (fig1_kv_read, index_bench, protocol_bench,
-                            shard_bench)
+    from benchmarks import (fig1_kv_read, index_bench, lane_bench,
+                            protocol_bench, shard_bench)
 
     runners = {
         "BENCH_fig1.json": lambda: fig1_kv_read.run_json(quick=True),
@@ -116,6 +118,8 @@ def check() -> int:
         "BENCH_shard.json": lambda: shard_bench.run(
             shard_bench.QUICK_SHARD_COUNTS, shard_bench.QUICK_SHARD_ROWS,
             m=shard_bench.N_STMTS_QUICK, reps=60),
+        "BENCH_lane.json": lambda: lane_bench.run(
+            rounds=lane_bench.N_ROUNDS_QUICK),
     }
     fresh = {name: fn() for name, fn in runners.items()}
     failing = _evaluate(fresh)
@@ -144,8 +148,8 @@ def main() -> None:
         return
 
     if as_json:
-        from benchmarks import (fig1_kv_read, index_bench, protocol_bench,
-                                shard_bench, table2_expiry)
+        from benchmarks import (fig1_kv_read, index_bench, lane_bench,
+                                protocol_bench, shard_bench, table2_expiry)
         args = ["--json"] + (["--quick"] if quick else [])
         print("=" * 72)
         print("== Paper Fig. 1 (JSON) -> BENCH_fig1.json")
@@ -162,6 +166,9 @@ def main() -> None:
         print("=" * 72)
         print("== Sharded-table scaling ladder (JSON) -> BENCH_shard.json")
         shard_bench.main(args)
+        print("=" * 72)
+        print("== Execution-lane scheduler (JSON) -> BENCH_lane.json")
+        lane_bench.main(args)
         return
 
     print("=" * 72)
@@ -194,6 +201,11 @@ def main() -> None:
     print("== Sharded tables: pruned flatness + write fan-out")
     from benchmarks import shard_bench
     shard_bench.main(["--quick"] if quick else [])
+
+    print("=" * 72)
+    print("== Execution lanes: lane scheduler vs single-lock")
+    from benchmarks import lane_bench
+    lane_bench.main(["--quick"] if quick else [])
 
     if quick:
         return

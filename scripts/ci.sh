@@ -1,10 +1,16 @@
 #!/usr/bin/env bash
-# CI gate: tier-1 tests + quick benchmark regression check.
+# CI gate: tier-1 tests + concurrency-regime scheduler sweep + quick
+# benchmark regression check.
 #
 #   scripts/ci.sh
 #
 # 1. runs the full pytest suite (tier-1 verify from ROADMAP.md);
-# 2. re-runs the quick benches IN MEMORY and fails if any curated
+# 2. re-runs the scheduler/wire suites under BOTH dispatch regimes —
+#    REPRO_SCHED_CONCURRENCY=1 (concurrent waves + execution lanes, the
+#    default) and =0 (strictly serial group dispatch) — so a lane/wave
+#    bug cannot hide behind whichever regime the main suite happened to
+#    exercise;
+# 3. re-runs the quick benches IN MEMORY and fails if any curated
 #    BENCH_*.json ratio metric regressed more than 2x vs the checked-in
 #    values (see benchmarks/run.py CHECK_METRICS — ratios, not absolute
 #    latencies, so machine speed cancels to first order). A bench file
@@ -16,6 +22,15 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 echo "== tier-1: pytest"
 python -m pytest -x -q
+
+SCHED_SUITE="tests/test_scheduler.py tests/test_protocol_pipeline.py \
+tests/test_shards.py"
+
+echo "== scheduler suite: concurrency ON (waves + lanes)"
+REPRO_SCHED_CONCURRENCY=1 python -m pytest -x -q $SCHED_SUITE
+
+echo "== scheduler suite: concurrency OFF (serial dispatch)"
+REPRO_SCHED_CONCURRENCY=0 python -m pytest -x -q $SCHED_SUITE
 
 echo "== perf gate: benchmarks/run.py --quick --check"
 python -m benchmarks.run --quick --check

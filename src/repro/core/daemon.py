@@ -73,6 +73,44 @@ out via ``vmap`` over the stacked shard states and merges partials.
 (rows would land in the wrong shard — DELETE + INSERT moves them), and
 LRU eviction / MAX_ROWS act per shard.
 
+Execution lanes (PR 5)
+----------------------
+
+A sharded ``_Table`` stores its state as per-shard LANES — one
+independent device handle per shard — instead of one stacked pytree.
+Every dispatch picks a shape (``_exec_mode``): a statement (group)
+whose shard route is provable host-side and lands on ONE shard runs
+the ordinary monolithic executors against that lane only (``lane``
+mode: O(shard) buffers, own donation, row ids globalized in-dispatch);
+everything else stacks the lanes inside the jitted call and runs the
+vmapped ``core/shards`` executors (``stacked`` mode). Lane mode is what
+lets the batch scheduler overlap same-table statement groups with
+disjoint shard routes — and it executes single-shard eq-DELETE
+one-passes and single-shard INSERT batches on one shard's rows instead
+of all of them (benchmarks/lane_bench.py: ~2.5x mixed-write throughput
+over the PR-4 single-lock stacked regime). Clocks stay in LOGICAL
+lockstep via lazy catch-up deltas, and a lane that missed a table-wide
+op-count expiry replays it at the recorded firing time on its next
+dispatch — TTL observables match the unsharded engine statement for
+statement (tests/test_shard_parity.py). ``SQLCached(lane_exec=False)``
+disables lane routing (every sharded statement takes the stacked
+path — the PR-4 regime, kept as the bench baseline).
+
+Skew + live re-partitioning
+---------------------------
+
+``SHOW STATS t`` (equivalently ``EXPLAIN t``) returns one JSON VALUE
+row with per-shard live rows plus host-side routed-statement counters
+(``statements``/``writes``/``inserted_rows`` — pruned traffic
+attributes to its shard, fan-out to all), so a hot shard is observable
+from any socket client. ``ALTER TABLE t RESHARD n`` re-partitions live:
+one bulk device-side re-split of every live row
+(``kernels/ops.shard_split`` over the flattened stack) plus one hash
+index rebuild per new shard; row metadata and TTL stamps ride along
+verbatim, so contents round-trip exactly. ``RESHARD 1`` converts back
+to a monolithic table, resharding a monolithic table partitions it.
+Both statements are admin barriers at the scheduler.
+
 The daemon is also the serving plane's metadata engine: `table_state` /
 `swap_table_state` hand the device arrays to jitted serving steps with
 zero copies.
@@ -292,12 +330,49 @@ class _Table:
     that executes statements against that state — ``core.table`` for a
     monolithic table, ``core.shards`` for a hash-partitioned one
     (``SHARDS n``). Both expose the same executor surface, so every
-    daemon path below is shape-agnostic."""
+    daemon path below is shape-agnostic.
+
+    Sharded tables hold their state as per-shard EXECUTION LANES
+    (``lanes[i]`` — one independent handle per shard, the monolithic
+    layout of ``core/table.py``; ``state`` is None). A statement group
+    that provably routes to ONE shard dispatches against that lane only
+    (its own buffers, its own donation), so the batch scheduler can run
+    same-table groups with disjoint shard routes concurrently — each
+    lane has its own asyncio lock at the scheduler. Whole-table work
+    stacks the lanes inside the jitted dispatch (``core/shards``
+    split/merge boundary).
+
+    Clock lockstep is kept LAZILY: ``ticks_total`` counts the table's
+    logical ticks; ``lane_ticks[i]`` counts how many have been applied
+    to lane i's device clock. Every dispatch first adds the lane's
+    deficit (the catch-up delta) inside the same jitted call, so any
+    statement observes exactly the clock the fully-lockstep stacked
+    layout would show — TTL parity with the unsharded engine is
+    preserved. §4.3 op-count auto-expiry defers per lane
+    (``expire_due[i]``: None, or the ``ticks_total`` value at which a
+    missed table-wide expiry fired): when the interval boundary fires
+    during a lane-confined dispatch, that lane expires in-dispatch and
+    every other lane REPLAYS the expiry on its own next dispatch — ages
+    evaluated at the recorded firing time and only validity changed, so
+    the replay removes exactly the rows the lockstep engine removed at
+    the boundary.
+
+    ``stmt_routed``/``writes_routed``/``rows_in`` are host-side per-shard
+    skew counters (``SHOW STATS t``): pruned statements attribute to
+    their shard, fan-out to every shard."""
 
     schema: TableSchema
-    state: dict
+    state: dict | None
     host_ops: int = 0
     eng: Any = T
+    lanes: list | None = None
+    lock: Any = dataclasses.field(default_factory=threading.Lock)
+    ticks_total: int = 0
+    lane_ticks: list = dataclasses.field(default_factory=list)
+    expire_due: list = dataclasses.field(default_factory=list)
+    stmt_routed: Any = None
+    writes_routed: Any = None
+    rows_in: Any = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -347,10 +422,14 @@ def _np_terms_int(terms, param_cols) -> bool:
 
 
 class SQLCached:
-    def __init__(self, auto_expire: bool = True):
+    def __init__(self, auto_expire: bool = True, lane_exec: bool = True):
         self.tables: dict[str, _Table] = {}
         self.interner = Interner()
         self.auto_expire = auto_expire
+        # lane_exec=False disables lane-confined dispatch (every sharded
+        # statement takes the stacked path — the PR-4 execution regime;
+        # benchmarks/lane_bench.py uses it as the paired baseline)
+        self.lane_exec = lane_exec
         self._stmts: dict[str, S.Statement] = {}
         self._execs: dict[tuple, Any] = {}
         self._shapes: dict[str, StatementShape] = {}
@@ -410,18 +489,319 @@ class SQLCached:
                 return base(state, *args)
         return jax.jit(fn, donate_argnums=0)
 
+    def _jit_exec(self, xsch, base, mode: str, eng):
+        """Jit ``base(state, *args) -> (state, *outs)`` for one dispatch
+        shape (see :meth:`_exec_mode`), fusing the §4.3 op-count expiry
+        and — on lanes — the lazy clock catch-up into the same dispatch:
+
+        * ``mono``:    ``fn(state, flag, *args)`` (the classic wrapper);
+        * ``lane``:    ``fn(lane_state, flag, delta, *args)`` — ``delta``
+          catches the lane's clock up to the table's logical time before
+          ``base`` runs; the expiry cond covers THIS lane only (the
+          per-lane deferral contract, see ``_Table``);
+        * ``stacked``: ``fn(lanes_tuple, flag, deltas, *args)`` — stacks
+          the lanes (XLA's slice-of-concat simplification keeps
+          pass-through leaves free), catches every clock up, runs the
+          vmapped executor, splits back into lanes."""
+        if mode == "mono":
+            return self._jit_with_expiry(xsch, base, eng=eng)
+        iv = xsch.expiry.ops_interval
+        if mode == "lane":
+            def fn(state, expire_flag, delta, pre_delta, *args):
+                state = dict(state, clock=state["clock"] + delta,
+                             ops=state["ops"] + delta)
+                if iv > 0:
+                    # replay a missed table-wide expiry FIRST: ages are
+                    # evaluated at the firing statement's logical time
+                    # (clock - pre_delta; pre_delta < 0 = nothing due)
+                    # and only validity changes — the firing dispatch
+                    # already accounted the expiry tick table-wide
+                    def replay(s):
+                        d = jnp.maximum(pre_delta, 0)
+                        aged = dict(s, clock=s["clock"] - d,
+                                    ops=s["ops"] - d)
+                        return dict(s, valid=T.expire(xsch, aged)[0][
+                            "valid"])
+
+                    state = jax.lax.cond(pre_delta >= 0, replay,
+                                         lambda s: s, state)
+                out = base(state, *args)
+                st = out[0]
+                if iv > 0:
+                    st = jax.lax.cond(
+                        expire_flag,
+                        lambda s: T.expire(xsch, s)[0],
+                        lambda s: s, st)
+                return (st,) + tuple(out[1:])
+
+            return jax.jit(fn, donate_argnums=0)
+
+        schema = xsch  # stacked mode runs on the full sharded schema
+
+        def fn(lanes, expire_flag, deltas, pre_deltas, *args):
+            state = SH.stack_lanes(lanes)
+            state = dict(state, clock=state["clock"] + deltas,
+                         ops=state["ops"] + deltas)
+            if iv > 0:
+                def replay(s):
+                    d = jnp.maximum(pre_deltas, 0)
+                    aged = dict(s, clock=s["clock"] - d,
+                                ops=s["ops"] - d)
+                    exp = SH.expire(schema, aged)[0]
+                    due = (pre_deltas >= 0)[:, None]
+                    return dict(s, valid=jnp.where(due, exp["valid"],
+                                                   s["valid"]))
+
+                state = jax.lax.cond(jnp.any(pre_deltas >= 0), replay,
+                                     lambda s: s, state)
+            out = base(state, *args)
+            st = out[0]
+            if iv > 0:
+                st = jax.lax.cond(
+                    expire_flag,
+                    lambda s: SH.expire(schema, s)[0],
+                    lambda s: s, st)
+            return (tuple(SH.split_lanes(schema, st)),) + tuple(out[1:])
+
+        return jax.jit(fn, donate_argnums=0)
+
+    def _lane_of(self, t: _Table, stmt, params_list,
+                 pvals=None) -> int | None:
+        """THE lane-route decision: the single lane id this statement
+        (group) will execute on, or None for stacked/whole-table
+        dispatch. The scheduler's lock choice (:meth:`group_lane`) and
+        the daemon's dispatch shape (:meth:`_exec_mode`) both read this
+        one predicate, so they can never disagree about whether a
+        dispatch touches one lane or all of them."""
+        if t.lanes is None or not self.lane_exec or stmt is None:
+            return None
+        try:
+            ids = self._shard_ids_of(t, stmt, params_list, pvals=pvals)
+        except Exception:  # noqa: BLE001 — routing is best effort
+            return None
+        if ids is None or len(ids) != 1:
+            return None
+        if isinstance(stmt, S.Insert) and _bucket(
+                len(params_list)) > SH.shard_capacity(t.schema):
+            # a padded batch wider than one shard must chunk through the
+            # stacked split path — an all-lane dispatch
+            return None
+        return next(iter(ids))
+
+    def group_lane(self, shape: StatementShape | None,
+                   params_list: Sequence[Sequence[Any]]) -> int | None:
+        """Scheduler-facing twin of :meth:`_lane_of`: the execution lane
+        a batch of same-shape statements will run on (None = the
+        dispatch takes the whole table). The BatchScheduler locks
+        exactly what this reports."""
+        if shape is None or shape.table is None:
+            return None
+        t = self.tables.get(shape.table)
+        if t is None:
+            return None
+        stmt = shape.key[1] if len(shape.key) == 2 else None
+        return self._lane_of(t, stmt, params_list)
+
+    def _exec_mode(self, t: _Table, stmt, params_list, n_stmts: int,
+                   pvals=None):
+        """Pick the dispatch shape for one statement (group) against
+        ``t`` and consume the §4.3 op-count expiry interval:
+
+        * ``('mono', T, schema, None, flag)`` — unsharded table;
+        * ``('lane', T, shard_schema, sid, flag)`` — sharded and every
+          statement in the group provably routes to shard ``sid``
+          (host-side, via :meth:`_lane_of`): run the monolithic
+          executors against that lane's handle only;
+        * ``('stacked', SH, schema, None, flag)`` — sharded fan-out /
+          multi-shard / unknown route: stack the lanes in-dispatch.
+
+        ``flag`` carries the expiry trigger for THIS dispatch (lane
+        routes defer per lane — see ``_Table.expire_due``)."""
+        sid = self._lane_of(t, stmt, params_list, pvals=pvals)
+        fired = self._expire_flag(t, n_stmts)
+        if t.lanes is None:
+            return "mono", t.eng, t.schema, None, fired
+        if sid is not None:
+            return "lane", T, SH.shard_schema(t.schema), sid, fired
+        return "stacked", SH, t.schema, None, fired
+
     def _expire_flag(self, t: _Table, n: int = 1) -> bool:
         """Paper §4.3 condition 3: expire every N cache operations. Counted
         host-side; the flag rides into the fused executor. ``n`` is the
         number of STATEMENTS the dispatch carries — a micro-batched
         executemany advances the op count by its batch size, so expiry
         cadence doesn't depend on how the scheduler grouped the traffic
-        (the flag fires once per crossed interval boundary)."""
+        (the flag fires once per crossed interval boundary). Thread-safe:
+        concurrent lane dispatches count under the table lock."""
         iv = t.schema.expiry.ops_interval
-        before = t.host_ops
-        t.host_ops += n
-        return bool(self.auto_expire and iv > 0
-                    and before // iv != t.host_ops // iv)
+        with t.lock:
+            before = t.host_ops
+            t.host_ops += n
+            return bool(self.auto_expire and iv > 0
+                        and before // iv != t.host_ops // iv)
+
+    def _run_state(self, t: _Table, fn, mode: str, sid, flag, ticks: int,
+                   args: tuple):
+        """Dispatch a ``_jit_exec`` executor against the right state
+        handle(s), booking the lazy clock catch-up, and thread the new
+        state back. ``ticks`` is the number of clock ticks the dispatch
+        performs (1 per singleton/INSERT dispatch, the active statement
+        count for micro-batches — exactly what the executor adds).
+        Returns the executor's non-state outputs."""
+        if mode == "mono":
+            out = fn(t.state, flag, *args)
+            t.state = out[0]
+            return out[1:]
+        n_sh = t.schema.shards
+        # a fired expiry cond ticks the clock once more than the base
+        # executor — account it, or catch-up deltas drift
+        total = ticks + (1 if flag else 0)
+        fire_at = g0 = None
+        with t.lock:
+            g0 = t.ticks_total
+            t.ticks_total = g0 + total
+            if flag:
+                # the logical time the fired expiry runs (after this
+                # dispatch's base ticks) — deferred lanes replay at it
+                fire_at = g0 + ticks
+            if mode == "lane":
+                old_tick = t.lane_ticks[sid]
+                t.lane_ticks[sid] = g0 + total
+                pre_at = t.expire_due[sid]
+                t.expire_due[sid] = None
+                # NOTE: when flag fired, the other lanes' deferrals are
+                # armed only AFTER the dispatch succeeds (below) — a
+                # concurrent commuting lane must never replay an expiry
+                # whose dispatch might still fail (its own dispatch then
+                # legitimately serializes BEFORE the firing one)
+            else:
+                old_ticks = list(t.lane_ticks)
+                deltas = np.asarray([g0 - lt for lt in t.lane_ticks],
+                                    np.int32)
+                t.lane_ticks = [g0 + total] * n_sh
+                pre_ats = list(t.expire_due)
+                t.expire_due = [None] * n_sh
+        try:
+            if mode == "lane":
+                pre_d = -1 if pre_at is None else g0 - pre_at
+                out = fn(t.lanes[sid], flag, jnp.int32(g0 - old_tick),
+                         jnp.int32(pre_d), *args)
+                with t.lock:  # commit atomically vs advance_clock et al
+                    t.lanes[sid] = out[0]
+                    if flag:
+                        # the boundary fired and RAN on this lane: every
+                        # other lane replays it on its own next dispatch
+                        # (a newer fire_at supersedes an older pending
+                        # one — ages at the later time are a superset)
+                        for i in range(n_sh):
+                            if i != sid:
+                                t.expire_due[i] = fire_at
+                return out[1:]
+            pre_ds = np.asarray(
+                [(-1 if (at is None) else g0 - at) for at in pre_ats],
+                np.int32)
+            out = fn(tuple(t.lanes), flag, deltas, pre_ds, *args)
+            with t.lock:
+                for i, st in enumerate(out[0]):
+                    t.lanes[i] = st
+            return out[1:]
+        except Exception:
+            # the executor raised before mutating state (trace-time error,
+            # e.g. a bad binding): un-book the ticks so clocks don't
+            # drift. ticks_total only rolls back when nobody advanced it
+            # since (monotonicity keeps concurrent catch-ups sound), and
+            # only OUR OWN due entries are restored — deferrals for the
+            # other lanes were never armed (arm-on-success above), so a
+            # fired expiry whose dispatch failed is DROPPED everywhere,
+            # exactly as the monolithic engine drops it.
+            with t.lock:
+                if mode == "lane":
+                    t.lane_ticks[sid] = old_tick
+                    t.expire_due[sid] = pre_at
+                else:
+                    t.lane_ticks = old_ticks
+                    t.expire_due = pre_ats
+                if t.ticks_total == g0 + total:
+                    t.ticks_total = g0
+            raise
+
+    def _note_route(self, t: _Table, sid, n: int, is_write: bool,
+                    rows_in=None) -> None:
+        """Per-shard skew accounting (``SHOW STATS t``): pruned traffic
+        attributes to its shard, fan-out (sid None) to every shard."""
+        with t.lock:
+            if sid is None:
+                t.stmt_routed += n
+                if is_write:
+                    t.writes_routed += n
+            else:
+                t.stmt_routed[sid] += n
+                if is_write:
+                    t.writes_routed[sid] += n
+            if rows_in is not None:
+                t.rows_in += rows_in
+
+    @staticmethod
+    def _insert_sids(t: _Table, pvals, n_rows: int):
+        """Per-shard inserted-row counts (np int64) from pre-extracted
+        partition values (``pvals``; None = not host-readable). Feeds
+        the ``rows_in`` skew counter; monolithic tables count every row
+        into their single entry so the report stays consistent with the
+        ``statements``/``writes`` counters."""
+        if t.lanes is None:
+            return np.asarray([n_rows], np.int64)
+        if pvals is None:
+            return None
+        n_sh = t.schema.shards
+        out = np.zeros(n_sh, np.int64)
+        for v in pvals:
+            out[SH.shard_of_host(v, n_sh)] += 1
+        return out
+
+    @staticmethod
+    def _check_partition_update(t: _Table, set_cols) -> None:
+        """Refuse partition-column UPDATEs on sharded tables up front
+        (the engines raise too, but only at trace time — this keeps the
+        op counters clean and covers the lane path, whose monolithic
+        executor has no partition concept)."""
+        if t.lanes is None:
+            return
+        cols = {("_ttl" if c.upper() == "TTL" else c) for c in set_cols}
+        if t.schema.partition_by in cols:
+            raise ValueError(
+                f"cannot UPDATE partition column "
+                f"{t.schema.partition_by!r} of sharded table "
+                f"{t.schema.name!r} (DELETE + INSERT instead)")
+
+    def _caught_up_lanes(self, t: _Table) -> list:
+        """SNAPSHOT of every lane brought up to the table's logical
+        time (admin paths — RESHARD, ``table_state`` — need lockstep
+        NOW): clocks catch up their deltas AND any still-deferred
+        op-interval expiry is replayed into the snapshot (ages at its
+        recorded firing time, validity only) — so the snapshot never
+        shows rows the lockstep engine already expired. Pure read:
+        nothing is written back into ``t.lanes`` and no bookkeeping
+        changes, so a concurrent lane dispatch can never be clobbered
+        by the snapshot."""
+        with t.lock:
+            g0 = t.ticks_total
+            deltas = [g0 - lt for lt in t.lane_ticks]
+            dues = list(t.expire_due)
+            lanes = list(t.lanes)
+        s_sch = SH.shard_schema(t.schema)
+        iv = t.schema.expiry.ops_interval
+        out = []
+        for lane, d, due in zip(lanes, deltas, dues):
+            if d:
+                lane = dict(lane, clock=lane["clock"] + d,
+                            ops=lane["ops"] + d)
+            if due is not None and iv > 0:
+                back = g0 - due
+                aged = dict(lane, clock=lane["clock"] - back,
+                            ops=lane["ops"] - back)
+                lane = dict(lane, valid=T.expire(s_sch, aged)[0]["valid"])
+            out.append(lane)
+        return out
 
     # ----------------------------------------------------------- statements
     def execute(
@@ -448,12 +828,13 @@ class SQLCached:
         if isinstance(stmt, S.Expire):
             return self._do_expire(stmt.table)
         if isinstance(stmt, S.Flush):
-            t = self._table(stmt.table)
-            t.state, n = jax.jit(t.eng.flush, static_argnums=0)(t.schema,
-                                                                t.state)
-            return Result(dev={"count": n})
+            return self._do_flush(stmt.table)
         if isinstance(stmt, S.Reindex):
             return self._do_reindex(stmt.table)
+        if isinstance(stmt, S.ShowStats):
+            return self._do_show_stats(stmt.table)
+        if isinstance(stmt, S.AlterReshard):
+            return self._do_reshard(stmt)
         if isinstance(stmt, S.Explain):
             return self._do_explain(stmt.inner)
         raise S.SQLError(f"unhandled statement {stmt!r}")
@@ -543,35 +924,39 @@ class SQLCached:
         means unknown / fan-out / unsharded — the scheduler treats it as
         touching every shard. Two groups with disjoint id sets commute,
         which lets the batch scheduler overlap independent-shard traffic
-        on one table."""
+        on one table: a SINGLETON id set additionally routes the whole
+        group onto that shard's execution lane (see ``_exec_mode``), so
+        the scheduler only locks that one lane."""
         if shape is None or shape.table is None:
             return None
         t = self.tables.get(shape.table)
         if t is None or not SH.is_sharded(t.schema):
             return None
         stmt = shape.key[1] if len(shape.key) == 2 else None
-        n, pcol = t.schema.shards, t.schema.partition_by
-        if isinstance(stmt, (S.Select, S.Update, S.Delete)):
-            route = PL.plan_shards(t.schema, self._intern_ast(stmt.where))
-            if route.key is None:
-                return None
-            kind, v = route.key.value
-        elif isinstance(stmt, S.Insert):
-            cols = stmt.columns or t.schema.column_names[: len(stmt.values)]
-            if pcol not in cols:
-                # omitted partition column inserts its default (0)
-                kind, v = "const", 0
-            else:
-                vast = stmt.values[list(cols).index(pcol)]
-                if isinstance(vast, P.Const) and isinstance(vast.value, int) \
-                        and not isinstance(vast.value, bool):
-                    kind, v = "const", int(vast.value)
-                elif isinstance(vast, P.Param):
-                    kind, v = "param", vast.index
-                else:
-                    return None
-        else:
+        if stmt is None:
             return None
+        return self._shard_ids_of(t, stmt, params_list)
+
+    def _shard_ids_of(self, t: _Table, stmt,
+                      params_list: Sequence[Sequence[Any]],
+                      pvals=None) -> frozenset | None:
+        """Host-side shard routing for one statement (group) — the body
+        behind :meth:`group_shard_ids`, shared with the daemon's own
+        lane-route decision. ``pvals`` lets the INSERT path reuse an
+        extraction the caller already paid for."""
+        n = t.schema.shards
+        if isinstance(stmt, S.Insert):
+            if pvals is None:
+                pvals = self._insert_pvals(t, stmt, params_list)
+            if pvals is None:
+                return None
+            return frozenset(SH.shard_of_host(v, n) for v in pvals)
+        if not isinstance(stmt, (S.Select, S.Update, S.Delete)):
+            return None
+        route = PL.plan_shards(t.schema, self._intern_ast(stmt.where))
+        if route.key is None:
+            return None
+        kind, v = route.key.value
         out = set()
         for pr in params_list:
             if kind == "const":
@@ -579,14 +964,54 @@ class SQLCached:
             else:
                 if v >= len(pr):
                     return None
-                val = pr[v]
-                if isinstance(val, str):
-                    val = self.interner.intern(val)
-                if isinstance(val, bool) or not isinstance(
-                        val, (int, np.integer)):
+                val = self._host_pval(pr[v])
+                if val is None:
                     return None
             out.add(SH.shard_of_host(int(val), n))
         return frozenset(out)
+
+    def _host_pval(self, val) -> int | None:
+        """Normalize one bound partition-key value for host-side
+        routing: TEXT interned to its id, ints passed through, anything
+        non-integer (floats keep exact-compare semantics on the scan
+        path) -> None. THE value rule for every host routing consumer —
+        `_shard_ids_of` and `_insert_pvals` — so INSERT and
+        SELECT/UPDATE/DELETE routing can never drift apart."""
+        if isinstance(val, str):
+            val = self.interner.intern(val)
+        if isinstance(val, bool) or not isinstance(val, (int, np.integer)):
+            return None
+        return int(val)
+
+    def _insert_pvals(self, t: _Table, stmt,
+                      params_list: Sequence[Sequence[Any]]
+                      ) -> list | None:
+        """The host-readable partition value of every row of an INSERT
+        batch (ints, TEXT interned), or None when the value is not
+        provable (computed expression, non-integer binding). ONE
+        extractor feeds both shard routing (:meth:`_shard_ids_of`) and
+        the ``inserted_rows`` skew counter (:meth:`_insert_sids`)."""
+        pcol = t.schema.partition_by
+        cols = stmt.columns or t.schema.column_names[: len(stmt.values)]
+        if pcol not in cols:
+            # omitted partition column inserts its default (0)
+            return [0] * len(params_list)
+        vast = stmt.values[list(cols).index(pcol)]
+        if isinstance(vast, P.Const) and isinstance(vast.value, int) \
+                and not isinstance(vast.value, bool):
+            return [int(vast.value)] * len(params_list)
+        if not isinstance(vast, P.Param):
+            return None
+        j = vast.index
+        out = []
+        for pr in params_list:
+            if j >= len(pr):
+                return None
+            val = self._host_pval(pr[j])
+            if val is None:
+                return None
+            out.append(val)
+        return out
 
     def execute_async(
         self,
@@ -605,7 +1030,9 @@ class SQLCached:
         tables) has retired. The pipeline barrier matching execute_async."""
         names = [table] if table else list(self.tables)
         for nm in names:
-            jax.block_until_ready(self._table(nm).state)
+            t = self._table(nm)
+            jax.block_until_ready(t.lanes if t.lanes is not None
+                                  else t.state)
 
     def _do_create(self, stmt: S.CreateTable) -> Result:
         from repro.core.sqlparse import _PAYLOAD_DTYPES
@@ -621,28 +1048,154 @@ class SQLCached:
             shards=stmt.shards,
             partition_by=stmt.partition_by,
         )
-        eng = SH if SH.is_sharded(schema) else T
-        self.tables[stmt.table] = _Table(schema, eng.init_state(schema),
-                                         eng=eng)
+        self.tables[stmt.table] = self._make_table(schema)
         return Result()
+
+    @staticmethod
+    def _make_table(schema: TableSchema) -> _Table:
+        n = schema.shards
+        if SH.is_sharded(schema):
+            return _Table(schema, None, eng=SH, lanes=SH.init_lanes(schema),
+                          lane_ticks=[0] * n, expire_due=[None] * n,
+                          stmt_routed=np.zeros(n, np.int64),
+                          writes_routed=np.zeros(n, np.int64),
+                          rows_in=np.zeros(n, np.int64))
+        return _Table(schema, T.init_state(schema), eng=T,
+                      stmt_routed=np.zeros(1, np.int64),
+                      writes_routed=np.zeros(1, np.int64),
+                      rows_in=np.zeros(1, np.int64))
 
     def _do_reindex(self, name: str) -> Result:
         """REINDEX t: bulk-rebuild every hash index from the live rows —
         the recovery path after a bucket overflow (``stale``) once the
         offending duplicate burst has been deleted or expired. Returns
-        the residual overflow count as ``value`` (0 = probes are back)."""
+        the residual overflow count as ``value`` (0 = probes are back).
+        Sharded tables rebuild lane by lane (the index reads no clock,
+        so no catch-up is involved)."""
         t = self._table(name)
         if not t.schema.indexes:
             return Result(count=0, value=0)
-        key = ("reindex", t.schema)
+        if t.lanes is None:
+            key = ("reindex", t.schema)
+            fn = self._executor(
+                key, lambda: jax.jit(
+                    lambda st: T.build_index(t.schema, st),
+                    donate_argnums=0))
+            t.state = fn(t.state)
+            residual = sum(int(np.sum(np.asarray(
+                t.state["indexes"][c]["stale"]))) for c in t.schema.indexes)
+            return Result(count=len(t.schema.indexes), value=residual)
+        s_sch = SH.shard_schema(t.schema)
+        key = ("lane", "reindex", s_sch)
         fn = self._executor(
             key, lambda: jax.jit(
-                lambda st: t.eng.build_index(t.schema, st),
-                donate_argnums=0))
-        t.state = fn(t.state)
+                lambda st: T.build_index(s_sch, st), donate_argnums=0))
+        for i in range(t.schema.shards):
+            t.lanes[i] = fn(t.lanes[i])
         residual = sum(int(np.sum(np.asarray(
-            t.state["indexes"][c]["stale"]))) for c in t.schema.indexes)
+            lane["indexes"][c]["stale"])))
+            for lane in t.lanes for c in t.schema.indexes)
         return Result(count=len(t.schema.indexes), value=residual)
+
+    def _do_flush(self, name: str) -> Result:
+        t = self._table(name)
+        if t.lanes is None:
+            t.state, n = jax.jit(T.flush, static_argnums=0)(t.schema,
+                                                            t.state)
+            return Result(dev={"count": n})
+        key = ("stacked", "flush", t.schema)
+        fn = self._executor(
+            key, lambda: self._jit_exec(
+                t.schema, lambda st: SH.flush(t.schema, st), "stacked",
+                SH))
+        n, = self._run_state(t, fn, "stacked", None, False, 1, ())
+        return Result(dev={"count": n})
+
+    def _do_show_stats(self, name: str) -> Result:
+        """SHOW STATS t (= ``EXPLAIN t``): the per-shard skew report —
+        live rows straight from each lane's validity bits plus the
+        host-side routed-statement counters — as one JSON ``VALUE`` row,
+        observable from any socket client. A hot shard shows up as one
+        lane's counters and row count running away from its peers."""
+        t = self._table(name)
+        n = t.schema.shards
+        if t.lanes is None:
+            live = [int(T.live_count(t.state))]
+        else:
+            # caught-up snapshot: deferred expiry replays applied, so the
+            # report never counts rows the lockstep engine already dropped
+            live = [int(T.live_count(lane))
+                    for lane in self._caught_up_lanes(t)]
+        with t.lock:
+            stmts = t.stmt_routed.tolist()
+            writes = t.writes_routed.tolist()
+            rows_in = t.rows_in.tolist()
+            host_ops = t.host_ops
+        per = [{"shard": i, "live_rows": live[i], "statements": stmts[i],
+                "writes": writes[i], "inserted_rows": rows_in[i]}
+               for i in range(n)]
+        info = {"table": name, "shards": n,
+                "partition_by": t.schema.partition_by,
+                "capacity": t.schema.capacity,
+                "shard_capacity": (SH.shard_capacity(t.schema) if n > 1
+                                   else t.schema.capacity),
+                "host_ops": host_ops,
+                "per_shard": per}
+        return Result(count=n, value=json.dumps(info, sort_keys=True))
+
+    def _do_reshard(self, stmt: S.AlterReshard) -> Result:
+        """ALTER TABLE t RESHARD n: live re-partition. One bulk
+        device-side re-split of every live row (``shards.reshard``; row
+        metadata and TTL stamps ride along verbatim, so contents
+        round-trip exactly) plus one hash-index rebuild per new shard.
+        ``n = 1`` converts back to a monolithic table; resharding a
+        monolithic table partitions it. Refused (table untouched — the
+        old state is never donated) when skew would overflow a new
+        shard's capacity. Admin barrier at the scheduler; the skew
+        counters reset with the new shard map."""
+        t = self._table(stmt.table)
+        old_schema = t.schema
+        new_n = stmt.shards
+        if new_n == old_schema.shards:
+            return Result(count=self.live_rows(stmt.table), value=new_n)
+        try:
+            new_schema = dataclasses.replace(old_schema, shards=new_n)
+        except (ValueError, KeyError) as e:
+            raise S.SQLError(str(e)) from e
+        if t.lanes is not None:
+            lanes = self._caught_up_lanes(t)
+        else:
+            lanes = [t.state]
+        key = ("reshard", old_schema, new_schema)
+        fn = self._executor(
+            key, lambda: jax.jit(
+                lambda ls: SH.reshard(old_schema, new_schema, ls)))
+        new_lanes, counts = fn(tuple(lanes))
+        counts = np.asarray(counts)  # admin op: the sync is fine
+        cap_new = (SH.shard_capacity(new_schema) if new_n > 1
+                   else new_schema.capacity)
+        if int(counts.max()) > cap_new:
+            raise S.SQLError(
+                f"RESHARD {new_n}: {int(counts.max())} live rows hash to "
+                f"one shard but a shard holds only {cap_new} — resolve "
+                f"the skew (or raise CAPACITY) first")
+        with t.lock:
+            g0 = t.ticks_total
+            if new_n > 1:
+                t.lanes = list(new_lanes)
+                t.state = None
+                t.eng = SH
+            else:
+                t.state = new_lanes[0]
+                t.lanes = None
+                t.eng = T
+            t.schema = new_schema
+            t.lane_ticks = [g0] * new_n
+            t.expire_due = [None] * new_n
+            t.stmt_routed = np.zeros(new_n, np.int64)
+            t.writes_routed = np.zeros(new_n, np.int64)
+            t.rows_in = np.zeros(new_n, np.int64)
+        return Result(count=int(counts.sum()), value=new_n)
 
     def _do_explain(self, stmt: S.Statement) -> Result:
         """EXPLAIN <stmt>: report (don't run) the inner statement's plan
@@ -657,9 +1210,14 @@ class SQLCached:
             if info["plan"] == "index-probe":
                 # surface index health: stale > 0 means every probe is
                 # currently taking the scan fallback (REINDEX recovers).
-                # Sharded tables report the stale total across shards.
-                info["stale"] = int(np.sum(np.asarray(
-                    t.state["indexes"][info["index"]]["stale"])))
+                # Sharded tables report the stale total across lanes.
+                if t.lanes is not None:
+                    info["stale"] = sum(int(np.sum(np.asarray(
+                        lane["indexes"][info["index"]]["stale"])))
+                        for lane in t.lanes)
+                else:
+                    info["stale"] = int(np.sum(np.asarray(
+                        t.state["indexes"][info["index"]]["stale"])))
             return Result(count=1, value=json.dumps(info, sort_keys=True))
         info = {"statement": type(stmt).__name__.lower(),
                 "plan": "insert" if isinstance(stmt, S.Insert) else "admin"}
@@ -740,11 +1298,17 @@ class SQLCached:
 
         values_ast = tuple(self._intern_ast(v) for v in stmt.values)
         ttl_ast = self._intern_ast(stmt.ttl) if stmt.ttl is not None else None
-        key = ("insert", schema, values_ast, ttl_ast, tuple(cols), b,
+        # ONE partition-value extraction per dispatch: it feeds the lane
+        # route AND the inserted_rows skew counter
+        pvals = (self._insert_pvals(t, stmt, pm[:n])
+                 if t.lanes is not None else None)
+        mode, eng, xsch, sid, flag = self._exec_mode(t, stmt, pm[:n], n,
+                                                     pvals=pvals)
+        key = (mode, "insert", xsch, values_ast, ttl_ast, tuple(cols), b,
                tuple(sorted(pl_args)))
 
         def build():
-            def base(state, param_cols, pl_args, row_mask):
+            def base(state, off_d, param_cols, pl_args, row_mask):
                 values = {}
                 for cname, vast in zip(cols, values_ast):
                     v = P.eval_expr(vast, {}, param_cols)
@@ -752,15 +1316,21 @@ class SQLCached:
                 ttl = 0
                 if ttl_ast is not None:
                     ttl = P.eval_expr(ttl_ast, {}, param_cols)
-                return t.eng.insert(schema, state, values, pl_args,
-                                    row_mask, ttl)
+                state, slots, ev = eng.insert(xsch, state, values, pl_args,
+                                              row_mask, ttl)
+                if mode == "lane":
+                    slots = slots + off_d  # globalize this lane's row ids
+                return state, slots, ev
 
-            return self._jit_with_expiry(schema, base, eng=t.eng)
+            return self._jit_exec(xsch, base, mode, eng)
 
         fn = self._executor(key, build)
-        flag = self._expire_flag(t, n)
-        t.state, slots, evicted = fn(t.state, flag, param_cols, pl_args,
-                                     row_mask)
+        off = sid * SH.shard_capacity(schema) if mode == "lane" else 0
+        slots, evicted = self._run_state(
+            t, fn, mode, sid, flag, 1,
+            (jnp.int32(off), param_cols, pl_args, row_mask))
+        self._note_route(t, sid, n, True,
+                         rows_in=self._insert_sids(t, pvals, n))
         if per_statement:
             # one row per statement; evictions have no per-statement
             # attribution, so each Result reports the batch's eviction
@@ -789,13 +1359,15 @@ class SQLCached:
         via its stable sort in the same pass; other DELETE shapes use an
         exclusive-claim cumsum over the [W, capacity] masks."""
         t = self._table(stmt.table)
-        schema = t.schema
-        eng = t.eng
         n = len(params_list)
         if n == 0:
             return [] if per_statement else Result(count=0)
-        b = _bucket(n)
         is_delete = isinstance(stmt, S.Delete)
+        if not is_delete:
+            self._check_partition_update(t, (c for c, _ in stmt.sets))
+        mode, eng, xsch, sid, flag = self._exec_mode(t, stmt, params_list,
+                                                     n)
+        b = _bucket(n)
         where = self._intern_ast(stmt.where)
         sets = ()
         n_params = P.collect_params(where)
@@ -809,7 +1381,7 @@ class SQLCached:
             np.asarray([pm[i][j] for i in range(b)]) for j in range(n_params)
         )
         active = np.arange(b) < n
-        fused = eng._fused_plan(schema, where) if is_delete else None
+        fused = eng._fused_plan(xsch, where) if is_delete else None
         eq_term = (fused.terms[0]
                    if fused is not None and len(fused.terms) == 1
                    and fused.terms[0].op == "==" else None)
@@ -822,8 +1394,8 @@ class SQLCached:
         if not is_delete:
             set_cols = {("_ttl" if c.upper() == "TTL" else c)
                         for c, _ in sets}
-            idx_rebuild = tuple(c for c in schema.indexes if c in set_cols)
-            update_plan = eng.plan_for(schema, where)
+            idx_rebuild = tuple(c for c in xsch.indexes if c in set_cols)
+            update_plan = eng.plan_for(xsch, where)
             if isinstance(update_plan, PL.IndexProbe) and (
                     idx_rebuild
                     or not _np_terms_int(
@@ -833,7 +1405,7 @@ class SQLCached:
                 # entries the later iterations probe — take the scan route
                 # and rebuild once after the batch
                 update_plan = update_plan.fallback
-        key = ("dml", schema, is_delete, where, sets, b, eq_term,
+        key = (mode, "dml", xsch, is_delete, where, sets, b, eq_term,
                update_plan, per_statement)
 
         def build():
@@ -844,16 +1416,16 @@ class SQLCached:
                     vals = (jnp.asarray(param_cols[v], jnp.int32)
                             if kind == "param"
                             else jnp.full((b,), v, jnp.int32))
-                    return eng.delete_many_eq(schema, state, eq_term.col,
+                    return eng.delete_many_eq(xsch, state, eq_term.col,
                                               vals, active,
                                               per_statement=per_statement)
 
-                return self._jit_with_expiry(schema, base, eng=eng)
+                return self._jit_exec(xsch, base, mode, eng)
 
             def base(state, param_cols, active):
                 if is_delete:
                     def one_mask(pr, act):
-                        return eng._match_mask(schema, state, where,
+                        return eng._match_mask(xsch, state, where,
                                                pr) & act
 
                     # [b, *mask_shape]: mask_shape is [cap] for monolithic
@@ -883,7 +1455,7 @@ class SQLCached:
                 def run(route):
                     def body(st, xs):
                         pr, act = xs
-                        return eng.update(schema, st, where, dict(sets), pr,
+                        return eng.update(xsch, st, where, dict(sets), pr,
                                           extra_mask=act, plan=route,
                                           probe_mode="ref",
                                           maintain_indexes=False)
@@ -901,7 +1473,7 @@ class SQLCached:
                 else:
                     state, ns = run(update_plan)
                 for c in idx_rebuild:  # deferred: ONE rebuild per dispatch
-                    state = eng.build_index(schema, state, c, mode="ref")
+                    state = eng.build_index(xsch, state, c, mode="ref")
                 # un-tick the padded scan iterations (runtime count — see
                 # the delete branch note on executor caching)
                 pad = b - jnp.sum(active.astype(jnp.int32))
@@ -909,14 +1481,17 @@ class SQLCached:
                              ops=state["ops"] - pad)
                 return state, jnp.sum(ns), ns
 
-            return self._jit_with_expiry(schema, base, eng=eng)
+            return self._jit_exec(xsch, base, mode, eng)
 
         fn = self._executor(key, build)
-        flag = self._expire_flag(t, n)
         if eq_term is not None and not per_statement:
-            t.state, total = fn(t.state, flag, param_cols, active)
+            total, = self._run_state(t, fn, mode, sid, flag, n,
+                                     (param_cols, active))
+            self._note_route(t, sid, n, True)
             return Result(dev={"count": total})
-        t.state, total, ns = fn(t.state, flag, param_cols, active)
+        total, ns = self._run_state(t, fn, mode, sid, flag, n,
+                                    (param_cols, active))
+        self._note_route(t, sid, n, True)
         if per_statement:
             stack = _HostStack({"count": ns})
             return [Result(ctx={"stack": stack, "index": i})
@@ -946,10 +1521,11 @@ class SQLCached:
             return self._do_batch_agg(stmt, params_list)
         t = self._table(stmt.table)
         schema = t.schema
-        eng = t.eng
         n = len(params_list)
         if n == 0:
             return []
+        mode, eng, xsch, sid, flag = self._exec_mode(t, stmt, params_list,
+                                                     n)
         b = _bucket(n)
         where = self._intern_ast(stmt.where)
         columns = stmt.columns or schema.column_names
@@ -961,21 +1537,22 @@ class SQLCached:
             np.asarray([pm[i][j] for i in range(b)]) for j in range(n_params)
         )
         active = np.arange(b) < n
-        plan = eng.plan_for(schema, where, ranked=stmt.order_by is not None)
+        plan = eng.plan_for(xsch, where, ranked=stmt.order_by is not None)
         if (isinstance(plan, PL.IndexProbe)
                 and not _np_terms_int((plan.key,) + plan.residual,
                                       param_cols)):
             plan = plan.fallback
         probe = isinstance(plan, PL.IndexProbe)
-        key = ("select_batch", schema, where, tuple(columns), stmt.payloads,
-               stmt.order_by, stmt.descending, limit, b, probe)
+        key = (mode, "select_batch", xsch, where, tuple(columns),
+               stmt.payloads, stmt.order_by, stmt.descending, limit, b,
+               probe)
 
         def build():
-            def base(state, param_cols, active):
+            def base(state, off_d, param_cols, active):
                 def run(route):
                     def one(pr, act):
                         _, res = eng.select(
-                            schema, state, where, pr,
+                            xsch, state, where, pr,
                             columns=columns, order_by=stmt.order_by,
                             descending=stmt.descending, limit=limit,
                             with_payloads=stmt.payloads, active=act,
@@ -1000,14 +1577,19 @@ class SQLCached:
                 # one fused epilogue for the whole batch: touch the
                 # returned rows and advance the clock by the REAL
                 # statement count (padding must not age TTLs)
-                state = eng.batch_touch(schema, state, res, active)
+                state = eng.batch_touch(xsch, state, res, active)
+                if mode == "lane":
+                    res = dict(res, row_ids=jnp.where(
+                        res["present"], res["row_ids"] + off_d, 0))
                 return state, res
 
-            return self._jit_with_expiry(schema, base, eng=eng)
+            return self._jit_exec(xsch, base, mode, eng)
 
         fn = self._executor(key, build)
-        flag = self._expire_flag(t, n)
-        t.state, res = fn(t.state, flag, param_cols, active)
+        off = sid * SH.shard_capacity(schema) if mode == "lane" else 0
+        res, = self._run_state(t, fn, mode, sid, flag, n,
+                               (jnp.int32(off), param_cols, active))
+        self._note_route(t, sid, n, False)
         stack = _HostStack({"count": res["count"], "rows": res["rows"],
                             "present": res["present"],
                             "row_ids": res["row_ids"]})
@@ -1026,11 +1608,11 @@ class SQLCached:
         are free). Returns one lazy Result per statement (``value``
         views into one stacked transfer)."""
         t = self._table(stmt.table)
-        schema = t.schema
-        eng = t.eng
         n = len(params_list)
         if n == 0:
             return []
+        mode, eng, xsch, sid, flag = self._exec_mode(t, stmt, params_list,
+                                                     n)
         b = _bucket(n)
         agg, col = stmt.agg
         where = self._intern_ast(stmt.where)
@@ -1041,13 +1623,13 @@ class SQLCached:
             np.asarray([pm[i][j] for i in range(b)]) for j in range(n_params)
         )
         active = np.arange(b) < n
-        plan = eng.plan_for(schema, where)
+        plan = eng.plan_for(xsch, where)
         if (isinstance(plan, PL.IndexProbe)
                 and not _np_terms_int((plan.key,) + plan.residual,
                                       param_cols)):
             plan = plan.fallback
         probe = isinstance(plan, PL.IndexProbe)
-        key = ("agg_batch", schema, agg, col, where, b, probe)
+        key = (mode, "agg_batch", xsch, agg, col, where, b, probe)
 
         def build():
             def base(state, param_cols, active):
@@ -1057,7 +1639,7 @@ class SQLCached:
                         # parameterless aggregates (vmap needs >=1 mapped
                         # argument); padded rows are never exposed, so
                         # their values don't matter
-                        _, v = eng.aggregate(schema, state, agg, col, where,
+                        _, v = eng.aggregate(xsch, state, agg, col, where,
                                              pr, plan=route,
                                              fused_mode="ref",
                                              probe_mode="ref")
@@ -1078,52 +1660,59 @@ class SQLCached:
                              ops=state["ops"] + nact)
                 return state, vals
 
-            return self._jit_with_expiry(schema, base, eng=eng)
+            return self._jit_exec(xsch, base, mode, eng)
 
         fn = self._executor(key, build)
-        flag = self._expire_flag(t, n)
-        t.state, vals = fn(t.state, flag, param_cols, active)
+        vals, = self._run_state(t, fn, mode, sid, flag, n,
+                                (param_cols, active))
+        self._note_route(t, sid, n, False)
         stack = _HostStack({"value": vals})
         return [Result(ctx={"stack": stack, "index": i}) for i in range(n)]
 
     def _do_select(self, stmt: S.Select, params: tuple) -> Result:
         t = self._table(stmt.table)
         schema = t.schema
-        eng = t.eng
         where = self._intern_ast(stmt.where)
+        mode, eng, xsch, sid, flag = self._exec_mode(t, stmt, [params], 1)
         if stmt.agg is not None:
             agg, col = stmt.agg
-            key = ("agg", schema, agg, col, where)
+            key = (mode, "agg", xsch, agg, col, where)
             fn = self._executor(
                 key,
-                lambda: self._jit_with_expiry(
-                    schema,
-                    lambda st, pr: eng.aggregate(schema, st, agg, col,
+                lambda: self._jit_exec(
+                    xsch,
+                    lambda st, pr: eng.aggregate(xsch, st, agg, col,
                                                  where, pr),
-                    eng=eng,
+                    mode, eng,
                 ),
             )
-            flag = self._expire_flag(t)
-            t.state, val = fn(t.state, flag, params)
+            val, = self._run_state(t, fn, mode, sid, flag, 1, (params,))
+            self._note_route(t, sid, 1, False)
             return Result(dev={"value": val})
         columns = stmt.columns or schema.column_names
         limit = stmt.limit if stmt.limit is not None else schema.max_select
-        key = ("select", schema, where, tuple(columns), stmt.payloads,
+        key = (mode, "select", xsch, where, tuple(columns), stmt.payloads,
                stmt.order_by, stmt.descending, limit)
 
         def build():
-            def base(st, pr):
-                return eng.select(
-                    schema, st, where, pr,
+            def base(st, off_d, pr):
+                st, res = eng.select(
+                    xsch, st, where, pr,
                     columns=columns, order_by=stmt.order_by,
                     descending=stmt.descending, limit=limit,
                     with_payloads=stmt.payloads,
                 )
-            return self._jit_with_expiry(schema, base, eng=eng)
+                if mode == "lane":
+                    res = dict(res, row_ids=jnp.where(
+                        res["present"], res["row_ids"] + off_d, 0))
+                return st, res
+            return self._jit_exec(xsch, base, mode, eng)
 
         fn = self._executor(key, build)
-        flag = self._expire_flag(t)
-        t.state, res = fn(t.state, flag, params)
+        off = sid * SH.shard_capacity(schema) if mode == "lane" else 0
+        res, = self._run_state(t, fn, mode, sid, flag, 1,
+                               (jnp.int32(off), params))
+        self._note_route(t, sid, 1, False)
         return Result(
             payloads=dict(res["payloads"]),
             dev={"count": res["count"], "rows": res["rows"],
@@ -1135,86 +1724,143 @@ class SQLCached:
 
     def _do_update(self, stmt: S.Update, params: tuple) -> Result:
         t = self._table(stmt.table)
-        schema = t.schema
-        eng = t.eng
         where = self._intern_ast(stmt.where)
         sets = tuple((c, self._intern_ast(e)) for c, e in stmt.sets)
-        key = ("update", schema, where, sets)
+        self._check_partition_update(t, (c for c, _ in sets))
+        mode, eng, xsch, sid, flag = self._exec_mode(t, stmt, [params], 1)
+        key = (mode, "update", xsch, where, sets)
 
         def build():
             def base(st, pr):
-                return eng.update(schema, st, where, dict(sets), pr)
-            return self._jit_with_expiry(schema, base, eng=eng)
+                return eng.update(xsch, st, where, dict(sets), pr)
+            return self._jit_exec(xsch, base, mode, eng)
 
         fn = self._executor(key, build)
-        flag = self._expire_flag(t)
-        t.state, n = fn(t.state, flag, params)
+        n, = self._run_state(t, fn, mode, sid, flag, 1, (params,))
+        self._note_route(t, sid, 1, True)
         return Result(dev={"count": n})
 
     def _do_delete(self, stmt: S.Delete, params: tuple) -> Result:
         t = self._table(stmt.table)
         schema = t.schema
-        eng = t.eng
         where = self._intern_ast(stmt.where)
+        mode, eng, xsch, sid, flag = self._exec_mode(t, stmt, [params], 1)
         # fusable deletes on payload-bearing tables also report WHICH rows
         # went (row_ids feeds incremental index maintenance, e.g. the
         # serving page table); scalar tables keep the mask-only path —
         # nothing indexes their rows, so the compaction would be pure
-        # cost. Sharded tables keep the mask-only path too (the serving
-        # page table is a monolithic-table integration).
-        returning = (eng is T and T._fused_plan(schema, where) is not None
+        # cost. Sharded tables route through the same returning epilogue
+        # with GLOBAL row ids: pruned deletes report one lane's rows,
+        # fan-out concat-merges the per-shard reclaimed rows
+        # (shards.delete_returning).
+        fused_sch = SH.shard_schema(schema) if t.lanes is not None \
+            else schema
+        returning = (T._fused_plan(fused_sch, where) is not None
                      and bool(schema.payloads))
-        key = ("delete", schema, where, returning)
+        key = (mode, "delete", xsch, where, returning)
 
         def build():
-            def base(st, pr):
+            def base(st, off_d, pr):
                 if returning:
-                    return T.delete_returning(schema, st, where, pr)
-                return eng.delete(schema, st, where, pr)
-            return self._jit_with_expiry(schema, base, eng=eng)
+                    st, n, ids, present = eng.delete_returning(
+                        xsch, st, where, pr)
+                    if mode == "lane":
+                        ids = jnp.where(present, ids + off_d, 0)
+                    return st, n, ids, present
+                st, n = eng.delete(xsch, st, where, pr)
+                return st, n
+            return self._jit_exec(xsch, base, mode, eng)
 
         fn = self._executor(key, build)
-        flag = self._expire_flag(t)
+        off = sid * SH.shard_capacity(schema) if mode == "lane" else 0
+        outs = self._run_state(t, fn, mode, sid, flag, 1,
+                               (jnp.int32(off), params))
+        self._note_route(t, sid, 1, True)
         if returning:
-            t.state, n, ids, present = fn(t.state, flag, params)
+            n, ids, present = outs
             return Result(dev={"count": n, "row_ids": ids,
                                "present": present},
                           ctx={"limit": schema.max_select})
-        t.state, n = fn(t.state, flag, params)
-        return Result(dev={"count": n})
+        return Result(dev={"count": outs[0]})
 
     def _do_expire(self, name: str) -> Result:
         t = self._table(name)
-        key = ("expire", t.schema)
+        if t.lanes is None:
+            key = ("expire", t.schema)
+            fn = self._executor(
+                key, lambda: jax.jit(lambda st: T.expire(t.schema, st),
+                                     donate_argnums=0)
+            )
+            t.state, n = fn(t.state)
+            return Result(dev={"count": n})
+        key = ("stacked", "expire", t.schema)
         fn = self._executor(
-            key, lambda: jax.jit(lambda st: t.eng.expire(t.schema, st),
-                                 donate_argnums=0)
-        )
-        t.state, n = fn(t.state)
+            key, lambda: self._jit_exec(
+                t.schema, lambda st: SH.expire(t.schema, st), "stacked",
+                SH))
+        # (_run_state's stacked booking consumed every lane deferral and
+        # the dispatch replayed them — nothing left to clear here)
+        n, = self._run_state(t, fn, "stacked", None, False, 1, ())
         return Result(dev={"count": n})
 
     # ----------------------------------------------------- serving-plane API
     def table_state(self, name: str) -> dict:
         """Zero-copy handle to the device-resident table state (for jitted
-        serving steps that read the pool directly)."""
-        return self._table(name).state
+        serving steps that read the pool directly). Sharded tables return
+        the STACKED view of their lanes (clocks caught up first) — a
+        snapshot; use :meth:`swap_table_state` to install changes."""
+        t = self._table(name)
+        if t.lanes is None:
+            return t.state
+        return SH.stack_lanes(self._caught_up_lanes(t))
 
     def swap_table_state(self, name: str, state: dict) -> None:
-        """Install a state produced by an external jitted step."""
-        self._table(name).state = state
+        """Install a state produced by an external jitted step (sharded
+        tables accept the stacked layout and split it back into lanes)."""
+        t = self._table(name)
+        if t.lanes is None:
+            t.state = state
+            return
+        lanes = SH.split_lanes(t.schema, state)
+        with t.lock:
+            t.lane_ticks = [t.ticks_total] * t.schema.shards
+            for i, lane in enumerate(lanes):
+                t.lanes[i] = lane
 
     def schema(self, name: str) -> TableSchema:
         return self._table(name).schema
 
     def live_rows(self, name: str) -> int:
-        return int(self._table(name).eng.live_count(
-            self._table(name).state))
+        t = self._table(name)
+        if t.lanes is None:
+            return int(T.live_count(t.state))
+        # count through the caught-up snapshot: a lane with a deferred
+        # expiry replay pending must not report rows the lockstep engine
+        # already dropped (no-op when nothing is deferred)
+        return sum(int(T.live_count(lane))
+                   for lane in self._caught_up_lanes(t))
 
     def advance_clock(self, ticks: int, table: str | None = None) -> None:
         """Advance the logical clock (tests / wall-time sync)."""
         names = [table] if table else list(self.tables)
         for nm in names:
             t = self._table(nm)
-            st = dict(t.state)
-            st["clock"] = st["clock"] + jnp.asarray(ticks, dtype=st["clock"].dtype)
-            t.state = st
+            if t.lanes is None:
+                st = dict(t.state)
+                st["clock"] = st["clock"] + jnp.asarray(
+                    ticks, dtype=st["clock"].dtype)
+                t.state = st
+                continue
+            # ticks commute with the lazy catch-up: advance every lane's
+            # device clock AND both sides of the bookkeeping, atomically
+            # vs lane-dispatch commits (which also hold t.lock). Like any
+            # external clock mutation this assumes no dispatch is
+            # IN FLIGHT on the table — tests/wall-time sync call it
+            # quiescent.
+            with t.lock:
+                t.ticks_total += ticks
+                t.lane_ticks = [lt + ticks for lt in t.lane_ticks]
+                for i, lane in enumerate(t.lanes):
+                    t.lanes[i] = dict(
+                        lane, clock=lane["clock"] + jnp.asarray(
+                            ticks, dtype=lane["clock"].dtype))

@@ -157,6 +157,22 @@ def plan_where(schema: TableSchema, where: P.Node | None,
     return GenericScan("conjunction exceeds the 4-term kernel")
 
 
+def _coerce_int_literals(node: P.Node | None) -> P.Node | None:
+    """Numeric-equal float literals coerced to int for ROUTING only: an
+    int32 partition column compared against ``5.0`` matches exactly the
+    rows an int ``5`` matches, so the route may hash the int — the
+    within-shard predicate keeps the original (exact-compare) literal.
+    Non-integral floats are left alone: they match nothing on an int
+    column, and any route is correct for an empty result."""
+    def coerce(v):
+        if (isinstance(v, float) and v.is_integer()
+                and abs(v) < 2 ** 31):
+            return int(v)
+        return v
+
+    return P.map_consts(node, coerce)
+
+
 @functools.lru_cache(maxsize=4096)
 def plan_shards(schema: TableSchema, where: P.Node | None) -> ShardRoute:
     """Lower ``where`` to a ShardRoute for a sharded ``schema`` (memoized
@@ -166,13 +182,16 @@ def plan_shards(schema: TableSchema, where: P.Node | None) -> ShardRoute:
     partition column, ORs, no WHERE) must visit every shard. Pruning is
     value-directed: the shard id itself is computed from the bound value
     at execution time (device-side, so batched statements route
-    per-row)."""
+    per-row). Float LITERALS that are numerically integral (``k = 5.0``)
+    are coerced to the column dtype before classification, so they prune
+    like ``k = 5`` instead of silently demoting to fan-out."""
     col = schema.partition_by
     n = schema.shards
     if where is None or col is None:
         return ShardRoute(col or "", None, n)
     ints = int_columns(schema)
-    fused = P.classify_fusable(where, ints, max_terms=1 + MAX_RESIDUAL)
+    fused = P.classify_fusable(_coerce_int_literals(where), ints,
+                               max_terms=1 + MAX_RESIDUAL)
     key = None
     if fused is not None:
         key = next((t for t in fused.terms if t.op == "==" and t.col == col),

@@ -59,10 +59,31 @@ transparently (core/shards.py):
     GO#3                      -- VALUE row includes "shard_route":
                               --   "pruned -> shard k" / "fan-out x 8"
 
+Two admin statements manage the partitioning live over the same wire
+(both answer with one COUNT + one VALUE line):
+
+    EXEC SHOW STATS pages
+    GO                        -- VALUE is a JSON skew report: per-shard
+                              --   live_rows + statements/writes/
+                              --   inserted_rows counters (a hot shard
+                              --   shows up as one lane running away);
+                              --   EXPLAIN pages is the same report
+    EXEC ALTER TABLE pages RESHARD 16
+    GO                        -- live re-partition: one bulk device-side
+                              --   re-split of every live row + one
+                              --   index rebuild per new shard; COUNT is
+                              --   the rows moved, VALUE the new shard
+                              --   count. TTL stamps ride along, so
+                              --   contents round-trip exactly.
+                              --   RESHARD 1 converts to monolithic.
+
 The batch scheduler additionally overlaps groups whose footprints
 provably commute — different tables, disjoint columns, or pruned
-statements on disjoint shard sets — so independent-shard traffic from
-different connections no longer queues behind one dispatch.
+statements on disjoint shard sets. Since PR 5 a sharded table's state
+lives in per-shard EXECUTION LANES at the daemon: a statement group
+that provably routes to one shard locks and executes only that lane,
+so same-table traffic on different shards no longer queues behind one
+dispatch — a hot table stops being a concurrency barrier.
 
 Tensor payloads never cross this socket — they live on the accelerator;
 the protocol is the management/metadata plane (DESIGN.md §2).

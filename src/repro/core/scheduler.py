@@ -54,13 +54,25 @@ concurrently (``asyncio.gather`` over worker threads — jax device work
 is enqueued asynchronously, so this overlaps the host-side dispatch
 cost that dominates small statements); a conflicting group ends the
 wave and waits. Admin statements and unparseable SQL stay hard
-barriers: they are always a wave of one. Same-table groups inside one
-wave additionally serialize on a per-table lock — commuting makes the
-order irrelevant, the lock just keeps the read-modify-write of the
-table's device state handle atomic. Shard-pruned statements on one
+barriers: they are always a wave of one. Shard-pruned statements on one
 table may observe a logical clock that differs by the wave's statement
 count from strict admission order (clock ticks commute; same TTL
 batch-boundary flexibility as above).
+
+Execution lanes
+---------------
+Locking inside a wave is per SHARD, not per table (PR 5): a sharded
+table's state lives in per-shard lane handles at the daemon
+(``daemon._Table.lanes``), and a group whose shard route is provably
+ONE shard (``SQLCached.group_shard_ids`` returns a singleton) acquires
+only that lane's asyncio lock — so same-table groups on different
+lanes hold disjoint locks and truly overlap, and the daemon executes
+each against its own lane's buffers. Groups with fan-out / unknown /
+multi-shard routes take the table's base lock plus every lane
+(whole-table exclusion), unsharded tables keep their single lock, and
+acquisition follows one global order (base, then lanes ascending) so
+concurrent groups cannot deadlock. ``lane_locks=False`` restores the
+PR-4 single-lock regime (the lane-bench baseline).
 
 Admission window
 ----------------
@@ -74,6 +86,7 @@ tick exactly as before. The clock (``_now``) and the wait primitive
 from __future__ import annotations
 
 import asyncio
+import os
 import time
 from collections import deque
 from typing import Any, Sequence
@@ -94,7 +107,7 @@ class _Item:
 
 
 class _Group:
-    __slots__ = ("seq", "shape", "items", "_shard_ids")
+    __slots__ = ("seq", "shape", "items", "_shard_ids", "_lane")
 
     _UNSET = object()
 
@@ -103,6 +116,7 @@ class _Group:
         self.shape = shape
         self.items = items
         self._shard_ids = _Group._UNSET  # lazily computed, then cached
+        self._lane = _Group._UNSET
 
     def shard_ids(self, db: SQLCached) -> frozenset | None:
         """The provable shard-id set of this group's statements (None =
@@ -116,6 +130,21 @@ class _Group:
             except Exception:  # noqa: BLE001 — routing is best effort
                 self._shard_ids = None
         return self._shard_ids
+
+    def lane(self, db: SQLCached) -> int | None:
+        """The execution lane the DAEMON will run this group on (None =
+        the dispatch takes the whole table). This is ``db.group_lane``
+        — the exact predicate ``_exec_mode`` uses — so the lock set
+        below always covers what the dispatch actually touches (a
+        single-shard group can still need a whole-table dispatch, e.g.
+        an INSERT batch wider than one shard)."""
+        if self._lane is _Group._UNSET:
+            try:
+                self._lane = db.group_lane(
+                    self.shape, [it.params for it in self.items])
+            except Exception:  # noqa: BLE001 — routing is best effort
+                self._lane = None
+        return self._lane
 
 
 class _TableFences:
@@ -187,22 +216,33 @@ class BatchScheduler:
 
     def __init__(self, db: SQLCached, *, batching: bool = True,
                  max_batch: int = 64, max_admit: int = 4096,
-                 max_wait_us: int = 0, concurrency: bool = True):
+                 max_wait_us: int = 0, concurrency: bool | None = None,
+                 lane_locks: bool = True):
         self.db = db
         self.batching = batching
         self.max_batch = max_batch
         self.max_admit = max_admit
         self.max_wait_us = max_wait_us
+        if concurrency is None:  # env override so CI can run both regimes
+            concurrency = os.environ.get(
+                "REPRO_SCHED_CONCURRENCY", "1") != "0"
         self.concurrency = concurrency  # overlap commuting groups (waves)
+        # lane_locks=False restores the PR-4 regime: one lock per table,
+        # so same-table groups serialize even inside a wave (the
+        # lane-bench baseline)
+        self.lane_locks = lane_locks
         self._now = time.monotonic  # injectable (fake clocks in tests)
         self._q: deque[_Item] = deque()
         self._wake = asyncio.Event()
         self._task: asyncio.Task | None = None
         self._closed = False
-        self._table_locks: dict[str, asyncio.Lock] = {}
+        # per table: {"base": Lock, "lanes": {shard_id: Lock}} — see
+        # _locks_for
+        self._table_locks: dict[str, dict] = {}
         self.stats = {"admitted": 0, "batches": 0, "grouped_statements": 0,
                       "singles": 0, "max_group": 0, "window_waits": 0,
-                      "waves": 0, "overlapped_groups": 0, "max_wave": 0}
+                      "waves": 0, "overlapped_groups": 0, "max_wave": 0,
+                      "lane_dispatches": 0}
 
     # ------------------------------------------------------------ lifecycle
     async def start(self) -> None:
@@ -289,17 +329,48 @@ class BatchScheduler:
             if not it.future.done():
                 it.future.set_result(res)
 
-    async def _dispatch(self, g: _Group) -> None:
-        """Run one group. Same-table groups inside a concurrent wave
-        serialize on the table lock (commuting makes the order free; the
-        lock keeps the table-state read-modify-write atomic)."""
+    def _locks_for(self, g: _Group) -> list:
+        """The ordered lock set one group must hold (per-shard execution
+        lanes): a group that provably routes to ONE shard takes only that
+        lane's lock — so same-table groups on different lanes run truly
+        concurrently inside a wave; everything else on a sharded table
+        takes the base lock plus every lane (whole-table exclusion); an
+        unsharded table keeps its single base lock. Acquisition order is
+        global (base, then lanes ascending), so concurrent groups can
+        never deadlock."""
         table = g.shape.table if g.shape is not None else None
-        if table is not None:
-            lock = self._table_locks.setdefault(table, asyncio.Lock())
-            async with lock:
-                await self._dispatch_inner(g)
-        else:
+        if table is None:
+            return []
+        ent = self._table_locks.setdefault(
+            table, {"base": asyncio.Lock(), "lanes": {}})
+        t = self.db.tables.get(table)
+        n = t.schema.shards if t is not None else 1
+        if n <= 1 or not self.lane_locks:
+            return [ent["base"]]
+        lanes = ent["lanes"]
+        lane = g.lane(self.db)
+        if lane is not None:
+            # single-lane group: the daemon will execute it on exactly
+            # this lane's state handle (db.group_lane IS the dispatch
+            # decision _exec_mode reads, so lock and dispatch agree)
+            self.stats["lane_dispatches"] += 1
+            return [lanes.setdefault(lane, asyncio.Lock())]
+        return [ent["base"]] + [lanes.setdefault(i, asyncio.Lock())
+                                for i in range(n)]
+
+    async def _dispatch(self, g: _Group) -> None:
+        """Run one group under its lane/table locks. Commuting makes the
+        order inside a wave free; the locks keep each state handle's
+        read-modify-write atomic — and disjoint-lane groups hold disjoint
+        locks, so they truly overlap."""
+        locks = self._locks_for(g)
+        for lk in locks:
+            await lk.acquire()
+        try:
             await self._dispatch_inner(g)
+        finally:
+            for lk in reversed(locks):
+                lk.release()
 
     async def _dispatch_inner(self, g: _Group) -> None:
         items = g.items

@@ -87,7 +87,11 @@ class TableSchema:
     # multiplicative hash of ``partition_by`` (an int32 column — INT, or
     # TEXT via the interner; defaults to the first indexed column, else
     # the first int32 column). ``capacity`` stays the LOGICAL total; each
-    # shard holds ceil(capacity / shards) rows.
+    # shard holds ceil(capacity / shards) rows. The shard count is NOT
+    # fixed for the table's lifetime: ``ALTER TABLE t RESHARD n``
+    # re-partitions live via ``dataclasses.replace(schema, shards=n)``
+    # (this validation re-runs; ``partition_by`` survives a RESHARD 1
+    # round trip so the table can be re-partitioned later).
     shards: int = 1
     partition_by: str | None = None
 

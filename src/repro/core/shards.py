@@ -61,6 +61,7 @@ from repro.core import planner as PL
 from repro.core import predicate as P
 from repro.core import table as T
 from repro.core.schema import TableSchema
+from repro.kernels import hashidx as HX
 from repro.kernels import ops as OPS
 
 _PRIME = 2654435761  # 2^32 / phi — same multiplier as kernels/hashidx
@@ -108,6 +109,59 @@ def init_state(schema: TableSchema) -> dict:
     one = T.init_state(shard_schema(schema))
     return jax.tree.map(
         lambda x: jnp.repeat(x[None], schema.shards, axis=0), one)
+
+
+# ------------------------------------------------------------ lane boundary
+#
+# The daemon's per-shard EXECUTION LANES (PR 5) hold one independent state
+# handle per shard — the per-shard layout of core/table.py, i.e. exactly
+# one slice of the stacked pytree. These two functions are the split/merge
+# boundary: the daemon stores lanes, a lane-confined dispatch runs the
+# ordinary table executors on ONE lane (its own buffers, its own donation),
+# and whole-table dispatches stack the lanes inside the jitted executor
+# (XLA's slice-of-concat simplification keeps pass-through leaves free).
+
+def init_lanes(schema: TableSchema) -> list:
+    """Fresh per-shard lane states (shards independent handles)."""
+    return [T.init_state(shard_schema(schema)) for _ in range(schema.shards)]
+
+
+def stack_lanes(lanes) -> dict:
+    """Per-lane states -> the stacked state every fan-out executor eats."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *lanes)
+
+
+def split_lanes(schema: TableSchema, state: dict) -> list:
+    """Stacked state -> per-lane states (inverse of :func:`stack_lanes`)."""
+    return [jax.tree.map(lambda x: x[i], state)
+            for i in range(schema.shards)]
+
+
+def flat_schema(schema: TableSchema):
+    """Monolithic-layout schema whose capacity covers the flattened shard
+    stack (``shards * shard_capacity`` — global row ids index it
+    directly). For kvpool-style readers of :func:`flat_state`."""
+    cap = shard_capacity(schema) * schema.shards
+    return dataclasses.replace(schema, capacity=cap, shards=1,
+                               partition_by=None)
+
+
+def flat_state(state: dict) -> dict:
+    """Monolithic-layout view of a stacked sharded state: cols, validity
+    and payload pools flattened along (shard, slot) so GLOBAL row ids
+    (``shard * shard_cap + slot``) index them like an unsharded table —
+    the bridge that lets row-id consumers (e.g. the serving page table,
+    core/kvpool.py) run against a sharded metadata table."""
+    return dict(
+        state,
+        cols={c: v.reshape((-1,) + v.shape[2:])
+              for c, v in state["cols"].items()},
+        payloads={p: v.reshape((-1,) + v.shape[2:])
+                  for p, v in state["payloads"].items()},
+        valid=state["valid"].reshape(-1),
+        clock=state["clock"][0],
+        ops=state["ops"][0],
+    )
 
 
 # ------------------------------------------------------------- state pieces
@@ -292,21 +346,25 @@ def insert(
 
 # ------------------------------------------------------------------- select
 
-def _merge_select(schema, res, limit, order_by, descending):
-    """Fan-out merge: per-shard fixed-width results -> one result of
-    ``limit`` rows. Unranked: first ``limit`` present candidates in
-    (shard, slot) order via one compaction. Ranked: global top-k over the
-    per-shard top-k candidates (each shard returned ``limit`` rows, so
-    the union covers the global top ``limit``)."""
+def _merge_select(schema, state, res, limit, order_by, descending,
+                  columns, with_payloads):
+    """Fan-out merge: per-shard fixed-width CANDIDATES (row ids + the
+    ORDER BY key only — see :func:`select`) -> one result of ``limit``
+    rows. Unranked: first ``limit`` present candidates in (shard, slot)
+    order via one compaction. Ranked: global top-k over the per-shard
+    top-k candidates (each shard returned up to ``limit`` rows, so the
+    union covers the global top ``limit``). Only the ``limit`` WINNING
+    rows gather their columns/payloads — from the stacked ``state``, by
+    (shard, slot) — so the merge buffer is O(n_shards x limit) ids plus
+    O(limit) rows, never n x limit materialized row sets."""
     n_sh = res["count"].shape[0]
     s_limit = res["present"].shape[1]
     cap_s = shard_capacity(schema)
     m = n_sh * s_limit
     count = jnp.sum(res["count"])
     present = res["present"].reshape(m)
-    ids_g = (res["row_ids"]
-             + (jnp.arange(n_sh, dtype=jnp.int32) * cap_s)[:, None]
-             ).reshape(m)
+    slots = res["row_ids"].reshape(m)
+    sids = jnp.repeat(jnp.arange(n_sh, dtype=jnp.int32), s_limit)
     if order_by is None:
         idx, pres = T._compact(present, limit, m)
     else:
@@ -319,16 +377,16 @@ def _merge_select(schema, res, limit, order_by, descending):
             key = jnp.where(present, key, -jnp.inf)
         _, idx = jax.lax.top_k(key, limit)
         pres = present[idx]
-        pres = pres & (jnp.arange(limit, dtype=jnp.int32) < count)
-    rows = {c: v.reshape((m,) + v.shape[2:])[idx]
-            for c, v in res["rows"].items()}
-    pls = {p: v.reshape((m,) + v.shape[2:])[idx]
-           for p, v in res["payloads"].items()}
+        pres = pres & (jnp.arange(idx.shape[0], dtype=jnp.int32) < count)
+    sel_s, sel_r = sids[idx], slots[idx]
+    rows = {c: state["cols"][c][sel_s, sel_r] for c in columns}
+    pls = {p: state["payloads"][p][sel_s, sel_r] for p in with_payloads}
     return {
         "count": count,
         "rows": rows,
         "present": pres,
-        "row_ids": jnp.where(pres, ids_g[idx], 0).astype(jnp.int32),
+        "row_ids": jnp.where(pres, sel_s * cap_s + sel_r, 0).astype(
+            jnp.int32),
         "payloads": pls,
     }
 
@@ -408,13 +466,19 @@ def select(
             state = dict(state, cols=dict(state["cols"], _accessed=acc))
         state = _tick_all(state)
     else:
-        # ---- fan-out: vmap over the stacked shards, merge partials
+        # ---- fan-out: vmap over the stacked shards, merge partials.
+        # Each shard returns only row ids (+ the ORDER BY key when
+        # ranked); the merge gathers columns/payloads for the WINNING
+        # ``limit`` rows straight from the stacked state, so candidate
+        # materialization is bounded at O(n_shards x limit) ids.
+        fan_cols = (order_by,) if order_by is not None else ()
+
         def run(rt):
             def one(st):
                 return T.select(
-                    s_sch, st, where, params, columns=inner_cols,
+                    s_sch, st, where, params, columns=fan_cols,
                     order_by=order_by, descending=descending,
-                    limit=s_limit, with_payloads=with_payloads,
+                    limit=s_limit, with_payloads=(),
                     touch=touch, active=active,
                     fused_mode="ref", probe_mode="ref", plan=rt)
 
@@ -422,7 +486,8 @@ def select(
 
         state, res = _run_fanout(schema, state, where, params, plan, run,
                                  ranked=order_by is not None)
-        res = _merge_select(schema, res, limit, order_by, descending)
+        res = _merge_select(schema, state, res, limit, order_by,
+                            descending, columns, with_payloads)
     res["rows"] = {c: res["rows"][c] for c in columns}
     return state, res
 
@@ -524,6 +589,63 @@ def delete(
 
     state, ns = _run_fanout(schema, state, where, params, plan, run)
     return state, jnp.sum(ns)
+
+
+def delete_returning(
+    schema: TableSchema,
+    state: dict,
+    where: P.Node | None,
+    params: Sequence[Any] = (),
+    *,
+    limit: int | None = None,
+    plan: PL.Plan | None = None,
+    probe_mode: str | None = None,
+):
+    """DELETE that also reports WHICH rows went, with shard routing —
+    the sharded twin of ``table.delete_returning`` (global row ids feed
+    incremental index maintenance, e.g. the serving page table over a
+    :func:`flat_state` view). Pruned runs one shard; fan-out concatenates
+    the per-shard reclaimed rows and compacts the first ``limit`` global
+    ids in (shard, slot) order. Returns (state, n, ids[limit],
+    present[limit])."""
+    s_sch = shard_schema(schema)
+    n_sh, cap_s = schema.shards, s_sch.capacity
+    limit = schema.max_select if limit is None else limit
+    s_limit = min(limit, cap_s)
+    key = _route_key(schema, where, params)
+    if key is not None:
+        sid = shard_of(jnp.asarray(key.resolve(params), jnp.int32)[None],
+                       n_sh)[0]
+        sub = _slice_shard(state, sid)
+        sub2, n, ids, present = T.delete_returning(
+            s_sch, sub, where, params, limit=s_limit, plan=plan,
+            probe_mode=probe_mode)
+        state = _writeback(state, sub2, sid, ("valid",))
+        ids = jnp.where(present, ids + sid * cap_s, 0).astype(jnp.int32)
+        if s_limit < limit:
+            pad = limit - s_limit
+            ids = jnp.concatenate([ids, jnp.zeros((pad,), jnp.int32)])
+            present = jnp.concatenate(
+                [present, jnp.zeros((pad,), dtype=bool)])
+        return _tick_all(state), n, ids, present
+
+    def run(rt):
+        def one(st):
+            return T.delete_returning(s_sch, st, where, params,
+                                      limit=s_limit, plan=rt,
+                                      probe_mode="ref")
+
+        return jax.vmap(one)(state)
+
+    state, ns, ids, present = _run_fanout(schema, state, where, params,
+                                          plan, run)
+    m = n_sh * s_limit
+    pres_f = present.reshape(m)
+    ids_g = (ids + (jnp.arange(n_sh, dtype=jnp.int32) * cap_s)[:, None]
+             ).reshape(m)
+    idx, pres = T._compact(pres_f, limit, m)
+    ids_out = jnp.where(pres, ids_g[idx], 0).astype(jnp.int32)
+    return state, jnp.sum(ns), ids_out, pres
 
 
 def delete_many_eq(
@@ -633,6 +755,71 @@ def build_index(schema: TableSchema, state: dict, column: str | None = None,
     return jax.vmap(
         lambda st: T.build_index(s_sch, st, column, mode=mode or "ref"))(
             state)
+
+
+def reshard(old_schema: TableSchema, new_schema: TableSchema, lanes):
+    """Bulk re-split behind ``ALTER TABLE t RESHARD n``: rebuild the
+    shard pytree at ``new_schema.shards`` by ONE device-side re-split of
+    every live row (the ``kernels/ops.shard_split`` argsort machinery
+    over the flattened old stack) plus one hash-index rebuild per new
+    shard. ``lanes`` is a sequence of per-shard states in the OLD layout
+    (a monolithic state is one lane); caller must have clocks in
+    lockstep (caught up).
+
+    Row metadata (``_created``/``_accessed``/``_ttl``) and the clock ride
+    along verbatim, so TTL ageing is unchanged by the move — contents
+    round-trip exactly. Returns (new_lanes list, counts[new_n]): counts
+    are live rows per NEW shard from the FULL split, so the caller can
+    detect overflow (``counts[i] > new shard capacity`` — the new layout
+    cannot hold the skew) before installing. NOT donated: on overflow the
+    old state stays live."""
+    new_n = new_schema.shards
+    s_new = shard_schema(new_schema) if new_n > 1 else new_schema
+    cap_new = s_new.capacity
+    pcol = new_schema.partition_by if new_n > 1 else old_schema.partition_by
+
+    # flatten the old lanes ((shard, slot) order — stable, so repeated
+    # reshards keep deterministic layouts)
+    def flat(get):
+        return jnp.concatenate([get(l) for l in lanes])
+
+    valid = flat(lambda l: l["valid"])
+    cols = {c: flat(lambda l, _c=c: l["cols"][_c])
+            for c in lanes[0]["cols"]}
+    pls = {p: flat(lambda l, _p=p: l["payloads"][_p])
+           for p in lanes[0]["payloads"]}
+    pkeys = (cols[pcol].astype(jnp.int32) if pcol is not None
+             else jnp.zeros(valid.shape, jnp.int32))
+    sid = shard_of(pkeys, new_n)
+    rows, mask = OPS.shard_split(sid, new_n, valid)
+    counts = jnp.sum(mask.astype(jnp.int32), axis=1)
+    r, m = rows[:, :cap_new], mask[:, :cap_new]
+    if r.shape[1] < cap_new:  # growing capacity: pad the gather frame
+        pad = cap_new - r.shape[1]
+        r = jnp.concatenate(
+            [r, jnp.zeros((new_n, pad), jnp.int32)], axis=1)
+        m = jnp.concatenate(
+            [m, jnp.zeros((new_n, pad), dtype=bool)], axis=1)
+
+    def gather(a):
+        g = a[r]  # [new_n, cap_new, ...]
+        keep = m.reshape(m.shape + (1,) * (g.ndim - 2))
+        return jnp.where(keep, g, jnp.zeros((), a.dtype))
+
+    n_cols = {c: gather(v) for c, v in cols.items()}
+    n_pls = {p: gather(v) for p, v in pls.items()}
+    clock = jnp.broadcast_to(lanes[0]["clock"], (new_n,))
+    ops = jnp.broadcast_to(lanes[0]["ops"], (new_n,))
+    indexes = {}
+    for c in new_schema.indexes:
+        nb = HX.n_buckets_for(cap_new)
+        rid, key, ov = jax.vmap(
+            lambda kc, v: OPS.hash_build(kc, v, n_buckets=nb, mode="ref"))(
+                n_cols[c], m)
+        indexes[c] = {"rid": rid, "key": key, "stale": ov}
+    stacked = {"cols": n_cols, "payloads": n_pls, "valid": m,
+               "clock": clock, "ops": ops, "indexes": indexes}
+    return split_lanes(new_schema, stacked), counts
 
 
 # ------------------------------------------------------- batched epilogues

@@ -24,6 +24,13 @@ cache daemon and we exclude them):
   DROP TABLE t
   EXPLAIN <stmt>      -- report the chosen query plan (index-probe /
                          fused-scan / generic-scan) without executing
+  EXPLAIN t           -- per-shard skew/usage stats (= SHOW STATS t)
+  SHOW STATS t        -- per-shard live rows + routed-statement counters
+  ALTER TABLE t RESHARD n
+                      -- live re-partition: rebuild the shard pytree at
+                         n shards by one bulk device-side re-split (row
+                         metadata/TTLs ride along verbatim; n = 1
+                         converts back to a monolithic table)
 
 ``INDEX(col)`` in a CREATE column list declares a device-resident hash
 index on an INT/TEXT column; equality WHEREs on it become O(1) bucket
@@ -170,6 +177,23 @@ class DropTable:
 
 
 @dataclasses.dataclass(frozen=True)
+class ShowStats:
+    """SHOW STATS t (equivalently ``EXPLAIN t``): per-shard skew report —
+    live rows, routed-statement and write counters per execution lane."""
+
+    table: str
+
+
+@dataclasses.dataclass(frozen=True)
+class AlterReshard:
+    """ALTER TABLE t RESHARD n: live re-partition of a table's rows
+    across ``n`` shards (bulk device-side re-split; admin barrier)."""
+
+    table: str
+    shards: int
+
+
+@dataclasses.dataclass(frozen=True)
 class Explain:
     """EXPLAIN <stmt>: report the inner statement's query plan."""
 
@@ -178,7 +202,7 @@ class Explain:
 
 Statement = (
     CreateTable | Insert | Select | Update | Delete | Expire | Flush
-    | Reindex | DropTable | Explain
+    | Reindex | DropTable | ShowStats | AlterReshard | Explain
 )
 
 
@@ -327,13 +351,22 @@ class _Parser:
             return P.Col(nm)
         raise SQLError(f"unexpected token {val!r}")
 
+    _STMT_KWS = ("CREATE", "INSERT", "SELECT", "UPDATE", "DELETE",
+                 "EXPIRE", "FLUSH", "REINDEX", "DROP", "SHOW", "ALTER")
+
     # -- statements
     def statement(self) -> Statement:
         explain = self.accept_kw("EXPLAIN") is not None
-        kw = self.expect_kw(
-            "CREATE", "INSERT", "SELECT", "UPDATE", "DELETE", "EXPIRE",
-            "FLUSH", "REINDEX", "DROP"
-        )
+        if explain:
+            kind, val = self.peek()
+            if kind == "name" and val.upper() not in self._STMT_KWS:
+                # EXPLAIN <table>: the per-shard stats report (SHOW STATS)
+                stmt = ShowStats(self.name())
+                if self.peek()[0] != "eof":
+                    raise SQLError(
+                        f"trailing tokens: {self.peek()[1]!r}")
+                return stmt
+        kw = self.expect_kw(*self._STMT_KWS)
         fn = getattr(self, f"_stmt_{kw.lower()}")
         stmt = fn()
         if self.peek()[0] != "eof":
@@ -490,6 +523,19 @@ class _Parser:
     def _stmt_drop(self) -> DropTable:
         self.expect_kw("TABLE")
         return DropTable(self.name())
+
+    def _stmt_show(self) -> ShowStats:
+        self.expect_kw("STATS")
+        return ShowStats(self.name())
+
+    def _stmt_alter(self) -> AlterReshard:
+        self.expect_kw("TABLE")
+        table = self.name()
+        self.expect_kw("RESHARD")
+        n = self.integer()
+        if n < 1:
+            raise SQLError("RESHARD must be >= 1")
+        return AlterReshard(table, n)
 
 
 def parse(sql: str) -> Statement:

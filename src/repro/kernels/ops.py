@@ -92,9 +92,13 @@ def hash_probe(rid, key, qkeys, *, mode=None):
 
 
 def shard_split(shard_ids, n_shards: int, row_mask=None):
-    """Device-side partition split for the sharded-table INSERT path: one
-    XLA sort routes a [b]-row batch to its shards (the same sort+searchsorted
-    machinery as hashidx's bulk bucketing, reused at shard granularity).
+    """Device-side partition split: one XLA sort routes a [b]-row batch
+    to its shards (the same sort+searchsorted machinery as hashidx's
+    bulk bucketing, reused at shard granularity). Two callers: the
+    sharded-table INSERT path (split a statement batch by the partition
+    hash) and ``ALTER TABLE ... RESHARD n`` (``core/shards.reshard``:
+    re-split EVERY live row of the flattened old shard stack into the
+    new shard layout in one pass).
 
     shard_ids: [b] int32 target shard per row; row_mask: [b] bool (None =
     all rows live). Returns (rows [n_shards, b], mask [n_shards, b]):

@@ -168,3 +168,53 @@ def test_flush_reindex_parity():
     assert r_u.value == r_s.value == 0
     _check_select(db_u.execute("SELECT k, w, v FROM t WHERE k = ?", (2,)),
                   db_s.execute("SELECT k, w, v FROM t WHERE k = ?", (2,)))
+
+
+@pytest.mark.parametrize("limit", [1, 3, 7])
+def test_order_by_merge_parity_at_small_limits(limit):
+    """The trimmed fan-out merge (per-shard candidates ranked by key,
+    winning rows gathered post-merge) must agree with the unsharded
+    ranked scan at limits far below the match count."""
+    rng = np.random.default_rng(17)
+    db_u, db_s = _mk_pair(4, indexed=False)
+    # distinct w values make the global top-k unambiguous
+    ws = rng.permutation(64)[:40]
+    rows = [(int(rng.integers(0, 12)), int(w), int(rng.integers(-5, 5)))
+            for w in ws]
+    for db in (db_u, db_s):
+        db.executemany("INSERT INTO t (k, w, v) VALUES (?, ?, ?)", rows)
+    for sql in (f"SELECT k, w FROM t ORDER BY w DESC LIMIT {limit}",
+                f"SELECT k, w, v FROM t ORDER BY w ASC LIMIT {limit}",
+                f"SELECT w FROM t WHERE v >= 0 ORDER BY w DESC "
+                f"LIMIT {limit}"):
+        r_u, r_s = db_u.execute(sql), db_s.execute(sql)
+        assert r_u.count == r_s.count
+        assert r_u.rows == r_s.rows  # ranked: ORDER is part of the contract
+
+
+def test_ops_interval_stream_parity():
+    """§4.3 op-count auto-expiry under lane execution: a lane that
+    missed a table-wide expiry REPLAYS it (ages at the firing time) on
+    its next dispatch, so every pruned read sees exactly what the
+    lockstep unsharded engine shows — statement for statement."""
+    rng = np.random.default_rng(23)
+    dbs = []
+    for extra in ("", " SHARDS 4 PARTITION BY k"):
+        db = SQLCached()
+        db.execute(f"CREATE TABLE t (k INT, w INT, v INT) CAPACITY {CAP} "
+                   f"MAX_SELECT {CAP} TTL 30 OPS_INTERVAL 8{extra}")
+        dbs.append(db)
+    db_u, db_s = dbs
+    _insert_batch((db_u, db_s), rng)
+    for i in range(40):
+        k = int(rng.integers(0, 12))
+        r_u = db_u.execute("SELECT k, w FROM t WHERE k = ?", (k,))
+        r_s = db_s.execute("SELECT k, w FROM t WHERE k = ?", (k,))
+        _check_select(r_u, r_s)
+        if i % 10 == 9:  # occasional inserts re-fill and tick both
+            _insert_batch((db_u, db_s), rng)
+    # a full pass on both converges any still-deferred lane replays
+    db_u.execute("EXPIRE t"), db_s.execute("EXPIRE t")
+    assert db_u.live_rows("t") == db_s.live_rows("t")
+    _check_select(db_u.execute("SELECT k, w, v FROM t"),
+                  db_s.execute("SELECT k, w, v FROM t"))

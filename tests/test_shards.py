@@ -279,7 +279,7 @@ def test_waves_overlap_disjoint_tables():
         db = SQLCached()
         db.execute("CREATE TABLE a (k INT) CAPACITY 32")
         db.execute("CREATE TABLE b (k INT) CAPACITY 32")
-        sched = BatchScheduler(db, batching=True)
+        sched = BatchScheduler(db, batching=True, concurrency=True)
         await sched.start()
         futs = [sched.submit("INSERT INTO a (k) VALUES (?)", (i,))
                 for i in range(3)]
@@ -299,7 +299,7 @@ def test_waves_never_cross_admin_barrier():
     async def main():
         db = SQLCached()
         db.execute("CREATE TABLE a (k INT) CAPACITY 32")
-        sched = BatchScheduler(db, batching=True)
+        sched = BatchScheduler(db, batching=True, concurrency=True)
         await sched.start()
         futs = [sched.submit("INSERT INTO a (k) VALUES (1)"),
                 sched.submit("DROP TABLE a"),
@@ -327,7 +327,7 @@ def test_waves_overlap_disjoint_shard_routes():
                    [(k0, 1), (k1, 2)])
 
     async def main():
-        sched = BatchScheduler(db, batching=True)
+        sched = BatchScheduler(db, batching=True, concurrency=True)
         await sched.start()
         # distinct SQL texts -> distinct groups; conflicting column
         # footprints (both write w) but disjoint shard sets
@@ -403,3 +403,371 @@ def test_concurrency_off_still_correct():
 
     db = _run(main())
     assert db.live_rows("a") == 4
+
+
+# ----------------------------------------- PR 5: lanes, RESHARD, stats
+
+def test_float_literal_prunes_to_one_shard():
+    """Regression: a numeric-equal float literal on an INT partition
+    column must prune (it used to silently demote to fan-out)."""
+    db = SQLCached()
+    db.execute("CREATE TABLE t (k INT, w INT) CAPACITY 64 SHARDS 4 "
+               "PARTITION BY k")
+    db.executemany("INSERT INTO t (k, w) VALUES (?, ?)",
+                   [(i, i) for i in range(8)])
+    sid = SH.shard_of_host(5, 4)
+    info = json.loads(
+        db.execute("EXPLAIN SELECT w FROM t WHERE k = 5.0").value)
+    assert info["shard_route"] == f"pruned -> shard {sid}"
+    # the coerced route still matches the int rows exactly
+    assert db.execute("SELECT w FROM t WHERE k = 5.0").rows == [{"w": 5}]
+    # a non-integral float matches nothing and keeps the fan-out route
+    assert db.execute("SELECT w FROM t WHERE k = 5.5").count == 0
+    info = json.loads(
+        db.execute("EXPLAIN SELECT w FROM t WHERE k = 5.5").value)
+    assert info["shard_route"] == "fan-out x 4"
+    # engine-level: the routed DELETE touches only the right shard
+    assert db.execute("DELETE FROM t WHERE k = 5.0").count == 1
+
+
+def test_show_stats_reports_per_shard_skew():
+    db = SQLCached()
+    db.execute("CREATE TABLE t (k INT, w INT) CAPACITY 64 SHARDS 4 "
+               "PARTITION BY k")
+    db.executemany("INSERT INTO t (k, w) VALUES (?, ?)",
+                   [(i, i) for i in range(12)])
+    hot = 3
+    for _ in range(5):
+        db.execute("SELECT w FROM t WHERE k = ?", (hot,))
+    db.execute("UPDATE t SET w = 0 WHERE k = ?", (hot,))
+    info = json.loads(db.execute("SHOW STATS t").value)
+    assert info["shards"] == 4 and info["partition_by"] == "k"
+    per = info["per_shard"]
+    assert sum(p["live_rows"] for p in per) == db.live_rows("t")
+    assert sum(p["inserted_rows"] for p in per) == 12
+    sid = SH.shard_of_host(hot, 4)
+    cold = [p["statements"] for p in per if p["shard"] != sid]
+    assert per[sid]["statements"] > max(cold)
+    assert per[sid]["writes"] >= 1
+    # EXPLAIN t is the same report
+    info2 = json.loads(db.execute("EXPLAIN t").value)
+    assert info2["shards"] == 4 and "per_shard" in info2
+    # monolithic tables answer too (single shard entry)
+    db.execute("CREATE TABLE u (k INT) CAPACITY 16")
+    db.execute("INSERT INTO u (k) VALUES (1)")
+    m = json.loads(db.execute("SHOW STATS u").value)
+    assert m["shards"] == 1 and m["per_shard"][0]["live_rows"] == 1
+    assert m["per_shard"][0]["inserted_rows"] == 1
+
+
+def test_show_stats_grammar():
+    assert S.parse("SHOW STATS t") == S.ShowStats("t")
+    assert S.parse("EXPLAIN t") == S.ShowStats("t")
+    st = S.parse("ALTER TABLE t RESHARD 8")
+    assert st == S.AlterReshard("t", 8)
+    with pytest.raises(S.SQLError):
+        S.parse("ALTER TABLE t RESHARD 0")
+    with pytest.raises(S.SQLError):
+        S.parse("SHOW t")
+
+
+def _snapshot(db):
+    rows = db.execute("SELECT k, w FROM t").rows
+    return sorted((r["k"], r["w"]) for r in rows)
+
+
+def test_reshard_roundtrip_exact():
+    """RESHARD n must round-trip contents exactly — rows, counts, TTL
+    stamps — across grow / shrink / to-monolithic transitions."""
+    rng = np.random.default_rng(5)
+    db = SQLCached()
+    db.execute("CREATE TABLE t (k INT, w INT) CAPACITY 128 "
+               "MAX_SELECT 128 SHARDS 4 PARTITION BY k")
+    rows = [(int(rng.integers(0, 50)), int(rng.integers(0, 100)))
+            for _ in range(40)]
+    db.executemany("INSERT INTO t (k, w) VALUES (?, ?) TTL 6", rows)
+    db.execute("DELETE FROM t WHERE k = ?", (rows[0][0],))
+    before = _snapshot(db)
+    live = db.live_rows("t")
+    for n in (8, 2, 1, 4):
+        res = db.execute(f"ALTER TABLE t RESHARD {n}")
+        assert res.value == n and res.count == live
+        assert db.schema("t").shards == n
+        assert db.live_rows("t") == live
+        assert _snapshot(db) == before
+        # pruned routing works under the new shard map
+        k = before[0][0]
+        got = db.execute("SELECT k, w FROM t WHERE k = ?", (k,))
+        assert sorted((r["k"], r["w"]) for r in got.rows) == [
+            p for p in before if p[0] == k]
+    # TTL stamps rode along verbatim: aging expires everything at the
+    # same horizon it would have pre-reshard
+    db.advance_clock(10, "t")
+    assert db.execute("EXPIRE t").count == live
+    assert db.live_rows("t") == 0
+
+
+def test_reshard_parity_with_untouched_twin():
+    """Randomized: a db that reshards mid-stream stays statement-for-
+    statement identical to a twin that never reshards."""
+    rng = np.random.default_rng(9)
+    dbs = []
+    for _ in range(2):
+        db = SQLCached()
+        db.execute("CREATE TABLE t (k INT, w INT) CAPACITY 128 "
+                   "MAX_SELECT 128 SHARDS 2 PARTITION BY k")
+        dbs.append(db)
+    plan = [2, 4, 8, 1, 4]
+    for step, n in enumerate(plan):
+        rows = [(int(rng.integers(0, 30)), int(rng.integers(0, 99)))
+                for _ in range(6)]
+        for db in dbs:
+            db.executemany("INSERT INTO t (k, w) VALUES (?, ?)", rows)
+        k = int(rng.integers(0, 30))
+        assert (dbs[0].execute("UPDATE t SET w = w + 1 WHERE k = ?",
+                               (k,)).count
+                == dbs[1].execute("UPDATE t SET w = w + 1 WHERE k = ?",
+                                  (k,)).count)
+        k = int(rng.integers(0, 30))
+        assert (dbs[0].execute("DELETE FROM t WHERE k = ?", (k,)).count
+                == dbs[1].execute("DELETE FROM t WHERE k = ?",
+                                  (k,)).count)
+        dbs[0].execute(f"ALTER TABLE t RESHARD {n}")
+        assert _snapshot(dbs[0]) == _snapshot(dbs[1])
+        assert dbs[0].live_rows("t") == dbs[1].live_rows("t")
+
+
+def test_reshard_refuses_overflowing_skew():
+    db = SQLCached()
+    db.execute("CREATE TABLE t (k INT, w INT) CAPACITY 8 SHARDS 2 "
+               "PARTITION BY k")
+    # 6 rows, one distinct key each, all hashing to ONE shard of 4:
+    # a 4-shard layout holds only ceil(8/4)=2 per shard -> refused
+    keys = [k for k in range(200) if SH.shard_of_host(k, 4) == 1][:6]
+    db.executemany("INSERT INTO t (k, w) VALUES (?, ?)",
+                   [(k, 0) for k in keys])
+    before = _snapshot(db)
+    with pytest.raises(S.SQLError, match="RESHARD 4"):
+        db.execute("ALTER TABLE t RESHARD 4")
+    # refused reshard must leave the table untouched (never donated)
+    assert db.schema("t").shards == 2
+    assert _snapshot(db) == before
+
+
+def test_sharded_delete_returning_engine():
+    """shards.delete_returning reports exactly the flipped GLOBAL row
+    ids, pruned and fan-out."""
+    sch = make_schema("t", [("k", "INT"), ("w", "INT")],
+                      [("pv", (2,), jnp.float32)],
+                      capacity=64, max_select=64, shards=4,
+                      partition_by="k")
+    stt = SH.init_state(sch)
+    stt, slots, _ = SH.insert(
+        sch, stt, {"k": jnp.arange(16, dtype=jnp.int32),
+                   "w": jnp.asarray([i % 3 for i in range(16)],
+                                    jnp.int32)})
+    # pruned: one key
+    st2, n, ids, present = SH.delete_returning(
+        sch, stt, P.BinOp("=", P.Col("k"), P.Param(0)), (5,))
+    assert int(n) == 1 and int(np.sum(np.asarray(present))) == 1
+    gone = int(np.asarray(ids)[0])
+    assert gone == int(np.asarray(slots)[5])
+    # fan-out: w == 1 rows across shards; ids match the deleted set
+    st3, n3, ids3, pres3 = SH.delete_returning(
+        sch, stt, P.BinOp("=", P.Col("w"), P.Param(0)), (1,))
+    want = sorted(int(np.asarray(slots)[i]) for i in range(16)
+                  if i % 3 == 1)
+    got = sorted(np.asarray(ids3)[np.asarray(pres3)].tolist())
+    assert got == want and int(n3) == len(want)
+    # validity parity with the mask-only delete
+    st4, n4 = SH.delete(sch, stt, P.BinOp("=", P.Col("w"), P.Param(0)),
+                        (1,))
+    np.testing.assert_array_equal(np.asarray(st3["valid"]),
+                                  np.asarray(st4["valid"]))
+
+
+def test_sharded_delete_returning_feeds_page_table():
+    """Serving-integration: a sharded payload table's DELETE reports
+    global row ids that maintain a kvpool page table over the flat
+    (monolithic-layout) view — the sharded twin of the monolithic
+    serving path."""
+    from repro.core import kvpool as KV
+
+    db = SQLCached()
+    db.execute("CREATE TABLE kv (slot INT, seq_id INT, pos_block INT, "
+               "PAYLOAD blk TENSOR(4) F32) CAPACITY 32 MAX_SELECT 32 "
+               "SHARDS 4 PARTITION BY seq_id")
+    rows = []
+    for seq in (100, 200, 300):
+        for pb in range(3):
+            rows.append((seq // 100, seq, pb))
+    db.executemany("INSERT INTO kv (slot, seq_id, pos_block) "
+                   "VALUES (?, ?, ?)", rows)
+    fsch = SH.flat_schema(db.schema("kv"))
+    fstate = SH.flat_state(db.table_state("kv"))
+    pt = KV.page_table(fsch, fstate, max_slots=4, max_blocks=8)
+    res = db.execute("DELETE FROM kv WHERE seq_id = ?", (200,))
+    assert res.count == 3
+    ids = res.row_ids_device
+    assert ids is not None  # the returning epilogue ran
+    fstate = SH.flat_state(db.table_state("kv"))
+    pt = KV.page_table_delete(fsch, fstate, pt, ids, res.present_device,
+                              max_slots=4, max_blocks=8)
+    np.testing.assert_array_equal(
+        np.asarray(pt),
+        np.asarray(KV.page_table(fsch, fstate, max_slots=4,
+                                 max_blocks=8)))
+
+
+def test_scheduler_lane_locks_overlap_and_agree():
+    """Randomized same-table interleavings dispatched with
+    concurrency+lanes vs serial dispatch must produce identical
+    per-statement counts and final contents (satellite: scheduler-level
+    parity harness)."""
+    rng = np.random.default_rng(21)
+    texts = {
+        "upd": ["UPDATE t SET w = w + %d WHERE k = ?" % (v + 1)
+                for v in range(4)],
+        "del": ["DELETE FROM t WHERE k = ? AND w >= %d" % (-v - 1)
+                for v in range(4)],
+        "ins": ["INSERT INTO t (k, w) VALUES (?, %d)" % v
+                for v in range(4)],
+        "sel": ["SELECT w FROM t WHERE k = ? AND w >= %d" % (-v - 1)
+                for v in range(4)],
+    }
+    keys = {v: [k for k in range(300)
+                if SH.shard_of_host(k, 4) == v][:20] for v in range(4)}
+    stream = []
+    for _ in range(120):
+        v = int(rng.integers(0, 4))
+        kind = ("upd", "del", "ins", "sel")[int(rng.integers(0, 4))]
+        k = keys[v][int(rng.integers(0, 20))]
+        stream.append((texts[kind][v], (k,)))
+
+    def run_once(concurrency, lane_locks):
+        db = SQLCached()
+        db.execute("CREATE TABLE t (k INT, w INT) CAPACITY 256 "
+                   "MAX_SELECT 64 SHARDS 4 PARTITION BY k")
+        db.executemany("INSERT INTO t (k, w) VALUES (?, 0)",
+                       [(k,) for v in range(4) for k in keys[v]])
+
+        async def main():
+            sched = BatchScheduler(db, batching=True,
+                                   concurrency=concurrency,
+                                   lane_locks=lane_locks)
+            await sched.start()
+            futs = [sched.submit(sql, params) for sql, params in stream]
+            res = await asyncio.gather(*futs)
+            await sched.stop()
+            return sched, [r.count for r in res]
+
+        sched, counts = asyncio.run(main())
+        rows = db.execute("SELECT k, w FROM t").rows
+        return sched, counts, sorted((r["k"], r["w"]) for r in rows)
+
+    sched_l, counts_l, rows_l = run_once(True, True)
+    _, counts_s, rows_s = run_once(False, False)
+    assert counts_l == counts_s
+    assert rows_l == rows_s
+    assert sched_l.stats["lane_dispatches"] > 0
+
+
+def test_lane_exec_off_matches_lanes():
+    """The PR-4 execution regime (lane_exec=False, every sharded
+    statement stacked) agrees with lane execution bit-for-bit."""
+    rng = np.random.default_rng(31)
+    dbs = [SQLCached(lane_exec=on) for on in (True, False)]
+    for db in dbs:
+        db.execute("CREATE TABLE t (k INT, w INT) CAPACITY 64 SHARDS 4 "
+                   "PARTITION BY k")
+    for _ in range(10):
+        rows = [(int(rng.integers(0, 20)), int(rng.integers(0, 9)))
+                for _ in range(4)]
+        outs = [db.executemany("INSERT INTO t (k, w) VALUES (?, ?)",
+                               rows) for db in dbs]
+        assert outs[0].count == outs[1].count
+        k = int(rng.integers(0, 20))
+        assert (dbs[0].execute("UPDATE t SET w = w * 2 WHERE k = ?",
+                               (k,)).count
+                == dbs[1].execute("UPDATE t SET w = w * 2 WHERE k = ?",
+                                  (k,)).count)
+        q = [(int(rng.integers(0, 20)),) for _ in range(3)]
+        b0 = dbs[0].executemany("DELETE FROM t WHERE k = ?", q,
+                                per_statement=True)
+        b1 = dbs[1].executemany("DELETE FROM t WHERE k = ?", q,
+                                per_statement=True)
+        assert [r.count for r in b0] == [r.count for r in b1]
+    assert dbs[0].live_rows("t") == dbs[1].live_rows("t")
+
+
+def test_lane_lock_matches_dispatch_for_wide_inserts():
+    """A single-shard INSERT group whose padded batch exceeds one
+    shard's capacity executes STACKED (all lanes) — the scheduler must
+    take whole-table locks for it, not one lane lock, or a commuting
+    lane group could race the donating all-lane dispatch."""
+    db = SQLCached()
+    db.execute("CREATE TABLE t (k INT, w INT) CAPACITY 64 SHARDS 4 "
+               "PARTITION BY k")  # shard capacity = 16
+    keys = [k for k in range(500) if SH.shard_of_host(k, 4) == 0]
+    ins = db.shape_key("INSERT INTO t (k, w) VALUES (?, ?)")
+    # 20 rows -> bucket 32 > 16: daemon will dispatch stacked
+    wide = [(k, 0) for k in keys[:20]]
+    assert db.group_lane(ins, wide) is None
+    assert db.group_shard_ids(ins, wide) == frozenset({0})
+    # narrow batch on one shard: lane dispatch, lane lock
+    assert db.group_lane(ins, wide[:4]) == 0
+    # lane_exec=False daemon never lane-routes, whatever the scheduler
+    db2 = SQLCached(lane_exec=False)
+    db2.execute("CREATE TABLE t (k INT, w INT) CAPACITY 64 SHARDS 4 "
+                "PARTITION BY k")
+    assert db2.group_lane(db2.shape_key("SELECT w FROM t WHERE k = ?"),
+                          [(0,)]) is None
+    # and the wide group still executes correctly end-to-end
+    async def main():
+        sched = BatchScheduler(db, batching=True, concurrency=True,
+                               max_batch=32)
+        await sched.start()
+        futs = [sched.submit("INSERT INTO t (k, w) VALUES (?, ?)", p)
+                for p in wide]
+        res = await asyncio.gather(*futs)
+        await sched.stop()
+        return res
+
+    res = _run(main())
+    assert all(r.count == 1 for r in res)
+    assert db.live_rows("t") >= 16  # shard 0 full (LRU within the lane)
+
+
+def test_reshard_replays_deferred_lane_expiry():
+    """A lane that missed an op-interval expiry still owes a replay;
+    RESHARD (and table_state snapshots) must apply it — resharded
+    contents may not contain rows the lockstep engine already
+    dropped."""
+    db = SQLCached()
+    db.execute("CREATE TABLE t (k INT, w INT) CAPACITY 64 MAX_SELECT 64 "
+               "TTL 3 SHARDS 2 PARTITION BY k OPS_INTERVAL 4")
+    # keys on both shards (host-checked)
+    ka = next(k for k in range(50) if SH.shard_of_host(k, 2) == 0)
+    kb = next(k for k in range(50) if SH.shard_of_host(k, 2) == 1)
+    db.executemany("INSERT INTO t (k, w) VALUES (?, ?)",
+                   [(ka, 1), (kb, 2)])
+    db.advance_clock(10, "t")  # everything aged far past TTL
+    # drive pruned statements on shard A only until the boundary fires:
+    # lane A expires in-dispatch, lane B records a deferred replay
+    t = db.tables["t"]
+    for _ in range(8):
+        db.execute("SELECT w FROM t WHERE k = ?", (ka,))
+        if any(d is not None for d in t.expire_due):
+            break
+    assert any(d is not None for d in t.expire_due)
+    # every TTL observable must already agree with the lockstep engine:
+    # row counts, the skew report, and the serving-plane snapshot
+    assert db.live_rows("t") == 0
+    info = json.loads(db.execute("SHOW STATS t").value)
+    assert sum(p["live_rows"] for p in info["per_shard"]) == 0
+    snap = db.table_state("t")
+    assert int(np.sum(np.asarray(snap["valid"]))) == 0
+    # and RESHARD must not resurrect it
+    db.execute("ALTER TABLE t RESHARD 4")
+    assert db.live_rows("t") == 0
+    assert db.execute("SELECT COUNT(*) FROM t").value == 0
