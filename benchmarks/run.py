@@ -2,12 +2,13 @@
 
 ``python -m benchmarks.run [--json] [--quick] [--check]``
 
---json   run fig1 + table2 + protocol + index + shard + lane in JSON
-         mode and write ``BENCH_fig1.json`` / ``BENCH_table2.json`` /
-         ``BENCH_protocol.json`` / ``BENCH_index.json`` /
-         ``BENCH_shard.json`` / ``BENCH_lane.json`` to the repo root
-         (ops/s resp. stmts/s, p50/p99 µs); these files are checked in
-         so every PR's numbers are comparable.
+--json   run fig1 + table2 + protocol + index + shard + lane + cluster
+         in JSON mode and write ``BENCH_fig1.json`` / ``BENCH_table2.
+         json`` / ``BENCH_protocol.json`` / ``BENCH_index.json`` /
+         ``BENCH_shard.json`` / ``BENCH_lane.json`` / ``BENCH_cluster.
+         json`` to the repo root (ops/s resp. stmts/s, p50/p99 µs);
+         these files are checked in so every PR's numbers are
+         comparable.
 --quick  tier-1-friendly smoke sizes — finishes in seconds on CPU (the
          protocol bench keeps its 8-connection shape, fewer statements;
          the index bench keeps the 65536-row point --check compares).
@@ -55,6 +56,10 @@ CHECK_METRICS = [
      lambda d: d["write_speedup_4shard"], "higher"),
     ("BENCH_lane.json", "lane_speedup_vs_single_lock",
      lambda d: d["lane_speedup_vs_single_lock"], "higher"),
+    # clamped at 1.0: post-kill beating healthy is fine, only
+    # degradation (promoted-replica reads slower than baseline) gates
+    ("BENCH_cluster.json", "failover_p99_ratio",
+     lambda d: max(1.0, d["failover_p99_ratio"]), "lower"),
 ]
 
 REGRESS_FACTOR = 2.0
@@ -106,8 +111,8 @@ def _evaluate(fresh) -> list:
 def check() -> int:
     """Compare fresh quick-run ratio metrics against the checked-in BENCH
     files; return the number of >2x regressions after one retry."""
-    from benchmarks import (fig1_kv_read, index_bench, lane_bench,
-                            protocol_bench, shard_bench)
+    from benchmarks import (cluster_bench, fig1_kv_read, index_bench,
+                            lane_bench, protocol_bench, shard_bench)
 
     runners = {
         "BENCH_fig1.json": lambda: fig1_kv_read.run_json(quick=True),
@@ -120,6 +125,7 @@ def check() -> int:
             m=shard_bench.N_STMTS_QUICK, reps=60),
         "BENCH_lane.json": lambda: lane_bench.run(
             rounds=lane_bench.N_ROUNDS_QUICK),
+        "BENCH_cluster.json": lambda: cluster_bench.run(quick=True),
     }
     fresh = {name: fn() for name, fn in runners.items()}
     failing = _evaluate(fresh)
@@ -148,8 +154,9 @@ def main() -> None:
         return
 
     if as_json:
-        from benchmarks import (fig1_kv_read, index_bench, lane_bench,
-                                protocol_bench, shard_bench, table2_expiry)
+        from benchmarks import (cluster_bench, fig1_kv_read, index_bench,
+                                lane_bench, protocol_bench, shard_bench,
+                                table2_expiry)
         args = ["--json"] + (["--quick"] if quick else [])
         print("=" * 72)
         print("== Paper Fig. 1 (JSON) -> BENCH_fig1.json")
@@ -169,6 +176,9 @@ def main() -> None:
         print("=" * 72)
         print("== Execution-lane scheduler (JSON) -> BENCH_lane.json")
         lane_bench.main(args)
+        print("=" * 72)
+        print("== Cluster kill-9 failover (JSON) -> BENCH_cluster.json")
+        cluster_bench.main(args)
         return
 
     print("=" * 72)
@@ -206,6 +216,11 @@ def main() -> None:
     print("== Execution lanes: lane scheduler vs single-lock")
     from benchmarks import lane_bench
     lane_bench.main(["--quick"] if quick else [])
+
+    print("=" * 72)
+    print("== Cluster tier: kill -9 a replica mid-benchmark")
+    from benchmarks import cluster_bench
+    cluster_bench.main(["--quick"] if quick else [])
 
     if quick:
         return

@@ -10,7 +10,10 @@
 #    default) and =0 (strictly serial group dispatch) — so a lane/wave
 #    bug cannot hide behind whichever regime the main suite happened to
 #    exercise;
-# 3. re-runs the quick benches IN MEMORY and fails if any curated
+# 3. re-runs the chaos/cluster suite (kill -9 failover, scripted
+#    connection faults) under BOTH regimes too — failover paths must
+#    hold whether statements dispatch in waves or serially;
+# 4. re-runs the quick benches IN MEMORY and fails if any curated
 #    BENCH_*.json ratio metric regressed more than 2x vs the checked-in
 #    values (see benchmarks/run.py CHECK_METRICS — ratios, not absolute
 #    latencies, so machine speed cancels to first order). A bench file
@@ -31,6 +34,14 @@ REPRO_SCHED_CONCURRENCY=1 python -m pytest -x -q $SCHED_SUITE
 
 echo "== scheduler suite: concurrency OFF (serial dispatch)"
 REPRO_SCHED_CONCURRENCY=0 python -m pytest -x -q $SCHED_SUITE
+
+CHAOS_SUITE="tests/test_cluster_chaos.py tests/test_protocol_failures.py"
+
+echo "== chaos suite: concurrency ON (kill -9 + fault injection)"
+REPRO_SCHED_CONCURRENCY=1 python -m pytest -x -q $CHAOS_SUITE
+
+echo "== chaos suite: concurrency OFF"
+REPRO_SCHED_CONCURRENCY=0 python -m pytest -x -q $CHAOS_SUITE
 
 echo "== perf gate: benchmarks/run.py --quick --check"
 python -m benchmarks.run --quick --check

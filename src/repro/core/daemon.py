@@ -111,6 +111,17 @@ verbatim, so contents round-trip exactly. ``RESHARD 1`` converts back
 to a monolithic table, resharding a monolithic table partitions it.
 Both statements are admin barriers at the scheduler.
 
+Cluster-facing admin statements (all admin barriers too):
+``CHECKPOINT t TO 'dir'`` snapshots the table atomically via
+``checkpoint/store.py`` (interner string table in the meta, so TEXT ids
+survive a cross-process move); ``RESTORE t FROM 'dir'`` replaces the
+table's contents from such a snapshot, re-interning TEXT and re-splitting
+rows through the RESHARD machinery so partition hashes stay exact;
+``ALTER TABLE t RETAIN SLOTS i,j OF m`` masks dead every row whose
+partition value hashes outside the given cluster slots — the handover
+primitive after a ring change (core/cluster.py). ``REPLICAS r`` on
+CREATE is stored and reported (SHOW STATS) but enforced client-side.
+
 The daemon is also the serving plane's metadata engine: `table_state` /
 `swap_table_state` hand the device arrays to jitted serving steps with
 zero copies.
@@ -835,6 +846,12 @@ class SQLCached:
             return self._do_show_stats(stmt.table)
         if isinstance(stmt, S.AlterReshard):
             return self._do_reshard(stmt)
+        if isinstance(stmt, S.AlterRetain):
+            return self._do_retain(stmt)
+        if isinstance(stmt, S.Checkpoint):
+            return self._do_checkpoint(stmt)
+        if isinstance(stmt, S.Restore):
+            return self._do_restore(stmt)
         if isinstance(stmt, S.Explain):
             return self._do_explain(stmt.inner)
         raise S.SQLError(f"unhandled statement {stmt!r}")
@@ -1047,6 +1064,7 @@ class SQLCached:
             indexes=stmt.indexes,
             shards=stmt.shards,
             partition_by=stmt.partition_by,
+            replicas=stmt.replicas,
         )
         self.tables[stmt.table] = self._make_table(schema)
         return Result()
@@ -1135,6 +1153,7 @@ class SQLCached:
                 "writes": writes[i], "inserted_rows": rows_in[i]}
                for i in range(n)]
         info = {"table": name, "shards": n,
+                "replicas": t.schema.replicas,
                 "partition_by": t.schema.partition_by,
                 "capacity": t.schema.capacity,
                 "shard_capacity": (SH.shard_capacity(t.schema) if n > 1
@@ -1151,8 +1170,12 @@ class SQLCached:
         ``n = 1`` converts back to a monolithic table; resharding a
         monolithic table partitions it. Refused (table untouched — the
         old state is never donated) when skew would overflow a new
-        shard's capacity. Admin barrier at the scheduler; the skew
-        counters reset with the new shard map."""
+        shard's capacity. Admin barrier at the scheduler. The skew
+        counters (``statements``/``writes``/``inserted_rows``) CARRY
+        through the re-split: per-shard attribution under the old map is
+        meaningless under the new one, so each total is re-spread evenly
+        across the new lanes (remainder to the low shards) — ``SHOW
+        STATS`` totals are invariant across a RESHARD."""
         t = self._table(stmt.table)
         old_schema = t.schema
         new_n = stmt.shards
@@ -1192,10 +1215,155 @@ class SQLCached:
             t.schema = new_schema
             t.lane_ticks = [g0] * new_n
             t.expire_due = [None] * new_n
-            t.stmt_routed = np.zeros(new_n, np.int64)
-            t.writes_routed = np.zeros(new_n, np.int64)
-            t.rows_in = np.zeros(new_n, np.int64)
+            t.stmt_routed = self._respread(t.stmt_routed, new_n)
+            t.writes_routed = self._respread(t.writes_routed, new_n)
+            t.rows_in = self._respread(t.rows_in, new_n)
         return Result(count=int(counts.sum()), value=new_n)
+
+    @staticmethod
+    def _respread(old: np.ndarray, new_n: int) -> np.ndarray:
+        """Carry a per-shard counter through a RESHARD: the old per-shard
+        attribution is tied to the old shard map, so the TOTAL is re-
+        attributed uniformly across the new lanes (remainder to the low
+        shards). Totals — what capacity planning reads — are exactly
+        preserved; only the (now meaningless) old split is smoothed."""
+        total = int(old.sum())
+        out = np.full(new_n, total // new_n, np.int64)
+        out[: total % new_n] += 1
+        return out
+
+    def _do_retain(self, stmt: S.AlterRetain) -> Result:
+        """ALTER TABLE t RETAIN SLOTS i,j,... OF m: keep only the rows
+        whose partition value hashes (``shards.shard_of`` at modulus m)
+        into the given cluster slots; everything else is masked dead in
+        one device pass. This is the cluster handover primitive: after a
+        ring change the shrunk holder RETAINs the slots it still owns —
+        the moved 1/N of the keyspace is dropped locally because a new
+        owner already restored it from a checkpoint. Validity-only (like
+        DELETE): indexes mask dead rows at probe time, TTL stamps are
+        untouched. Returns the number of rows dropped."""
+        t = self._table(stmt.table)
+        pby = t.schema.partition_by
+        if pby is None:
+            raise S.SQLError(
+                f"RETAIN: table {stmt.table!r} has no PARTITION BY column "
+                f"(cluster slot ownership needs a partition key)")
+        sch = (SH.shard_schema(t.schema) if t.lanes is not None
+               else t.schema)
+        key = ("retain", sch, pby, stmt.slots, stmt.of)
+
+        def build():
+            slots = jnp.asarray(stmt.slots, jnp.int32)
+
+            def run(st):
+                slot = SH.shard_of(st["cols"][pby].astype(jnp.int32),
+                                   stmt.of)
+                member = (slot[:, None] == slots[None, :]).any(axis=-1)
+                dropped = jnp.sum((st["valid"] & ~member).astype(jnp.int32))
+                return dict(st, valid=st["valid"] & member), dropped
+
+            return jax.jit(run, donate_argnums=0)
+
+        fn = self._executor(key, build)
+        if t.lanes is None:
+            t.state, d = fn(t.state)
+            return Result(count=int(d), value=len(stmt.slots))
+        total = 0
+        for i in range(t.schema.shards):
+            t.lanes[i], d = fn(t.lanes[i])
+            total += int(d)
+        return Result(count=total, value=len(stmt.slots))
+
+    def _do_checkpoint(self, stmt: S.Checkpoint) -> Result:
+        """CHECKPOINT t TO 'dir': atomic on-disk snapshot of the table via
+        ``checkpoint/store.py`` (step 0; ``step_0.tmp/`` -> rename, one
+        .npy per leaf). Sharded tables save the caught-up STACKED layout
+        so the snapshot is lockstep-consistent. TEXT columns hold ids
+        from THIS daemon's interner, so the interner's string table rides
+        along in the meta — RESTORE on any daemon re-interns and remaps.
+        Returns live rows saved; ``value`` is the directory."""
+        from repro.checkpoint import store as CK
+
+        t = self._table(stmt.table)
+        if t.lanes is None:
+            state = t.state
+            live = int(T.live_count(state))
+        else:
+            state = SH.stack_lanes(self._caught_up_lanes(t))
+            live = int(np.sum(np.asarray(state["valid"])))
+        meta = {
+            "table": stmt.table,
+            "shards": t.schema.shards,
+            "capacity": t.schema.capacity,
+            "live_rows": live,
+            "strings": list(self.interner._rev),
+        }
+        CK.save(stmt.path, 0, state, meta=meta)
+        return Result(count=live, value=stmt.path)
+
+    def _do_restore(self, stmt: S.Restore) -> Result:
+        """RESTORE t FROM 'dir': replace the table's contents with a
+        CHECKPOINT snapshot — the replica-bootstrap path. The table must
+        already exist with a matching schema (the cluster client replays
+        the CREATE first). Cross-process correctness: saved TEXT ids are
+        the SOURCE daemon's interner ids, so each saved string is
+        re-interned HERE and a lut rewrites every TEXT column; because
+        that moves partition hashes, rows are then re-split through the
+        RESHARD machinery (same shard count — placement + index rebuild
+        only), so shard pruning and index probes stay exact. Refused on
+        overflow skew, like RESHARD; the old contents survive a refusal
+        only if the shapes matched (leaf shapes are validated before
+        anything is installed)."""
+        from repro.checkpoint import store as CK
+
+        t = self._table(stmt.table)
+        like = (t.state if t.lanes is None
+                else SH.stack_lanes(list(t.lanes)))
+        try:
+            state, info = CK.restore(stmt.path, 0, like)
+        except FileNotFoundError as e:
+            raise S.SQLError(f"RESTORE: no checkpoint at {stmt.path!r} "
+                             f"({e})") from e
+        except (KeyError, ValueError) as e:
+            raise S.SQLError(
+                f"RESTORE: checkpoint at {stmt.path!r} does not match "
+                f"table {stmt.table!r}'s schema ({e})") from e
+        saved_meta = info.get("meta", {})
+        strings = saved_meta.get("strings") or [""]
+        text_cols = t.schema.text_columns()
+        if text_cols:
+            lut = np.zeros(len(strings), np.int32)
+            for i, s in enumerate(strings):
+                if i:  # id 0 is the reserved empty/NULL id on every daemon
+                    lut[i] = self.interner.intern(s)
+            cols = dict(state["cols"])
+            for c in text_cols:
+                ids = np.asarray(state["cols"][c])
+                cols[c] = jnp.asarray(lut[np.clip(ids, 0, len(lut) - 1)])
+            state = dict(state, cols=cols)
+        lanes = ([state] if t.lanes is None
+                 else SH.split_lanes(t.schema, state))
+        key = ("reshard", t.schema, t.schema)
+        fn = self._executor(
+            key, lambda: jax.jit(
+                lambda ls: SH.reshard(t.schema, t.schema, ls)))
+        new_lanes, counts = fn(tuple(lanes))
+        counts = np.asarray(counts)  # admin op: the sync is fine
+        cap = (SH.shard_capacity(t.schema) if t.schema.shards > 1
+               else t.schema.capacity)
+        if int(counts.max()) > cap:
+            raise S.SQLError(
+                f"RESTORE: {int(counts.max())} restored rows hash to one "
+                f"shard but a shard holds only {cap}")
+        with t.lock:
+            g0 = t.ticks_total
+            if t.lanes is None:
+                t.state = new_lanes[0]
+            else:
+                t.lanes = list(new_lanes)
+            t.lane_ticks = [g0] * t.schema.shards
+            t.expire_due = [None] * t.schema.shards
+        return Result(count=int(counts.sum()), value=stmt.path)
 
     def _do_explain(self, stmt: S.Statement) -> Result:
         """EXPLAIN <stmt>: report (don't run) the inner statement's plan

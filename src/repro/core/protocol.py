@@ -85,6 +85,48 @@ that provably routes to one shard locks and executes only that lane,
 so same-table traffic on different shards no longer queues behind one
 dispatch — a hot table stops being a concurrency barrier.
 
+Cluster tier (core/cluster.py) — the same wire, N daemons:
+
+    EXEC CREATE TABLE pages (...) SHARDS 8 PARTITION BY site REPLICAS 2
+    GO                        -- REPLICAS r is stored by every daemon and
+                              --   reported by SHOW STATS; the MIRRORING
+                              --   is the cluster client's job: each
+                              --   write goes to the table's (or
+                              --   partition slot's) r ring-successor
+                              --   nodes, reads load-balance across them
+
+A :class:`~repro.core.cluster.ClusterClient` consistent-hash-rings
+tables (and ``PARTITION BY`` key slots, via ``shards.shard_of_host``)
+across daemons and keeps one tagged connection per node. Three protocol
+properties make failover safe, and they are guarantees of THIS layer:
+
+- **Replay-safe tags.** A client's tag counter is monotonic across
+  reconnects and every statement is fully self-contained (EXEC..ARG..GO
+  frame), so an in-flight statement can be resent verbatim — to the same
+  node after a reconnect or to a surviving replica — and answers match
+  up by tag, never by guesswork. Writes are mirrored to every replica
+  under the SAME tag, which is what makes the replay idempotent: the
+  survivor already executed tag t, and its response stands in for the
+  dead primary's.
+- **Acknowledged = answered.** A write counts as acknowledged only once
+  a COUNT/…/END (or ERR) block for its tag has been READ back — not
+  when the frame was written. The cluster client acks only after every
+  live replica of the statement's group has answered, so a SIGKILL of
+  any one node loses zero acknowledged writes.
+- **PING deadlines.** PING/PONG rides the same ordered stream, so a
+  PONG proves the node's event loop is draining its queue (not merely
+  that TCP connects). Health probes put a deadline on it
+  (``AsyncSQLCachedClient.ping(deadline=...)``); a node that misses the
+  deadline is treated exactly like a dead one — marked down, reads fail
+  over to a surviving replica, which is promoted.
+
+Connection loss is surfaced, never absorbed: the sync
+:class:`Pipeline.collect` turns a dead socket into one clean
+``ConnectionError`` per unanswered tag (no hangs, no silently empty
+results), the async FIFO matcher fails every pending future the same
+way, and both clients offer ``reconnect()`` plus configurable connect
+retries with capped exponential backoff + jitter (:func:`backoff_delays`).
+
 Tensor payloads never cross this socket — they live on the accelerator;
 the protocol is the management/metadata plane (DESIGN.md §2).
 """
@@ -92,9 +134,12 @@ from __future__ import annotations
 
 import asyncio
 import base64
+import itertools
 import json
+import random
 import socket
 import threading
+import time
 from collections import deque
 from typing import Any, Sequence
 
@@ -105,6 +150,17 @@ _MAX_LINE = 1 << 20
 # half-assembled statements (EXEC seen, GO not yet) allowed per connection —
 # bounds server memory against clients that stream EXEC#n without ever GOing
 _MAX_PENDING = 256
+
+
+def backoff_delays(retries: int, base: float = 0.05, cap: float = 2.0):
+    """``retries`` sleep durations of capped exponential backoff with
+    equal jitter: attempt k waits in [d/2, d] for d = min(cap, base*2^k).
+    The jitter de-synchronizes a fleet of clients hammering a recovering
+    node; the cap bounds worst-case failover latency. Shared by the
+    connect paths here and every retry loop in core/cluster.py."""
+    for attempt in range(retries):
+        d = min(cap, base * (2.0 ** attempt))
+        yield d / 2 + random.uniform(0, d / 2)
 
 
 def _encode_arg(v: Any) -> str:
@@ -516,15 +572,58 @@ class SQLCachedClient:
     without waiting and collects all responses at once."""
 
     def __init__(self, host: str = "127.0.0.1", port: int = 0,
-                 unix_path: str | None = None, timeout: float = 10.0):
-        if unix_path is not None:
-            self._sock = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
-            self._sock.connect(unix_path)
-        else:
-            self._sock = socket.create_connection((host, port), timeout=timeout)
-        self._sock.settimeout(timeout)
+                 unix_path: str | None = None, timeout: float = 10.0,
+                 connect_retries: int = 0, retry_base: float = 0.05,
+                 retry_cap: float = 2.0):
+        self._host, self._port = host, port
+        self._unix_path = unix_path
+        self._timeout = timeout
+        self._connect_retries = connect_retries
+        self._retry_base, self._retry_cap = retry_base, retry_cap
+        self._sock = self._connect()
         self._buf = b""
         self._tag = 0
+
+    def _connect(self) -> socket.socket:
+        """Dial with up to ``connect_retries`` retries (capped exponential
+        backoff + jitter) — a daemon that is still booting, or restarting
+        after a crash, stops being the caller's race to lose."""
+        last: Exception | None = None
+        for delay in itertools.chain(
+                [None], backoff_delays(self._connect_retries,
+                                       self._retry_base, self._retry_cap)):
+            if delay is not None:
+                time.sleep(delay)
+            try:
+                if self._unix_path is not None:
+                    s = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+                    s.settimeout(self._timeout)
+                    s.connect(self._unix_path)
+                else:
+                    s = socket.create_connection(
+                        (self._host, self._port), timeout=self._timeout)
+                s.settimeout(self._timeout)
+                return s
+            except OSError as e:
+                last = e
+        where = (self._unix_path if self._unix_path is not None
+                 else f"{self._host}:{self._port}")
+        raise ConnectionError(
+            f"could not connect to {where} after "
+            f"{self._connect_retries + 1} attempt(s): {last}")
+
+    def reconnect(self) -> None:
+        """Re-establish a dropped connection IN PLACE: fresh socket, empty
+        read buffer, same client object — callers keep their handle
+        instead of rebuilding. Responses in flight on the old socket are
+        gone (resend their statements); the tag counter keeps rising so
+        replayed statements stay distinguishable from new ones."""
+        try:
+            self._sock.close()
+        except OSError:
+            pass
+        self._sock = self._connect()
+        self._buf = b""
 
     def _next_tag(self) -> str:
         self._tag += 1
@@ -626,16 +725,29 @@ class Pipeline:
     def collect(self, return_exceptions: bool = False) -> list:
         """Flush, then read one response per queued statement, in order.
         Statement errors become RuntimeError entries (``return_exceptions=
-        True``) or raise after the whole pipeline has drained."""
+        True``) or raise after the whole pipeline has drained. A dying
+        server becomes one clean ``ConnectionError`` PER unanswered tag —
+        never a hang, never a silently short result list: the result list
+        always has exactly one entry per queued statement."""
         self.flush()
         out: list = []
-        errs: list[RuntimeError] = []
-        for tag in self._tags:
+        errs: list[Exception] = []
+        for i, tag in enumerate(self._tags):
             try:
                 out.append(self._c._read_result(tag))
             except RuntimeError as e:
                 out.append(e)
                 errs.append(e)
+            except OSError as e:  # incl. ConnectionError / socket.timeout
+                # dead socket: no later tag can be answered either — fail
+                # this one and every still-queued statement, each with its
+                # own entry, so positional matching survives the crash
+                for t2 in self._tags[i:]:
+                    ce = ConnectionError(
+                        f"connection lost before response for tag {t2}: {e}")
+                    out.append(ce)
+                    errs.append(ce)
+                break
         self._tags.clear()
         self.results = out
         if errs and not return_exceptions:
@@ -667,17 +779,71 @@ class AsyncSQLCachedClient:
         self._tag = 0
         self._fifo: deque[tuple[str | None, asyncio.Future]] = deque()
         self._reader_task = asyncio.create_task(self._read_loop())
+        # set by connect(); reconnect() needs it to re-dial
+        self._dial: tuple[str, int, str | None] | None = None
 
     @classmethod
     async def connect(cls, host: str = "127.0.0.1", port: int = 0,
-                      unix_path: str | None = None) -> "AsyncSQLCachedClient":
-        if unix_path is not None:
-            r, w = await asyncio.open_unix_connection(unix_path)
-        else:
-            r, w = await asyncio.open_connection(host, port)
-        return cls(r, w)
+                      unix_path: str | None = None,
+                      connect_retries: int = 0, retry_base: float = 0.05,
+                      retry_cap: float = 2.0) -> "AsyncSQLCachedClient":
+        """Dial with up to ``connect_retries`` retries (capped exponential
+        backoff + jitter, like the sync client's)."""
+        r, w = await cls._dial_streams(host, port, unix_path,
+                                       connect_retries, retry_base,
+                                       retry_cap)
+        c = cls(r, w)
+        c._dial = (host, port, unix_path)
+        return c
+
+    @staticmethod
+    async def _dial_streams(host, port, unix_path, connect_retries,
+                            retry_base, retry_cap):
+        last: Exception | None = None
+        for delay in itertools.chain(
+                [None],
+                backoff_delays(connect_retries, retry_base, retry_cap)):
+            if delay is not None:
+                await asyncio.sleep(delay)
+            try:
+                if unix_path is not None:
+                    return await asyncio.open_unix_connection(unix_path)
+                return await asyncio.open_connection(host, port)
+            except OSError as e:
+                last = e
+        where = unix_path if unix_path is not None else f"{host}:{port}"
+        raise ConnectionError(
+            f"could not connect to {where} after "
+            f"{connect_retries + 1} attempt(s): {last}")
+
+    async def reconnect(self, connect_retries: int = 0,
+                        retry_base: float = 0.05,
+                        retry_cap: float = 2.0) -> None:
+        """Re-establish a dropped connection IN PLACE (clients built via
+        :meth:`connect` only). Every still-pending future fails with
+        ``ConnectionError`` first — their responses died with the old
+        socket; resend those statements. The tag counter keeps rising so
+        replays stay distinguishable."""
+        if self._dial is None:
+            raise RuntimeError("reconnect() needs a client built by "
+                               "AsyncSQLCachedClient.connect()")
+        self._reader_task.cancel()
+        try:
+            await self._reader_task
+        except asyncio.CancelledError:
+            pass
+        self._w.close()
+        try:
+            await self._w.wait_closed()
+        except Exception:  # noqa: BLE001
+            pass
+        host, port, unix_path = self._dial
+        self._r, self._w = await self._dial_streams(
+            host, port, unix_path, connect_retries, retry_base, retry_cap)
+        self._reader_task = asyncio.create_task(self._read_loop())
 
     async def execute(self, sql: str, params: Sequence[Any] = ()) -> dict:
+        self._check_alive()
         self._tag += 1
         tag = str(self._tag)
         lines = [f"EXEC#{tag} {sql}"]
@@ -689,12 +855,31 @@ class AsyncSQLCachedClient:
         await self._w.drain()
         return await fut
 
-    async def ping(self) -> bool:
+    async def ping(self, deadline: float | None = None) -> bool:
+        """Liveness probe. With ``deadline`` (seconds) a late PONG raises
+        ``TimeoutError`` — the health-check contract: the PONG rides the
+        ordered response stream, so meeting the deadline proves the
+        node's event loop is draining its queue, not merely that TCP
+        still connects. A node that misses its deadline is treated by
+        the cluster tier exactly like a dead one."""
+        self._check_alive()
         fut = asyncio.get_running_loop().create_future()
         self._fifo.append((None, fut))
         self._w.write(b"PING\r\n")
         await self._w.drain()
-        return await fut
+        if deadline is None:
+            return await fut
+        return await asyncio.wait_for(fut, deadline)
+
+    def _check_alive(self) -> None:
+        """Fail fast once the read loop has exited: a half-closed peer
+        (FIN received, our write side still open) would otherwise accept
+        the statement bytes and leave the response future pending
+        forever. No await between this check and the fifo append, so the
+        read loop's drain-on-exit can never miss the new entry."""
+        if self._reader_task.done():
+            raise ConnectionError(
+                "connection lost (reader exited); reconnect() to resume")
 
     async def _read_loop(self) -> None:
         cur: dict | None = None
@@ -835,7 +1020,13 @@ def run_server_forever(host: str, port: int, unix_path: str | None = None,
     async def main():
         server = SQLCachedServer(db)
         addr = await server.start(host, port, unix_path)
-        print(f"sqlcached listening on {addr} unix={unix_path}")
+        # machine-readable + flushed: the cluster launcher and the chaos
+        # harness spawn daemons with --port 0 and parse the bound port
+        if addr is not None:
+            print(f"SQLCACHED READY {addr[0]} {addr[1]}", flush=True)
+        else:
+            print(f"SQLCACHED READY unix {unix_path}", flush=True)
+        print(f"sqlcached listening on {addr} unix={unix_path}", flush=True)
         await asyncio.Event().wait()
 
     asyncio.run(main())

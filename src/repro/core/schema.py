@@ -94,6 +94,10 @@ class TableSchema:
     # round trip so the table can be re-partitioned later).
     shards: int = 1
     partition_by: str | None = None
+    # Cluster replication factor (``REPLICAS r``): metadata only at this
+    # layer — the daemon stores and reports it, the cluster client
+    # (core/cluster.py) mirrors writes to r ring-successor nodes.
+    replicas: int = 1
 
     def __post_init__(self):
         names = [c.name for c in self.columns] + [p.name for p in self.payloads]
@@ -113,6 +117,8 @@ class TableSchema:
             raise ValueError(f"duplicate index in table {self.name!r}")
         if self.shards < 1:
             raise ValueError(f"table {self.name!r}: SHARDS must be >= 1")
+        if self.replicas < 1:
+            raise ValueError(f"table {self.name!r}: REPLICAS must be >= 1")
         if self.shards > 1:
             if self.partition_by is None:
                 object.__setattr__(self, "partition_by",
@@ -175,10 +181,11 @@ def make_schema(
     indexes: Sequence[str] = (),
     shards: int = 1,
     partition_by: str | None = None,
+    replicas: int = 1,
 ) -> TableSchema:
     cols = tuple(
         ColumnSpec(n, t, is_text=(t.upper() == "TEXT")) for n, t in columns
     )
     pls = tuple(PayloadSpec(n, tuple(s), d) for n, s, d in payloads)
     return TableSchema(name, cols, pls, capacity, max_select, expiry,
-                       tuple(indexes), shards, partition_by)
+                       tuple(indexes), shards, partition_by, replicas)

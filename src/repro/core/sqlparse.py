@@ -31,6 +31,29 @@ cache daemon and we exclude them):
                          n shards by one bulk device-side re-split (row
                          metadata/TTLs ride along verbatim; n = 1
                          converts back to a monolithic table)
+  ALTER TABLE t RETAIN SLOTS 0,3,5 OF 16
+                      -- cluster rebalance primitive: keep only the rows
+                         whose partition hash lands in the listed slots
+                         out of OF slots (same multiplicative hash as
+                         SHARDS/RESHARD — shards.shard_of); everything
+                         else is dropped in one device-side masked
+                         delete. COUNT reports the rows dropped.
+  CHECKPOINT t TO 'dir'
+                      -- atomic on-disk snapshot of t's device state
+                         (checkpoint/store.py format) + the interner
+                         strings its TEXT columns reference
+  RESTORE t FROM 'dir'
+                      -- replace t's contents from a snapshot; TEXT ids
+                         are re-interned into THIS daemon's interner
+                         (cross-process safe — replica bootstrap),
+                         sharded tables re-split rows by hash and hash
+                         indexes rebuild
+
+``REPLICAS r`` in the CREATE option tail declares the table's cluster
+replication factor (default 1). The daemon itself stores r as schema
+metadata only — mirroring writes to r ring-successor nodes is the
+cluster client's job (core/cluster.py); carrying it in the CREATE text
+lets every node of a replica group parse the SAME statement verbatim.
 
 ``INDEX(col)`` in a CREATE column list declares a device-resident hash
 index on an INT/TEXT column; equality WHEREs on it become O(1) bucket
@@ -118,6 +141,7 @@ class CreateTable:
     indexes: tuple[str, ...] = ()  # hash-indexed columns (INDEX(col))
     shards: int = 1  # hash-partition count (SHARDS n)
     partition_by: str | None = None  # PARTITION BY col (None = default)
+    replicas: int = 1  # cluster replication factor (REPLICAS r)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -194,6 +218,41 @@ class AlterReshard:
 
 
 @dataclasses.dataclass(frozen=True)
+class AlterRetain:
+    """ALTER TABLE t RETAIN SLOTS a,b,c OF m: keep only the rows whose
+    partition-column hash (``shards.shard_of(value, m)``) is one of the
+    listed slots; drop the rest (one device-side masked delete). The
+    cluster tier's rebalance primitive — after a replica bootstraps from
+    a full snapshot it RETAINs exactly the key slots the ring assigns
+    it, so a node join/leave moves only 1/N of the keyspace."""
+
+    table: str
+    slots: tuple[int, ...]
+    of: int
+
+
+@dataclasses.dataclass(frozen=True)
+class Checkpoint:
+    """CHECKPOINT t TO 'dir': atomic on-disk snapshot of the table's
+    device state plus the interner strings its TEXT columns reference
+    (checkpoint/store.py format) — the replica-bootstrap source."""
+
+    table: str
+    path: str
+
+
+@dataclasses.dataclass(frozen=True)
+class Restore:
+    """RESTORE t FROM 'dir': replace the table's contents from a
+    CHECKPOINT snapshot. TEXT ids re-intern into this daemon's interner,
+    sharded tables re-split rows by hash, hash indexes rebuild — safe
+    across processes (replica bootstrap on a different daemon)."""
+
+    table: str
+    path: str
+
+
+@dataclasses.dataclass(frozen=True)
 class Explain:
     """EXPLAIN <stmt>: report the inner statement's query plan."""
 
@@ -202,7 +261,8 @@ class Explain:
 
 Statement = (
     CreateTable | Insert | Select | Update | Delete | Expire | Flush
-    | Reindex | DropTable | ShowStats | AlterReshard | Explain
+    | Reindex | DropTable | ShowStats | AlterReshard | AlterRetain
+    | Checkpoint | Restore | Explain
 )
 
 
@@ -352,7 +412,8 @@ class _Parser:
         raise SQLError(f"unexpected token {val!r}")
 
     _STMT_KWS = ("CREATE", "INSERT", "SELECT", "UPDATE", "DELETE",
-                 "EXPIRE", "FLUSH", "REINDEX", "DROP", "SHOW", "ALTER")
+                 "EXPIRE", "FLUSH", "REINDEX", "DROP", "SHOW", "ALTER",
+                 "CHECKPOINT", "RESTORE")
 
     # -- statements
     def statement(self) -> Statement:
@@ -409,11 +470,12 @@ class _Parser:
                 break
         self.expect_op(")")
         opts = {"capacity": 4096, "max_select": 1024, "ttl": 0, "max_rows": 0,
-                "ops_interval": 0, "shards": 1}
+                "ops_interval": 0, "shards": 1, "replicas": 1}
         partition_by = None
         while True:
             kw = self.accept_kw("CAPACITY", "MAX_SELECT", "TTL", "MAX_ROWS",
-                                "OPS_INTERVAL", "SHARDS", "PARTITION")
+                                "OPS_INTERVAL", "SHARDS", "PARTITION",
+                                "REPLICAS")
             if not kw:
                 break
             if kw == "PARTITION":
@@ -426,6 +488,8 @@ class _Parser:
                 opts[kw.lower()] = self.integer()
         if opts["shards"] < 1:
             raise SQLError("SHARDS must be >= 1")
+        if opts["replicas"] < 1:
+            raise SQLError("REPLICAS must be >= 1")
         return CreateTable(table, tuple(columns), tuple(payloads),
                            indexes=tuple(indexes), partition_by=partition_by,
                            **opts)
@@ -528,14 +592,42 @@ class _Parser:
         self.expect_kw("STATS")
         return ShowStats(self.name())
 
-    def _stmt_alter(self) -> AlterReshard:
+    def _stmt_alter(self) -> "AlterReshard | AlterRetain":
         self.expect_kw("TABLE")
         table = self.name()
-        self.expect_kw("RESHARD")
-        n = self.integer()
-        if n < 1:
-            raise SQLError("RESHARD must be >= 1")
-        return AlterReshard(table, n)
+        kw = self.expect_kw("RESHARD", "RETAIN")
+        if kw == "RESHARD":
+            n = self.integer()
+            if n < 1:
+                raise SQLError("RESHARD must be >= 1")
+            return AlterReshard(table, n)
+        self.expect_kw("SLOTS")
+        slots = [self.integer()]
+        while self.accept_op(","):
+            slots.append(self.integer())
+        self.expect_kw("OF")
+        m = self.integer()
+        if m < 1:
+            raise SQLError("RETAIN ... OF m: m must be >= 1")
+        if any(s < 0 or s >= m for s in slots):
+            raise SQLError(f"RETAIN slot out of range [0, {m})")
+        return AlterRetain(table, tuple(sorted(set(slots))), m)
+
+    def _string(self) -> str:
+        kind, val = self.next()
+        if kind != "str":
+            raise SQLError(f"expected string literal, got {val!r}")
+        return val[1:-1].replace("''", "'")
+
+    def _stmt_checkpoint(self) -> Checkpoint:
+        table = self.name()
+        self.expect_kw("TO")
+        return Checkpoint(table, self._string())
+
+    def _stmt_restore(self) -> Restore:
+        table = self.name()
+        self.expect_kw("FROM")
+        return Restore(table, self._string())
 
 
 def parse(sql: str) -> Statement:

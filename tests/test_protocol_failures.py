@@ -1,0 +1,178 @@
+"""Failure-path coverage for the wire clients (satellite of the cluster
+PR): a server that dies mid-pipeline must surface a clean
+ConnectionError for every unanswered tag — never a hang, never a
+silently empty result — on both the sync Pipeline and the async FIFO
+matcher; plus connect-retry backoff and reconnect() on both clients."""
+import asyncio
+import socket
+import threading
+import time
+
+import pytest
+
+from repro.core.protocol import (AsyncSQLCachedClient, Pipeline,
+                                 SQLCachedClient, ThreadedServer,
+                                 backoff_delays)
+
+
+class ScriptedServer:
+    """Accepts one connection, answers exactly ``answer`` GO'd statements
+    (empty END blocks), then hard-closes — a deterministic mid-pipeline
+    death."""
+
+    def __init__(self, answer: int):
+        self.answer = answer
+        self._sock = socket.socket()
+        self._sock.bind(("127.0.0.1", 0))
+        self._sock.listen(1)
+        self.addr = self._sock.getsockname()
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+
+    def _run(self):
+        conn, _ = self._sock.accept()
+        buf = b""
+        answered = 0
+        while answered < self.answer:
+            data = conn.recv(65536)
+            if not data:
+                break
+            buf += data
+            while answered < self.answer and b"\r\n" in buf:
+                line, _, buf = buf.partition(b"\r\n")
+                if line.startswith(b"GO#"):
+                    tag = line[3:].decode()
+                    conn.sendall(f"COUNT#{tag} 1\r\nEND#{tag}\r\n".encode())
+                    answered += 1
+        # FIN, not RST: an RST could destroy the answered blocks still
+        # in flight in the client's receive buffer and make the split
+        # between answered/dead nondeterministic — the death itself is
+        # what's under test, not a TCP buffer race
+        conn.settimeout(0.5)
+        try:
+            conn.shutdown(socket.SHUT_WR)
+            while conn.recv(65536):
+                pass
+        except OSError:
+            pass
+        conn.close()
+        self._sock.close()
+
+
+def test_sync_pipeline_death_yields_error_per_unanswered_tag():
+    srv = ScriptedServer(answer=3)
+    c = SQLCachedClient(*srv.addr, timeout=10)
+    p = c.pipeline()
+    for i in range(8):
+        p.execute("INSERT INTO t (a) VALUES (?)", [i])
+    res = p.collect(return_exceptions=True)
+    assert len(res) == 8  # exactly one entry per queued statement
+    assert all(isinstance(r, dict) for r in res[:3])
+    for r in res[3:]:
+        assert isinstance(r, ConnectionError)
+        assert "connection lost before response for tag" in str(r)
+
+
+def test_sync_pipeline_death_raises_without_return_exceptions():
+    srv = ScriptedServer(answer=1)
+    c = SQLCachedClient(*srv.addr, timeout=10)
+    p = c.pipeline()
+    p.execute("SELECT * FROM t")
+    p.execute("SELECT * FROM t")
+    with pytest.raises(ConnectionError):
+        p.collect()
+
+
+def test_async_fifo_death_fails_every_pending_future():
+    srv = ScriptedServer(answer=2)
+
+    async def main():
+        c = await AsyncSQLCachedClient.connect(*srv.addr)
+        futs = [asyncio.ensure_future(c.execute("SELECT 1 FROM t"))
+                for _ in range(6)]
+        res = await asyncio.gather(*futs, return_exceptions=True)
+        assert len(res) == 6
+        ok = [r for r in res if isinstance(r, dict)]
+        dead = [r for r in res if isinstance(r, ConnectionError)]
+        assert len(ok) == 2 and len(dead) == 4
+        # the client stays failed-fast, not hung
+        with pytest.raises(ConnectionError):
+            await c.execute("SELECT 1 FROM t")
+
+    asyncio.run(asyncio.wait_for(main(), 30))
+
+
+def test_connect_retries_until_server_appears():
+    # grab a port, release it, connect with retries while a thread
+    # binds the real server after a delay
+    probe = socket.socket()
+    probe.bind(("127.0.0.1", 0))
+    addr = probe.getsockname()
+    probe.close()
+
+    def late_boot():
+        time.sleep(0.3)
+        late_boot.srv = ThreadedServer(host=addr[0], port=addr[1])
+
+    t = threading.Thread(target=late_boot)
+    t.start()
+    c = SQLCachedClient(*addr, connect_retries=8, retry_base=0.05,
+                        retry_cap=0.4)
+    assert c.ping()
+    c.close()
+    t.join()
+    late_boot.srv.stop()
+
+
+def test_connect_retries_exhausted_is_connectionerror():
+    probe = socket.socket()
+    probe.bind(("127.0.0.1", 0))
+    addr = probe.getsockname()
+    probe.close()
+    t0 = time.monotonic()
+    with pytest.raises(ConnectionError, match="after 3 attempt"):
+        SQLCachedClient(*addr, connect_retries=2, retry_base=0.02,
+                        retry_cap=0.05)
+    assert time.monotonic() - t0 < 5
+
+
+def test_sync_reconnect_resumes_with_fresh_tags():
+    with ThreadedServer() as s:
+        c = SQLCachedClient(*s.addr)
+        c.execute("CREATE TABLE r (a INT) CAPACITY 32")
+        c._sock.close()  # simulate a dead link
+        with pytest.raises(OSError):
+            c.execute("SELECT COUNT(*) FROM r")
+        c.reconnect()
+        assert c.execute("SELECT COUNT(*) FROM r")["value"] == 0
+        # tag counter kept rising across the reconnect: replay-safe
+        assert c.ping()
+        c.close()
+
+
+def test_async_reconnect_resumes():
+    with ThreadedServer() as s:
+
+        async def main():
+            c = await AsyncSQLCachedClient.connect(*s.addr)
+            await c.execute("CREATE TABLE r (a INT) CAPACITY 32")
+            c._w.close()  # kill the transport under the client
+            with pytest.raises((ConnectionError, OSError)):
+                await c.execute("SELECT COUNT(*) FROM r")
+            await c.reconnect()
+            r = await c.execute("SELECT COUNT(*) FROM r")
+            assert r["value"] == 0
+            assert await c.ping(deadline=5.0)
+            await c.close()
+
+        asyncio.run(asyncio.wait_for(main(), 30))
+
+
+def test_backoff_delays_shape():
+    delays = list(backoff_delays(6, base=0.1, cap=0.8))
+    assert len(delays) == 6
+    # equal-jitter: attempt k in [d/2, d], d = min(cap, base * 2^k)
+    for k, d in enumerate(delays):
+        full = min(0.8, 0.1 * 2 ** k)
+        assert full / 2 <= d <= full
+    assert max(delays) <= 0.8  # capped
