@@ -3,12 +3,15 @@
 ``python -m benchmarks.run [--json] [--quick] [--check]``
 
 --json   run fig1 + table2 + protocol + index + shard + lane + cluster
-         in JSON mode and write ``BENCH_fig1.json`` / ``BENCH_table2.
-         json`` / ``BENCH_protocol.json`` / ``BENCH_index.json`` /
-         ``BENCH_shard.json`` / ``BENCH_lane.json`` / ``BENCH_cluster.
-         json`` to the repo root (ops/s resp. stmts/s, p50/p99 µs);
-         these files are checked in so every PR's numbers are
-         comparable.
+         + mesh in JSON mode and write ``BENCH_fig1.json`` / ``BENCH_
+         table2.json`` / ``BENCH_protocol.json`` / ``BENCH_index.
+         json`` / ``BENCH_shard.json`` / ``BENCH_lane.json`` /
+         ``BENCH_cluster.json`` / ``BENCH_mesh.json`` to the repo root
+         (ops/s resp. stmts/s, p50/p99 µs); these files are checked in
+         so every PR's numbers are comparable. The mesh bench measures
+         in a SUBPROCESS with ``XLA_FLAGS=--xla_force_host_platform_
+         device_count=8`` — this process's jax device topology is
+         already fixed at one device by the time benches import.
 --quick  tier-1-friendly smoke sizes — finishes in seconds on CPU (the
          protocol bench keeps its 8-connection shape, fewer statements;
          the index bench keeps the 65536-row point --check compares).
@@ -60,6 +63,11 @@ CHECK_METRICS = [
     # degradation (promoted-replica reads slower than baseline) gates
     ("BENCH_cluster.json", "failover_p99_ratio",
      lambda d: max(1.0, d["failover_p99_ratio"]), "lower"),
+    # N-device fan-out p50 / pruned p50, same run on the mesh-placed
+    # table: gates the cross-device fan-out path against single-device
+    # dispatch without gating absolute latencies
+    ("BENCH_mesh.json", "fanout_over_pruned_p50",
+     lambda d: d["fanout_over_pruned_p50"], "lower"),
 ]
 
 REGRESS_FACTOR = 2.0
@@ -112,7 +120,8 @@ def check() -> int:
     """Compare fresh quick-run ratio metrics against the checked-in BENCH
     files; return the number of >2x regressions after one retry."""
     from benchmarks import (cluster_bench, fig1_kv_read, index_bench,
-                            lane_bench, protocol_bench, shard_bench)
+                            lane_bench, mesh_bench, protocol_bench,
+                            shard_bench)
 
     runners = {
         "BENCH_fig1.json": lambda: fig1_kv_read.run_json(quick=True),
@@ -126,6 +135,7 @@ def check() -> int:
         "BENCH_lane.json": lambda: lane_bench.run(
             rounds=lane_bench.N_ROUNDS_QUICK),
         "BENCH_cluster.json": lambda: cluster_bench.run(quick=True),
+        "BENCH_mesh.json": lambda: mesh_bench.run(quick=True),
     }
     fresh = {name: fn() for name, fn in runners.items()}
     failing = _evaluate(fresh)
@@ -155,8 +165,8 @@ def main() -> None:
 
     if as_json:
         from benchmarks import (cluster_bench, fig1_kv_read, index_bench,
-                                lane_bench, protocol_bench, shard_bench,
-                                table2_expiry)
+                                lane_bench, mesh_bench, protocol_bench,
+                                shard_bench, table2_expiry)
         args = ["--json"] + (["--quick"] if quick else [])
         print("=" * 72)
         print("== Paper Fig. 1 (JSON) -> BENCH_fig1.json")
@@ -179,6 +189,9 @@ def main() -> None:
         print("=" * 72)
         print("== Cluster kill-9 failover (JSON) -> BENCH_cluster.json")
         cluster_bench.main(args)
+        print("=" * 72)
+        print("== Mesh placement, 8 forced devices (JSON) -> BENCH_mesh.json")
+        mesh_bench.main(args)
         return
 
     print("=" * 72)
@@ -221,6 +234,11 @@ def main() -> None:
     print("== Cluster tier: kill -9 a replica mid-benchmark")
     from benchmarks import cluster_bench
     cluster_bench.main(["--quick"] if quick else [])
+
+    print("=" * 72)
+    print("== Mesh placement: 1 vs 8 forced host devices")
+    from benchmarks import mesh_bench
+    mesh_bench.main(["--quick"] if quick else [])
 
     if quick:
         return

@@ -13,11 +13,19 @@
 # 3. re-runs the chaos/cluster suite (kill -9 failover, scripted
 #    connection faults) under BOTH regimes too — failover paths must
 #    hold whether statements dispatch in waves or serially;
-# 4. re-runs the quick benches IN MEMORY and fails if any curated
+# 4. re-runs the tier-1 + scheduler suites and the mesh parity suite
+#    under XLA_FLAGS=--xla_force_host_platform_device_count=8 — the
+#    forced-multi-device regime. With >1 device every sharded table
+#    places one lane per device (core/daemon.py mesh placement), so the
+#    WHOLE suite exercises the shard_map execution path that a
+#    single-device dev box would silently skip;
+# 5. re-runs the quick benches IN MEMORY and fails if any curated
 #    BENCH_*.json ratio metric regressed more than 2x vs the checked-in
 #    values (see benchmarks/run.py CHECK_METRICS — ratios, not absolute
 #    latencies, so machine speed cancels to first order). A bench file
-#    that does not exist yet only warns (bootstrap).
+#    that does not exist yet only warns (bootstrap). BENCH_mesh.json's
+#    gated metric is produced by a subprocess that forces 8 host
+#    devices itself — no XLA_FLAGS needed here.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -42,6 +50,15 @@ REPRO_SCHED_CONCURRENCY=1 python -m pytest -x -q $CHAOS_SUITE
 
 echo "== chaos suite: concurrency OFF"
 REPRO_SCHED_CONCURRENCY=0 python -m pytest -x -q $CHAOS_SUITE
+
+MESH_DEVICES="--xla_force_host_platform_device_count=8"
+
+echo "== mesh regime: tier-1 under 8 forced host devices"
+XLA_FLAGS="$MESH_DEVICES" python -m pytest -x -q
+
+echo "== mesh regime: scheduler suite + mesh parity under 8 devices"
+XLA_FLAGS="$MESH_DEVICES" REPRO_SCHED_CONCURRENCY=1 \
+    python -m pytest -x -q $SCHED_SUITE tests/test_mesh_parity.py
 
 echo "== perf gate: benchmarks/run.py --quick --check"
 python -m benchmarks.run --quick --check

@@ -96,6 +96,35 @@ statement (tests/test_shard_parity.py). ``SQLCached(lane_exec=False)``
 disables lane routing (every sharded statement takes the stacked
 path — the PR-4 regime, kept as the bench baseline).
 
+Mesh placement (PR 7)
+---------------------
+
+When more than one accelerator device is visible, a sharded table's
+lanes are PLACED: ``launch.mesh.lane_mesh_for`` picks the largest
+divisor of the shard count that fits the local device count, builds a
+1-D ``("lane",)`` mesh, and each lane's state pytree is committed to
+its block's device (``shards.place_lanes``). Dispatch shapes follow the
+placement: a pruned (single-lane) route runs the monolithic executors
+directly on that lane's device — zero cross-chip traffic, and the
+device-AWARE twin of the scheduler's lane locks means disjoint-device
+groups overlap; fan-out becomes a real all-device map (``mesh`` mode —
+a 4th ``_exec_mode`` shape): the lanes are assembled zero-copy into one
+device-sharded global array (``shards.assemble_lanes``), the vmapped
+``core/shards`` executors run under ``shard_map`` (``shards._fanout``
+routes every per-shard map through the placement mesh), partial results
+merge via the O(n·limit) id-only wire shape as a cross-device gather,
+and the output state is pinned back to the mesh and disassembled into
+per-device lanes. ``ALTER TABLE .. RESHARD n`` re-splits through one
+common device then RE-places on the new shard count's mesh (device
+counts may differ); CHECKPOINT saves the gathered stacked layout, and
+RESTORE reads the snapshot's own shard count from its meta, re-splits
+through the RESHARD machinery, and places onto THIS process's mesh —
+so a checkpoint round-trips across mesh sizes. ``SHOW STATS`` /
+``EXPLAIN`` report per-lane device ids from host-side placement
+metadata (no device sync). ``SQLCached(mesh_exec=False)`` or
+``REPRO_MESH=0`` disables placement (lanes stay on the default device
+— the PR-5/6 regime and the mesh bench's paired baseline).
+
 Skew + live re-partitioning
 ---------------------------
 
@@ -130,6 +159,8 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import os
+import pathlib
 import threading
 from typing import Any, Iterable, Mapping, Sequence
 
@@ -137,6 +168,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.launch.mesh import lane_mesh_for
 from repro.core import planner as PL
 from repro.core import predicate as P
 from repro.core import shards as SH
@@ -370,13 +402,20 @@ class _Table:
 
     ``stmt_routed``/``writes_routed``/``rows_in`` are host-side per-shard
     skew counters (``SHOW STATS t``): pruned statements attribute to
-    their shard, fan-out to every shard."""
+    their shard, fan-out to every shard.
+
+    ``mesh`` is the table's placement mesh (``launch.mesh.lane_mesh_for``;
+    None = every lane on the default device): when set, ``lanes[i]`` is
+    committed to its mesh device and whole-table dispatches run in
+    ``mesh`` mode — assembled into one device-sharded global array and
+    executed under ``shard_map`` instead of stacking on one chip."""
 
     schema: TableSchema
     state: dict | None
     host_ops: int = 0
     eng: Any = T
     lanes: list | None = None
+    mesh: Any = None
     lock: Any = dataclasses.field(default_factory=threading.Lock)
     ticks_total: int = 0
     lane_ticks: list = dataclasses.field(default_factory=list)
@@ -433,7 +472,8 @@ def _np_terms_int(terms, param_cols) -> bool:
 
 
 class SQLCached:
-    def __init__(self, auto_expire: bool = True, lane_exec: bool = True):
+    def __init__(self, auto_expire: bool = True, lane_exec: bool = True,
+                 mesh_exec: bool = True):
         self.tables: dict[str, _Table] = {}
         self.interner = Interner()
         self.auto_expire = auto_expire
@@ -441,6 +481,12 @@ class SQLCached:
         # statement takes the stacked path — the PR-4 execution regime;
         # benchmarks/lane_bench.py uses it as the paired baseline)
         self.lane_exec = lane_exec
+        # mesh_exec=False (or REPRO_MESH=0) disables multi-device lane
+        # placement — every lane stays on the default device and
+        # whole-table work stacks on one chip (the PR-5/6 regime;
+        # benchmarks/mesh_bench.py uses it as the paired baseline)
+        self.mesh_exec = mesh_exec and os.environ.get("REPRO_MESH",
+                                                      "1") != "0"
         self._stmts: dict[str, S.Statement] = {}
         self._execs: dict[tuple, Any] = {}
         self._shapes: dict[str, StatementShape] = {}
@@ -513,7 +559,15 @@ class SQLCached:
         * ``stacked``: ``fn(lanes_tuple, flag, deltas, *args)`` — stacks
           the lanes (XLA's slice-of-concat simplification keeps
           pass-through leaves free), catches every clock up, runs the
-          vmapped executor, splits back into lanes."""
+          vmapped executor, splits back into lanes;
+        * ``mesh``:    ``fn(global_state, flag, deltas, *args)`` — the
+          multi-device twin of ``stacked``: the caller assembles the
+          lanes into ONE device-sharded global array
+          (``shards.assemble_lanes``), the body runs under the table's
+          placement mesh (``shards.fanout_mesh`` makes every per-shard
+          fan-out a ``shard_map`` over the lane axis), and the output
+          state is pinned back onto the mesh so the caller's
+          disassembly is a per-device slice, not a gather."""
         if mode == "mono":
             return self._jit_with_expiry(xsch, base, eng=eng)
         iv = xsch.expiry.ops_interval
@@ -547,10 +601,9 @@ class SQLCached:
 
             return jax.jit(fn, donate_argnums=0)
 
-        schema = xsch  # stacked mode runs on the full sharded schema
+        schema = xsch  # stacked/mesh modes run on the full sharded schema
 
-        def fn(lanes, expire_flag, deltas, pre_deltas, *args):
-            state = SH.stack_lanes(lanes)
+        def body(state, expire_flag, deltas, pre_deltas, *args):
             state = dict(state, clock=state["clock"] + deltas,
                          ops=state["ops"] + deltas)
             if iv > 0:
@@ -572,7 +625,24 @@ class SQLCached:
                     expire_flag,
                     lambda s: SH.expire(schema, s)[0],
                     lambda s: s, st)
-            return (tuple(SH.split_lanes(schema, st)),) + tuple(out[1:])
+            return st, out[1:]
+
+        if mode == "mesh":
+            def fn(state, expire_flag, deltas, pre_deltas, *args):
+                # the context must wrap the BODY (jit traces lazily):
+                # every shards._fanout traced inside becomes a shard_map
+                # over the table's placement mesh
+                mesh = lane_mesh_for(schema.shards)
+                with SH.fanout_mesh(mesh):
+                    st, outs = body(state, expire_flag, deltas,
+                                    pre_deltas, *args)
+                    st = SH.constrain_lanes(mesh, st)
+                return (st,) + tuple(outs)
+        else:
+            def fn(lanes, expire_flag, deltas, pre_deltas, *args):
+                st, outs = body(SH.stack_lanes(lanes), expire_flag,
+                                deltas, pre_deltas, *args)
+                return (tuple(SH.split_lanes(schema, st)),) + tuple(outs)
 
         return jax.jit(fn, donate_argnums=0)
 
@@ -613,6 +683,26 @@ class SQLCached:
         stmt = shape.key[1] if len(shape.key) == 2 else None
         return self._lane_of(t, stmt, params_list)
 
+    def item_lanes(self, shape: StatementShape | None,
+                   params_list: Sequence[Sequence[Any]]) -> list | None:
+        """Per-STATEMENT lane routes for one same-shape group: entry i
+        is the single lane statement i provably dispatches on, or None
+        when that statement fans out. Returns None outright when lane
+        routing doesn't apply (unsharded table, lane exec off, no
+        statement). The scheduler uses this to SPLIT a multi-lane group
+        into per-lane sub-batches that overlap (each sub-batch is then
+        re-verified through :meth:`group_lane`, so lock and dispatch
+        still agree)."""
+        if shape is None or shape.table is None:
+            return None
+        t = self.tables.get(shape.table)
+        if t is None or t.lanes is None or not self.lane_exec:
+            return None
+        stmt = shape.key[1] if len(shape.key) == 2 else None
+        if stmt is None:
+            return None
+        return [self._lane_of(t, stmt, [pr]) for pr in params_list]
+
     def _exec_mode(self, t: _Table, stmt, params_list, n_stmts: int,
                    pvals=None):
         """Pick the dispatch shape for one statement (group) against
@@ -624,7 +714,10 @@ class SQLCached:
           (host-side, via :meth:`_lane_of`): run the monolithic
           executors against that lane's handle only;
         * ``('stacked', SH, schema, None, flag)`` — sharded fan-out /
-          multi-shard / unknown route: stack the lanes in-dispatch.
+          multi-shard / unknown route: stack the lanes in-dispatch;
+        * ``('mesh', SH, schema, None, flag)`` — same routes on a
+          MESH-placed table: assemble the lanes into one device-sharded
+          global array and fan out under shard_map (see ``_jit_exec``).
 
         ``flag`` carries the expiry trigger for THIS dispatch (lane
         routes defer per lane — see ``_Table.expire_due``)."""
@@ -634,6 +727,8 @@ class SQLCached:
             return "mono", t.eng, t.schema, None, fired
         if sid is not None:
             return "lane", T, SH.shard_schema(t.schema), sid, fired
+        if t.mesh is not None:
+            return "mesh", SH, t.schema, None, fired
         return "stacked", SH, t.schema, None, fired
 
     def _expire_flag(self, t: _Table, n: int = 1) -> bool:
@@ -711,9 +806,15 @@ class SQLCached:
             pre_ds = np.asarray(
                 [(-1 if (at is None) else g0 - at) for at in pre_ats],
                 np.int32)
-            out = fn(tuple(t.lanes), flag, deltas, pre_ds, *args)
+            if mode == "mesh":
+                glob = SH.assemble_lanes(t.mesh, t.lanes)
+                out = fn(glob, flag, deltas, pre_ds, *args)
+                new_lanes = SH.disassemble_lanes(t.mesh, n_sh, out[0])
+            else:
+                out = fn(tuple(t.lanes), flag, deltas, pre_ds, *args)
+                new_lanes = out[0]
             with t.lock:
-                for i, st in enumerate(out[0]):
+                for i, st in enumerate(new_lanes):
                     t.lanes[i] = st
             return out[1:]
         except Exception:
@@ -1069,11 +1170,20 @@ class SQLCached:
         self.tables[stmt.table] = self._make_table(schema)
         return Result()
 
-    @staticmethod
-    def _make_table(schema: TableSchema) -> _Table:
+    def _mesh_for(self, schema: TableSchema):
+        """The placement mesh this daemon gives an ``schema.shards``-way
+        table (None = unplaced — unsharded table, kill-switch off, or a
+        single visible device)."""
+        if not SH.is_sharded(schema) or not self.mesh_exec:
+            return None
+        return lane_mesh_for(schema.shards)
+
+    def _make_table(self, schema: TableSchema) -> _Table:
         n = schema.shards
         if SH.is_sharded(schema):
-            return _Table(schema, None, eng=SH, lanes=SH.init_lanes(schema),
+            mesh = self._mesh_for(schema)
+            lanes = SH.place_lanes(mesh, SH.init_lanes(schema))
+            return _Table(schema, None, eng=SH, lanes=lanes, mesh=mesh,
                           lane_ticks=[0] * n, expire_due=[None] * n,
                           stmt_routed=np.zeros(n, np.int64),
                           writes_routed=np.zeros(n, np.int64),
@@ -1082,6 +1192,17 @@ class SQLCached:
                       stmt_routed=np.zeros(1, np.int64),
                       writes_routed=np.zeros(1, np.int64),
                       rows_in=np.zeros(1, np.int64))
+
+    @staticmethod
+    def _colocate(lanes: list, mesh) -> list:
+        """One-device copies of per-lane states: the admin paths below
+        stack/concat lanes (or feed them all into one jitted call), and
+        jnp refuses mixed-device operands — so mesh-placed lanes stage
+        through the first device first. No-op when unplaced."""
+        if mesh is None:
+            return list(lanes)
+        dev = jax.devices()[0]
+        return [jax.device_put(l, dev) for l in lanes]
 
     def _do_reindex(self, name: str) -> Result:
         """REINDEX t: bulk-rebuild every hash index from the live rows —
@@ -1121,12 +1242,12 @@ class SQLCached:
             t.state, n = jax.jit(T.flush, static_argnums=0)(t.schema,
                                                             t.state)
             return Result(dev={"count": n})
-        key = ("stacked", "flush", t.schema)
+        mode = "mesh" if t.mesh is not None else "stacked"
+        key = (mode, "flush", t.schema)
         fn = self._executor(
             key, lambda: self._jit_exec(
-                t.schema, lambda st: SH.flush(t.schema, st), "stacked",
-                SH))
-        n, = self._run_state(t, fn, "stacked", None, False, 1, ())
+                t.schema, lambda st: SH.flush(t.schema, st), mode, SH))
+        n, = self._run_state(t, fn, mode, None, False, 1, ())
         return Result(dev={"count": n})
 
     def _do_show_stats(self, name: str) -> Result:
@@ -1134,25 +1255,36 @@ class SQLCached:
         live rows straight from each lane's validity bits plus the
         host-side routed-statement counters — as one JSON ``VALUE`` row,
         observable from any socket client. A hot shard shows up as one
-        lane's counters and row count running away from its peers."""
+        lane's counters and row count running away from its peers.
+        Mesh-placed tables report each lane's device id from host-side
+        placement metadata (``shards.lane_devices`` — never a
+        cross-device sync, so the report can't stall dispatches)."""
         t = self._table(name)
         n = t.schema.shards
         if t.lanes is None:
             live = [int(T.live_count(t.state))]
+            devs = None
         else:
             # caught-up snapshot: deferred expiry replays applied, so the
             # report never counts rows the lockstep engine already dropped
             live = [int(T.live_count(lane))
                     for lane in self._caught_up_lanes(t)]
+            placed = SH.lane_devices(t.mesh, n)
+            devs = ([d.id for d in placed] if placed is not None
+                    else [next(iter(lane["valid"].devices())).id
+                          for lane in t.lanes])
         with t.lock:
             stmts = t.stmt_routed.tolist()
             writes = t.writes_routed.tolist()
             rows_in = t.rows_in.tolist()
             host_ops = t.host_ops
         per = [{"shard": i, "live_rows": live[i], "statements": stmts[i],
-                "writes": writes[i], "inserted_rows": rows_in[i]}
+                "writes": writes[i], "inserted_rows": rows_in[i],
+                **({"device": devs[i]} if devs is not None else {})}
                for i in range(n)]
         info = {"table": name, "shards": n,
+                "devices": (len(t.mesh.devices.reshape(-1))
+                            if t.mesh is not None else 1),
                 "replicas": t.schema.replicas,
                 "partition_by": t.schema.partition_by,
                 "capacity": t.schema.capacity,
@@ -1186,7 +1318,9 @@ class SQLCached:
         except (ValueError, KeyError) as e:
             raise S.SQLError(str(e)) from e
         if t.lanes is not None:
-            lanes = self._caught_up_lanes(t)
+            # mesh-placed lanes stage through one device: the re-split
+            # concatenates every lane's rows in one jitted call
+            lanes = self._colocate(self._caught_up_lanes(t), t.mesh)
         else:
             lanes = [t.state]
         key = ("reshard", old_schema, new_schema)
@@ -1202,16 +1336,20 @@ class SQLCached:
                 f"RESHARD {new_n}: {int(counts.max())} live rows hash to "
                 f"one shard but a shard holds only {cap_new} — resolve "
                 f"the skew (or raise CAPACITY) first")
+        # re-place on the NEW shard count's mesh (device counts may
+        # differ — the divisor policy re-evaluates per shard count)
+        new_mesh = self._mesh_for(new_schema)
         with t.lock:
             g0 = t.ticks_total
             if new_n > 1:
-                t.lanes = list(new_lanes)
+                t.lanes = SH.place_lanes(new_mesh, list(new_lanes))
                 t.state = None
                 t.eng = SH
             else:
                 t.state = new_lanes[0]
                 t.lanes = None
                 t.eng = T
+            t.mesh = new_mesh
             t.schema = new_schema
             t.lane_ticks = [g0] * new_n
             t.expire_due = [None] * new_n
@@ -1289,7 +1427,8 @@ class SQLCached:
             state = t.state
             live = int(T.live_count(state))
         else:
-            state = SH.stack_lanes(self._caught_up_lanes(t))
+            state = SH.stack_lanes(
+                self._colocate(self._caught_up_lanes(t), t.mesh))
             live = int(np.sum(np.asarray(state["valid"])))
         meta = {
             "table": stmt.table,
@@ -1309,17 +1448,32 @@ class SQLCached:
         the SOURCE daemon's interner ids, so each saved string is
         re-interned HERE and a lut rewrites every TEXT column; because
         that moves partition hashes, rows are then re-split through the
-        RESHARD machinery (same shard count — placement + index rebuild
-        only), so shard pruning and index probes stay exact. Refused on
-        overflow skew, like RESHARD; the old contents survive a refusal
-        only if the shapes matched (leaf shapes are validated before
-        anything is installed)."""
+        RESHARD machinery, so shard pruning and index probes stay exact.
+        The restore is ELASTIC across shard counts and mesh sizes: the
+        snapshot's own ``shards`` count is read from its meta, the
+        snapshot is loaded in ITS layout, re-split into this table's
+        shard count, and the lanes are placed on THIS process's mesh —
+        a checkpoint taken on 8 devices round-trips onto 1 and back.
+        Refused on overflow skew, like RESHARD; the old contents are
+        never touched before the skew check passes (the snapshot is
+        validated against its own saved layout)."""
         from repro.checkpoint import store as CK
 
         t = self._table(stmt.table)
-        like = (t.state if t.lanes is None
-                else SH.stack_lanes(list(t.lanes)))
         try:
+            raw = json.loads((pathlib.Path(stmt.path) / "step_0" /
+                              "meta.json").read_text())
+        except FileNotFoundError as e:
+            raise S.SQLError(f"RESTORE: no checkpoint at {stmt.path!r} "
+                             f"({e})") from e
+        saved_n = int(raw.get("meta", {}).get("shards", t.schema.shards))
+        try:
+            saved_sch = (t.schema if saved_n == t.schema.shards
+                         else dataclasses.replace(t.schema, shards=saved_n))
+            # `like` is built in the SNAPSHOT's layout (shapes/dtypes
+            # only) — restoring never depends on the live table's shape
+            like = (T.init_state(saved_sch) if saved_n == 1
+                    else SH.stack_lanes(SH.init_lanes(saved_sch)))
             state, info = CK.restore(stmt.path, 0, like)
         except FileNotFoundError as e:
             raise S.SQLError(f"RESTORE: no checkpoint at {stmt.path!r} "
@@ -1341,12 +1495,12 @@ class SQLCached:
                 ids = np.asarray(state["cols"][c])
                 cols[c] = jnp.asarray(lut[np.clip(ids, 0, len(lut) - 1)])
             state = dict(state, cols=cols)
-        lanes = ([state] if t.lanes is None
-                 else SH.split_lanes(t.schema, state))
-        key = ("reshard", t.schema, t.schema)
+        lanes = ([state] if saved_n == 1
+                 else SH.split_lanes(saved_sch, state))
+        key = ("reshard", saved_sch, t.schema)
         fn = self._executor(
             key, lambda: jax.jit(
-                lambda ls: SH.reshard(t.schema, t.schema, ls)))
+                lambda ls: SH.reshard(saved_sch, t.schema, ls)))
         new_lanes, counts = fn(tuple(lanes))
         counts = np.asarray(counts)  # admin op: the sync is fine
         cap = (SH.shard_capacity(t.schema) if t.schema.shards > 1
@@ -1360,7 +1514,7 @@ class SQLCached:
             if t.lanes is None:
                 t.state = new_lanes[0]
             else:
-                t.lanes = list(new_lanes)
+                t.lanes = SH.place_lanes(t.mesh, list(new_lanes))
             t.lane_ticks = [g0] * t.schema.shards
             t.expire_due = [None] * t.schema.shards
         return Result(count=int(counts.sum()), value=stmt.path)
@@ -1375,6 +1529,18 @@ class SQLCached:
             ranked = isinstance(stmt, S.Select) and stmt.order_by is not None
             info = PL.explain(t.schema, where, ranked=ranked)
             info["statement"] = type(stmt).__name__.lower()
+            if t.mesh is not None:
+                # placement report from host metadata only (no sync): a
+                # const-pruned route names the one device it dispatches
+                # to, anything else names the whole mesh
+                route = PL.plan_shards(t.schema, where)
+                if route.key is not None and route.key.value[0] == "const":
+                    sid = SH.shard_of_host(int(route.key.value[1]),
+                                           t.schema.shards)
+                    info["device"] = SH.lane_devices(
+                        t.mesh, t.schema.shards)[sid].id
+                else:
+                    info["devices"] = len(t.mesh.devices.reshape(-1))
             if info["plan"] == "index-probe":
                 # surface index health: stale > 0 means every probe is
                 # currently taking the scan fallback (REINDEX recovers).
@@ -1961,14 +2127,14 @@ class SQLCached:
             )
             t.state, n = fn(t.state)
             return Result(dev={"count": n})
-        key = ("stacked", "expire", t.schema)
+        mode = "mesh" if t.mesh is not None else "stacked"
+        key = (mode, "expire", t.schema)
         fn = self._executor(
             key, lambda: self._jit_exec(
-                t.schema, lambda st: SH.expire(t.schema, st), "stacked",
-                SH))
+                t.schema, lambda st: SH.expire(t.schema, st), mode, SH))
         # (_run_state's stacked booking consumed every lane deferral and
         # the dispatch replayed them — nothing left to clear here)
-        n, = self._run_state(t, fn, "stacked", None, False, 1, ())
+        n, = self._run_state(t, fn, mode, None, False, 1, ())
         return Result(dev={"count": n})
 
     # ----------------------------------------------------- serving-plane API
@@ -1980,16 +2146,18 @@ class SQLCached:
         t = self._table(name)
         if t.lanes is None:
             return t.state
-        return SH.stack_lanes(self._caught_up_lanes(t))
+        return SH.stack_lanes(
+            self._colocate(self._caught_up_lanes(t), t.mesh))
 
     def swap_table_state(self, name: str, state: dict) -> None:
         """Install a state produced by an external jitted step (sharded
-        tables accept the stacked layout and split it back into lanes)."""
+        tables accept the stacked layout, split it back into lanes, and
+        re-place them on the table's mesh)."""
         t = self._table(name)
         if t.lanes is None:
             t.state = state
             return
-        lanes = SH.split_lanes(t.schema, state)
+        lanes = SH.place_lanes(t.mesh, SH.split_lanes(t.schema, state))
         with t.lock:
             t.lane_ticks = [t.ticks_total] * t.schema.shards
             for i, lane in enumerate(lanes):

@@ -138,6 +138,33 @@ def seq_lengths(schema: TableSchema, state: dict, *, max_slots: int,
 # oracle in tests).
 
 
+def _on_state_device(state: dict, *arrs):
+    """Colocate small result handles with ``state``'s device.
+
+    The incremental updates combine handles the daemon's executors
+    returned (``Result.row_ids_device`` / ``present_device``) with the
+    table state; under mesh placement (PR 7) a pruned statement's
+    handles live on the route's OWN device while a flattened sharded
+    state lives on the default device, and jax refuses mixed committed
+    devices. Tracers (the jit-composable use) and uncommitted/multi-
+    device arrays pass through untouched."""
+    dev = None
+    for leaf in jax.tree.leaves(state):
+        if isinstance(leaf, jax.Array) and not isinstance(leaf, jax.core.Tracer):
+            devs = leaf.devices()
+            if len(devs) == 1:
+                dev = next(iter(devs))
+            break
+    if dev is None:
+        return arrs
+    return tuple(
+        jax.device_put(a, dev)
+        if (isinstance(a, jax.Array) and not isinstance(a, jax.core.Tracer)
+            and a.devices() != {dev})
+        else a
+        for a in arrs)
+
+
 def _pt_coords(state: dict, row_ids, ok, *, max_slots: int, max_blocks: int):
     slot = state["cols"]["slot"][row_ids]
     pos = state["cols"]["pos_block"][row_ids]
@@ -158,6 +185,8 @@ def page_table_insert(
     falls back to the full O(capacity) rebuild — the steady-state serving
     path (deletes precede reuse) never takes it.
     """
+    pt, row_ids, evicted = _on_state_device(state, pt, row_ids, evicted)
+
     def inc(_):
         ok = jnp.ones(row_ids.shape, dtype=bool)
         s, b = _pt_coords(state, row_ids, ok,
@@ -178,6 +207,7 @@ def page_table_delete(
     """Incremental page-table update after a DELETE: clear the entries of
     the deleted ``row_ids`` (``present`` masks the padded tail). DELETE only
     flips validity bits, so the rows' coordinates are still readable."""
+    pt, row_ids, present = _on_state_device(state, pt, row_ids, present)
     s, b = _pt_coords(state, row_ids, present,
                       max_slots=max_slots, max_blocks=max_blocks)
     return pt.at[s, b].set(schema.capacity, mode="drop")
@@ -191,6 +221,9 @@ def seq_lengths_insert(
     """Incremental per-slot cached-length update after inserting rows.
     Same eviction contract as :func:`page_table_insert`: O(k) adds in the
     steady state, device-side fallback to the full recount on eviction."""
+    lengths, row_ids, evicted = _on_state_device(
+        state, lengths, row_ids, evicted)
+
     def inc(_):
         slot = state["cols"]["slot"][row_ids]
         ok = (slot >= 0) & (slot < max_slots)
@@ -212,6 +245,8 @@ def seq_lengths_delete(
     max_slots: int,
 ) -> jax.Array:
     """Incremental per-slot cached-length update after a DELETE."""
+    lengths, row_ids, present = _on_state_device(
+        state, lengths, row_ids, present)
     slot = state["cols"]["slot"][row_ids]
     ok = present & (slot >= 0) & (slot < max_slots)
     s = jnp.where(ok, slot, max_slots)

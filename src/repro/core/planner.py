@@ -184,7 +184,13 @@ def plan_shards(schema: TableSchema, where: P.Node | None) -> ShardRoute:
     at execution time (device-side, so batched statements route
     per-row). Float LITERALS that are numerically integral (``k = 5.0``)
     are coerced to the column dtype before classification, so they prune
-    like ``k = 5`` instead of silently demoting to fan-out."""
+    like ``k = 5`` instead of silently demoting to fan-out.
+
+    Under mesh placement (PR 7) this route IS the device decision: a
+    pruning route resolves to one lane and therefore to that lane's
+    device (``shards.lane_devices`` — what EXPLAIN reports as
+    ``device``), while a fan-out route becomes one all-device
+    ``shard_map`` dispatch (EXPLAIN reports ``devices``)."""
     col = schema.partition_by
     n = schema.shards
     if where is None or col is None:

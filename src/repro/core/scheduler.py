@@ -67,12 +67,17 @@ table's state lives in per-shard lane handles at the daemon
 ONE shard (``SQLCached.group_shard_ids`` returns a singleton) acquires
 only that lane's asyncio lock — so same-table groups on different
 lanes hold disjoint locks and truly overlap, and the daemon executes
-each against its own lane's buffers. Groups with fan-out / unknown /
-multi-shard routes take the table's base lock plus every lane
-(whole-table exclusion), unsharded tables keep their single lock, and
-acquisition follows one global order (base, then lanes ascending) so
-concurrent groups cannot deadlock. ``lane_locks=False`` restores the
-PR-4 single-lock regime (the lane-bench baseline).
+each against its own lane's buffers. A MULTI-shard group whose
+statements each provably route to one lane splits into per-lane
+sub-batches (``_split_group``, via ``SQLCached.item_lanes``) that
+dispatch concurrently under their own lane locks — and since PR 7
+places lanes on mesh devices, disjoint-lane overlap is real
+multi-DEVICE overlap. Remaining fan-out / unknown-route groups take
+the table's base lock plus every lane (whole-table exclusion),
+unsharded tables keep their single lock, and acquisition follows one
+global order (base, then lanes ascending) so concurrent groups cannot
+deadlock. ``lane_locks=False`` restores the PR-4 single-lock regime
+(the lane-bench baseline).
 
 Admission window
 ----------------
@@ -242,7 +247,7 @@ class BatchScheduler:
         self.stats = {"admitted": 0, "batches": 0, "grouped_statements": 0,
                       "singles": 0, "max_group": 0, "window_waits": 0,
                       "waves": 0, "overlapped_groups": 0, "max_wave": 0,
-                      "lane_dispatches": 0}
+                      "lane_dispatches": 0, "lane_splits": 0}
 
     # ------------------------------------------------------------ lifecycle
     async def start(self) -> None:
@@ -358,11 +363,59 @@ class BatchScheduler:
         return [ent["base"]] + [lanes.setdefault(i, asyncio.Lock())
                                 for i in range(n)]
 
+    def _split_group(self, g: _Group) -> "list[_Group] | None":
+        """Split a multi-shard group whose statements EACH provably
+        route to one lane into per-lane sub-batches (None = the group
+        stays whole). The sub-batches hold disjoint lane locks and
+        dispatch concurrently — multi-shard traffic on one shape
+        overlaps like singleton lane groups instead of serializing
+        under base + every lane (on a mesh-placed table that means the
+        sub-batches run on different DEVICES at once). Statements on
+        different lanes touch disjoint shards, so the split preserves
+        per-statement semantics; within a lane, admission order holds.
+        Every sub-batch is re-verified through the daemon's own route
+        predicate (``_Group.lane`` = ``db.group_lane``): a sub-batch
+        the daemon would still dispatch whole-table (e.g. a padded
+        INSERT wider than one shard) vetoes the split, so the lock set
+        always covers the dispatch."""
+        if (not self.concurrency or not self.lane_locks
+                or g.shape is None or not g.shape.batchable
+                or len(g.items) < 2 or g.lane(self.db) is not None):
+            return None
+        try:
+            lanes = self.db.item_lanes(
+                g.shape, [it.params for it in g.items])
+        except Exception:  # noqa: BLE001 — routing is best effort
+            return None
+        if (lanes is None or any(ln is None for ln in lanes)
+                or len(set(lanes)) < 2):
+            return None
+        by_lane: dict[int, list] = {}
+        for it, ln in zip(g.items, lanes):
+            by_lane.setdefault(ln, []).append(it)
+        subs = []
+        for ln, items in by_lane.items():
+            sub = _Group(g.seq, g.shape, items)
+            if sub.lane(self.db) != ln:
+                return None
+            subs.append(sub)
+        return subs
+
     async def _dispatch(self, g: _Group) -> None:
-        """Run one group under its lane/table locks. Commuting makes the
-        order inside a wave free; the locks keep each state handle's
-        read-modify-write atomic — and disjoint-lane groups hold disjoint
-        locks, so they truly overlap."""
+        """Run one group — split into per-lane sub-batches when its
+        statements provably land on disjoint lanes, whole otherwise."""
+        subs = self._split_group(g)
+        if subs is None:
+            await self._dispatch_one(g)
+            return
+        self.stats["lane_splits"] += 1
+        await asyncio.gather(*(self._dispatch_one(s) for s in subs))
+
+    async def _dispatch_one(self, g: _Group) -> None:
+        """Run one (sub-)group under its lane/table locks. Commuting
+        makes the order inside a wave free; the locks keep each state
+        handle's read-modify-write atomic — and disjoint-lane groups
+        hold disjoint locks, so they truly overlap."""
         locks = self._locks_for(g)
         for lk in locks:
             await lk.acquire()

@@ -35,6 +35,36 @@ sort+searchsorted machinery at shard granularity) splits the batch by
 ``shard_of(partition value)`` on device and one vmapped ``table.insert``
 feeds every shard — one dispatch regardless of ``n``.
 
+**Mesh placement (PR 7).** With more than one jax device the daemon
+keeps each lane's state committed to its OWN device
+(``launch/mesh.lane_mesh_for`` picks the largest divisor of
+``n_shards`` that fits the host; lane ``i`` lives on device
+``i // (n_shards // n_devices)``) and the helpers at the bottom of
+this module make the two execution shapes physical:
+
+*   pruned statements run the lane executor against the lane's
+    committed device — jit specializes per device, so a partition-eq
+    lookup touches exactly one device with zero cross-device traffic;
+*   fan-out assembles the lane handles zero-copy into ONE global
+    array per leaf (``assemble_lanes`` →
+    ``jax.make_array_from_single_device_arrays`` over
+    ``lane_mesh_for``'s ``NamedSharding``), runs the ordinary stacked
+    executor inside ``fanout_mesh`` — ``_fanout`` then lowers the
+    per-shard map through ``parallel/sharding.shard_map`` instead of
+    ``vmap``, so the per-shard body becomes the per-device program and
+    the id-only merge concatenation becomes the cross-device gather —
+    pins the result layout with ``constrain_lanes``, and splits it
+    back into per-device lane handles (``disassemble_lanes``, again
+    zero-copy via ``addressable_shards``).
+
+Admin paths (RESHARD, CHECKPOINT/RESTORE, ``table_state``) first
+*colocate* every lane onto one device (mixed-device stacks are
+illegal), re-split through :func:`reshard`, then re-place on the new
+mesh via ``place_lanes`` — which is what makes snapshots elastic
+across BOTH shard counts and mesh sizes. ``lane_devices`` answers
+"which device owns lane i" without touching device data, so SHOW
+STATS / EXPLAIN report placement sync-free.
+
 Semantics vs an unsharded table (the parity contract, exercised by
 ``tests/test_shard_parity.py``): every statement advances EVERY shard's
 logical clock by exactly what the unsharded table would add, so TTL
@@ -49,13 +79,16 @@ instead).
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
+import threading
 from typing import Any, Mapping, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as PSpec
 
 from repro.core import planner as PL
 from repro.core import predicate as P
@@ -63,6 +96,8 @@ from repro.core import table as T
 from repro.core.schema import TableSchema
 from repro.kernels import hashidx as HX
 from repro.kernels import ops as OPS
+from repro.launch.mesh import LANE_AXIS
+from repro.parallel.sharding import shard_map as _shard_map
 
 _PRIME = 2654435761  # 2^32 / phi — same multiplier as kernels/hashidx
 _SHIFT = 17          # use well-mixed upper bits before the modulo
@@ -135,6 +170,146 @@ def split_lanes(schema: TableSchema, state: dict) -> list:
     """Stacked state -> per-lane states (inverse of :func:`stack_lanes`)."""
     return [jax.tree.map(lambda x: x[i], state)
             for i in range(schema.shards)]
+
+
+# ----------------------------------------------------------- mesh placement
+#
+# Multi-device execution (PR 7): a table whose shard count admits it gets a
+# 1-D ``"lane"`` mesh (``launch/mesh.lane_mesh_for``) and each lane's
+# buffers are COMMITTED to its device. Three consequences:
+#
+# *   lane-confined dispatches (pruned routes, singleton scheduler groups)
+#     jit against a single lane's committed buffers, so jax places the
+#     whole computation on that lane's device — single-device dispatch,
+#     zero cross-chip traffic, and disjoint-device groups overlap for
+#     real.
+# *   whole-table fan-out runs under the daemon's "mesh" executor: lanes
+#     are ASSEMBLED (:func:`assemble_lanes`, zero-copy) into one global
+#     array per leaf sharded ``P("lane")``, the executor traces with
+#     :func:`fanout_mesh` installed so every :func:`_fanout` below lowers
+#     to ``shard_map`` over the lane axis, merges (sum/top-k/compaction
+#     over the per-shard partials) lower under GSPMD as cross-device
+#     gather + tree-reduce of the same O(n·limit) id-only wire shape the
+#     vmap path uses, and the output state is DISASSEMBLED back to
+#     per-device lane handles (:func:`disassemble_lanes`, zero-copy).
+# *   everything stays semantics-free: with no mesh installed ``_fanout``
+#     IS ``jax.vmap``, so single-device behavior and jit caches are
+#     untouched (the parity contract extends across device counts —
+#     tests/test_mesh_parity.py).
+
+_MESH_TL = threading.local()
+
+
+@contextlib.contextmanager
+def fanout_mesh(mesh):
+    """Install ``mesh`` for the duration of an executor TRACE: every
+    :func:`_fanout` in scope lowers to ``shard_map`` over its ``"lane"``
+    axis instead of ``vmap``. Trace-time only — nothing escapes into the
+    compiled executable except the sharded lowering."""
+    prev = getattr(_MESH_TL, "mesh", None)
+    _MESH_TL.mesh = mesh
+    try:
+        yield
+    finally:
+        _MESH_TL.mesh = prev
+
+
+def current_fanout_mesh():
+    return getattr(_MESH_TL, "mesh", None)
+
+
+def _fanout(one, state, *extra):
+    """Map ``one`` over the leading shard axis of ``state`` (and of any
+    ``extra`` trees sharing it). Unplaced: plain ``vmap``. Under a
+    :func:`fanout_mesh` scope: ``shard_map`` over the 1-D lane mesh with
+    an inner ``vmap`` over each device's contiguous lane block (supports
+    ``n_shards`` a multiple of the device count). Values ``one`` closes
+    over (params, predicate masks) are replicated to every device."""
+    mesh = current_fanout_mesh()
+    if mesh is None:
+        return jax.vmap(one)(state, *extra)
+    spec = PSpec(LANE_AXIS)
+
+    def block(st, *ex):
+        return jax.vmap(one)(st, *ex)
+
+    return _shard_map(
+        block, mesh=mesh, in_specs=(spec,) * (1 + len(extra)),
+        out_specs=spec, check_vma=False)(state, *extra)
+
+
+def lane_devices(mesh, n_shards: int):
+    """Device of each lane under ``mesh`` placement (contiguous blocks of
+    ``n_shards // n_devices`` lanes per device), or None when unplaced."""
+    if mesh is None:
+        return None
+    devs = list(mesh.devices.reshape(-1))
+    per = n_shards // len(devs)
+    return [devs[i // per] for i in range(n_shards)]
+
+
+def place_lanes(mesh, lanes):
+    """Commit each lane's buffers to its mesh device. No-op placement
+    (mesh None) and already-resident lanes are free (device_put to the
+    owning device does not copy)."""
+    if mesh is None:
+        return list(lanes)
+    devs = lane_devices(mesh, len(lanes))
+    return [jax.device_put(l, d) for l, d in zip(lanes, devs)]
+
+
+def assemble_lanes(mesh, lanes) -> dict:
+    """Per-lane states -> ONE global array per leaf, sharded
+    ``P("lane")`` over ``mesh`` — the input shape of the daemon's "mesh"
+    executor. Each device's block is built ON that device (stack of its
+    resident lanes — no cross-device traffic for lanes already placed),
+    then the blocks are assembled zero-copy via
+    ``jax.make_array_from_single_device_arrays``."""
+    n_sh = len(lanes)
+    devs = list(mesh.devices.reshape(-1))
+    per = n_sh // len(devs)
+    sharding = NamedSharding(mesh, PSpec(LANE_AXIS))
+    lane_leaves = [jax.tree.flatten(l) for l in lanes]
+    treedef = lane_leaves[0][1]
+    out = []
+    for li in range(len(lane_leaves[0][0])):
+        parts = []
+        for di, dev in enumerate(devs):
+            blk = [jax.device_put(lane_leaves[i][0][li], dev)
+                   for i in range(di * per, (di + 1) * per)]
+            parts.append(jnp.stack(blk) if per > 1 else blk[0][None])
+        shape = (n_sh,) + tuple(lane_leaves[0][0][li].shape)
+        out.append(jax.make_array_from_single_device_arrays(
+            shape, sharding, parts))
+    return jax.tree.unflatten(treedef, out)
+
+
+def disassemble_lanes(mesh, n_shards: int, state: dict) -> list:
+    """Global mesh-sharded state -> per-lane states, each committed to
+    its device (inverse of :func:`assemble_lanes`; zero-copy up to the
+    on-device slice when a device owns several lanes)."""
+    del mesh  # the arrays carry their sharding; kept for call-site symmetry
+    leaves, treedef = jax.tree.flatten(state)
+    per_leaf = []
+    for x in leaves:
+        blocks = sorted(x.addressable_shards,
+                        key=lambda s: s.index[0].start or 0)
+        lanes_x = []
+        for blk in blocks:
+            data = blk.data
+            lanes_x.extend(data[j] for j in range(data.shape[0]))
+        per_leaf.append(lanes_x)
+    return [jax.tree.unflatten(treedef, [c[i] for c in per_leaf])
+            for i in range(n_shards)]
+
+
+def constrain_lanes(mesh, tree):
+    """Pin every leaf of ``tree`` to ``P("lane")`` sharding inside a jit
+    trace — the mesh executor pins its OUTPUT state so disassembly by
+    addressable shards is layout-safe regardless of what GSPMD inferred."""
+    s = NamedSharding(mesh, PSpec(LANE_AXIS))
+    return jax.tree.map(
+        lambda x: jax.lax.with_sharding_constraint(x, s), tree)
 
 
 def flat_schema(schema: TableSchema):
@@ -251,8 +426,8 @@ def _match_mask(schema: TableSchema, state: dict, where, params):
     """[n_shards, shard_cap] fan-out match mask (shape of ``valid``) —
     the daemon's batched-DELETE union path is layout-generic over it."""
     s_sch = shard_schema(schema)
-    return jax.vmap(lambda st: T._match_mask(s_sch, st, where, params))(
-        state)
+    return _fanout(lambda st: T._match_mask(s_sch, st, where, params),
+                   state)
 
 
 def live_count(state: dict) -> jax.Array:
@@ -329,8 +504,8 @@ def insert(
             jnp.sum((~state["valid"]).astype(jnp.int32), axis=1)) >= w
         state, slots_sh, ev = jax.lax.cond(
             free_ok,
-            lambda a: jax.vmap(one("free"))(*a),
-            lambda a: jax.vmap(one("lru"))(*a),
+            lambda a: _fanout(one("free"), *a),
+            lambda a: _fanout(one("lru"), *a),
             args)
         # map per-shard slots back to original batch positions, globalized
         tgt = jnp.where(m, r, b)  # b = out of range -> dropped
@@ -482,7 +657,7 @@ def select(
                     touch=touch, active=active,
                     fused_mode="ref", probe_mode="ref", plan=rt)
 
-            return jax.vmap(one)(state)
+            return _fanout(one, state)
 
         state, res = _run_fanout(schema, state, where, params, plan, run,
                                  ranked=order_by is not None)
@@ -550,7 +725,7 @@ def update(
                 extra_mask=extra_mask, plan=rt, probe_mode="ref",
                 maintain_indexes=maintain_indexes)
 
-        return jax.vmap(one)(state)
+        return _fanout(one, state)
 
     state, ns = _run_fanout(schema, state, where, params, plan, run)
     return state, jnp.sum(ns)
@@ -585,7 +760,7 @@ def delete(
                             extra_mask=extra_mask, plan=rt,
                             probe_mode="ref")
 
-        return jax.vmap(one)(state)
+        return _fanout(one, state)
 
     state, ns = _run_fanout(schema, state, where, params, plan, run)
     return state, jnp.sum(ns)
@@ -635,7 +810,7 @@ def delete_returning(
                                       limit=s_limit, plan=rt,
                                       probe_mode="ref")
 
-        return jax.vmap(one)(state)
+        return _fanout(one, state)
 
     state, ns, ids, present = _run_fanout(schema, state, where, params,
                                           plan, run)
@@ -663,12 +838,12 @@ def delete_many_eq(
     (state, n) or (state, n, counts[W])."""
     s_sch = shard_schema(schema)
     if per_statement:
-        state, n_sh, ns_sh = jax.vmap(
+        state, n_sh, ns_sh = _fanout(
             lambda st: T.delete_many_eq(s_sch, st, column, vals, active,
-                                        per_statement=True))(state)
+                                        per_statement=True), state)
         return state, jnp.sum(n_sh), jnp.sum(ns_sh, axis=0)
-    state, ns = jax.vmap(
-        lambda st: T.delete_many_eq(s_sch, st, column, vals, active))(state)
+    state, ns = _fanout(
+        lambda st: T.delete_many_eq(s_sch, st, column, vals, active), state)
     return state, jnp.sum(ns)
 
 
@@ -717,11 +892,11 @@ def aggregate(
             return v
 
         if agg == "AVG" and column is not None:
-            sums = jax.vmap(lambda st: one(st, "SUM", column))(state)
-            cnts = jax.vmap(lambda st: one(st, "COUNT", None))(state)
+            sums = _fanout(lambda st: one(st, "SUM", column), state)
+            cnts = _fanout(lambda st: one(st, "COUNT", None), state)
             return (jnp.sum(sums.astype(jnp.float32))
                     / jnp.maximum(jnp.sum(cnts), 1))
-        vals = jax.vmap(lambda st: one(st, agg, column))(state)
+        vals = _fanout(lambda st: one(st, agg, column), state)
         if agg == "COUNT" or column is None:
             return jnp.sum(vals)
         return _MERGE[agg](vals)
@@ -737,13 +912,13 @@ def expire(schema: TableSchema, state: dict):
     age condition matches the unsharded table exactly (clocks are in
     lockstep); the MAX_ROWS cap is per shard (see module docstring)."""
     s_sch = shard_schema(schema)
-    state, ns = jax.vmap(lambda st: T.expire(s_sch, st))(state)
+    state, ns = _fanout(lambda st: T.expire(s_sch, st), state)
     return state, jnp.sum(ns)
 
 
 def flush(schema: TableSchema, state: dict):
     s_sch = shard_schema(schema)
-    state, ns = jax.vmap(lambda st: T.flush(s_sch, st))(state)
+    state, ns = _fanout(lambda st: T.flush(s_sch, st), state)
     return state, jnp.sum(ns)
 
 
@@ -752,9 +927,9 @@ def build_index(schema: TableSchema, state: dict, column: str | None = None,
     """(Re)build hash indexes on every shard (vmapped — the jnp build
     path IS the fused form under vmap, so the kernel mode is pinned)."""
     s_sch = shard_schema(schema)
-    return jax.vmap(
-        lambda st: T.build_index(s_sch, st, column, mode=mode or "ref"))(
-            state)
+    return _fanout(
+        lambda st: T.build_index(s_sch, st, column, mode=mode or "ref"),
+        state)
 
 
 def reshard(old_schema: TableSchema, new_schema: TableSchema, lanes):

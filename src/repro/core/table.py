@@ -154,9 +154,10 @@ def insert(
     not supplied default to 0. ``row_mask`` ([n] bool) lets a fixed-width
     executor insert fewer than n rows (padding support). Hash-index
     maintenance for ``schema.indexes`` is fused in: batches narrower than
-    ``BULK_INDEX_THRESHOLD`` re-home each written slot sequentially
-    (O(batch x bucket_cap)); wider batches take ONE bulk sort-based
-    rebuild instead. ``index_mode`` pins the bulk build's kernel
+    ``BULK_INDEX_THRESHOLD`` re-home all written slots in one batched
+    clear + rank-place pass (``HX.insert_update_batched`` — no serial
+    per-slot chain); wider batches take ONE bulk sort-based rebuild
+    instead. ``index_mode`` pins the bulk build's kernel
     implementation (executors running under vmap pass ``"ref"``);
     ``alloc`` pins the slot-allocator path (see ``_alloc_slots``).
 
@@ -217,7 +218,7 @@ def insert(
             for ixc in schema.indexes:
                 # old keys come from the PRE-insert column (they name the
                 # bucket holding the overwritten slot's entry)
-                upd[ixc] = HX.insert_update(
+                upd[ixc] = HX.insert_update_batched(
                     indexes[ixc], slots, state["cols"][ixc][slots],
                     cols[ixc][slots], row_mask_b, valid)
         indexes = dict(indexes, **upd)

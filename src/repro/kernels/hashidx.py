@@ -294,3 +294,65 @@ def insert_update(idx: dict, slots: jax.Array, old_keys: jax.Array,
     rid, key, stale = jax.lax.fori_loop(
         0, n, body, (idx["rid"], idx["key"], idx["stale"]))
     return {"rid": rid, "key": key, "stale": stale}
+
+
+def insert_update_batched(idx: dict, slots: jax.Array, old_keys: jax.Array,
+                          new_keys: jax.Array, row_mask: jax.Array,
+                          valid: jax.Array) -> dict:
+    """Batched twin of :func:`insert_update` — same contract, no serial
+    chain. The ``fori_loop`` above costs O(batch) *dependent* steps; this
+    re-homes the whole batch in a fixed number of parallel passes:
+
+    1. **clear** — one full-array sweep drops every entry whose row id is
+       an inserted slot (the invariant says a slot lives in at most one
+       lane, so the sweep hits exactly the entries the loop's per-bucket
+       clears hit);
+    2. **place** — batch members sharing a destination bucket get their
+       within-bucket arrival rank (the ``_build_sorted`` argsort +
+       searchsorted trick at batch width), and member with rank ``r``
+       takes the (r+1)-th free lane of its bucket — distinct ranks map
+       to distinct lanes, so the final scatter is conflict-free.
+
+    A member whose rank exceeds its bucket's free-lane count marks the
+    index stale, like the sequential path (ranks are monotone within a
+    bucket, so the failure set matches arrival order). Lane POSITIONS may
+    differ from the sequential path when one member's clear frees a lane
+    an earlier member then takes — probes never read lane order, so the
+    entry set is what matters (tests/test_hashidx.py compares per-bucket
+    entry sets against the loop)."""
+    nb, cap_b = idx["rid"].shape
+    n = slots.shape[0]
+    cap = valid.shape[0]
+    del old_keys  # the clear sweep finds entries by row id, not bucket
+    act = jnp.asarray(row_mask, dtype=bool)
+    nbk = bucket_of(new_keys.astype(jnp.int32), nb)
+    validp = jnp.concatenate([valid, jnp.zeros((1,), dtype=bool)])
+
+    # 1. clear: one gather tells every lane whether it holds an inserted
+    # slot (masked rows scatter out of range and are dropped)
+    inserted = jnp.zeros((cap + 1,), dtype=bool).at[
+        jnp.where(act, slots, cap + 1)].set(True, mode="drop")
+    rid0 = idx["rid"]
+    rid0 = jnp.where((rid0 != EMPTY) & inserted[jnp.clip(rid0, 0, cap)],
+                     EMPTY, rid0)
+
+    # 2. place: within-bucket arrival rank -> the (rank+1)-th free lane
+    b = jnp.where(act, nbk, nb)  # inactive rows sort to the sentinel end
+    order = jnp.argsort(b, stable=True).astype(jnp.int32)
+    sb = b[order]
+    rank_sorted = jnp.arange(n, dtype=jnp.int32) - jnp.searchsorted(
+        sb, sb, side="left").astype(jnp.int32)
+    rank = jnp.zeros((n,), jnp.int32).at[order].set(rank_sorted)
+    rows = rid0[nbk]                              # [n, cap_b]
+    free = (rows == EMPTY) | ~validp[jnp.clip(rows, 0, cap)]
+    cumfree = jnp.cumsum(free.astype(jnp.int32), axis=1)
+    want = rank + 1
+    found = cumfree[:, -1] >= want
+    lane = jnp.argmax(cumfree == want[:, None], axis=1)
+    place = act & found
+    bi = jnp.where(place, nbk, nb)  # out-of-range bucket -> dropped
+    rid = rid0.at[bi, lane].set(slots, mode="drop")
+    key = idx["key"].at[bi, lane].set(new_keys.astype(jnp.int32),
+                                      mode="drop")
+    stale = idx["stale"] + jnp.sum((act & ~found).astype(jnp.int32))
+    return {"rid": rid, "key": key, "stale": stale}

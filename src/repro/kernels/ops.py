@@ -4,6 +4,14 @@ back to the pure-jnp oracle (speed) — selectable per call site.
 
 The model/serving layers call through here so a single switch flips the
 whole system between reference and kernel paths.
+
+The cache-daemon executors call through here too, and since PR 7 they
+may be traced UNDER ``shard_map`` (core/shards.py fan-out on a lane
+mesh): every op in this module — including ``shard_split``, which the
+sharded INSERT path runs on the assembled global batch — must therefore
+stay shard-local (no implicit collectives; reductions over the lane
+axis happen in the merge AFTER the mapped body returns). The jnp
+fallbacks and interpret-mode Pallas calls both satisfy this.
 """
 from __future__ import annotations
 

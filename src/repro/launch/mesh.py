@@ -1,9 +1,44 @@
 """Production meshes. A FUNCTION (not a module constant) so importing this
 module never touches jax device state — the dry-run forces 512 host
-devices before first jax init; tests see the single real CPU device."""
+devices before first jax init; tests see the single real CPU device.
+
+Besides the model-stack meshes this module owns the cache daemon's
+placement mesh: :func:`make_lane_mesh` is a 1-D ``"lane"`` mesh over
+which ``core/shards.py`` places one execution lane (= shard state
+pytree) per device via ``shard_map``."""
 from __future__ import annotations
 
+import functools
+
 import jax
+
+LANE_AXIS = "lane"
+
+
+@functools.lru_cache(maxsize=None)
+def make_lane_mesh(n_devices: int):
+    """1-D ``("lane",)`` mesh over the first ``n_devices`` local devices.
+
+    Cached so every table/executor sharing a device count sees the *same*
+    Mesh object (jit cache keys and NamedSharding comparisons stay cheap
+    and stable)."""
+    return jax.make_mesh((n_devices,), (LANE_AXIS,))
+
+
+def lane_mesh_for(n_shards: int, n_devices: int | None = None):
+    """The daemon's placement mesh for an ``n_shards``-way table, or
+    ``None`` when placement is pointless (one device would hold all
+    lanes).
+
+    Policy: use ``d`` devices where ``d`` is the largest divisor of
+    ``n_shards`` with ``d <= min(n_shards, local device count)`` — each
+    device then owns a contiguous block of ``n_shards // d`` lanes, so
+    assembled state splits evenly along the leading lane axis."""
+    if n_devices is None:
+        n_devices = jax.local_device_count()
+    lim = min(int(n_shards), int(n_devices))
+    d = max((k for k in range(1, lim + 1) if n_shards % k == 0), default=1)
+    return make_lane_mesh(d) if d > 1 else None
 
 
 def make_production_mesh(*, multi_pod: bool = False):

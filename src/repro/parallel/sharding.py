@@ -5,7 +5,11 @@ via :func:`shard_act`) to mesh axes.
 This is the GSPMD side of the distribution story (training / prefill):
 einsum-heavy graphs lower well under pjit with these constraints. The
 serving decode path uses ``shard_map`` instead (serving/engine.py) because
-its paged gathers must stay shard-local.
+its paged gathers must stay shard-local. Since PR 7 the cache daemon's
+sharded-table fan-out is a third client of the :func:`shard_map` compat
+shim below: ``core/shards.py`` lowers its per-lane map through it over
+the ``launch/mesh.py`` lane mesh, so the shim is now load-bearing for
+serving traffic, not just the model stack.
 
 Rules are *per-arch overridable*: a config may e.g. drop the
 ``heads -> model`` rule when its head count does not divide the model

@@ -92,3 +92,65 @@ def test_insert_update_matches_rebuild():
     # unique-entry invariant: no slot appears twice anywhere
     live = ra[ra >= 0]
     assert len(live) == len(set(live.tolist()))
+
+
+def _bucket_sets(rid, valid):
+    """Per-bucket LIVE entry sets (lane order is not part of the
+    contract — the batched re-home may place members in different lanes
+    than the slot-by-slot loop)."""
+    rid, valid = np.asarray(rid), np.asarray(valid)
+    return [{x for x in row if x >= 0 and valid[x]} for row in rid]
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_insert_update_batched_matches_loop(seed):
+    """The batched clear + rank-place pass (table.insert's
+    below-BULK_INDEX_THRESHOLD path) must agree with the sequential
+    per-slot loop on per-bucket membership and the stale count."""
+    cap = 300
+    rng, keys, valid = _mk(cap, seed)
+    nb = H.n_buckets_for(cap)
+    r, k, o = H.build_ref(keys, valid, n_buckets=nb)
+    idx = {"rid": r, "key": k, "stale": o}
+    n = 48  # a mid-size batch: > trivial, < BULK_INDEX_THRESHOLD region
+    slots = jnp.asarray(rng.choice(cap, n, replace=False), jnp.int32)
+    newk = jnp.asarray(rng.integers(-50, 50, n), jnp.int32)
+    mask = jnp.asarray(rng.random(n) < 0.9)
+    keys2 = keys.at[jnp.where(mask, slots, cap)].set(newk, mode="drop")
+    valid2 = valid.at[jnp.where(mask, slots, cap)].set(True, mode="drop")
+    seq = H.insert_update(idx, slots, keys[slots], keys2[slots], mask,
+                          valid2)
+    bat = H.insert_update_batched(idx, slots, keys[slots], keys2[slots],
+                                  mask, valid2)
+    assert int(bat["stale"]) == int(seq["stale"])
+    assert _bucket_sets(bat["rid"], valid2) == _bucket_sets(
+        seq["rid"], valid2)
+    live = np.asarray(bat["rid"])
+    live = live[live >= 0]
+    assert len(live) == len(set(live.tolist()))
+
+
+def test_insert_update_batched_overflow_stale_matches_loop():
+    """Re-homing into an already-overflowing bucket: members whose old
+    entry was IN the bucket reuse their freed lane, overflow victims
+    fail and count stale — identically in both implementations."""
+    cap = 512
+    keys = jnp.full((cap,), 3, jnp.int32)  # every row in ONE bucket
+    valid = jnp.ones((cap,), dtype=bool)
+    nb = H.n_buckets_for(cap)
+    r, k, o = H.build_ref(keys, valid, n_buckets=nb)
+    assert int(o) == cap - H.BUCKET_CAP
+    idx = {"rid": r, "key": k, "stale": o}
+    # build_ref fills the bucket with rows 0..BUCKET_CAP-1; mix slots
+    # that hold a lane with slots that were overflow victims
+    slots = jnp.asarray([0, 5, 100, 200, 400, 510], jnp.int32)
+    newk = jnp.full((6,), 3, jnp.int32)    # same full bucket again
+    mask = jnp.ones((6,), dtype=bool)
+    seq = H.insert_update(idx, slots, keys[slots], newk, mask, valid)
+    bat = H.insert_update_batched(idx, slots, keys[slots], newk, mask,
+                                  valid)
+    # 3 in-bucket members reuse their own freed lanes; 3 victims stay out
+    assert int(seq["stale"]) == int(o) + 3
+    assert int(bat["stale"]) == int(seq["stale"])
+    assert _bucket_sets(bat["rid"], valid) == _bucket_sets(
+        seq["rid"], valid)

@@ -1,0 +1,301 @@
+"""Randomized mesh-vs-single-device parity: the same statement stream
+through a mesh-PLACED sharded table (one execution lane per device,
+fan-out under shard_map — ``SQLCached(mesh_exec=True)``) and the same
+sharded table unplaced on one device (``mesh_exec=False``, the PR-5/6
+regime) must agree on every observable — counts, row multisets,
+aggregates, TTL and op-interval expiry, RESHARD across device counts,
+checkpoint/restore across mesh sizes, and the stale-index fallback.
+
+Runs only when more than one device is visible — scripts/ci.sh forces
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``; under the plain
+tier-1 run (one device) the whole module skips."""
+import json
+import os
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core.daemon import SQLCached
+
+pytestmark = pytest.mark.skipif(
+    jax.device_count() <= 1,
+    reason="mesh parity needs >1 device "
+           "(XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+
+CAP = 256
+COLS = "(k INT, w INT, v INT"
+
+
+def _p_key(rng):
+    return (int(rng.integers(0, 12)),)
+
+
+def _p_w(rng):
+    return (int(rng.integers(0, 40)),)
+
+
+TEMPLATES = [
+    ("SELECT k, w, v FROM t WHERE k = ?", _p_key),          # pruned probe
+    ("SELECT k, w FROM t WHERE w = ?", _p_w),               # fan-out eq
+    ("SELECT k, w FROM t WHERE k = ? AND w >= ?",
+     lambda r: (_p_key(r)[0], _p_w(r)[0])),                 # pruned+residual
+    ("SELECT k, w FROM t WHERE w BETWEEN ? AND ?",
+     lambda r: tuple(sorted((_p_w(r)[0], _p_w(r)[0] + 10)))),
+    ("SELECT k, w FROM t ORDER BY w DESC LIMIT 7", lambda r: ()),
+    ("SELECT COUNT(*) FROM t WHERE k = ?", _p_key),
+    ("SELECT SUM(w) FROM t WHERE w < ?", _p_w),
+    ("SELECT AVG(w) FROM t WHERE k = ?", _p_key),
+    ("SELECT MIN(v) FROM t", lambda r: ()),
+    ("SELECT MAX(w) FROM t WHERE k = ?", _p_key),
+    ("UPDATE t SET w = w + 3 WHERE k = ?", _p_key),         # pruned update
+    ("UPDATE t SET v = v * 2 WHERE w = ?", _p_w),           # fan-out update
+    ("DELETE FROM t WHERE k = ?", _p_key),                  # pruned delete
+    ("DELETE FROM t WHERE w = ?", _p_w),                    # fan-out delete
+]
+
+
+def _mk_pair(shards: int, indexed: bool, ttl_default: int = 0,
+             cap: int = CAP, extra_opts: str = ""):
+    """(mesh-placed db, single-device db) over IDENTICAL sharded
+    schemas — the only variable is lane placement."""
+    opts = f" TTL {ttl_default}" if ttl_default else ""
+    idx = ", INDEX(k)" if indexed else ""
+    dbs = []
+    for mesh in (True, False):
+        db = SQLCached(mesh_exec=mesh)
+        db.execute(f"CREATE TABLE t {COLS}{idx}) CAPACITY {cap} "
+                   f"MAX_SELECT {cap}{opts}{extra_opts} "
+                   f"SHARDS {shards} PARTITION BY k")
+        dbs.append(db)
+    assert dbs[0].tables["t"].mesh is not None  # placement really on
+    assert dbs[1].tables["t"].mesh is None
+    return dbs
+
+
+def _insert_batch(dbs, rng, ttl=False):
+    m = int(rng.integers(3, 12))
+    rows = [(int(rng.integers(0, 12)), int(rng.integers(0, 40)),
+             int(rng.integers(-5, 5))) for _ in range(m)]
+    sql = "INSERT INTO t (k, w, v) VALUES (?, ?, ?)"
+    if ttl:
+        sql += " TTL ?"
+        rows = [r + (int(rng.integers(1, 8)),) for r in rows]
+    outs = [db.executemany(sql, rows) for db in dbs]
+    assert outs[0].count == outs[1].count == m
+
+
+def _check_select(res_m, res_s):
+    assert res_m.count == res_s.count
+    if res_m.rows is None:
+        assert res_m.value == pytest.approx(res_s.value)
+        return
+    rows_m = sorted(tuple(sorted(r.items())) for r in res_m.rows)
+    rows_s = sorted(tuple(sorted(r.items())) for r in res_s.rows)
+    assert rows_m == rows_s
+
+
+@pytest.mark.parametrize("shards", [2, 4])
+@pytest.mark.parametrize("indexed", [False, True])
+def test_random_stream_parity(shards, indexed):
+    rng = np.random.default_rng(31 + 100 * shards + int(indexed))
+    db_m, db_s = _mk_pair(shards, indexed)
+    _insert_batch((db_m, db_s), rng)
+    for _ in range(20):
+        op = rng.integers(0, 5)
+        if op == 0:
+            _insert_batch((db_m, db_s), rng)
+            continue
+        sql, mkp = TEMPLATES[int(rng.integers(0, len(TEMPLATES)))]
+        params = mkp(rng)
+        r_m = db_m.execute(sql, params)
+        r_s = db_s.execute(sql, params)
+        if sql.startswith("SELECT"):
+            _check_select(r_m, r_s)
+        else:
+            assert r_m.count == r_s.count, sql
+    assert db_m.live_rows("t") == db_s.live_rows("t")
+
+
+def test_batched_paths_parity():
+    """The executemany micro-batch executors on a mesh (the wire
+    scheduler's dispatch surface) agree with single-device, per
+    statement — including the vmapped probe route under shard_map."""
+    rng = np.random.default_rng(7)
+    db_m, db_s = _mk_pair(4, indexed=True)
+    _insert_batch((db_m, db_s), rng)
+    _insert_batch((db_m, db_s), rng)
+    qs = [(k,) for k in (0, 3, 9, 42)]
+    for sql in ("SELECT w FROM t WHERE k = ?",
+                "SELECT w, v FROM t WHERE w = ?",
+                "SELECT COUNT(*) FROM t WHERE k = ?",
+                "SELECT SUM(w) FROM t WHERE k = ?"):
+        b_m = db_m.executemany(sql, qs)
+        b_s = db_s.executemany(sql, qs)
+        for r_m, r_s in zip(b_m, b_s):
+            _check_select(r_m, r_s)
+    upd = [(1,), (3,), (77,)]
+    u_m = db_m.executemany("UPDATE t SET w = w + 100 WHERE k = ?", upd,
+                           per_statement=True)
+    u_s = db_s.executemany("UPDATE t SET w = w + 100 WHERE k = ?", upd,
+                           per_statement=True)
+    assert [r.count for r in u_m] == [r.count for r in u_s]
+    d_m = db_m.executemany("DELETE FROM t WHERE w = ?", [(5,), (6,)])
+    d_s = db_s.executemany("DELETE FROM t WHERE w = ?", [(5,), (6,)])
+    assert d_m.count == d_s.count
+    assert db_m.live_rows("t") == db_s.live_rows("t")
+
+
+def test_ttl_expire_parity():
+    rng = np.random.default_rng(3)
+    db_m, db_s = _mk_pair(4, indexed=False)
+    for _ in range(3):
+        _insert_batch((db_m, db_s), rng, ttl=True)
+    for db in (db_m, db_s):
+        db.advance_clock(4, "t")
+    r_m = db_m.execute("EXPIRE t")
+    r_s = db_s.execute("EXPIRE t")
+    assert r_m.count == r_s.count
+    assert db_m.live_rows("t") == db_s.live_rows("t")
+    _check_select(db_m.execute("SELECT k, w FROM t WHERE k = ?", (3,)),
+                  db_s.execute("SELECT k, w FROM t WHERE k = ?", (3,)))
+
+
+def test_ops_interval_stream_parity():
+    """Op-count auto-expiry on a mesh: the fused expiry cond and the
+    per-lane deferral replay both run under shard_map — observables
+    must match the single-device lanes statement for statement."""
+    rng = np.random.default_rng(23)
+    db_m, db_s = _mk_pair(4, indexed=False, ttl_default=30,
+                          extra_opts=" OPS_INTERVAL 8")
+    _insert_batch((db_m, db_s), rng)
+    for i in range(30):
+        k = int(rng.integers(0, 12))
+        r_m = db_m.execute("SELECT k, w FROM t WHERE k = ?", (k,))
+        r_s = db_s.execute("SELECT k, w FROM t WHERE k = ?", (k,))
+        _check_select(r_m, r_s)
+        if i % 10 == 9:
+            _insert_batch((db_m, db_s), rng)
+    db_m.execute("EXPIRE t"), db_s.execute("EXPIRE t")
+    assert db_m.live_rows("t") == db_s.live_rows("t")
+    _check_select(db_m.execute("SELECT k, w, v FROM t"),
+                  db_s.execute("SELECT k, w, v FROM t"))
+
+
+def test_reshard_across_device_counts():
+    """RESHARD n->m re-splits through one device and RE-places on the
+    new shard count's mesh — every step must keep contents and the
+    pruned/fan-out observables in lockstep with single-device."""
+    rng = np.random.default_rng(41)
+    db_m, db_s = _mk_pair(4, indexed=True)
+    for _ in range(3):
+        _insert_batch((db_m, db_s), rng)
+    for new_n in (8, 2, 1, 4):
+        r_m = db_m.execute(f"ALTER TABLE t RESHARD {new_n}")
+        r_s = db_s.execute(f"ALTER TABLE t RESHARD {new_n}")
+        assert r_m.count == r_s.count
+        t = db_m.tables["t"]
+        if new_n > 1:
+            # the mesh follows the shard count (largest divisor <= 8)
+            assert t.mesh is not None
+            assert len(t.mesh.devices.reshape(-1)) == min(
+                new_n, jax.device_count())
+        else:
+            assert t.mesh is None
+        _check_select(
+            db_m.execute("SELECT k, w, v FROM t WHERE k = ?", (3,)),
+            db_s.execute("SELECT k, w, v FROM t WHERE k = ?", (3,)))
+        _check_select(
+            db_m.execute("SELECT k, w FROM t WHERE w < ?", (20,)),
+            db_s.execute("SELECT k, w FROM t WHERE w < ?", (20,)))
+        assert db_m.live_rows("t") == db_s.live_rows("t")
+
+
+def test_checkpoint_restore_across_mesh_sizes(tmp_path):
+    """A checkpoint taken from a mesh-placed table restores onto a
+    DIFFERENT mesh size (different shard count, or no mesh at all) and
+    vice versa — contents round-trip exactly."""
+    rng = np.random.default_rng(43)
+    db_m, db_s = _mk_pair(4, indexed=True)
+    for _ in range(3):
+        _insert_batch((db_m, db_s), rng)
+    snap = str(tmp_path / "snap4")
+    db_m.execute(f"CHECKPOINT t TO '{snap}'")
+    # restore the 4-lane mesh snapshot into 2-shard tables (mesh + not)
+    for db in (db_m, db_s):
+        db.execute("ALTER TABLE t RESHARD 2")
+        db.execute(f"RESTORE t FROM '{snap}'")
+    _check_select(db_m.execute("SELECT k, w, v FROM t WHERE w >= ?", (0,)),
+                  db_s.execute("SELECT k, w, v FROM t WHERE w >= ?", (0,)))
+    # and back up onto a WIDER mesh than the snapshot's
+    snap2 = str(tmp_path / "snap2")
+    db_s.execute(f"CHECKPOINT t TO '{snap2}'")
+    for db in (db_m, db_s):
+        db.execute("ALTER TABLE t RESHARD 8")
+        db.execute(f"RESTORE t FROM '{snap2}'")
+    _check_select(db_m.execute("SELECT k, w, v FROM t WHERE w >= ?", (0,)),
+                  db_s.execute("SELECT k, w, v FROM t WHERE w >= ?", (0,)))
+    _check_select(db_m.execute("SELECT COUNT(*) FROM t WHERE k = ?", (5,)),
+                  db_s.execute("SELECT COUNT(*) FROM t WHERE k = ?", (5,)))
+    assert db_m.live_rows("t") == db_s.live_rows("t")
+
+
+def test_stale_index_fallback_parity():
+    """A duplicate burst overflows one hash bucket (stale > 0): probes
+    on BOTH regimes must take the scan fallback and agree; REINDEX
+    after deleting the burst recovers on both."""
+    db_m, db_s = _mk_pair(4, indexed=True, cap=2048)
+    burst = [(7, i, 0) for i in range(140)]  # one bucket, > BUCKET_CAP
+    mix = [(k, k, 1) for k in range(12) if k != 7]
+    for db in (db_m, db_s):
+        db.executemany("INSERT INTO t (k, w, v) VALUES (?, ?, ?)",
+                       burst + mix)
+    ex_m = json.loads(db_m.execute(
+        "EXPLAIN SELECT w FROM t WHERE k = 7").value)
+    ex_s = json.loads(db_s.execute(
+        "EXPLAIN SELECT w FROM t WHERE k = 7").value)
+    assert ex_m["stale"] == ex_s["stale"] > 0
+    for k in (7, 3, 42):
+        _check_select(
+            db_m.execute("SELECT w FROM t WHERE k = ?", (k,)),
+            db_s.execute("SELECT w FROM t WHERE k = ?", (k,)))
+    for db in (db_m, db_s):
+        db.execute("DELETE FROM t WHERE k = ?", (7,))
+    r_m, r_s = db_m.execute("REINDEX t"), db_s.execute("REINDEX t")
+    assert r_m.value == r_s.value == 0
+    _check_select(db_m.execute("SELECT k, w FROM t WHERE k = ?", (3,)),
+                  db_s.execute("SELECT k, w FROM t WHERE k = ?", (3,)))
+
+
+def test_show_stats_devices_and_nonblocking_snapshot():
+    """SHOW STATS on a mesh reports each lane's device id (host-side
+    placement metadata) and its live-rows snapshot is a pure read: it
+    must not replace or sync the lane handles a concurrent dispatch is
+    about to use, and lazy in-flight results stay valid across it."""
+    rng = np.random.default_rng(47)
+    db_m, db_s = _mk_pair(4, indexed=False)
+    _insert_batch((db_m, db_s), rng)
+    t = db_m.tables["t"]
+    # in-flight lazy result (not materialized yet) ...
+    pending = db_m.execute("SELECT COUNT(*) FROM t WHERE w < ?", (999,))
+    before = [id(lane) for lane in t.lanes]
+    st = json.loads(db_m.execute("SHOW STATS t").value)
+    n_dev = min(4, jax.device_count())
+    assert st["devices"] == n_dev
+    assert [p["device"] for p in st["per_shard"]] == [
+        i // (4 // n_dev) for i in range(4)]
+    assert sum(p["live_rows"] for p in st["per_shard"]) \
+        == db_s.live_rows("t")
+    # ... the snapshot read replaced nothing (pure read) and the
+    # pending dispatch's result is still exactly right
+    assert [id(lane) for lane in t.lanes] == before
+    assert pending.value == db_s.execute(
+        "SELECT COUNT(*) FROM t WHERE w < ?", (999,)).value
+    # EXPLAIN reports placement for pruned vs fan-out routes
+    ex = json.loads(db_m.execute(
+        "EXPLAIN SELECT w FROM t WHERE k = 3").value)
+    assert "device" in ex and "pruned" in ex["shard_route"]
+    ex = json.loads(db_m.execute(
+        "EXPLAIN SELECT w FROM t WHERE w = 3").value)
+    assert ex["devices"] == n_dev
