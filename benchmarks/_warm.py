@@ -1,0 +1,48 @@
+"""Shared executor warm-up for benchmarks (PR 8).
+
+Every benchmark used to hand-roll its own unmeasured warm loop. The
+daemon now pre-plans executors first-class (``WARMUP t [LIKE ...]`` →
+core/execache.py), so the common recipe lives here:
+
+* ``WARMUP t`` pre-plans the canonical singleton shapes for every
+  placed lane device;
+* ``WARMUP t LIKE '<stmt>'`` pre-plans any extra singleton shape a
+  bench hits (e.g. a LIMIT select or an UPDATE);
+* batched executors are keyed by their power-of-two bucket width,
+  which singleton avals cannot cover — those are warmed by DRIVING
+  each batch statement once per bucket (``batches`` sweeps).
+
+``flush=True`` ends with FLUSH + drain so timing starts from an empty,
+fully pre-planned table (FLUSH deliberately does NOT retire compiled
+executables — contents change, shapes don't)."""
+from __future__ import annotations
+
+from typing import Callable, Sequence
+
+
+def _quote(stmt: str) -> str:
+    return stmt.replace("'", "''")
+
+
+def warm(db, table: str, *, like: Sequence[str] = (),
+         batches: Sequence[tuple[str, Callable[[int], list]]] = (),
+         max_batch: int = 0, flush: bool = True) -> int:
+    """Pre-plan ``table``'s executors; returns newly compiled count
+    (singleton shapes only — bucket sweeps compile lazily on dispatch).
+
+    ``batches``: (sql, params_for) pairs where ``params_for(b)`` yields
+    the b-row parameter list for one warm dispatch of bucket ``b``."""
+    new = db.execute(f"WARMUP {table}").count
+    for stmt in like:
+        new += db.execute(f"WARMUP {table} LIKE '{_quote(stmt)}'").count
+    b = 1
+    while b <= max_batch:
+        for sql, params_for in batches:
+            res = db.executemany(sql, params_for(b), per_statement=True)
+            for r in res:       # realize rows so lazy results detrace
+                getattr(r, "rows", None)
+        b *= 2
+    if flush:
+        db.execute(f"FLUSH {table}")
+    db.drain(table)
+    return new

@@ -57,6 +57,11 @@ from repro.core import shards as SH
 from repro.core.daemon import SQLCached
 from repro.core.scheduler import BatchScheduler
 
+try:
+    from benchmarks import _warm as WB
+except ImportError:  # direct script invocation
+    import _warm as WB
+
 REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
 
 N_SHARDS = 4
@@ -121,23 +126,20 @@ def _variant_streams(sid: int, rounds: int) -> dict:
 
 
 def _warm(db: SQLCached) -> None:
-    """Compile every executor shape both regimes will hit (lane AND
-    stacked modes, all bucket sizes) before timing."""
+    """Pre-plan every executor shape both regimes will hit (lane AND
+    stacked modes, all bucket sizes) before timing: WARMUP covers the
+    singleton shapes per device, the bucket sweep drives the batched
+    executors (benchmarks/_warm.py)."""
     db.execute(_CREATE)
     for sid in range(N_SHARDS):
         keys = _shard_keys(sid, 4)
-        db.execute(_INSERT, (keys[0], sid))
-        db.execute(_UPDATE, (keys[0],))
-        db.execute(_DELETE, (keys[0],))
-        b = 1
-        while b <= 2 * MAX_BATCH:  # covers the padded bucket sizes too
-            db.executemany(_INSERT, [(keys[0], sid)] * b,
-                           per_statement=True)
-            db.executemany(_UPDATE, [(keys[0],)] * b,
-                           per_statement=True)
-            db.executemany(_DELETE, [(keys[1],)] * b,
-                           per_statement=True)
-            b *= 2
+        WB.warm(db, "lt", like=(_UPDATE,) if sid == 0 else (),
+                batches=[(_INSERT,
+                          lambda b, k=keys[0], s=sid: [(k, s)] * b),
+                         (_UPDATE, lambda b, k=keys[0]: [(k,)] * b),
+                         (_DELETE, lambda b, k=keys[1]: [(k,)] * b)],
+                max_batch=2 * MAX_BATCH,  # covers padded buckets too
+                flush=False)
     db.execute("FLUSH lt")
     db.drain("lt")
 

@@ -79,11 +79,12 @@ class _ExecTimer:
         self.lats: list = []
 
     def warm(self) -> None:
-        """One pass over every query key: compiles the executor for
-        every device a pruned route can land on (jit specializes per
-        committed device)."""
-        for k in self._ks:
-            self._db.execute(self._sql, (k,))
+        """Pre-plan this statement's executor on every device a pruned
+        route can land on — one WARMUP LIKE statement (core/execache.py
+        compiles per placed lane device from abstract avals; no real
+        traffic needed)."""
+        self._db.execute(
+            "WARMUP mt LIKE '" + self._sql.replace("'", "''") + "'")
 
     def step(self, i: int) -> None:
         k = self._ks[i % len(self._ks)]

@@ -37,6 +37,11 @@ import numpy as np
 from repro.core.daemon import SQLCached
 from repro.core.protocol import SQLCachedClient, ThreadedServer
 
+try:
+    from benchmarks import _warm as WB
+except ImportError:  # direct script invocation
+    import _warm as WB
+
 REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
 
 N_CONN = 8
@@ -70,24 +75,18 @@ def _client_ops(w: int, m: int) -> list[tuple[str, tuple]]:
 
 
 def _warm(db: SQLCached) -> None:
-    """Compile every executor the run can hit (singleton paths + all
-    power-of-two batch buckets up to the scheduler's max group) so the
-    timed region measures dispatch, not tracing."""
+    """Pre-plan every executor the run can hit: WARMUP covers the
+    singleton shapes (LIKE for the LIMIT select, which is outside the
+    canonical set), the bucket sweep the power-of-two batch executors
+    up to the scheduler's max group (benchmarks/_warm.py) — so the
+    timed region measures the protocol, not jit."""
     db.execute(_CREATE)
-    db.execute(_INSERT, (0, 0))
-    db.execute(_SELECT, (0,)).rows
-    db.execute(_DELETE, (0,))
-    b = 1
-    while b <= WINDOW:
-        db.executemany(_INSERT, [(i + 10, 0) for i in range(b)],
-                       per_statement=True)
-        for r in db.executemany(_SELECT, [(10,)] * b):
-            r.rows
-        db.executemany(_DELETE, [(i + 10,) for i in range(b)],
-                       per_statement=True)
-        b *= 2
-    db.execute("FLUSH bench")
-    db.drain("bench")
+    WB.warm(
+        db, "bench", like=(_SELECT,),
+        batches=[(_INSERT, lambda b: [(i + 10, 0) for i in range(b)]),
+                 (_SELECT, lambda b: [(10,)] * b),
+                 (_DELETE, lambda b: [(i + 10,) for i in range(b)])],
+        max_batch=WINDOW)
 
 
 def _drive_sync(addr, w: int, m: int, lats: list) -> None:

@@ -3,10 +3,11 @@
 ``python -m benchmarks.run [--json] [--quick] [--check]``
 
 --json   run fig1 + table2 + protocol + index + shard + lane + cluster
-         + mesh in JSON mode and write ``BENCH_fig1.json`` / ``BENCH_
-         table2.json`` / ``BENCH_protocol.json`` / ``BENCH_index.
-         json`` / ``BENCH_shard.json`` / ``BENCH_lane.json`` /
-         ``BENCH_cluster.json`` / ``BENCH_mesh.json`` to the repo root
+         + mesh + serve in JSON mode and write ``BENCH_fig1.json`` /
+         ``BENCH_table2.json`` / ``BENCH_protocol.json`` / ``BENCH_
+         index.json`` / ``BENCH_shard.json`` / ``BENCH_lane.json`` /
+         ``BENCH_cluster.json`` / ``BENCH_mesh.json`` /
+         ``BENCH_serve.json`` to the repo root
          (ops/s resp. stmts/s, p50/p99 µs); these files are checked in
          so every PR's numbers are comparable. The mesh bench measures
          in a SUBPROCESS with ``XLA_FLAGS=--xla_force_host_platform_
@@ -68,6 +69,13 @@ CHECK_METRICS = [
     # dispatch without gating absolute latencies
     ("BENCH_mesh.json", "fanout_over_pruned_p50",
      lambda d: d["fanout_over_pruned_p50"], "lower"),
+    # pre-planned serving (execache): the steady tail must stay flat and
+    # a warmed first hit must stay near steady p50 — both same-run
+    # ratios, both clamped at 1.0 in the bench itself
+    ("BENCH_serve.json", "steady_p999_over_p50",
+     lambda d: d["steady_p999_over_p50"], "lower"),
+    ("BENCH_serve.json", "warm_first_hit_over_steady_p50",
+     lambda d: d["warm_first_hit_over_steady_p50"], "lower"),
 ]
 
 REGRESS_FACTOR = 2.0
@@ -121,7 +129,7 @@ def check() -> int:
     files; return the number of >2x regressions after one retry."""
     from benchmarks import (cluster_bench, fig1_kv_read, index_bench,
                             lane_bench, mesh_bench, protocol_bench,
-                            shard_bench)
+                            serve_bench, shard_bench)
 
     runners = {
         "BENCH_fig1.json": lambda: fig1_kv_read.run_json(quick=True),
@@ -136,6 +144,7 @@ def check() -> int:
             rounds=lane_bench.N_ROUNDS_QUICK),
         "BENCH_cluster.json": lambda: cluster_bench.run(quick=True),
         "BENCH_mesh.json": lambda: mesh_bench.run(quick=True),
+        "BENCH_serve.json": lambda: serve_bench.run(quick=True),
     }
     fresh = {name: fn() for name, fn in runners.items()}
     failing = _evaluate(fresh)
@@ -166,7 +175,7 @@ def main() -> None:
     if as_json:
         from benchmarks import (cluster_bench, fig1_kv_read, index_bench,
                                 lane_bench, mesh_bench, protocol_bench,
-                                shard_bench, table2_expiry)
+                                serve_bench, shard_bench, table2_expiry)
         args = ["--json"] + (["--quick"] if quick else [])
         print("=" * 72)
         print("== Paper Fig. 1 (JSON) -> BENCH_fig1.json")
@@ -192,6 +201,9 @@ def main() -> None:
         print("=" * 72)
         print("== Mesh placement, 8 forced devices (JSON) -> BENCH_mesh.json")
         mesh_bench.main(args)
+        print("=" * 72)
+        print("== Pre-planned serving, p999 tail (JSON) -> BENCH_serve.json")
+        serve_bench.main(args)
         return
 
     print("=" * 72)
@@ -239,6 +251,11 @@ def main() -> None:
     print("== Mesh placement: 1 vs 8 forced host devices")
     from benchmarks import mesh_bench
     mesh_bench.main(["--quick"] if quick else [])
+
+    print("=" * 72)
+    print("== Pre-planned serving: first-hit vs steady-state tail")
+    from benchmarks import serve_bench
+    serve_bench.main(["--quick"] if quick else [])
 
     if quick:
         return

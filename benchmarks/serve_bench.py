@@ -1,0 +1,236 @@
+"""Pre-planned statement serving: first-hit vs steady-state tail latency.
+
+The execache PR's checked-in property: with executors pre-planned
+(``WARMUP t`` → core/execache.py AOT-compiles per placed lane device),
+the FIRST wire hit of a statement shape replays a compiled executable —
+within ~2x of steady-state p50 — where a cold daemon pays a full XLA
+compile (100-1000x) inside the serving path. And at steady state the
+p999/p50 ratio stays flat: no compile or host-sync stall ever lands in
+the tail.
+
+Three measured phases, all through the batched wire path (ThreadedServer
++ BatchScheduler, the production stack):
+
+  cold    fresh daemon, no warm-up: per-shape first-hit round trip —
+          the XLA compile eaten inline (reference, ungated);
+  warm    fresh daemon, ``WARMUP sb`` over the wire first, then the
+          same per-shape first hits — replays, no compile;
+  steady  one sync connection driving a mixed INSERT/SELECT/DELETE
+          stream, per-statement round-trip latencies → p50/p99/p999
+          (single stream on purpose: concurrency queueing noise would
+          drown the stall signal the tail gate is after), plus an
+          N-connection concurrent phase for throughput context.
+
+``--json`` writes BENCH_serve.json at the repo root;
+``benchmarks/run.py --check`` gates ``steady_p999_over_p50`` and
+``warm_first_hit_over_steady_p50`` (both same-run ratios — machine
+speed cancels). ``--quick`` trims the steady sample count.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+import threading
+import time
+
+import numpy as np
+
+from repro.core.daemon import SQLCached
+from repro.core.protocol import SQLCachedClient, ThreadedServer
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+N_CONN = 8
+N_STEADY = 6000        # single-stream steady samples (p999 basis)
+N_STEADY_QUICK = 1500
+N_CONC = 500           # per connection, concurrent context phase
+N_CONC_QUICK = 250
+WINDOW = 64
+N_KEYS = 256
+
+N_FIRST_TABLES = 3     # fresh tables per first-hit measurement (median)
+
+
+def _create(table: str) -> str:
+    return (f"CREATE TABLE {table} (k INT, w INT, INDEX(k)) CAPACITY "
+            "4096 MAX_SELECT 8 SHARDS 4 PARTITION BY k")
+
+
+# the canonical web-cache trio — exactly the shapes CREATE-time warm-up
+# pre-plans, so WARMUP covers the whole steady workload
+def _shapes(table: str):
+    return (("insert", f"INSERT INTO {table} (k, w) VALUES (?, ?)",
+             (0, 0)),
+            ("select", f"SELECT * FROM {table} WHERE k = ?", (0,)),
+            ("delete", f"DELETE FROM {table} WHERE k = ?", (0,)))
+
+
+_INSERT, _SELECT, _DELETE = (s for _, s, _p in _shapes("sb"))
+
+
+def _first_hits_one(c: SQLCachedClient, table: str) -> dict:
+    """Per-shape first-hit round trip (µs) on an idle server. The PING
+    strips connection setup from the first measurement."""
+    c.ping()
+    out = {}
+    for name, sql, params in _shapes(table):
+        t0 = time.perf_counter()
+        c.execute(sql, params)
+        out[name] = round((time.perf_counter() - t0) * 1e6, 1)
+    return out
+
+
+def _first_hits(c: SQLCachedClient, tables: list[str]) -> dict:
+    """Genuine first hits, de-noised: each table sees each shape exactly
+    once (so every sample is a true first dispatch of a warmed shape),
+    and the per-shape median across tables kills single-sample jitter —
+    a one-shot measurement gated at 2x would flap on scheduler noise."""
+    runs = [_first_hits_one(c, t) for t in tables]
+    out = {name: round(float(np.median([r[name] for r in runs])), 1)
+           for name in runs[0]}
+    out["max"] = max(out.values())
+    return out
+
+
+def _steady_ops(m: int):
+    for i in range(m):
+        k = i % N_KEYS
+        yield (_INSERT, (k, i)) if i % 3 == 0 else (
+            (_SELECT, (k,)) if i % 3 == 1 else (_DELETE, (k,)))
+
+
+def _pcts(lats) -> dict:
+    a = np.asarray(lats)
+    return {"p50_us": round(float(np.percentile(a, 50)), 1),
+            "p99_us": round(float(np.percentile(a, 99)), 1),
+            "p999_us": round(float(np.percentile(a, 99.9)), 1),
+            "samples": int(a.size)}
+
+
+def _drive(addr, m: int, lats: list) -> None:
+    c = SQLCachedClient(*addr)
+    for sql, params in _steady_ops(m):
+        t0 = time.perf_counter()
+        c.execute(sql, params)
+        lats.append((time.perf_counter() - t0) * 1e6)
+    c.close()
+
+
+def _cold_phase() -> dict:
+    db = SQLCached(warmup=False)
+    db.execute(_create("sb"))
+    with ThreadedServer(db=db, batching=True, max_batch=WINDOW) as s:
+        c = SQLCachedClient(*s.addr)
+        hits = _first_hits(c, ["sb"])
+        c.close()
+    return hits
+
+
+def run(quick: bool = False) -> dict:
+    m = N_STEADY_QUICK if quick else N_STEADY
+    mc = N_CONC_QUICK if quick else N_CONC
+    cold = _cold_phase()
+
+    db = SQLCached(warmup=False)
+    tables = [f"sb{i}" for i in range(N_FIRST_TABLES)]
+    db.execute(_create("sb"))
+    for t in tables:
+        db.execute(_create(t))
+    # a scratch table warms the GENERIC host plumbing (wire loop,
+    # scheduler, dispatch path, jax runtime) the way real bootstrap
+    # traffic would on a joining node — so the sb first-hit numbers
+    # isolate the per-shape executor cost the cache is about, not
+    # process-lifetime one-time python costs shared by every shape
+    db.execute("CREATE TABLE scratch (a INT, b INT, INDEX(a)) "
+               "CAPACITY 64")
+    with ThreadedServer(db=db, batching=True, max_batch=WINDOW) as s:
+        c = SQLCachedClient(*s.addr)
+        for i in range(3):
+            c.execute("INSERT INTO scratch (a, b) VALUES (?, ?)", (i, i))
+            c.execute("SELECT * FROM scratch WHERE a = ?", (i,))
+            c.execute("DELETE FROM scratch WHERE a = ?", (i,))
+        t0 = time.perf_counter()
+        warm_res = c.warmup("sb")
+        warmup_ms = round((time.perf_counter() - t0) * 1e3, 1)
+        assert warm_res["count"] > 0, "WARMUP compiled nothing"
+        for t in tables:
+            c.warmup(t)
+        warm = _first_hits(c, tables)
+
+        # steady state: single sync stream, per-statement round trips
+        lats: list[float] = []
+        t0 = time.perf_counter()
+        for sql, params in _steady_ops(m):
+            t1 = time.perf_counter()
+            c.execute(sql, params)
+            lats.append((time.perf_counter() - t1) * 1e6)
+        wall = time.perf_counter() - t0
+        steady = _pcts(lats)
+        steady["stmts_per_s"] = round(m / wall, 1)
+
+        # concurrent context: N sync connections through the batcher
+        lat_lists: list[list] = [[] for _ in range(N_CONN)]
+        threads = [threading.Thread(target=_drive,
+                                    args=(s.addr, mc, lat_lists[w]))
+                   for w in range(N_CONN)]
+        t0 = time.perf_counter()
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        conc_wall = time.perf_counter() - t0
+        conc = _pcts([u for ls in lat_lists for u in ls])
+        conc["stmts_per_s"] = round(N_CONN * mc / conc_wall, 1)
+
+        execs = c.execute("SHOW STATS sb")["value"]["executors"]
+        c.close()
+
+    p50 = steady["p50_us"]
+    return {
+        "bench": "serve",
+        "quick": quick,
+        "latency_basis": "per-statement sync round trip over the "
+                         "batched wire path",
+        "cold_first_hit_us": cold,
+        "warmup_roundtrip_ms": warmup_ms,
+        "warm_first_hit_us": warm,
+        "steady": steady,
+        "concurrent": conc,
+        "executors": execs,
+        # gated ratios (same-run; machine speed cancels). Both clamped
+        # at 1.0 — beating p50 is fine, only degradation gates.
+        "steady_p999_over_p50": round(
+            max(1.0, steady["p999_us"] / p50), 2),
+        "warm_first_hit_over_steady_p50": round(
+            max(1.0, warm["max"] / p50), 2),
+        # reference: what a cold first hit costs without pre-planning
+        "cold_first_hit_over_steady_p50": round(cold["max"] / p50, 1),
+    }
+
+
+def main(argv=None):
+    argv = sys.argv[1:] if argv is None else argv
+    res = run(quick="--quick" in argv)
+    if "--json" in argv:
+        path = REPO_ROOT / "BENCH_serve.json"
+        path.write_text(json.dumps(res, indent=2) + "\n")
+        print(json.dumps(res, indent=2))
+        print(f"# wrote {path}")
+        return res
+    print("# serve: first-hit vs steady state (batched wire path)")
+    print(f"cold first-hit us: {res['cold_first_hit_us']}")
+    print(f"warm first-hit us: {res['warm_first_hit_us']} "
+          f"(WARMUP round trip {res['warmup_roundtrip_ms']}ms)")
+    st = res["steady"]
+    print(f"steady: p50={st['p50_us']} p99={st['p99_us']} "
+          f"p999={st['p999_us']} ({st['stmts_per_s']} stmts/s, "
+          f"{st['samples']} samples)")
+    print(f"# p999/p50 {res['steady_p999_over_p50']}x, warm first-hit "
+          f"{res['warm_first_hit_over_steady_p50']}x p50, cold "
+          f"{res['cold_first_hit_over_steady_p50']}x p50")
+    return res
+
+
+if __name__ == "__main__":
+    main()

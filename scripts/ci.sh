@@ -19,10 +19,14 @@
 #    places one lane per device (core/daemon.py mesh placement), so the
 #    WHOLE suite exercises the shard_map execution path that a
 #    single-device dev box would silently skip;
-# 5. re-runs the quick benches IN MEMORY and fails if any curated
+# 5. runs the pre-planned serving bench (quick) standalone — the
+#    WARMUP/first-hit path must at least complete even before its
+#    BENCH_serve.json ratios are gated in step 6;
+# 6. re-runs the quick benches IN MEMORY and fails if any curated
 #    BENCH_*.json ratio metric regressed more than 2x vs the checked-in
 #    values (see benchmarks/run.py CHECK_METRICS — ratios, not absolute
-#    latencies, so machine speed cancels to first order). A bench file
+#    latencies, so machine speed cancels to first order; the serve
+#    bench gates steady p999/p50 and warm first-hit/p50). A bench file
 #    that does not exist yet only warns (bootstrap). BENCH_mesh.json's
 #    gated metric is produced by a subprocess that forces 8 host
 #    devices itself — no XLA_FLAGS needed here.
@@ -59,6 +63,9 @@ XLA_FLAGS="$MESH_DEVICES" python -m pytest -x -q
 echo "== mesh regime: scheduler suite + mesh parity under 8 devices"
 XLA_FLAGS="$MESH_DEVICES" REPRO_SCHED_CONCURRENCY=1 \
     python -m pytest -x -q $SCHED_SUITE tests/test_mesh_parity.py
+
+echo "== serve bench: pre-planned serving + p999 tail (quick)"
+python -m benchmarks.serve_bench --quick
 
 echo "== perf gate: benchmarks/run.py --quick --check"
 python -m benchmarks.run --quick --check

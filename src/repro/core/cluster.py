@@ -716,6 +716,31 @@ class ClusterClient(_ClusterBase):
     def pipeline(self) -> "ClusterPipeline":
         return ClusterPipeline(self)
 
+    def warmup(self, table: str, like: str | None = None) -> int:
+        """Pre-plan ``table``'s executors on EVERY live node serving it
+        (``WARMUP t [LIKE ...]`` fan-out — reads load-balance across
+        replicas, so a single-node WARMUP would leave the others cold).
+        Returns the total number of newly compiled executables."""
+        sql = f"WARMUP {table}"
+        if like is not None:
+            sql += " LIKE '" + like.replace("'", "''") + "'"
+        members: set[str] = set()
+        meta = self._tables.get(table)
+        if meta is not None:
+            for mem in meta.groups.values():
+                members.update(mem)
+        else:
+            members.update(self._ring.nodes)
+        new = 0
+        for node in sorted(members):
+            if node in self._down:
+                continue
+            try:
+                new += int(self._exec_on(node, sql)["count"])
+            except (ConnectionError, OSError):
+                self._fail_node(node)
+        return new
+
     def ping_all(self, deadline: float | None = None) -> dict[str, bool]:
         """Probe every ring node; marks failures down (and successful
         probes up). The sync health check behind SHOW CLUSTER."""
@@ -847,6 +872,10 @@ class ClusterClient(_ClusterBase):
                                            if name in mem])
             self._trim_losers(t, meta, old[t], new_groups, exclude=(name,))
             meta.groups = new_groups
+            # pre-plan the joiner's executors before the ring routes
+            # traffic at it — a fresh node must not pay first-hit
+            # compiles inside the serving path (core/execache.py)
+            self._exec_on(name, f"WARMUP {t}")
             report[t] = {"gained": len(gained), "moved_rows": moved}
         return report
 

@@ -125,6 +125,37 @@ metadata (no device sync). ``SQLCached(mesh_exec=False)`` or
 ``REPRO_MESH=0`` disables placement (lanes stay on the default device
 — the PR-5/6 regime and the mesh bench's paired baseline).
 
+Pre-planned executors (PR 8)
+----------------------------
+
+Every statement executor lives in a per-table :class:`ExecutorCache`
+(``core/execache.py``) instead of a daemon-global dict. An entry wraps
+the lazy jitted callable together with **AOT-compiled** executables
+(``jitted.lower(...).compile()``) keyed by device placement, and the
+serving path replays the compiled executable directly — the live jit
+cache does not reuse AOT output, so a pre-planned shape never traces or
+compiles at dispatch. Lifecycle:
+
+* **key**: the old executor key (statement shape x exec mode x bucket)
+  plus the cache's *schema epoch*; RESHARD / REINDEX / RESTORE (mesh
+  re-placement) bump the epoch under the table lock, atomically retiring
+  every compiled executable — a stale executable is unreachable by
+  construction. FLUSH keeps the epoch: it changes contents, not shapes.
+* **warm-up**: ``CREATE TABLE`` spawns a background thread that
+  pre-compiles the canonical hot shapes (pruned eq-SELECT / INSERT /
+  DELETE on the partition + index columns) for every placed lane device,
+  from avals derived off the schema — no real state, no clock ticks, no
+  lock traffic. ``WARMUP t [LIKE '<stmt>']`` does the same synchronously
+  for operator-chosen shapes (the cluster tier issues it after
+  ``add_node`` bootstrap); ``drain_warmup()`` joins the background pass.
+* **observability**: ``SHOW STATS t`` reports the ``executors`` block
+  (cached/compiles/compile_ms_total/hits/misses), ``EXPLAIN <stmt>``
+  reports ``preplanned`` from the host-side signature set (never a
+  device sync), and the batch scheduler's admission hook
+  (:meth:`SQLCached.group_warm`) keeps groups whose executors are
+  still cold out of warm waves, so a compile can never stall commuting
+  groupmates.
+
 Skew + live re-partitioning
 ---------------------------
 
@@ -174,6 +205,7 @@ from repro.core import predicate as P
 from repro.core import shards as SH
 from repro.core import sqlparse as S
 from repro.core import table as T
+from repro.core.execache import ExecutorCache
 from repro.core.schema import ExpiryPolicy, TableSchema, make_schema
 
 
@@ -423,6 +455,9 @@ class _Table:
     stmt_routed: Any = None
     writes_routed: Any = None
     rows_in: Any = None
+    # per-table AOT executor cache (core/execache.py): entries are keyed
+    # under the cache's schema epoch — RESHARD/REINDEX/RESTORE bump it
+    execs: ExecutorCache = dataclasses.field(default_factory=ExecutorCache)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -473,7 +508,7 @@ def _np_terms_int(terms, param_cols) -> bool:
 
 class SQLCached:
     def __init__(self, auto_expire: bool = True, lane_exec: bool = True,
-                 mesh_exec: bool = True):
+                 mesh_exec: bool = True, warmup: bool | None = None):
         self.tables: dict[str, _Table] = {}
         self.interner = Interner()
         self.auto_expire = auto_expire
@@ -487,8 +522,15 @@ class SQLCached:
         # benchmarks/mesh_bench.py uses it as the paired baseline)
         self.mesh_exec = mesh_exec and os.environ.get("REPRO_MESH",
                                                       "1") != "0"
+        # warmup=None defers to REPRO_WARMUP (default on): CREATE TABLE
+        # pre-compiles the canonical hot shapes in a background thread.
+        # The unit-test suite turns it off (compiles it never replays);
+        # the explicit WARMUP statement works regardless.
+        if warmup is None:
+            warmup = os.environ.get("REPRO_WARMUP", "1") != "0"
+        self.warmup = warmup
+        self._warm_threads: dict[str, threading.Thread] = {}
         self._stmts: dict[str, S.Statement] = {}
-        self._execs: dict[tuple, Any] = {}
         self._shapes: dict[str, StatementShape] = {}
 
     # ------------------------------------------------------------- plumbing
@@ -518,12 +560,35 @@ class SQLCached:
             out.append(p)
         return tuple(out)
 
-    def _executor(self, key: tuple, builder):
-        fn = self._execs.get(key)
-        if fn is None:
-            fn = builder()
-            self._execs[key] = fn
-        return fn
+    def _executor(self, t: _Table, key: tuple, builder):
+        """The table's :class:`ExecEntry` for ``key`` under the current
+        schema epoch (core/execache.py) — a drop-in callable: hits
+        replay the AOT executable for the dispatch's placement, misses
+        compile-and-store from the concrete call args."""
+        return t.execs.get(key, builder)
+
+    def _placement(self, t: _Table, mode: str, sid) -> tuple:
+        """The host-side placement token an executor call keys its AOT
+        executable under: which device (mono/lane/stacked) or which mesh
+        (mesh mode) the state lives on. Pure metadata — no device sync."""
+        if mode == "mesh":
+            return ("mesh", tuple(d.id for d in t.mesh.devices.reshape(-1)))
+        if mode == "lane" and t.mesh is not None:
+            return ("dev",
+                    SH.lane_devices(t.mesh, t.schema.shards)[sid].id)
+        return ("dev", jax.devices()[0].id)
+
+    def _sig(self, t: _Table, stmt, kind: str, b, mode: str, sid) -> tuple:
+        """The dispatch signature recorded in ``t.execs.sigs`` after a
+        shape is planned: (kind, parsed stmt, bucket, mode, placement).
+        ``b`` is None on the singleton executors, the power-of-two bucket
+        on the executemany family (INSERT always buckets — ``execute``
+        routes single inserts through the batch path)."""
+        return (kind, stmt, b, mode, self._placement(t, mode, sid))
+
+    def _note_sig(self, t: _Table, stmt, kind: str, b, mode: str,
+                  sid) -> None:
+        t.execs.note_sig(self._sig(t, stmt, kind, b, mode, sid))
 
     def _jit_with_expiry(self, schema, base, eng=T):
         """Jit a statement executor ``base(state, *args) -> (state, *outs)``
@@ -754,8 +819,12 @@ class SQLCached:
         performs (1 per singleton/INSERT dispatch, the active statement
         count for micro-batches — exactly what the executor adds).
         Returns the executor's non-state outputs."""
+        # placement keys the entry's AOT executable; np.bool_ keeps the
+        # runtime flag aval identical to the warm path's placeholder
+        placement = self._placement(t, mode, sid)
+        flag = np.bool_(flag)
         if mode == "mono":
-            out = fn(t.state, flag, *args)
+            out = fn(t.state, flag, *args, placement=placement)
             t.state = out[0]
             return out[1:]
         n_sh = t.schema.shards
@@ -791,7 +860,7 @@ class SQLCached:
             if mode == "lane":
                 pre_d = -1 if pre_at is None else g0 - pre_at
                 out = fn(t.lanes[sid], flag, jnp.int32(g0 - old_tick),
-                         jnp.int32(pre_d), *args)
+                         jnp.int32(pre_d), *args, placement=placement)
                 with t.lock:  # commit atomically vs advance_clock et al
                     t.lanes[sid] = out[0]
                     if flag:
@@ -808,10 +877,12 @@ class SQLCached:
                 np.int32)
             if mode == "mesh":
                 glob = SH.assemble_lanes(t.mesh, t.lanes)
-                out = fn(glob, flag, deltas, pre_ds, *args)
+                out = fn(glob, flag, deltas, pre_ds, *args,
+                         placement=placement)
                 new_lanes = SH.disassemble_lanes(t.mesh, n_sh, out[0])
             else:
-                out = fn(tuple(t.lanes), flag, deltas, pre_ds, *args)
+                out = fn(tuple(t.lanes), flag, deltas, pre_ds, *args,
+                         placement=placement)
                 new_lanes = out[0]
             with t.lock:
                 for i, st in enumerate(new_lanes):
@@ -915,6 +986,227 @@ class SQLCached:
             out.append(lane)
         return out
 
+    # -------------------------------------------------- executor warm-up
+    def _state_avals(self, t: _Table, mode: str, sid):
+        """Abstract avals of the state argument one ``_jit_exec`` mode
+        receives, derived from the SCHEMA (``jax.eval_shape`` over the
+        init path — no real state is built) and carrying the placement
+        sharding the runtime handle will have: a placed lane's leaves
+        are committed to its device, a mesh-assembled global is sharded
+        along the lane axis. AOT compilation from these avals produces
+        the exact executable a live dispatch would compile."""
+        if mode == "mono":
+            return jax.eval_shape(lambda: T.init_state(t.schema))
+        s_sch = SH.shard_schema(t.schema)
+        if mode == "lane":
+            av = jax.eval_shape(lambda: T.init_state(s_sch))
+            devs = SH.lane_devices(t.mesh, t.schema.shards)
+            if devs is None:
+                return av
+            sh = jax.sharding.SingleDeviceSharding(devs[sid])
+            return jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                               sharding=sh), av)
+        stacked = jax.eval_shape(
+            lambda: SH.stack_lanes(SH.init_lanes(t.schema)))
+        if mode == "mesh":
+            from repro.launch.mesh import LANE_AXIS
+            ns = jax.sharding.NamedSharding(
+                t.mesh, jax.sharding.PartitionSpec(LANE_AXIS))
+            return jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                               sharding=ns), stacked)
+        lane_av = jax.eval_shape(lambda: T.init_state(s_sch))
+        return tuple(lane_av for _ in range(t.schema.shards))
+
+    def _warm_args(self, t: _Table, mode: str, sid, site_args: tuple):
+        """The full argument tuple :meth:`ExecEntry.warm` lowers from:
+        abstract state avals + concrete placeholders whose avals match
+        what ``_run_state`` passes (np.bool_ flag, int32 clock deltas)."""
+        st = self._state_avals(t, mode, sid)
+        if mode == "mono":
+            return (st, np.bool_(False)) + tuple(site_args)
+        if mode == "lane":
+            return (st, np.bool_(False), jnp.int32(0),
+                    jnp.int32(-1)) + tuple(site_args)
+        n = t.schema.shards
+        return (st, np.bool_(False), np.zeros(n, np.int32),
+                np.full(n, -1, np.int32)) + tuple(site_args)
+
+    def _warm_env(self, t: _Table, mode: str):
+        """(eng, xsch) for a forced dispatch mode — the side-effect-free
+        twin of :meth:`_exec_mode` the warm paths use (``_exec_mode``
+        consumes the op-count expiry interval, which a warm-up must
+        not)."""
+        if mode == "mono":
+            return t.eng, t.schema
+        if mode == "lane":
+            return T, SH.shard_schema(t.schema)
+        return SH, t.schema
+
+    def _finish_warm(self, t: _Table, entry, stmt, kind: str, b, mode: str,
+                     sid, site_args: tuple) -> int:
+        """Shared tail of every site's warm branch: AOT-compile the
+        entry for the dispatch's placement and record the signature."""
+        placement = self._placement(t, mode, sid)
+        new = entry.warm(placement, self._warm_args(t, mode, sid,
+                                                    site_args))
+        self._note_sig(t, stmt, kind, b, mode, sid)
+        return int(new)
+
+    def _prunable(self, t: _Table, stmt) -> bool:
+        """Host-side: can this statement ever take a single-lane route?
+        (INSERTs always hash-route row by row; WHERE statements prune
+        when the planner finds a partition-key equality.)"""
+        if isinstance(stmt, S.Insert):
+            return True
+        if not isinstance(stmt, (S.Select, S.Update, S.Delete)):
+            return False
+        route = PL.plan_shards(t.schema, self._intern_ast(stmt.where))
+        return route.key is not None
+
+    def _warm_modes(self, t: _Table, stmt) -> list:
+        """The (mode, sid) dispatch shapes to pre-plan for ``stmt`` —
+        one per DISTINCT placement: a prunable statement on a placed
+        table warms its lane executor once per lane device (any lane on
+        that device then replays it); everything else warms the one
+        fan-out (mesh/stacked/mono) executor."""
+        if t.lanes is None:
+            return [("mono", None)]
+        if self.lane_exec and self._prunable(t, stmt):
+            devs = SH.lane_devices(t.mesh, t.schema.shards)
+            if devs is None:
+                return [("lane", 0)]
+            seen, out = set(), []
+            for sid, d in enumerate(devs):
+                if d.id not in seen:
+                    seen.add(d.id)
+                    out.append(("lane", sid))
+            return out
+        return [("mesh" if t.mesh is not None else "stacked", None)]
+
+    def _warm_statement(self, t: _Table, stmt) -> int:
+        """Pre-plan one statement's executors for every placement it can
+        dispatch to. Returns the number of newly compiled executables."""
+        new = 0
+        for mode, sid in self._warm_modes(t, stmt):
+            if isinstance(stmt, S.Insert):
+                new += self._do_insert_batch(stmt, [], None,
+                                             _warm=(mode, sid))
+            elif isinstance(stmt, S.Select):
+                new += self._do_select(stmt, (), _warm=(mode, sid))
+            elif isinstance(stmt, S.Update):
+                new += self._do_update(stmt, (), _warm=(mode, sid))
+            elif isinstance(stmt, S.Delete):
+                new += self._do_delete(stmt, (), _warm=(mode, sid))
+            else:
+                raise S.SQLError(
+                    "WARMUP supports SELECT/INSERT/UPDATE/DELETE shapes")
+        return new
+
+    def _canonical_warm_sqls(self, schema: TableSchema) -> list[str]:
+        """The canonical hot shapes CREATE-time warm-up pre-plans: the
+        full-row INSERT plus a pruned eq-SELECT and eq-DELETE on the
+        partition / index columns (the web-cache working set — see the
+        paper's GET/SET/DELETE triple)."""
+        cols = schema.column_names
+        out = [f"INSERT INTO {schema.name} ({', '.join(cols)}) "
+               f"VALUES ({', '.join('?' for _ in cols)})"]
+        keys = [c for c in (schema.partition_by, *schema.indexes)
+                if c is not None]
+        if not keys and cols:
+            keys = [cols[0]]
+        for c in dict.fromkeys(keys):
+            out.append(f"SELECT * FROM {schema.name} WHERE {c} = ?")
+            out.append(f"DELETE FROM {schema.name} WHERE {c} = ?")
+        return out
+
+    def _do_warmup(self, stmt: S.Warmup) -> Result:
+        """WARMUP t [LIKE '<stmt>']: synchronously pre-plan executors —
+        the given statement's shapes, or the canonical hot set. Returns
+        the number of newly compiled executables as ``count`` (0 =
+        everything was already planned) and the schema epoch as
+        ``value``."""
+        t = self._table(stmt.table)
+        sqls = ([stmt.like] if stmt.like is not None
+                else self._canonical_warm_sqls(t.schema))
+        new = 0
+        for sql in sqls:
+            self.shape_key(sql)  # prime the scheduler's admission cache
+            new += self._warm_statement(t, self._parse(sql))
+        return Result(count=new, value=t.execs.epoch)
+
+    def _warm_table_bg(self, name: str) -> None:
+        """CREATE-time background warm-up: pre-plan the canonical hot
+        shapes off the dispatch thread. Best-effort by contract — a
+        statement that raced a DROP/RESHARD just stops; warm-up must
+        never take down serving."""
+        t = self.tables.get(name)
+        if t is None:
+            return
+        for sql in self._canonical_warm_sqls(t.schema):
+            if self.tables.get(name) is not t:
+                return  # dropped/recreated under us
+            try:
+                self.shape_key(sql)
+                self._warm_statement(t, self._parse(sql))
+            except Exception:  # noqa: BLE001 — warm-up is best effort
+                return
+
+    def drain_warmup(self, table: str | None = None) -> None:
+        """Join the CREATE-time background warm-up thread(s) — operators
+        and benchmarks call this to start timing from a planned state."""
+        for nm, th in list(self._warm_threads.items()):
+            if table is None or nm == table:
+                th.join()
+
+    def group_warm(self, shape: StatementShape | None,
+                   params_list: Sequence[Sequence[Any]]) -> bool:
+        """Scheduler admission hook: will this group's dispatch replay
+        an already-planned executable? Recomputes the dispatch signature
+        host-side (sig-set lookup — never a device sync, never an op
+        count tick) so the wave builder can keep a still-cold group out
+        of warm waves instead of stalling commuting groupmates on its
+        compile. Unknown shapes report warm: admin statements and
+        unroutable groups must never serialize a wave."""
+        if shape is None or shape.table is None or len(shape.key) != 2:
+            return True
+        if shape.kind not in ("select", "insert", "delete", "update"):
+            return True
+        t = self.tables.get(shape.table)
+        if t is None:
+            return True
+        kind, stmt = shape.key
+        n = len(params_list)
+        try:
+            prepped = [self._prep_params(p) for p in params_list]
+            sid = self._lane_of(t, stmt, prepped)
+            if t.lanes is None:
+                mode = "mono"
+            elif sid is not None:
+                mode = "lane"
+            elif t.mesh is not None:
+                mode = "mesh"
+            else:
+                mode = "stacked"
+            b = _bucket(n) if (n > 1 or kind == "insert") else None
+            return t.execs.has_sig(self._sig(t, stmt, kind, b, mode, sid))
+        except Exception:  # noqa: BLE001 — admission is best effort
+            return True
+
+    def _preplanned(self, t: _Table, stmt) -> bool:
+        """EXPLAIN's ``preplanned`` bit: every placement this statement
+        can dispatch to has a compiled executable (host signature set
+        only — no device sync)."""
+        kind = type(stmt).__name__.lower()
+        b = 1 if kind == "insert" else None
+        try:
+            return all(
+                t.execs.has_sig(self._sig(t, stmt, kind, b, mode, sid))
+                for mode, sid in self._warm_modes(t, stmt))
+        except Exception:  # noqa: BLE001
+            return False
+
     # ----------------------------------------------------------- statements
     def execute(
         self,
@@ -943,6 +1235,8 @@ class SQLCached:
             return self._do_flush(stmt.table)
         if isinstance(stmt, S.Reindex):
             return self._do_reindex(stmt.table)
+        if isinstance(stmt, S.Warmup):
+            return self._do_warmup(stmt)
         if isinstance(stmt, S.ShowStats):
             return self._do_show_stats(stmt.table)
         if isinstance(stmt, S.AlterReshard):
@@ -1168,6 +1462,15 @@ class SQLCached:
             replicas=stmt.replicas,
         )
         self.tables[stmt.table] = self._make_table(schema)
+        if self.warmup:
+            # pre-plan the canonical hot shapes off the dispatch thread:
+            # by the time traffic lands, every placed lane device already
+            # holds its eq-SELECT/INSERT/DELETE executables
+            th = threading.Thread(target=self._warm_table_bg,
+                                  args=(stmt.table,),
+                                  name=f"warmup-{stmt.table}", daemon=True)
+            self._warm_threads[stmt.table] = th
+            th.start()
         return Result()
 
     def _mesh_for(self, schema: TableSchema):
@@ -1214,23 +1517,29 @@ class SQLCached:
         t = self._table(name)
         if not t.schema.indexes:
             return Result(count=0, value=0)
+        # rebuilt indexes change probe behaviour for every cached plan:
+        # retire the pre-planned executables (schema epoch bump) before
+        # building fresh ones under the new epoch
+        t.execs.bump()
         if t.lanes is None:
             key = ("reindex", t.schema)
             fn = self._executor(
-                key, lambda: jax.jit(
+                t, key, lambda: jax.jit(
                     lambda st: T.build_index(t.schema, st),
                     donate_argnums=0))
-            t.state = fn(t.state)
+            t.state = fn(t.state, placement=self._placement(t, "mono",
+                                                            None))
             residual = sum(int(np.sum(np.asarray(
                 t.state["indexes"][c]["stale"]))) for c in t.schema.indexes)
             return Result(count=len(t.schema.indexes), value=residual)
         s_sch = SH.shard_schema(t.schema)
         key = ("lane", "reindex", s_sch)
         fn = self._executor(
-            key, lambda: jax.jit(
+            t, key, lambda: jax.jit(
                 lambda st: T.build_index(s_sch, st), donate_argnums=0))
         for i in range(t.schema.shards):
-            t.lanes[i] = fn(t.lanes[i])
+            t.lanes[i] = fn(t.lanes[i],
+                            placement=self._placement(t, "lane", i))
         residual = sum(int(np.sum(np.asarray(
             lane["indexes"][c]["stale"])))
             for lane in t.lanes for c in t.schema.indexes)
@@ -1238,14 +1547,21 @@ class SQLCached:
 
     def _do_flush(self, name: str) -> Result:
         t = self._table(name)
+        # FLUSH keeps the schema epoch: it empties contents but changes
+        # no shapes or placements, so every pre-planned executable stays
+        # valid (warmed daemons flush their warm-up rows for free)
         if t.lanes is None:
-            t.state, n = jax.jit(T.flush, static_argnums=0)(t.schema,
-                                                            t.state)
+            key = ("flush", t.schema)
+            fn = self._executor(
+                t, key,
+                lambda: jax.jit(lambda st: T.flush(t.schema, st)))
+            t.state, n = fn(t.state,
+                            placement=self._placement(t, "mono", None))
             return Result(dev={"count": n})
         mode = "mesh" if t.mesh is not None else "stacked"
         key = (mode, "flush", t.schema)
         fn = self._executor(
-            key, lambda: self._jit_exec(
+            t, key, lambda: self._jit_exec(
                 t.schema, lambda st: SH.flush(t.schema, st), mode, SH))
         n, = self._run_state(t, fn, mode, None, False, 1, ())
         return Result(dev={"count": n})
@@ -1291,6 +1607,10 @@ class SQLCached:
                 "shard_capacity": (SH.shard_capacity(t.schema) if n > 1
                                    else t.schema.capacity),
                 "host_ops": host_ops,
+                # AOT executor-cache counters (core/execache.py): cached
+                # executables, compiles + total compile wall time, and
+                # serve-path hit/miss traffic
+                "executors": t.execs.stats_dict(),
                 "per_shard": per}
         return Result(count=n, value=json.dumps(info, sort_keys=True))
 
@@ -1325,7 +1645,7 @@ class SQLCached:
             lanes = [t.state]
         key = ("reshard", old_schema, new_schema)
         fn = self._executor(
-            key, lambda: jax.jit(
+            t, key, lambda: jax.jit(
                 lambda ls: SH.reshard(old_schema, new_schema, ls)))
         new_lanes, counts = fn(tuple(lanes))
         counts = np.asarray(counts)  # admin op: the sync is fine
@@ -1356,6 +1676,9 @@ class SQLCached:
             t.stmt_routed = self._respread(t.stmt_routed, new_n)
             t.writes_routed = self._respread(t.writes_routed, new_n)
             t.rows_in = self._respread(t.rows_in, new_n)
+            # every cached executable was compiled for the OLD shard
+            # count / placement: retire them atomically with the swap
+            t.execs.bump()
         return Result(count=int(counts.sum()), value=new_n)
 
     @staticmethod
@@ -1402,13 +1725,15 @@ class SQLCached:
 
             return jax.jit(run, donate_argnums=0)
 
-        fn = self._executor(key, build)
+        fn = self._executor(t, key, build)
         if t.lanes is None:
-            t.state, d = fn(t.state)
+            t.state, d = fn(t.state,
+                            placement=self._placement(t, "mono", None))
             return Result(count=int(d), value=len(stmt.slots))
         total = 0
         for i in range(t.schema.shards):
-            t.lanes[i], d = fn(t.lanes[i])
+            t.lanes[i], d = fn(t.lanes[i],
+                               placement=self._placement(t, "lane", i))
             total += int(d)
         return Result(count=total, value=len(stmt.slots))
 
@@ -1499,7 +1824,7 @@ class SQLCached:
                  else SH.split_lanes(saved_sch, state))
         key = ("reshard", saved_sch, t.schema)
         fn = self._executor(
-            key, lambda: jax.jit(
+            t, key, lambda: jax.jit(
                 lambda ls: SH.reshard(saved_sch, t.schema, ls)))
         new_lanes, counts = fn(tuple(lanes))
         counts = np.asarray(counts)  # admin op: the sync is fine
@@ -1517,6 +1842,9 @@ class SQLCached:
                 t.lanes = SH.place_lanes(t.mesh, list(new_lanes))
             t.lane_ticks = [g0] * t.schema.shards
             t.expire_due = [None] * t.schema.shards
+            # restored contents were re-split and re-placed: retire the
+            # pre-planned executables with the swap (mesh re-placement)
+            t.execs.bump()
         return Result(count=int(counts.sum()), value=stmt.path)
 
     def _do_explain(self, stmt: S.Statement) -> Result:
@@ -1529,6 +1857,9 @@ class SQLCached:
             ranked = isinstance(stmt, S.Select) and stmt.order_by is not None
             info = PL.explain(t.schema, where, ranked=ranked)
             info["statement"] = type(stmt).__name__.lower()
+            # pre-planned = every placement this statement can route to
+            # already holds its AOT executable (host sig set, no sync)
+            info["preplanned"] = self._preplanned(t, stmt)
             if t.mesh is not None:
                 # placement report from host metadata only (no sync): a
                 # const-pruned route names the one device it dispatches
@@ -1559,6 +1890,8 @@ class SQLCached:
         if table is not None:
             info["table"] = table
             t = self.tables.get(table)
+            if t is not None and isinstance(stmt, S.Insert):
+                info["preplanned"] = self._preplanned(t, stmt)
             if (t is not None and SH.is_sharded(t.schema)
                     and isinstance(stmt, S.Insert)):
                 # inserts always hash-route row-by-row (one device split)
@@ -1600,14 +1933,28 @@ class SQLCached:
         if not isinstance(stmt, S.Insert):
             raise S.SQLError("executemany supports INSERT/SELECT/DELETE/"
                              "UPDATE")
+        return self._do_insert_batch(stmt, params_list, payloads_list,
+                                     per_statement=per_statement)
+
+    def _do_insert_batch(self, stmt: S.Insert,
+                         params_list: Sequence[Sequence[Any]],
+                         payloads_list=None, *, per_statement: bool = False,
+                         _warm=None) -> "Result | list[Result] | int":
+        """The INSERT arm of :meth:`executemany` (see its docstring).
+        ``_warm=(mode, sid)`` pre-plans the b=1 executor for that
+        dispatch shape instead of running — abstract state avals,
+        placeholder params, no clock ticks (returns the compile count)."""
         t = self._table(stmt.table)
         schema = t.schema
         cols = stmt.columns or schema.column_names[: len(stmt.values)]
         if len(cols) != len(stmt.values):
             raise S.SQLError("INSERT column/value count mismatch")
-        n = len(params_list)
-        if n == 0:
-            return [] if per_statement else Result(count=0)
+        if _warm is None:
+            n = len(params_list)
+            if n == 0:
+                return [] if per_statement else Result(count=0)
+        else:
+            n = 1
         b = _bucket(n)
         # host-side param matrix [b, n_params]
         n_params = max((P.collect_params(v) for v in stmt.values), default=0)
@@ -1615,7 +1962,8 @@ class SQLCached:
             n_params = max(n_params, P.collect_params(stmt.ttl))
         pm = []
         for i in range(b):
-            row = params_list[min(i, n - 1)]
+            row = ((0,) * n_params if _warm is not None
+                   else params_list[min(i, n - 1)])
             pm.append(self._prep_params(row))
         param_cols = tuple(
             np.asarray([pm[i][j] for i in range(b)]) for j in range(n_params)
@@ -1632,12 +1980,16 @@ class SQLCached:
 
         values_ast = tuple(self._intern_ast(v) for v in stmt.values)
         ttl_ast = self._intern_ast(stmt.ttl) if stmt.ttl is not None else None
-        # ONE partition-value extraction per dispatch: it feeds the lane
-        # route AND the inserted_rows skew counter
-        pvals = (self._insert_pvals(t, stmt, pm[:n])
-                 if t.lanes is not None else None)
-        mode, eng, xsch, sid, flag = self._exec_mode(t, stmt, pm[:n], n,
-                                                     pvals=pvals)
+        if _warm is None:
+            # ONE partition-value extraction per dispatch: it feeds the
+            # lane route AND the inserted_rows skew counter
+            pvals = (self._insert_pvals(t, stmt, pm[:n])
+                     if t.lanes is not None else None)
+            mode, eng, xsch, sid, flag = self._exec_mode(t, stmt, pm[:n],
+                                                         n, pvals=pvals)
+        else:
+            mode, sid = _warm
+            eng, xsch = self._warm_env(t, mode)
         key = (mode, "insert", xsch, values_ast, ttl_ast, tuple(cols), b,
                tuple(sorted(pl_args)))
 
@@ -1658,11 +2010,16 @@ class SQLCached:
 
             return self._jit_exec(xsch, base, mode, eng)
 
-        fn = self._executor(key, build)
+        fn = self._executor(t, key, build)
+        if _warm is not None:
+            return self._finish_warm(
+                t, fn, stmt, "insert", b, mode, sid,
+                (jnp.int32(0), param_cols, pl_args, row_mask))
         off = sid * SH.shard_capacity(schema) if mode == "lane" else 0
         slots, evicted = self._run_state(
             t, fn, mode, sid, flag, 1,
             (jnp.int32(off), param_cols, pl_args, row_mask))
+        self._note_sig(t, stmt, "insert", b, mode, sid)
         self._note_route(t, sid, n, True,
                          rows_in=self._insert_sids(t, pvals, n))
         if per_statement:
@@ -1817,14 +2174,17 @@ class SQLCached:
 
             return self._jit_exec(xsch, base, mode, eng)
 
-        fn = self._executor(key, build)
+        fn = self._executor(t, key, build)
+        kind = "delete" if is_delete else "update"
         if eq_term is not None and not per_statement:
             total, = self._run_state(t, fn, mode, sid, flag, n,
                                      (param_cols, active))
+            self._note_sig(t, stmt, kind, b, mode, sid)
             self._note_route(t, sid, n, True)
             return Result(dev={"count": total})
         total, ns = self._run_state(t, fn, mode, sid, flag, n,
                                     (param_cols, active))
+        self._note_sig(t, stmt, kind, b, mode, sid)
         self._note_route(t, sid, n, True)
         if per_statement:
             stack = _HostStack({"count": ns})
@@ -1919,10 +2279,11 @@ class SQLCached:
 
             return self._jit_exec(xsch, base, mode, eng)
 
-        fn = self._executor(key, build)
+        fn = self._executor(t, key, build)
         off = sid * SH.shard_capacity(schema) if mode == "lane" else 0
         res, = self._run_state(t, fn, mode, sid, flag, n,
                                (jnp.int32(off), param_cols, active))
+        self._note_sig(t, stmt, "select", b, mode, sid)
         self._note_route(t, sid, n, False)
         stack = _HostStack({"count": res["count"], "rows": res["rows"],
                             "present": res["present"],
@@ -1996,23 +2357,34 @@ class SQLCached:
 
             return self._jit_exec(xsch, base, mode, eng)
 
-        fn = self._executor(key, build)
+        fn = self._executor(t, key, build)
         vals, = self._run_state(t, fn, mode, sid, flag, n,
                                 (param_cols, active))
+        self._note_sig(t, stmt, "select", b, mode, sid)
         self._note_route(t, sid, n, False)
         stack = _HostStack({"value": vals})
         return [Result(ctx={"stack": stack, "index": i}) for i in range(n)]
 
-    def _do_select(self, stmt: S.Select, params: tuple) -> Result:
+    def _do_select(self, stmt: S.Select, params: tuple,
+                   _warm=None) -> "Result | int":
         t = self._table(stmt.table)
         schema = t.schema
         where = self._intern_ast(stmt.where)
-        mode, eng, xsch, sid, flag = self._exec_mode(t, stmt, [params], 1)
+        if _warm is None:
+            mode, eng, xsch, sid, flag = self._exec_mode(t, stmt,
+                                                         [params], 1)
+        else:
+            # pre-plan for a forced dispatch shape: placeholder params
+            # (one int 0 per `?` — the executor is shape-, not value-
+            # keyed), no expiry flag consumed, no clock ticks
+            mode, sid = _warm
+            eng, xsch = self._warm_env(t, mode)
+            params = (0,) * P.collect_params(where)
         if stmt.agg is not None:
             agg, col = stmt.agg
             key = (mode, "agg", xsch, agg, col, where)
             fn = self._executor(
-                key,
+                t, key,
                 lambda: self._jit_exec(
                     xsch,
                     lambda st, pr: eng.aggregate(xsch, st, agg, col,
@@ -2020,7 +2392,11 @@ class SQLCached:
                     mode, eng,
                 ),
             )
+            if _warm is not None:
+                return self._finish_warm(t, fn, stmt, "select", None,
+                                         mode, sid, (params,))
             val, = self._run_state(t, fn, mode, sid, flag, 1, (params,))
+            self._note_sig(t, stmt, "select", None, mode, sid)
             self._note_route(t, sid, 1, False)
             return Result(dev={"value": val})
         columns = stmt.columns or schema.column_names
@@ -2042,10 +2418,14 @@ class SQLCached:
                 return st, res
             return self._jit_exec(xsch, base, mode, eng)
 
-        fn = self._executor(key, build)
+        fn = self._executor(t, key, build)
+        if _warm is not None:
+            return self._finish_warm(t, fn, stmt, "select", None, mode,
+                                     sid, (jnp.int32(0), params))
         off = sid * SH.shard_capacity(schema) if mode == "lane" else 0
         res, = self._run_state(t, fn, mode, sid, flag, 1,
                                (jnp.int32(off), params))
+        self._note_sig(t, stmt, "select", None, mode, sid)
         self._note_route(t, sid, 1, False)
         return Result(
             payloads=dict(res["payloads"]),
@@ -2056,12 +2436,22 @@ class SQLCached:
                  "interner": self.interner},
         )
 
-    def _do_update(self, stmt: S.Update, params: tuple) -> Result:
+    def _do_update(self, stmt: S.Update, params: tuple,
+                   _warm=None) -> "Result | int":
         t = self._table(stmt.table)
         where = self._intern_ast(stmt.where)
         sets = tuple((c, self._intern_ast(e)) for c, e in stmt.sets)
         self._check_partition_update(t, (c for c, _ in sets))
-        mode, eng, xsch, sid, flag = self._exec_mode(t, stmt, [params], 1)
+        if _warm is None:
+            mode, eng, xsch, sid, flag = self._exec_mode(t, stmt,
+                                                         [params], 1)
+        else:
+            mode, sid = _warm
+            eng, xsch = self._warm_env(t, mode)
+            n_params = P.collect_params(where)
+            for _, e in sets:
+                n_params = max(n_params, P.collect_params(e))
+            params = (0,) * n_params
         key = (mode, "update", xsch, where, sets)
 
         def build():
@@ -2069,16 +2459,27 @@ class SQLCached:
                 return eng.update(xsch, st, where, dict(sets), pr)
             return self._jit_exec(xsch, base, mode, eng)
 
-        fn = self._executor(key, build)
+        fn = self._executor(t, key, build)
+        if _warm is not None:
+            return self._finish_warm(t, fn, stmt, "update", None, mode,
+                                     sid, (params,))
         n, = self._run_state(t, fn, mode, sid, flag, 1, (params,))
+        self._note_sig(t, stmt, "update", None, mode, sid)
         self._note_route(t, sid, 1, True)
         return Result(dev={"count": n})
 
-    def _do_delete(self, stmt: S.Delete, params: tuple) -> Result:
+    def _do_delete(self, stmt: S.Delete, params: tuple,
+                   _warm=None) -> "Result | int":
         t = self._table(stmt.table)
         schema = t.schema
         where = self._intern_ast(stmt.where)
-        mode, eng, xsch, sid, flag = self._exec_mode(t, stmt, [params], 1)
+        if _warm is None:
+            mode, eng, xsch, sid, flag = self._exec_mode(t, stmt,
+                                                         [params], 1)
+        else:
+            mode, sid = _warm
+            eng, xsch = self._warm_env(t, mode)
+            params = (0,) * P.collect_params(where)
         # fusable deletes on payload-bearing tables also report WHICH rows
         # went (row_ids feeds incremental index maintenance, e.g. the
         # serving page table); scalar tables keep the mask-only path —
@@ -2105,10 +2506,14 @@ class SQLCached:
                 return st, n
             return self._jit_exec(xsch, base, mode, eng)
 
-        fn = self._executor(key, build)
+        fn = self._executor(t, key, build)
+        if _warm is not None:
+            return self._finish_warm(t, fn, stmt, "delete", None, mode,
+                                     sid, (jnp.int32(0), params))
         off = sid * SH.shard_capacity(schema) if mode == "lane" else 0
         outs = self._run_state(t, fn, mode, sid, flag, 1,
                                (jnp.int32(off), params))
+        self._note_sig(t, stmt, "delete", None, mode, sid)
         self._note_route(t, sid, 1, True)
         if returning:
             n, ids, present = outs
@@ -2122,15 +2527,16 @@ class SQLCached:
         if t.lanes is None:
             key = ("expire", t.schema)
             fn = self._executor(
-                key, lambda: jax.jit(lambda st: T.expire(t.schema, st),
-                                     donate_argnums=0)
+                t, key, lambda: jax.jit(lambda st: T.expire(t.schema, st),
+                                        donate_argnums=0)
             )
-            t.state, n = fn(t.state)
+            t.state, n = fn(t.state,
+                            placement=self._placement(t, "mono", None))
             return Result(dev={"count": n})
         mode = "mesh" if t.mesh is not None else "stacked"
         key = (mode, "expire", t.schema)
         fn = self._executor(
-            key, lambda: self._jit_exec(
+            t, key, lambda: self._jit_exec(
                 t.schema, lambda st: SH.expire(t.schema, st), mode, SH))
         # (_run_state's stacked booking consumed every lane deferral and
         # the dispatch replayed them — nothing left to clear here)

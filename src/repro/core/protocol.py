@@ -76,6 +76,14 @@ Two admin statements manage the partitioning live over the same wire
                               --   count. TTL stamps ride along, so
                               --   contents round-trip exactly.
                               --   RESHARD 1 converts to monolithic.
+    EXEC WARMUP pages
+    GO                        -- pre-plan (AOT compile) the table's
+                              --   canonical hot shapes for every placed
+                              --   lane device BEFORE traffic lands;
+                              --   COUNT is the executables newly
+                              --   compiled, VALUE the executor-cache
+                              --   epoch. WARMUP t LIKE 'SELECT ...'
+                              --   pre-plans exactly the quoted shape.
 
 The batch scheduler additionally overlaps groups whose footprints
 provably commute — different tables, disjoint columns, or pruned
@@ -161,6 +169,14 @@ def backoff_delays(retries: int, base: float = 0.05, cap: float = 2.0):
     for attempt in range(retries):
         d = min(cap, base * (2.0 ** attempt))
         yield d / 2 + random.uniform(0, d / 2)
+
+
+def _warmup_sql(table: str, like: str | None) -> str:
+    """The WARMUP statement text for both clients' ``warmup()`` helpers
+    (the quoted LIKE statement escapes ``'`` the SQL way)."""
+    if like is None:
+        return f"WARMUP {table}"
+    return f"WARMUP {table} LIKE '" + like.replace("'", "''") + "'"
 
 
 def _encode_arg(v: Any) -> str:
@@ -675,6 +691,11 @@ class SQLCachedClient:
         self._sock.sendall(("\r\n".join(out) + "\r\n").encode())
         return self._read_result(None)
 
+    def warmup(self, table: str, like: str | None = None) -> dict:
+        """Pre-plan ``table``'s executors server-side (``WARMUP t [LIKE
+        '<stmt>']``): count = newly compiled executables."""
+        return self.execute(_warmup_sql(table, like))
+
     def pipeline(self) -> "Pipeline":
         """Open a client-side pipeline (usable as a context manager —
         leaving the ``with`` block collects into ``.results``)."""
@@ -854,6 +875,11 @@ class AsyncSQLCachedClient:
         self._w.write(("\r\n".join(lines) + "\r\n").encode())
         await self._w.drain()
         return await fut
+
+    async def warmup(self, table: str, like: str | None = None) -> dict:
+        """Pre-plan ``table``'s executors server-side (``WARMUP t [LIKE
+        '<stmt>']``): count = newly compiled executables."""
+        return await self.execute(_warmup_sql(table, like))
 
     async def ping(self, deadline: float | None = None) -> bool:
         """Liveness probe. With ``deadline`` (seconds) a late PONG raises

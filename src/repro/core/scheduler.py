@@ -247,7 +247,8 @@ class BatchScheduler:
         self.stats = {"admitted": 0, "batches": 0, "grouped_statements": 0,
                       "singles": 0, "max_group": 0, "window_waits": 0,
                       "waves": 0, "overlapped_groups": 0, "max_wave": 0,
-                      "lane_dispatches": 0, "lane_splits": 0}
+                      "lane_dispatches": 0, "lane_splits": 0,
+                      "cold_solo": 0}
 
     # ------------------------------------------------------------ lifecycle
     async def start(self) -> None:
@@ -489,6 +490,25 @@ class BatchScheduler:
         gs, hs = g.shard_ids(self.db), h.shard_ids(self.db)
         return gs is not None and hs is not None and not (gs & hs)
 
+    def _is_cold(self, g) -> bool:
+        """True when dispatching ``g`` would compile a new executor
+        (its shape x placement is not pre-planned — execache.sigs). Cold
+        groups dispatch in cold-only waves: a compile takes orders of
+        magnitude longer than a replay, and under lane locks it would
+        stall every warm groupmate sharing its wave. Best effort — stub
+        dbs without ``group_warm`` and routing errors count as warm
+        (old behavior)."""
+        gw = getattr(self.db, "group_warm", None)
+        if gw is None or g.shape is None or g.shape.kind == "admin":
+            return False
+        try:
+            cold = not gw(g.shape, [it.params for it in g.items])
+        except Exception:  # noqa: BLE001 — admission hints are best effort
+            return False
+        if cold:
+            self.stats["cold_solo"] += 1
+        return cold
+
     async def _dispatch_wave(self, wave: list) -> None:
         self.stats["waves"] += 1
         if len(wave) > self.stats["max_wave"]:
@@ -553,12 +573,22 @@ class BatchScheduler:
             # waits. Compatibility (including shard routes, which read
             # the live schema) is evaluated AFTER the preceding wave has
             # fully executed, so admin barriers can't be read around.
+            # A COLD group (executor not pre-planned -> dispatch would
+            # compile) never shares a wave with WARM groups: its compile
+            # would hold the wave barrier (and under lane locks, its
+            # lock) for orders of magnitude longer than a replay. Cold
+            # groups may still overlap EACH OTHER — their compiles run
+            # concurrently and nobody warm is stalled. One flag check
+            # per group, memoized upfront.
+            cold = [self._is_cold(g) for g in groups]
             i = 0
             while i < len(groups):
                 wave = [groups[i]]
+                wave_cold = cold[i]
                 i += 1
-                while i < len(groups) and all(
-                        self._compatible(groups[i], h) for h in wave):
+                while (i < len(groups) and cold[i] == wave_cold
+                       and all(self._compatible(groups[i], h)
+                               for h in wave)):
                     wave.append(groups[i])
                     i += 1
                 await self._dispatch_wave(wave)

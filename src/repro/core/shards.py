@@ -475,8 +475,17 @@ def insert(
     offs = (jnp.arange(n_sh, dtype=jnp.int32) * cap_s)[:, None]
 
     def one(alloc):
-        def fn(st, vals, pls, m, tl):
-            return T.insert(s_sch, st, vals, pls, m, tl,
+        def fn(st, r_l, m_l):
+            # device-local fan-out split: each lane gathers its OWN rows
+            # from the (replicated) batch INSIDE the mapped executor.
+            # Under a fanout mesh the only cross-device movement is the
+            # [b]-row batch broadcast — the old outer gather materialized
+            # a padded [n_sh, w] per-shard assembly first and moved THAT
+            # through the mesh (up to n_sh x the batch on a skewed
+            # split).
+            vals = {c: v[r_l] for c, v in vals_b.items()}
+            pls = {k: v[r_l] for k, v in pls_b.items()}
+            return T.insert(s_sch, st, vals, pls, m_l, ttl_b[r_l],
                             index_mode=index_mode, alloc=alloc)
 
         return fn
@@ -493,10 +502,7 @@ def insert(
     for ci in range(n_chunks):
         r = rows[:, ci * w:(ci + 1) * w]
         m = mask[:, ci * w:(ci + 1) * w]
-        args = (state,
-                {c: v[r] for c, v in vals_b.items()},
-                {k: v[r] for k, v in pls_b.items()},
-                m, ttl_b[r])
+        args = (state, r, m)
         # allocator cond hoisted OUTSIDE the vmap (inside, it would lower
         # to a select and pay for both paths on every shard): the cheap
         # free-list path needs every shard to hold the chunk comfortably

@@ -48,6 +48,11 @@ cache daemon and we exclude them):
                          (cross-process safe — replica bootstrap),
                          sharded tables re-split rows by hash and hash
                          indexes rebuild
+  WARMUP t [LIKE 'SELECT ...']
+                      -- pre-plan executors (AOT compile) ahead of
+                         traffic: canonical hot shapes per placed lane
+                         device, or exactly the quoted statement's shape
+                         (core/execache.py). COUNT = new compiles
 
 ``REPLICAS r`` in the CREATE option tail declares the table's cluster
 replication factor (default 1). The daemon itself stores r as schema
@@ -253,6 +258,20 @@ class Restore:
 
 
 @dataclasses.dataclass(frozen=True)
+class Warmup:
+    """WARMUP t [LIKE '<stmt>']: pre-plan executors ahead of traffic.
+
+    Without LIKE, compiles the table's canonical hot shapes (full-row
+    INSERT plus eq-SELECT/DELETE on the partition/index columns) for
+    every placed lane device. With LIKE, parses the quoted statement and
+    pre-plans exactly that shape. COUNT reports newly compiled
+    executables (0 = everything was already planned)."""
+
+    table: str
+    like: str | None = None
+
+
+@dataclasses.dataclass(frozen=True)
 class Explain:
     """EXPLAIN <stmt>: report the inner statement's query plan."""
 
@@ -262,7 +281,7 @@ class Explain:
 Statement = (
     CreateTable | Insert | Select | Update | Delete | Expire | Flush
     | Reindex | DropTable | ShowStats | AlterReshard | AlterRetain
-    | Checkpoint | Restore | Explain
+    | Checkpoint | Restore | Warmup | Explain
 )
 
 
@@ -413,7 +432,7 @@ class _Parser:
 
     _STMT_KWS = ("CREATE", "INSERT", "SELECT", "UPDATE", "DELETE",
                  "EXPIRE", "FLUSH", "REINDEX", "DROP", "SHOW", "ALTER",
-                 "CHECKPOINT", "RESTORE")
+                 "CHECKPOINT", "RESTORE", "WARMUP")
 
     # -- statements
     def statement(self) -> Statement:
@@ -628,6 +647,11 @@ class _Parser:
         table = self.name()
         self.expect_kw("FROM")
         return Restore(table, self._string())
+
+    def _stmt_warmup(self) -> Warmup:
+        table = self.name()
+        like = self._string() if self.accept_kw("LIKE") else None
+        return Warmup(table, like)
 
 
 def parse(sql: str) -> Statement:

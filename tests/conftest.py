@@ -2,8 +2,16 @@
 smoke tests and benches must see the single real CPU device; only
 launch/dryrun.py forces 512 placeholder devices (in its own process).
 """
+import os
+
 import numpy as np
 import pytest
+
+# CREATE TABLE spawns a background warm-up compile thread per table in
+# production (REPRO_WARMUP=1 default). The suite creates hundreds of
+# throwaway tables — default it off here; execache tests opt back in
+# with SQLCached(warmup=True) / explicit WARMUP statements.
+os.environ.setdefault("REPRO_WARMUP", "0")
 
 
 @pytest.fixture(autouse=True)

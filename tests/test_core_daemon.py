@@ -109,11 +109,12 @@ def test_drop_table(db):
 
 def test_executor_cache_reused(db):
     fill(db)
-    n0 = len(db._execs)
+    execs = db.tables["cache"].execs
+    n0 = len(execs._entries)
     for k in range(5):
         db.execute("SELECT val FROM cache WHERE page_id = ?", [k])
     # one executor serves all five parameterized calls
-    assert len(db._execs) == n0 + 1
+    assert len(execs._entries) == n0 + 1
 
 
 def test_complex_predicates(db):
