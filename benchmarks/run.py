@@ -3,11 +3,11 @@
 ``python -m benchmarks.run [--json] [--quick] [--check]``
 
 --json   run fig1 + table2 + protocol + index + shard + lane + cluster
-         + mesh + serve in JSON mode and write ``BENCH_fig1.json`` /
-         ``BENCH_table2.json`` / ``BENCH_protocol.json`` / ``BENCH_
+         + mesh + serve + obs in JSON mode and write ``BENCH_fig1.json``
+         / ``BENCH_table2.json`` / ``BENCH_protocol.json`` / ``BENCH_
          index.json`` / ``BENCH_shard.json`` / ``BENCH_lane.json`` /
          ``BENCH_cluster.json`` / ``BENCH_mesh.json`` /
-         ``BENCH_serve.json`` to the repo root
+         ``BENCH_serve.json`` / ``BENCH_obs.json`` to the repo root
          (ops/s resp. stmts/s, p50/p99 µs); these files are checked in
          so every PR's numbers are comparable. The mesh bench measures
          in a SUBPROCESS with ``XLA_FLAGS=--xla_force_host_platform_
@@ -76,9 +76,23 @@ CHECK_METRICS = [
      lambda d: d["steady_p999_over_p50"], "lower"),
     ("BENCH_serve.json", "warm_first_hit_over_steady_p50",
      lambda d: d["warm_first_hit_over_steady_p50"], "lower"),
+    # telemetry overhead (obs PR): same-run on/off p50 ratio, clamped
+    # at 1.0 in the bench — also under an ABSOLUTE cap below
+    ("BENCH_obs.json", "telemetry_overhead_p50",
+     lambda d: d["telemetry_overhead_p50"], "lower"),
 ]
 
 REGRESS_FACTOR = 2.0
+
+# (file, label, extractor, ceiling): absolute caps on fresh values —
+# unlike CHECK_METRICS these do NOT compare against the checked-in file
+# (a ratio vs an already-bad baseline would hide absolute regressions).
+# The telemetry overhead promise is "≤ 1.05x p50 with tracing on"; the
+# cap is checked on the fresh quick run with the same one-retry policy.
+HARD_CAPS = [
+    ("BENCH_obs.json", "telemetry_overhead_p50",
+     lambda d: d["telemetry_overhead_p50"], 1.05),
+]
 
 
 def _extract(doc, fn):
@@ -121,6 +135,17 @@ def _evaluate(fresh) -> list:
               f"{direction} is better)")
         if not ok:
             failing.append((fname, label, ref, new, ratio))
+    for fname, label, fn, cap in HARD_CAPS:
+        doc = fresh.get(fname)
+        new = _extract(doc, fn) if doc is not None else None
+        if new is None:
+            print(f"CHECK skip  {fname}:{label} (cap): metric absent")
+            continue
+        ok = new <= cap
+        print(f"CHECK {'ok   ' if ok else 'REGRESSION'} {fname}:{label}: "
+              f"fresh={new:.3f} vs absolute cap {cap:.3f}")
+        if not ok:
+            failing.append((fname, f"{label} (cap)", cap, new, new / cap))
     return failing
 
 
@@ -128,8 +153,8 @@ def check() -> int:
     """Compare fresh quick-run ratio metrics against the checked-in BENCH
     files; return the number of >2x regressions after one retry."""
     from benchmarks import (cluster_bench, fig1_kv_read, index_bench,
-                            lane_bench, mesh_bench, protocol_bench,
-                            serve_bench, shard_bench)
+                            lane_bench, mesh_bench, obs_bench,
+                            protocol_bench, serve_bench, shard_bench)
 
     runners = {
         "BENCH_fig1.json": lambda: fig1_kv_read.run_json(quick=True),
@@ -145,6 +170,7 @@ def check() -> int:
         "BENCH_cluster.json": lambda: cluster_bench.run(quick=True),
         "BENCH_mesh.json": lambda: mesh_bench.run(quick=True),
         "BENCH_serve.json": lambda: serve_bench.run(quick=True),
+        "BENCH_obs.json": lambda: obs_bench.run(quick=True),
     }
     fresh = {name: fn() for name, fn in runners.items()}
     failing = _evaluate(fresh)
@@ -174,8 +200,9 @@ def main() -> None:
 
     if as_json:
         from benchmarks import (cluster_bench, fig1_kv_read, index_bench,
-                                lane_bench, mesh_bench, protocol_bench,
-                                serve_bench, shard_bench, table2_expiry)
+                                lane_bench, mesh_bench, obs_bench,
+                                protocol_bench, serve_bench, shard_bench,
+                                table2_expiry)
         args = ["--json"] + (["--quick"] if quick else [])
         print("=" * 72)
         print("== Paper Fig. 1 (JSON) -> BENCH_fig1.json")
@@ -204,6 +231,9 @@ def main() -> None:
         print("=" * 72)
         print("== Pre-planned serving, p999 tail (JSON) -> BENCH_serve.json")
         serve_bench.main(args)
+        print("=" * 72)
+        print("== Telemetry overhead (JSON) -> BENCH_obs.json")
+        obs_bench.main(args)
         return
 
     print("=" * 72)
@@ -256,6 +286,11 @@ def main() -> None:
     print("== Pre-planned serving: first-hit vs steady-state tail")
     from benchmarks import serve_bench
     serve_bench.main(["--quick"] if quick else [])
+
+    print("=" * 72)
+    print("== Telemetry: tracing overhead on the serving path")
+    from benchmarks import obs_bench
+    obs_bench.main(["--quick"] if quick else [])
 
     if quick:
         return

@@ -21,15 +21,24 @@
 #    single-device dev box would silently skip;
 # 5. runs the pre-planned serving bench (quick) standalone — the
 #    WARMUP/first-hit path must at least complete even before its
-#    BENCH_serve.json ratios are gated in step 6;
-# 6. re-runs the quick benches IN MEMORY and fails if any curated
+#    BENCH_serve.json ratios are gated in step 7;
+# 6. runs the telemetry-overhead bench (quick) standalone — tracing ON
+#    vs REPRO_TELEMETRY=0 must complete and report its on/off p50
+#    ratio before step 7 gates it;
+# 7. re-runs the quick benches IN MEMORY and fails if any curated
 #    BENCH_*.json ratio metric regressed more than 2x vs the checked-in
 #    values (see benchmarks/run.py CHECK_METRICS — ratios, not absolute
 #    latencies, so machine speed cancels to first order; the serve
-#    bench gates steady p999/p50 and warm first-hit/p50). A bench file
-#    that does not exist yet only warns (bootstrap). BENCH_mesh.json's
-#    gated metric is produced by a subprocess that forces 8 host
-#    devices itself — no XLA_FLAGS needed here.
+#    bench gates steady p999/p50 and warm first-hit/p50, the obs bench
+#    gates telemetry_overhead_p50 which ALSO carries an absolute 1.05x
+#    cap via HARD_CAPS). A bench file that does not exist yet only
+#    warns (bootstrap). BENCH_mesh.json's gated metric is produced by
+#    a subprocess that forces 8 host devices itself — no XLA_FLAGS
+#    needed here.
+#
+# The scheduler suite includes tests/test_telemetry.py, so SHOW METRICS
+# / EXPLAIN ANALYZE / SHOW SLOW run under both concurrency regimes and
+# under the 8-device mesh regime (exec_mode attribution).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -39,7 +48,7 @@ echo "== tier-1: pytest"
 python -m pytest -x -q
 
 SCHED_SUITE="tests/test_scheduler.py tests/test_protocol_pipeline.py \
-tests/test_shards.py"
+tests/test_shards.py tests/test_telemetry.py"
 
 echo "== scheduler suite: concurrency ON (waves + lanes)"
 REPRO_SCHED_CONCURRENCY=1 python -m pytest -x -q $SCHED_SUITE
@@ -66,6 +75,9 @@ XLA_FLAGS="$MESH_DEVICES" REPRO_SCHED_CONCURRENCY=1 \
 
 echo "== serve bench: pre-planned serving + p999 tail (quick)"
 python -m benchmarks.serve_bench --quick
+
+echo "== obs bench: telemetry overhead on vs REPRO_TELEMETRY=0 (quick)"
+python -m benchmarks.obs_bench --quick
 
 echo "== perf gate: benchmarks/run.py --quick --check"
 python -m benchmarks.run --quick --check

@@ -93,6 +93,7 @@ from typing import Any, Sequence
 from repro.core import planner as PL
 from repro.core import predicate as P
 from repro.core import sqlparse as S
+from repro.core import telemetry as TEL
 from repro.core.protocol import (SQLCachedClient, _encode_arg,
                                  backoff_delays)
 from repro.core.schema import ExpiryPolicy, TableSchema, make_schema
@@ -740,6 +741,37 @@ class ClusterClient(_ClusterBase):
             except (ConnectionError, OSError):
                 self._fail_node(node)
         return new
+
+    def metrics(self, table: str | None = None) -> dict:
+        """Fan ``SHOW METRICS [t]`` out to every live node and merge the
+        telemetry reports into one pane of glass. Raw histogram buckets
+        SUM across nodes (exact) and percentiles are recomputed from the
+        merged buckets — never percentile-of-percentile
+        (``telemetry.merge_reports``). With a table, only the nodes of
+        its replica groups are asked (like :meth:`warmup`); nodes that
+        answer ERR (e.g. a table they don't serve) are skipped."""
+        sql = "SHOW METRICS" + (f" {table}" if table is not None else "")
+        members: set[str] = set()
+        meta = self._tables.get(table) if table is not None else None
+        if meta is not None:
+            for mem in meta.groups.values():
+                members.update(mem)
+        else:
+            members.update(self._ring.nodes)
+        reports = []
+        for node in sorted(members):
+            if node in self._down:
+                continue
+            try:
+                rep = self._exec_on(node, sql)["value"]
+            except (ConnectionError, OSError):
+                self._fail_node(node)
+                continue
+            except RuntimeError:
+                continue  # node ERR'd (no such table there) — skip it
+            if isinstance(rep, dict):
+                reports.append(rep)
+        return TEL.merge_reports(reports)
 
     def ping_all(self, deadline: float | None = None) -> dict[str, bool]:
         """Probe every ring node; marks failures down (and successful

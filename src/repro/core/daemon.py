@@ -156,6 +156,34 @@ compiles at dispatch. Lifecycle:
   still cold out of warm waves, so a compile can never stall commuting
   groupmates.
 
+Observability (PR 9)
+--------------------
+
+Host-side serving telemetry (``core/telemetry.py``) threads a per-
+statement trace context through the whole serving path: stamped at wire
+receipt, span-marked at every stage boundary (wire → parse → queue →
+lane-lock wait → execute → render) and aggregated at render time into
+per-(table, kind) log2-bucketed latency histograms with exec-mode
+(lane/stacked/mesh/mono) and executor-cache (hit/compile/fallback)
+attribution. Everything is monotonic-clock + host counters — recording
+a span or reading a report never syncs a device handle. Wire surface:
+
+* ``SHOW METRICS [t] [FORMAT 'prom']`` — histogram / percentile /
+  stage-breakdown report as one JSON VALUE row (prom text exposition is
+  JSON-string-encoded to stay a single wire line);
+* ``EXPLAIN ANALYZE <stmt>`` — executes the statement and returns its
+  measured per-stage spans next to the plan (this one DOES materialize
+  the result — it is a diagnostic, not a serving path);
+* ``SHOW SLOW`` — bounded ring of span trees for statements crossing
+  ``SQLCached(slow_ms=...)`` / ``REPRO_SLOW_MS``;
+* ``SHOW STATS`` (no table) — daemon-wide roll-up: tables, scheduler
+  stats, executor-cache totals, uptime.
+
+``REPRO_TELEMETRY=0`` disables tracing entirely (the serving path pays
+one None check); ``ClusterClient.metrics()`` fans ``SHOW METRICS`` to
+every live node and merges raw histogram buckets — sums are exact,
+percentiles recompute from merged buckets, never averaged.
+
 Skew + live re-partitioning
 ---------------------------
 
@@ -205,6 +233,7 @@ from repro.core import predicate as P
 from repro.core import shards as SH
 from repro.core import sqlparse as S
 from repro.core import table as T
+from repro.core import telemetry as TEL
 from repro.core.execache import ExecutorCache
 from repro.core.schema import ExpiryPolicy, TableSchema, make_schema
 
@@ -508,9 +537,14 @@ def _np_terms_int(terms, param_cols) -> bool:
 
 class SQLCached:
     def __init__(self, auto_expire: bool = True, lane_exec: bool = True,
-                 mesh_exec: bool = True, warmup: bool | None = None):
+                 mesh_exec: bool = True, warmup: bool | None = None,
+                 slow_ms: float | None = None):
         self.tables: dict[str, _Table] = {}
         self.interner = Interner()
+        # serving telemetry (core/telemetry.py): trace spans, latency
+        # histograms, slow-statement ring. slow_ms=None defers to
+        # REPRO_SLOW_MS; REPRO_TELEMETRY=0 disables tracing entirely.
+        self.telemetry = TEL.Telemetry(slow_ms=slow_ms)
         self.auto_expire = auto_expire
         # lane_exec=False disables lane-confined dispatch (every sharded
         # statement takes the stacked path — the PR-4 execution regime;
@@ -819,6 +853,7 @@ class SQLCached:
         performs (1 per singleton/INSERT dispatch, the active statement
         count for micro-batches — exactly what the executor adds).
         Returns the executor's non-state outputs."""
+        TEL.note_mode(mode)   # exec_mode attribution for the live traces
         # placement keys the entry's AOT executable; np.bool_ keeps the
         # runtime flag aval identical to the warm path's placeholder
         placement = self._placement(t, mode, sid)
@@ -1215,14 +1250,25 @@ class SQLCached:
         payloads: Mapping[str, Any] | None = None,
     ) -> Result:
         stmt = self._parse(sql)
+        return self._dispatch_stmt(stmt, params, payloads)
+
+    def _dispatch_stmt(
+        self,
+        stmt: S.Statement,
+        params: Sequence[Any] = (),
+        payloads: Mapping[str, Any] | None = None,
+    ) -> Result:
+        """Route one PARSED statement to its handler (shared by
+        :meth:`execute` and EXPLAIN ANALYZE, which holds the parsed
+        inner statement but no standalone SQL text)."""
         if isinstance(stmt, S.CreateTable):
             return self._do_create(stmt)
         if isinstance(stmt, S.DropTable):
             self.tables.pop(stmt.table, None)
             return Result()
         if isinstance(stmt, S.Insert):
-            return self.executemany(sql, [tuple(params)],
-                                    [payloads] if payloads else None)
+            return self._do_insert_batch(stmt, [tuple(params)],
+                                         [payloads] if payloads else None)
         if isinstance(stmt, S.Select):
             return self._do_select(stmt, self._prep_params(params))
         if isinstance(stmt, S.Update):
@@ -1239,6 +1285,10 @@ class SQLCached:
             return self._do_warmup(stmt)
         if isinstance(stmt, S.ShowStats):
             return self._do_show_stats(stmt.table)
+        if isinstance(stmt, S.ShowMetrics):
+            return self._do_show_metrics(stmt)
+        if isinstance(stmt, S.ShowSlow):
+            return self._do_show_slow()
         if isinstance(stmt, S.AlterReshard):
             return self._do_reshard(stmt)
         if isinstance(stmt, S.AlterRetain):
@@ -1249,6 +1299,8 @@ class SQLCached:
             return self._do_restore(stmt)
         if isinstance(stmt, S.Explain):
             return self._do_explain(stmt.inner)
+        if isinstance(stmt, S.ExplainAnalyze):
+            return self._do_explain_analyze(stmt, params)
         raise S.SQLError(f"unhandled statement {stmt!r}")
 
     @staticmethod
@@ -1319,10 +1371,16 @@ class SQLCached:
                 reads |= set(PL.columns_of(expr))
             return StatementShape(("update", stmt), stmt.table, "update",
                                   True, True, clean(reads), clean(writes))
-        if isinstance(stmt, S.Explain):
-            # pure metadata: never merges, never fences
+        if isinstance(stmt, (S.Explain, S.ShowMetrics, S.ShowSlow)):
+            # pure metadata (host counters only): never merges, never
+            # fences — SHOW METRICS / SHOW SLOW may overlap live waves
             return StatementShape(("explain", stmt), None, "explain",
                                   False, False, frozenset(), frozenset())
+        if isinstance(stmt, S.ExplainAnalyze):
+            # executes its inner statement: admin barrier on its table
+            return StatementShape(("admin", stmt),
+                                  getattr(stmt.inner, "table", None),
+                                  "admin", False, True)
         table = getattr(stmt, "table", None)
         return StatementShape(("admin", stmt), table, "admin", False, True)
 
@@ -1566,7 +1624,7 @@ class SQLCached:
         n, = self._run_state(t, fn, mode, None, False, 1, ())
         return Result(dev={"count": n})
 
-    def _do_show_stats(self, name: str) -> Result:
+    def _do_show_stats(self, name: str | None) -> Result:
         """SHOW STATS t (= ``EXPLAIN t``): the per-shard skew report —
         live rows straight from each lane's validity bits plus the
         host-side routed-statement counters — as one JSON ``VALUE`` row,
@@ -1574,7 +1632,13 @@ class SQLCached:
         lane's counters and row count running away from its peers.
         Mesh-placed tables report each lane's device id from host-side
         placement metadata (``shards.lane_devices`` — never a
-        cross-device sync, so the report can't stall dispatches)."""
+        cross-device sync, so the report can't stall dispatches).
+
+        Without a table, the daemon-wide roll-up: every table's live
+        rows, summed executor-cache counters, the scheduler/server stats
+        registered via ``telemetry.attach`` and daemon uptime."""
+        if name is None:
+            return self._do_show_stats_all()
         t = self._table(name)
         n = t.schema.shards
         if t.lanes is None:
@@ -1613,6 +1677,93 @@ class SQLCached:
                 "executors": t.execs.stats_dict(),
                 "per_shard": per}
         return Result(count=n, value=json.dumps(info, sort_keys=True))
+
+    def _do_show_stats_all(self) -> Result:
+        """``SHOW STATS`` with no table: the daemon-wide roll-up. Admin
+        barrier like the per-table form — live-row counts sync each
+        table's validity bits, which is fine off the serving path."""
+        tables = {}
+        exec_totals: dict[str, Any] = {"cached": 0, "entries": 0, "hits": 0,
+                                       "misses": 0, "compiles": 0,
+                                       "fallbacks": 0,
+                                       "compile_ms_total": 0.0}
+        for name, t in sorted(self.tables.items()):
+            ed = t.execs.stats_dict()
+            for k in exec_totals:
+                exec_totals[k] += ed[k]
+            tables[name] = {"shards": t.schema.shards,
+                            "live_rows": self.live_rows(name),
+                            "host_ops": t.host_ops}
+        exec_totals["compile_ms_total"] = round(
+            exec_totals["compile_ms_total"], 3)
+        info = {"tables": tables,
+                "executors": exec_totals,
+                "uptime_s": self.telemetry.uptime_s(),
+                "telemetry": self.telemetry.enabled,
+                **self.telemetry.sources()}
+        return Result(count=len(tables),
+                      value=json.dumps(info, sort_keys=True))
+
+    def _do_show_metrics(self, stmt: S.ShowMetrics) -> Result:
+        """SHOW METRICS [t] [FORMAT 'prom']: the serving-telemetry
+        report. Host counters and monotonic-clock aggregates only —
+        never a device sync, so it can run mid-traffic without stalling
+        dispatches. The prom exposition is multi-line text, so it ships
+        JSON-string-encoded to stay one VALUE wire line."""
+        if stmt.table is not None:
+            self._table(stmt.table)   # unknown table -> SQLError
+        rep = self.telemetry.report(stmt.table)
+        if stmt.fmt == "prom":
+            return Result(count=len(rep["shapes"]),
+                          value=json.dumps(TEL.prom(rep)))
+        return Result(count=len(rep["shapes"]),
+                      value=json.dumps(rep, sort_keys=True))
+
+    def _do_show_slow(self) -> Result:
+        """SHOW SLOW: the bounded slow-statement ring (span trees of
+        statements that crossed ``slow_ms``), oldest first."""
+        entries = [tr.to_dict() for tr in self.telemetry.slow_entries()]
+        return Result(count=len(entries), rows=entries)
+
+    def _do_explain_analyze(self, stmt: S.ExplainAnalyze,
+                            params: Sequence[Any] = ()) -> Result:
+        """EXPLAIN ANALYZE <stmt>: execute the inner statement and
+        report its measured per-stage spans next to the plan. When the
+        statement arrived over the wire, the scheduler's ambient trace
+        already carries the wire/parse/queue/lock spans — this handler
+        adds execute + render (it materializes the inner result: a
+        diagnostic statement pays the sync the response flusher would).
+        Called directly (no scheduler), it traces just its own stages."""
+        amb = TEL.current_traces()
+        tr = amb[0] if amb else TEL.Trace()
+        try:
+            plan = json.loads(self._do_explain(stmt.inner).value)
+        except S.SQLError:
+            plan = {"statement": type(stmt.inner).__name__.lower()}
+        with TEL.dispatch_span([tr]):
+            res = self._dispatch_stmt(stmt.inner, params)
+            tr.mark("execute")
+            count = res.count
+            _ = res.rows
+            _ = res.value
+            tr.mark("render")
+        info = {"analyze": True,
+                "plan": plan,
+                "stages": {k: round(v, 1)
+                           for k, v in tr.stage_totals().items()},
+                "total_us": round((tr.last - tr.t0) * 1e6, 1),
+                "count": count}
+        if tr.mode is not None:
+            info["exec_mode"] = tr.mode
+        if tr.cache is not None:
+            info["cache"] = tr.cache
+        if tr.compile_ms:
+            info["compile_ms"] = round(tr.compile_ms, 3)
+        if tr.group is not None:
+            info["group"] = tr.group
+        if tr.wave is not None:
+            info["wave"] = tr.wave
+        return Result(count=count, value=json.dumps(info, sort_keys=True))
 
     def _do_reshard(self, stmt: S.AlterReshard) -> Result:
         """ALTER TABLE t RESHARD n: live re-partition. One bulk

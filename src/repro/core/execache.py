@@ -42,6 +42,8 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
+from repro.core import telemetry as TEL
+
 __all__ = ["ExecEntry", "ExecutorCache"]
 
 # Input-validation errors a Compiled executable raises BEFORE running
@@ -75,21 +77,25 @@ class ExecEntry:
         cache = self._cache
         comp = self.compiled.get(placement)
         if comp is None:
-            cache.misses += 1
+            cache.counters.add("misses")
             t0 = time.perf_counter()
             comp = self.jitted.lower(*args).compile()
-            cache.compiles += 1
-            cache.compile_ms_total += (time.perf_counter() - t0) * 1e3
+            ms = (time.perf_counter() - t0) * 1e3
+            cache.counters.add("compiles")
+            cache.counters.add("compile_ms_total", ms)
+            TEL.note_exec("compile", ms)
             self.compiled[placement] = comp
         else:
-            cache.hits += 1
+            cache.counters.add("hits")
+            TEL.note_exec("hit")
         try:
             return comp(*args)
         except _FALLBACK_ERRORS:
             # aval/placement drift (e.g. a lane migrated devices between
             # key and call): input validation fired before execution, so
             # donated buffers are intact — serve through the lazy path.
-            cache.fallbacks += 1
+            cache.counters.add("fallbacks")
+            TEL.note_exec("fallback")
             return self.jitted(*args)
 
     # ------------------------------------------------------------- warm-up
@@ -104,8 +110,8 @@ class ExecEntry:
         cache = self._cache
         t0 = time.perf_counter()
         comp = self.jitted.lower(*args).compile()
-        cache.compiles += 1
-        cache.compile_ms_total += (time.perf_counter() - t0) * 1e3
+        cache.counters.add("compiles")
+        cache.counters.add("compile_ms_total", (time.perf_counter() - t0) * 1e3)
         self.compiled[placement] = comp
         self._prime(comp, args)
         return True
@@ -147,11 +153,30 @@ class ExecutorCache:
         # EXPLAIN. Cleared on bump() with the entries they describe.
         self.sigs: set = set()
         self._lock = threading.Lock()
-        self.hits = 0
-        self.misses = 0
-        self.compiles = 0
-        self.fallbacks = 0
-        self.compile_ms_total = 0.0
+        # Atomic counters: the concurrent wave path increments these from
+        # several worker threads at once (see telemetry.Counters).
+        self.counters = TEL.Counters({"hits": 0, "misses": 0, "compiles": 0,
+                                      "fallbacks": 0, "compile_ms_total": 0.0})
+
+    @property
+    def hits(self) -> int:
+        return self.counters["hits"]
+
+    @property
+    def misses(self) -> int:
+        return self.counters["misses"]
+
+    @property
+    def compiles(self) -> int:
+        return self.counters["compiles"]
+
+    @property
+    def fallbacks(self) -> int:
+        return self.counters["fallbacks"]
+
+    @property
+    def compile_ms_total(self) -> float:
+        return self.counters["compile_ms_total"]
 
     # ------------------------------------------------------------- entries
     def get(self, key: Any, builder: Callable[[], Callable]) -> ExecEntry:

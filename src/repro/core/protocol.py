@@ -85,6 +85,32 @@ Two admin statements manage the partitioning live over the same wire
                               --   epoch. WARMUP t LIKE 'SELECT ...'
                               --   pre-plans exactly the quoted shape.
 
+Observability statements (PR 9, core/telemetry.py — all one COUNT +
+one VALUE line; none ever syncs a device handle):
+
+    EXEC SHOW METRICS pages
+    GO                        -- VALUE is the JSON telemetry report:
+                              --   per-(table, kind) log2 latency
+                              --   histograms, p50/p99/p999, per-stage
+                              --   (wire/parse/queue/lock/execute/
+                              --   render) breakdowns, exec-mode and
+                              --   executor-cache attribution. Omit the
+                              --   table for every shape; FORMAT 'prom'
+                              --   returns a Prometheus text exposition
+                              --   (JSON-string-encoded: one wire line)
+    EXEC EXPLAIN ANALYZE SELECT hits FROM pages WHERE site = 7
+    GO                        -- executes the statement and reports its
+                              --   MEASURED per-stage spans next to the
+                              --   plan (admin barrier: it materializes
+                              --   the inner result)
+    EXEC SHOW SLOW
+    GO                        -- bounded ring of span trees from
+                              --   statements that crossed slow_ms
+                              --   (SQLCached(slow_ms=..) /REPRO_SLOW_MS)
+    EXEC SHOW STATS
+    GO                        -- daemon-wide roll-up: tables, scheduler
+                              --   stats, executor-cache totals, uptime
+
 The batch scheduler additionally overlaps groups whose footprints
 provably commute — different tables, disjoint columns, or pruned
 statements on disjoint shard sets. Since PR 5 a sharded table's state
@@ -151,6 +177,7 @@ import time
 from collections import deque
 from typing import Any, Sequence
 
+from repro.core import telemetry as TEL
 from repro.core.daemon import Result, SQLCached
 from repro.core.scheduler import BatchScheduler
 
@@ -222,18 +249,25 @@ def _render_result(res: Result, tag: str | None) -> bytes:
     return b"\r\n".join(out) + b"\r\n"
 
 
-def _render_burst(items: list) -> tuple[bytes, int, int]:
+def _render_burst(items: list) -> tuple[bytes, int, int, list]:
     """Render a burst of resolved responses in ONE worker-thread hop:
-    ``items`` holds (tag, Result | Exception | str) in response order.
-    Returns (wire bytes, n statements ok, n statement errors). Sibling
-    Results of one batch share a device→host sync here."""
+    ``items`` holds (tag, Result | Exception | str, trace) in response
+    order. Returns (wire bytes, n statements ok, n statement errors,
+    [trace] for traced items, ``trace.error`` stamped). Sibling Results of one batch
+    share a device→host sync here, and each statement's trace gets its
+    "render" span stamped at render time — but the histogram fold
+    (``Telemetry.finish``) is the CALLER's job, after the bytes are on
+    the socket, so recording never adds to the client-visible latency."""
     parts: list[bytes] = []
     stmts = errs = 0
-    for tag, payload in items:
+    done: list = []
+    for tag, payload, trace in items:
+        err = False
         if isinstance(payload, Exception):
             msg = str(payload).replace("\n", " ")[:500]
             parts.append(_line(f"ERR {msg}", tag))
             errs += 1
+            err = True
         elif isinstance(payload, str):
             parts.append(_line(payload, tag))
         else:
@@ -244,7 +278,13 @@ def _render_burst(items: list) -> tuple[bytes, int, int]:
                 msg = str(e).replace("\n", " ")[:500]
                 parts.append(_line(f"ERR {msg}", tag))
                 errs += 1
-    return b"".join(parts), stmts, errs
+                err = True
+        if trace is not None:
+            trace.mark("render")
+            if err:
+                trace.error = True
+            done.append(trace)
+    return b"".join(parts), stmts, errs, done
 
 
 class _LineTooLong(Exception):
@@ -320,16 +360,19 @@ class _ResponseQueue:
     def __init__(self, writer: asyncio.StreamWriter, server: "SQLCachedServer"):
         self._writer = writer
         self._server = server
+        self._telemetry = server.db.telemetry
+        self._ring = self._telemetry.ring()  # per-connection trace ring
         self._q: asyncio.Queue = asyncio.Queue(maxsize=1024)
         self._task = asyncio.create_task(self._run())
 
     async def put_raw(self, tag: str | None, text: str) -> None:
         if text.startswith("ERR"):
-            self._server.stats["errors"] += 1
-        await self._q.put((tag, text))
+            self._server.stats.add("errors")
+        await self._q.put((tag, text, None))
 
-    async def put_future(self, tag: str | None, fut: asyncio.Future) -> None:
-        await self._q.put((tag, fut))
+    async def put_future(self, tag: str | None, fut: asyncio.Future,
+                         trace: "TEL.Trace | None" = None) -> None:
+        await self._q.put((tag, fut, trace))
 
     async def _run(self) -> None:
         closing = False
@@ -339,30 +382,36 @@ class _ResponseQueue:
                 burst.append(self._q.get_nowait())
             # resolve in order (responses must flush in submission order,
             # so waiting on the head future never reorders anything)
-            items: list[tuple[str | None, Any]] = []
+            items: list[tuple[str | None, Any, Any]] = []
             for entry in burst:
                 if entry is None:
                     closing = True
                     break
-                tag, payload = entry
+                tag, payload, trace = entry
                 if isinstance(payload, asyncio.Future):
                     try:
-                        items.append((tag, await payload))
+                        items.append((tag, await payload, trace))
                     except asyncio.CancelledError:
                         raise
                     except Exception as e:  # noqa: BLE001
-                        items.append((tag, e))
+                        items.append((tag, e, trace))
                 else:
-                    items.append((tag, payload))
+                    items.append((tag, payload, trace))
             if not items:
                 continue
             try:
-                data, stmts, errs = await asyncio.to_thread(
+                data, stmts, errs, done = await asyncio.to_thread(
                     _render_burst, items)
-                self._server.stats["statements"] += stmts
-                self._server.stats["errors"] += errs
+                self._server.stats.add("statements", stmts)
+                self._server.stats.add("errors", errs)
                 self._writer.write(data)
                 await self._writer.drain()
+                # trace hand-off AFTER the response is on the wire:
+                # finish() is an O(1) enqueue — the histogram fold runs
+                # in telemetry's background folder thread, never here
+                for trace in done:
+                    self._telemetry.finish(trace, ring=self._ring,
+                                           error=trace.error)
             except (ConnectionError, OSError):
                 # peer went away mid-write. Keep CONSUMING until the close
                 # sentinel — the handler may be parked on the bounded
@@ -406,7 +455,13 @@ class SQLCachedServer:
                                         max_wait_us=max_wait_us)
         self._servers: list[asyncio.AbstractServer] = []
         self._conn_tasks: set[asyncio.Task] = set()
-        self.stats = {"connections": 0, "statements": 0, "errors": 0}
+        # atomic (telemetry.Counters): render worker threads and the
+        # event loop both increment these
+        self.stats = TEL.Counters({"connections": 0, "statements": 0,
+                                   "errors": 0})
+        # register live stats for the SHOW STATS daemon-wide roll-up
+        self.db.telemetry.attach("scheduler", self.scheduler.stats)
+        self.db.telemetry.attach("server", self.stats)
 
     # ------------------------------------------------------------ lifecycle
     async def start(
@@ -442,15 +497,16 @@ class SQLCachedServer:
     # ------------------------------------------------------------- protocol
     async def _handle(self, reader: asyncio.StreamReader,
                       writer: asyncio.StreamWriter) -> None:
-        self.stats["connections"] += 1
+        self.stats.add("connections")
         task = asyncio.current_task()
         if task is not None:
             self._conn_tasks.add(task)
         resp = _ResponseQueue(writer, self)
         lines = _LineReader(reader)
         # statements being assembled, keyed by tag (None = untagged);
-        # `cur` is the most recent EXEC's tag — untagged ARG/GO bind to it
-        pending: dict[str | None, tuple[str, list]] = {}
+        # `cur` is the most recent EXEC's tag — untagged ARG/GO bind to
+        # it. Each entry carries the trace stamped at EXEC receipt.
+        pending: dict[str | None, tuple[str, list, Any]] = {}
         cur: str | None = None
         # response invariant: every submitted statement gets EXACTLY ONE
         # response block, or pipelined clients desync. A statement that
@@ -521,7 +577,7 @@ class SQLCachedServer:
                             break
                         cur = tag
                         continue
-                    pending[tag] = (rest, [])
+                    pending[tag] = (rest, [], self.db.telemetry.trace())
                     cur = tag
                 elif verb == "ARG":
                     if poisoned and tag is None:
@@ -557,8 +613,8 @@ class SQLCachedServer:
                     if st is None or not st[0]:
                         await resp.put_raw(key, "ERR no statement")
                         continue
-                    fut = self.scheduler.submit(st[0], st[1])
-                    await resp.put_future(key, fut)
+                    fut = self.scheduler.submit(st[0], st[1], trace=st[2])
+                    await resp.put_future(key, fut, st[2])
                 elif verb == "PING":
                     await resp.put_raw(tag, "PONG")
                 elif verb == "QUIT":

@@ -96,19 +96,22 @@ import time
 from collections import deque
 from typing import Any, Sequence
 
+from repro.core import telemetry as TEL
 from repro.core.daemon import SQLCached, StatementShape
 
 
 class _Item:
-    __slots__ = ("sql", "params", "future", "shape", "admitted_at")
+    __slots__ = ("sql", "params", "future", "shape", "admitted_at", "trace")
 
     def __init__(self, sql: str, params: tuple, future: asyncio.Future,
-                 shape: StatementShape | None, admitted_at: float = 0.0):
+                 shape: StatementShape | None, admitted_at: float = 0.0,
+                 trace: "TEL.Trace | None" = None):
         self.sql = sql
         self.params = params
         self.future = future
         self.shape = shape
         self.admitted_at = admitted_at
+        self.trace = trace
 
 
 class _Group:
@@ -244,11 +247,15 @@ class BatchScheduler:
         # per table: {"base": Lock, "lanes": {shard_id: Lock}} — see
         # _locks_for
         self._table_locks: dict[str, dict] = {}
-        self.stats = {"admitted": 0, "batches": 0, "grouped_statements": 0,
-                      "singles": 0, "max_group": 0, "window_waits": 0,
-                      "waves": 0, "overlapped_groups": 0, "max_wave": 0,
-                      "lane_dispatches": 0, "lane_splits": 0,
-                      "cold_solo": 0}
+        # Atomic counters (telemetry.Counters): waves dispatch groups
+        # concurrently and render threads read these live, so plain
+        # ``+=`` read-modify-writes would lose increments.
+        self.stats = TEL.Counters(
+            {"admitted": 0, "batches": 0, "grouped_statements": 0,
+             "singles": 0, "max_group": 0, "window_waits": 0,
+             "waves": 0, "overlapped_groups": 0, "max_wave": 0,
+             "lane_dispatches": 0, "lane_splits": 0,
+             "cold_solo": 0, "errors": 0})
 
     # ------------------------------------------------------------ lifecycle
     async def start(self) -> None:
@@ -271,7 +278,8 @@ class BatchScheduler:
                     ConnectionError("scheduler stopped"))
 
     # ------------------------------------------------------------ admission
-    def submit(self, sql: str, params: Sequence[Any] = ()) -> asyncio.Future:
+    def submit(self, sql: str, params: Sequence[Any] = (),
+               trace: "TEL.Trace | None" = None) -> asyncio.Future:
         """Enqueue one statement; returns a future resolving to its lazy
         :class:`~repro.core.daemon.Result` (or raising the statement's
         error). Must be called from the scheduler's event loop."""
@@ -279,12 +287,20 @@ class BatchScheduler:
         if self._closed:
             fut.set_exception(ConnectionError("scheduler stopped"))
             return fut
+        if trace is not None:
+            trace.mark("wire")   # EXEC receipt -> admission
+            trace.sql = sql
         try:
             shape = self.db.shape_key(sql)
         except Exception:
             shape = None  # unparseable: barrier; execute() re-raises for us
-        self._q.append(_Item(sql, tuple(params), fut, shape, self._now()))
-        self.stats["admitted"] += 1
+        if trace is not None:
+            trace.mark("parse")
+            if shape is not None:
+                trace.table, trace.kind = shape.table, shape.kind
+        self._q.append(_Item(sql, tuple(params), fut, shape, self._now(),
+                             trace))
+        self.stats.add("admitted")
         self._wake.set()
         return fut
 
@@ -325,10 +341,28 @@ class BatchScheduler:
         return groups
 
     # ------------------------------------------------------------- dispatch
+    @staticmethod
+    def _call_traced(fn, traces, *args, **kwargs):
+        """Run ``fn`` in the worker thread with ``traces`` installed as
+        the ambient dispatch context (so daemon/execache attribute
+        exec_mode and cache events into them) and stamp the "execute"
+        span on each trace when it returns."""
+        if not traces:
+            return fn(*args, **kwargs)
+        with TEL.dispatch_span(traces):
+            try:
+                return fn(*args, **kwargs)
+            finally:
+                for tr in traces:
+                    tr.mark("execute")
+
     async def _run_single(self, it: _Item) -> None:
+        traces = [it.trace] if it.trace is not None else ()
         try:
-            res = await asyncio.to_thread(self.db.execute, it.sql, it.params)
+            res = await asyncio.to_thread(
+                self._call_traced, self.db.execute, traces, it.sql, it.params)
         except Exception as e:  # noqa: BLE001 — statement error, not ours
+            self.stats.add("errors")
             if not it.future.done():
                 it.future.set_exception(e)
         else:
@@ -359,7 +393,7 @@ class BatchScheduler:
             # single-lane group: the daemon will execute it on exactly
             # this lane's state handle (db.group_lane IS the dispatch
             # decision _exec_mode reads, so lock and dispatch agree)
-            self.stats["lane_dispatches"] += 1
+            self.stats.add("lane_dispatches")
             return [lanes.setdefault(lane, asyncio.Lock())]
         return [ent["base"]] + [lanes.setdefault(i, asyncio.Lock())
                                 for i in range(n)]
@@ -409,7 +443,7 @@ class BatchScheduler:
         if subs is None:
             await self._dispatch_one(g)
             return
-        self.stats["lane_splits"] += 1
+        self.stats.add("lane_splits")
         await asyncio.gather(*(self._dispatch_one(s) for s in subs))
 
     async def _dispatch_one(self, g: _Group) -> None:
@@ -418,8 +452,14 @@ class BatchScheduler:
         handle's read-modify-write atomic — and disjoint-lane groups
         hold disjoint locks, so they truly overlap."""
         locks = self._locks_for(g)
+        for it in g.items:
+            if it.trace is not None:
+                it.trace.mark("queue")   # admission -> lock acquisition
         for lk in locks:
             await lk.acquire()
+        for it in g.items:
+            if it.trace is not None:
+                it.trace.mark("lock")    # lane/table lock wait
         try:
             await self._dispatch_inner(g)
         finally:
@@ -428,19 +468,22 @@ class BatchScheduler:
 
     async def _dispatch_inner(self, g: _Group) -> None:
         items = g.items
-        self.stats["batches"] += 1
-        if len(items) > self.stats["max_group"]:
-            self.stats["max_group"] = len(items)
+        self.stats.add("batches")
+        self.stats.max("max_group", len(items))
+        for it in items:
+            if it.trace is not None:
+                it.trace.group = len(items)
         if len(items) == 1:
-            self.stats["singles"] += 1
+            self.stats.add("singles")
             await self._run_single(items[0])
             return
-        self.stats["grouped_statements"] += len(items)
+        self.stats.add("grouped_statements", len(items))
+        traces = [it.trace for it in items if it.trace is not None]
         try:
             params_list = [it.params for it in items]
             results = await asyncio.to_thread(
-                self.db.executemany, items[0].sql, params_list,
-                per_statement=True)
+                self._call_traced, self.db.executemany, traces,
+                items[0].sql, params_list, per_statement=True)
         except Exception:  # noqa: BLE001
             # one member's bad binding (wrong arity, bad type) must not
             # fail its groupmates: the batch raised before any state
@@ -506,17 +549,21 @@ class BatchScheduler:
         except Exception:  # noqa: BLE001 — admission hints are best effort
             return False
         if cold:
-            self.stats["cold_solo"] += 1
+            self.stats.add("cold_solo")
         return cold
 
     async def _dispatch_wave(self, wave: list) -> None:
-        self.stats["waves"] += 1
-        if len(wave) > self.stats["max_wave"]:
-            self.stats["max_wave"] = len(wave)
+        self.stats.add("waves")
+        self.stats.max("max_wave", len(wave))
+        if len(wave) > 1:
+            for g in wave:
+                for it in g.items:
+                    if it.trace is not None:
+                        it.trace.wave = len(wave)
         if len(wave) == 1:
             await self._dispatch(wave[0])
             return
-        self.stats["overlapped_groups"] += len(wave)
+        self.stats.add("overlapped_groups", len(wave))
         await asyncio.gather(*(self._dispatch(g) for g in wave))
 
     # ------------------------------------------------------------- windowing
@@ -539,7 +586,7 @@ class BatchScheduler:
             remain = deadline - self._now()
             if remain <= 0:
                 break
-            self.stats["window_waits"] += 1
+            self.stats.add("window_waits")
             self._wake.clear()
             await self._wait_for_arrivals(remain)
             # let every runnable connection handler drain its read buffer

@@ -25,7 +25,20 @@ cache daemon and we exclude them):
   EXPLAIN <stmt>      -- report the chosen query plan (index-probe /
                          fused-scan / generic-scan) without executing
   EXPLAIN t           -- per-shard skew/usage stats (= SHOW STATS t)
+  EXPLAIN ANALYZE <stmt>
+                      -- execute the statement and report its actual
+                         per-stage span timings (wire/parse/queue/lock/
+                         execute/render) next to the plan
   SHOW STATS t        -- per-shard live rows + routed-statement counters
+  SHOW STATS          -- daemon-wide roll-up: tables, scheduler stats,
+                         executor-cache totals, uptime
+  SHOW METRICS [t] [FORMAT 'prom']
+                      -- serving telemetry report (core/telemetry.py):
+                         per-table x per-kind log2 latency histograms,
+                         percentiles, stage breakdowns; FORMAT 'prom'
+                         emits a Prometheus-style text exposition
+  SHOW SLOW           -- bounded ring of slow-statement span trees
+                         (SQLCached(slow_ms=...) / REPRO_SLOW_MS)
   ALTER TABLE t RESHARD n
                       -- live re-partition: rebuild the shard pytree at
                          n shards by one bulk device-side re-split (row
@@ -208,9 +221,28 @@ class DropTable:
 @dataclasses.dataclass(frozen=True)
 class ShowStats:
     """SHOW STATS t (equivalently ``EXPLAIN t``): per-shard skew report —
-    live rows, routed-statement and write counters per execution lane."""
+    live rows, routed-statement and write counters per execution lane.
+    Without a table, the daemon-wide roll-up (tables, scheduler stats,
+    executor-cache totals, uptime)."""
 
-    table: str
+    table: str | None = None
+
+
+@dataclasses.dataclass(frozen=True)
+class ShowMetrics:
+    """SHOW METRICS [t] [FORMAT 'prom']: the serving-telemetry report —
+    per-(table, kind) log2 latency histograms, percentiles and per-stage
+    breakdowns (core/telemetry.py). FORMAT 'prom' returns a
+    Prometheus-style text exposition (JSON-string-encoded on the wire)."""
+
+    table: str | None = None
+    fmt: str | None = None
+
+
+@dataclasses.dataclass(frozen=True)
+class ShowSlow:
+    """SHOW SLOW: the bounded ring of slow-statement span trees captured
+    by ``SQLCached(slow_ms=...)`` / ``REPRO_SLOW_MS``."""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -278,10 +310,19 @@ class Explain:
     inner: "Statement"
 
 
+@dataclasses.dataclass(frozen=True)
+class ExplainAnalyze:
+    """EXPLAIN ANALYZE <stmt>: execute the inner statement and report
+    its measured per-stage span timings next to the plan."""
+
+    inner: "Statement"
+
+
 Statement = (
     CreateTable | Insert | Select | Update | Delete | Expire | Flush
-    | Reindex | DropTable | ShowStats | AlterReshard | AlterRetain
-    | Checkpoint | Restore | Warmup | Explain
+    | Reindex | DropTable | ShowStats | ShowMetrics | ShowSlow
+    | AlterReshard | AlterRetain | Checkpoint | Restore | Warmup
+    | Explain | ExplainAnalyze
 )
 
 
@@ -437,20 +478,27 @@ class _Parser:
     # -- statements
     def statement(self) -> Statement:
         explain = self.accept_kw("EXPLAIN") is not None
+        analyze = False
         if explain:
-            kind, val = self.peek()
-            if kind == "name" and val.upper() not in self._STMT_KWS:
-                # EXPLAIN <table>: the per-shard stats report (SHOW STATS)
-                stmt = ShowStats(self.name())
-                if self.peek()[0] != "eof":
-                    raise SQLError(
-                        f"trailing tokens: {self.peek()[1]!r}")
-                return stmt
+            # ANALYZE must be consumed before the EXPLAIN <table> branch
+            # or "EXPLAIN ANALYZE x" would parse as ShowStats("ANALYZE")
+            analyze = self.accept_kw("ANALYZE") is not None
+            if not analyze:
+                kind, val = self.peek()
+                if kind == "name" and val.upper() not in self._STMT_KWS:
+                    # EXPLAIN <table>: the per-shard stats report
+                    stmt = ShowStats(self.name())
+                    if self.peek()[0] != "eof":
+                        raise SQLError(
+                            f"trailing tokens: {self.peek()[1]!r}")
+                    return stmt
         kw = self.expect_kw(*self._STMT_KWS)
         fn = getattr(self, f"_stmt_{kw.lower()}")
         stmt = fn()
         if self.peek()[0] != "eof":
             raise SQLError(f"trailing tokens: {self.peek()[1]!r}")
+        if analyze:
+            return ExplainAnalyze(stmt)
         return Explain(stmt) if explain else stmt
 
     def _stmt_create(self) -> CreateTable:
@@ -607,9 +655,24 @@ class _Parser:
         self.expect_kw("TABLE")
         return DropTable(self.name())
 
-    def _stmt_show(self) -> ShowStats:
-        self.expect_kw("STATS")
-        return ShowStats(self.name())
+    def _stmt_show(self) -> "ShowStats | ShowMetrics | ShowSlow":
+        kw = self.expect_kw("STATS", "METRICS", "SLOW")
+        if kw == "SLOW":
+            return ShowSlow()
+        if kw == "METRICS":
+            table = None
+            kind, val = self.peek()
+            if kind == "name" and val.upper() != "FORMAT":
+                table = self.name()
+            fmt = None
+            if self.accept_kw("FORMAT"):
+                fmt = self._string().lower()
+                if fmt not in ("json", "prom"):
+                    raise SQLError(f"unknown METRICS format {fmt!r}")
+            return ShowMetrics(table, fmt)
+        if self.peek()[0] == "name":
+            return ShowStats(self.name())
+        return ShowStats(None)
 
     def _stmt_alter(self) -> "AlterReshard | AlterRetain":
         self.expect_kw("TABLE")
