@@ -24,7 +24,10 @@
          sync wire rate), so absolute machine speed and background load
          cancel to first order — raw per-op latencies are NOT gated
          because they swing arbitrarily with host load. A failing bench
-         gets one re-run before the gate reports a regression.
+         gets one re-run before the gate reports a regression. The gate
+         also runs reprolint over ``src`` and fails on any unsilenced
+         finding — serving-path invariants (REP001-006) are part of the
+         perf contract.
 
 Without flags, the full human-readable suite runs: every paper
 table/figure plus the wire protocol, serving and roofline sections.
@@ -149,12 +152,28 @@ def _evaluate(fresh) -> list:
     return failing
 
 
+def _lint_gate() -> int:
+    """reprolint finding count over src (must be zero to ship): the perf
+    gate also guards the invariants perf depends on — a device sync or a
+    stray print on the serving path IS a latency regression in waiting."""
+    from repro.lint import run_lint
+    rep = run_lint([str(REPO_ROOT / "src")])
+    n = len(rep.unsilenced)
+    print(f"CHECK {'ok   ' if n == 0 else 'REGRESSION'} reprolint: "
+          f"{n} unsilenced finding(s) over src")
+    for f in rep.unsilenced:
+        print(f"    {f.path}:{f.line}: {f.rule} {f.message}")
+    return n
+
+
 def check() -> int:
     """Compare fresh quick-run ratio metrics against the checked-in BENCH
     files; return the number of >2x regressions after one retry."""
     from benchmarks import (cluster_bench, fig1_kv_read, index_bench,
                             lane_bench, mesh_bench, obs_bench,
                             protocol_bench, serve_bench, shard_bench)
+
+    lint_failures = _lint_gate()
 
     runners = {
         "BENCH_fig1.json": lambda: fig1_kv_read.run_json(quick=True),
@@ -182,7 +201,7 @@ def check() -> int:
         for fname in retry:
             fresh[fname] = runners[fname]()
         failing = _evaluate(fresh)
-    return len(failing)
+    return len(failing) + lint_failures
 
 
 def main() -> None:

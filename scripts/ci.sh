@@ -25,7 +25,15 @@
 # 6. runs the telemetry-overhead bench (quick) standalone — tracing ON
 #    vs REPRO_TELEMETRY=0 must complete and report its on/off p50
 #    ratio before step 7 gates it;
-# 7. re-runs the quick benches IN MEMORY and fails if any curated
+# 7. lints the serving path: `python -m repro.lint src` (the REP001-006
+#    invariant rules, see src/repro/lint/) must exit 0 — any unsilenced
+#    finding (no pragma, not in lint/baseline.json) fails the build;
+# 8. re-runs the scheduler suites (both concurrency regimes) and the
+#    chaos suite with REPRO_LOCKCHECK=1 — every daemon/scheduler lock
+#    becomes an order-recording proxy and tests/conftest.py fails the
+#    session if the observed acquisition-order graph has a cycle (a
+#    potential deadlock), even if no run actually deadlocked;
+# 9. re-runs the quick benches IN MEMORY and fails if any curated
 #    BENCH_*.json ratio metric regressed more than 2x vs the checked-in
 #    values (see benchmarks/run.py CHECK_METRICS — ratios, not absolute
 #    latencies, so machine speed cancels to first order; the serve
@@ -72,6 +80,18 @@ XLA_FLAGS="$MESH_DEVICES" python -m pytest -x -q
 echo "== mesh regime: scheduler suite + mesh parity under 8 devices"
 XLA_FLAGS="$MESH_DEVICES" REPRO_SCHED_CONCURRENCY=1 \
     python -m pytest -x -q $SCHED_SUITE tests/test_mesh_parity.py
+
+echo "== reprolint: serving-path invariants (REP001-006)"
+python -m repro.lint src
+
+echo "== lockcheck: scheduler suite, concurrency ON, lock-order sanitizer"
+REPRO_LOCKCHECK=1 REPRO_SCHED_CONCURRENCY=1 python -m pytest -x -q $SCHED_SUITE
+
+echo "== lockcheck: scheduler suite, concurrency OFF"
+REPRO_LOCKCHECK=1 REPRO_SCHED_CONCURRENCY=0 python -m pytest -x -q $SCHED_SUITE
+
+echo "== lockcheck: chaos suite"
+REPRO_LOCKCHECK=1 REPRO_SCHED_CONCURRENCY=1 python -m pytest -x -q $CHAOS_SUITE
 
 echo "== serve bench: pre-planned serving + p999 tail (quick)"
 python -m benchmarks.serve_bench --quick

@@ -228,6 +228,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.launch.mesh import lane_mesh_for
+from repro.lint import lockorder as LK
 from repro.core import planner as PL
 from repro.core import predicate as P
 from repro.core import shards as SH
@@ -246,7 +247,7 @@ class Interner:
     def __init__(self):
         self._fwd: dict[str, int] = {}
         self._rev: list[str] = [""]  # id 0 = empty/NULL
-        self._lock = threading.Lock()
+        self._lock = LK.make_lock("daemon.interner")
 
     def intern(self, s: str) -> int:
         i = self._fwd.get(s)
@@ -283,7 +284,7 @@ class _HostStack:
     def __init__(self, dev: dict):
         self.dev = dev
         self._np = None
-        self._lock = threading.Lock()
+        self._lock = LK.make_lock("daemon.hoststack")
 
     def host(self) -> dict:
         if self._np is None:
@@ -1541,15 +1542,17 @@ class SQLCached:
 
     def _make_table(self, schema: TableSchema) -> _Table:
         n = schema.shards
+        lock = LK.make_lock(f"table:{schema.name}")
         if SH.is_sharded(schema):
             mesh = self._mesh_for(schema)
             lanes = SH.place_lanes(mesh, SH.init_lanes(schema))
             return _Table(schema, None, eng=SH, lanes=lanes, mesh=mesh,
+                          lock=lock,
                           lane_ticks=[0] * n, expire_due=[None] * n,
                           stmt_routed=np.zeros(n, np.int64),
                           writes_routed=np.zeros(n, np.int64),
                           rows_in=np.zeros(n, np.int64))
-        return _Table(schema, T.init_state(schema), eng=T,
+        return _Table(schema, T.init_state(schema), eng=T, lock=lock,
                       stmt_routed=np.zeros(1, np.int64),
                       writes_routed=np.zeros(1, np.int64),
                       rows_in=np.zeros(1, np.int64))
@@ -1700,6 +1703,10 @@ class SQLCached:
                 "executors": exec_totals,
                 "uptime_s": self.telemetry.uptime_s(),
                 "telemetry": self.telemetry.enabled,
+                # lock-order sanitizer state (lint/lockorder.py): armed
+                # bit + observed acquisition-order edges/cycles, so chaos
+                # runs are auditable from the wire
+                "lockcheck": LK.summary(),
                 **self.telemetry.sources()}
         return Result(count=len(tables),
                       value=json.dumps(info, sort_keys=True))

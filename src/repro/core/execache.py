@@ -43,6 +43,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import telemetry as TEL
+from repro.lint import lockorder as LK
 
 __all__ = ["ExecEntry", "ExecutorCache"]
 
@@ -152,7 +153,7 @@ class ExecutorCache:
         # mode, placement). Host-only; read by scheduler admission and
         # EXPLAIN. Cleared on bump() with the entries they describe.
         self.sigs: set = set()
-        self._lock = threading.Lock()
+        self._lock = LK.make_lock("execache.entries")
         # Atomic counters: the concurrent wave path increments these from
         # several worker threads at once (see telemetry.Counters).
         self.counters = TEL.Counters({"hits": 0, "misses": 0, "compiles": 0,

@@ -1105,9 +1105,12 @@ def run_server_forever(host: str, port: int, unix_path: str | None = None,
         # machine-readable + flushed: the cluster launcher and the chaos
         # harness spawn daemons with --port 0 and parse the bound port
         if addr is not None:
+            # reprolint: disable=REP005(startup handshake: cluster_up and the chaos harness parse the bound port from stdout)
             print(f"SQLCACHED READY {addr[0]} {addr[1]}", flush=True)
         else:
+            # reprolint: disable=REP005(startup handshake: cluster_up and the chaos harness parse the socket path from stdout)
             print(f"SQLCACHED READY unix {unix_path}", flush=True)
+        # reprolint: disable=REP005(one-shot operator banner at startup, not on the serving path)
         print(f"sqlcached listening on {addr} unix={unix_path}", flush=True)
         await asyncio.Event().wait()
 

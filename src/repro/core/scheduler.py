@@ -98,6 +98,7 @@ from typing import Any, Sequence
 
 from repro.core import telemetry as TEL
 from repro.core.daemon import SQLCached, StatementShape
+from repro.lint import lockorder as LK
 
 
 class _Item:
@@ -382,7 +383,8 @@ class BatchScheduler:
         if table is None:
             return []
         ent = self._table_locks.setdefault(
-            table, {"base": asyncio.Lock(), "lanes": {}})
+            table, {"base": LK.make_async_lock(f"sched:{table}:base"),
+                    "lanes": {}})
         t = self.db.tables.get(table)
         n = t.schema.shards if t is not None else 1
         if n <= 1 or not self.lane_locks:
@@ -394,9 +396,11 @@ class BatchScheduler:
             # this lane's state handle (db.group_lane IS the dispatch
             # decision _exec_mode reads, so lock and dispatch agree)
             self.stats.add("lane_dispatches")
-            return [lanes.setdefault(lane, asyncio.Lock())]
-        return [ent["base"]] + [lanes.setdefault(i, asyncio.Lock())
-                                for i in range(n)]
+            return [lanes.setdefault(
+                lane, LK.make_async_lock(f"sched:{table}:lane{lane}"))]
+        return [ent["base"]] + [
+            lanes.setdefault(i, LK.make_async_lock(f"sched:{table}:lane{i}"))
+            for i in range(n)]
 
     def _split_group(self, g: _Group) -> "list[_Group] | None":
         """Split a multi-shard group whose statements EACH provably

@@ -68,6 +68,8 @@ import time
 from collections import deque
 from typing import Any, Iterator
 
+from repro.lint import lockorder as LK
+
 __all__ = [
     "Counters",
     "Histogram",
@@ -115,7 +117,7 @@ class Counters:
 
     def __init__(self, initial: dict | None = None):
         self._d: dict[str, Any] = dict(initial or {})
-        self._lock = threading.Lock()
+        self._lock = LK.make_lock("telemetry.counters")
 
     def add(self, key: str, n: int | float = 1) -> None:
         with self._lock:
@@ -401,14 +403,14 @@ class Telemetry:
         self.slow_ms = slow_ms
         self.started = time.monotonic()
         self._shapes: dict[tuple[str, str], _ShapeStats] = {}
-        self._shapes_lock = threading.Lock()   # guards dict insertion only
+        self._shapes_lock = LK.make_lock("telemetry.shapes")  # dict insertion only
         self.slow: deque[Trace] = deque(maxlen=self.SLOW_SIZE)
         self._sources: dict[str, Any] = {}     # name -> Counters/dict views
         # finished traces waiting to be folded into the histograms: the
         # serving path only ever pays one deque append; aggregation runs
         # in the background folder thread or at SHOW/report time
         self._pending: deque[Trace] = deque()
-        self._fold_lock = threading.Lock()     # one folder at a time
+        self._fold_lock = LK.make_lock("telemetry.fold")  # one folder at a time
         self._folder: threading.Thread | None = None
 
     # -- serving path ----------------------------------------------------

@@ -1,0 +1,72 @@
+"""reprolint — machine-checked serving-path invariants.
+
+PRs 1-9 built the daemon's speed on conventions that existed only as
+prose; this package turns them into checked rules. Two halves:
+
+* **static** (``python -m repro.lint [paths] [--json]``) — an AST
+  analysis engine with project-specific rules:
+
+  ========  ==========================================================
+  REP001    device sync (``.block_until_ready``/``.item``/``.tolist``/
+            ``int()``/``float()``/``np.asarray`` over a device value)
+            inside a serving function of the five serving modules
+  REP002    bare shared-counter read-modify-write (``stats[k] += 1``)
+            outside ``telemetry.Counters``
+  REP003    lock construction/acquisition bypassing the scheduler's
+            ordered-acquisition helper (the lane-lock deadlock class)
+  REP004    host clock / randomness captured inside a jit/Pallas body
+  REP005    leftover ``print`` / ``jax.debug.print`` on the serving
+            path
+  REP006    use of a buffer after donating it to a ``donate_argnums``
+            executor
+  ========  ==========================================================
+
+  Findings are suppressible per line with
+  ``# reprolint: disable=REPnnn(reason)`` (same line or the line
+  above; several rules comma-separate; the reason rides into the JSON
+  report), or grandfathered wholesale in ``lint/baseline.json``
+  (``--write-baseline`` regenerates it). CI runs
+  ``python -m repro.lint src`` and fails on anything unsilenced.
+
+* **dynamic** (``lint/lockorder.py``) — with ``REPRO_LOCKCHECK=1`` the
+  daemon's and scheduler's locks become instrumented proxies that
+  record the global acquisition-order graph across threads/tasks and
+  report any cycle (a potential deadlock) at teardown, even if the run
+  never actually deadlocked. ``SHOW STATS`` reports the sanitizer
+  state in its ``lockcheck`` field.
+
+Adding a rule
+-------------
+1. Pick the next ``REPnnn`` id and write a class in ``rules.py``
+   subclassing ``Rule`` with ``ID``, ``TITLE``, and
+   ``check(ctx) -> list[Finding]``. ``ctx`` is an
+   :class:`~repro.lint.engine.ModuleContext` (parsed AST, source
+   lines, ``module_key`` like ``"core/daemon.py"``); build findings
+   with ``ctx.make_finding(self.ID, node, message)`` — pragma
+   suppression is applied for you.
+2. Put every project-specific constant (module scopes, name patterns,
+   allowlists) in ``config.py``, not in the rule body.
+3. Append the class to ``ALL_RULES`` in ``rules.py``.
+4. Add fixture tests in ``tests/test_lint.py``: at least one true
+   positive, one false-positive guard, and a pragma-suppression case.
+5. Run ``python -m repro.lint src``; fix or pragma (with a reason) any
+   finding the new rule raises on the live tree, or grandfather
+   genuinely-legacy sites with ``--write-baseline``.
+"""
+from __future__ import annotations
+
+__all__ = ["run_lint", "Finding", "LintReport", "lockorder"]
+
+
+def __getattr__(name):
+    # lazy: core modules import repro.lint.lockorder on their import
+    # path; don't make them pay for the ast/tokenize machinery.
+    # importlib (not `from ... import`): a from-import of a submodule
+    # re-enters this hook through the fromlist check and recurses.
+    import importlib
+    if name in ("run_lint", "Finding", "LintReport"):
+        engine = importlib.import_module("repro.lint.engine")
+        return getattr(engine, name)
+    if name == "lockorder":
+        return importlib.import_module("repro.lint.lockorder")
+    raise AttributeError(name)

@@ -1,0 +1,660 @@
+"""reprolint rules REP001-REP006.
+
+Each rule is a class with an ``ID``, a one-line ``TITLE`` and a
+``check(ctx) -> list[Finding]`` method over one
+:class:`~repro.lint.engine.ModuleContext`. Project knowledge (which
+modules/functions are the serving path, which attributes hold device
+state, ...) comes from ``config.py`` — the analyses here are generic.
+
+Shared machinery:
+
+``_chain``
+    Dotted-name text of a Name/Attribute expression (``"t.state"``,
+    ``"jax.debug.print"``), or None for anything more complex.
+
+``_FuncIndex``
+    Maps every (async) function def to its enclosing-def stack so rules
+    can ask "is this node inside a serving function?" — nested defs
+    (executor bodies, closures) inherit the serving property of their
+    enclosing function.
+
+``_taint``
+    Flow-insensitive device-taint fixpoint over one function: a local
+    name is tainted when it is ever assigned from a ``jnp.``/``lax.``/
+    ``jax.`` call (minus the host-returning allowlist) or from an
+    expression reaching a device-state attribute (``.state``,
+    ``.lanes``, ``._dev`` ...). Over-approximate on purpose: a false
+    positive costs one pragma with a written reason; a false negative
+    costs a silent device sync on the serving path.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.lint import config as C
+from repro.lint.engine import Finding, ModuleContext
+
+__all__ = ["ALL_RULES", "RULE_DOCS"]
+
+_FUNC_NODES = (ast.FunctionDef, ast.AsyncFunctionDef)
+
+
+def _chain(node: ast.AST) -> str | None:
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _call_chain(call: ast.Call) -> str | None:
+    return _chain(call.func)
+
+
+class _FuncIndex:
+    """Enclosing-function stacks for every node in a module."""
+
+    def __init__(self, tree: ast.Module):
+        self.parents: dict[ast.AST, list] = {}   # funcdef -> enclosing defs
+        self.defs_by_name: dict[str, list] = {}
+
+        def walk(node: ast.AST, stack: list) -> None:
+            for child in ast.iter_child_nodes(node):
+                if isinstance(child, _FUNC_NODES):
+                    self.parents[child] = list(stack)
+                    self.defs_by_name.setdefault(child.name, []).append(child)
+                    walk(child, stack + [child])
+                else:
+                    walk(child, stack)
+
+        walk(tree, [])
+
+    def funcs(self):
+        return self.parents.keys()
+
+    def outermost_name(self, fn) -> str:
+        stack = self.parents.get(fn, [])
+        return (stack[0] if stack else fn).name
+
+    def is_serving(self, fn, serving_names: frozenset) -> bool:
+        """A def is serving when itself OR any enclosing def is named in
+        the serving set (nested executor bodies inherit)."""
+        if fn.name in serving_names:
+            return True
+        return any(p.name in serving_names for p in self.parents.get(fn, []))
+
+
+def _direct_body_nodes(fn) -> list[ast.AST]:
+    """Every AST node lexically in ``fn`` but not in a nested def."""
+    out: list[ast.AST] = []
+    stack: list[ast.AST] = list(fn.body)
+    while stack:
+        node = stack.pop()
+        out.append(node)
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, _FUNC_NODES):
+                continue
+            stack.append(child)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# device taint
+
+def _is_device_call(chain: str) -> bool:
+    root = chain.split(".", 1)[0]
+    if root in ("jnp", "lax"):
+        return True
+    if root == "jax":
+        return chain not in C.HOST_JAX_CALLS
+    return False
+
+
+def _taint(fn):
+    """(tainted-name set, expression classifier) for ``fn`` — a
+    fixpoint over its assignments, nested defs included (closures share
+    the namespace approximation)."""
+    assigns: list[tuple[list[str], ast.AST]] = []
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Assign):
+            names = []
+            for t in node.targets:
+                for sub in ast.walk(t):
+                    if isinstance(sub, ast.Name):
+                        names.append(sub.id)
+            assigns.append((names, node.value))
+        elif isinstance(node, ast.AugAssign) and isinstance(node.target,
+                                                            ast.Name):
+            assigns.append(([node.target.id], node.value))
+        elif isinstance(node, (ast.For, ast.AsyncFor)):
+            names = [s.id for s in ast.walk(node.target)
+                     if isinstance(s, ast.Name)]
+            assigns.append((names, node.iter))
+        elif isinstance(node, ast.withitem) and node.optional_vars:
+            names = [s.id for s in ast.walk(node.optional_vars)
+                     if isinstance(s, ast.Name)]
+            assigns.append((names, node.context_expr))
+
+    tainted: set[str] = set()
+
+    def expr_tainted(e: ast.AST) -> bool:
+        if isinstance(e, ast.Call):
+            ch = _call_chain(e)
+            if ch is not None and _is_device_call(ch):
+                return True
+            # a call ON a tainted value (x.at[i].set(...), x.astype(...))
+            if isinstance(e.func, ast.Attribute) and \
+                    expr_tainted(e.func.value):
+                return True
+            return any(expr_tainted(a) for a in e.args)
+        if isinstance(e, ast.Attribute):
+            if e.attr in C.DEVICE_ATTRS:
+                return True
+            return expr_tainted(e.value)
+        if isinstance(e, ast.Name):
+            return e.id in tainted
+        if isinstance(e, ast.Subscript):
+            return expr_tainted(e.value)
+        if isinstance(e, (ast.BinOp,)):
+            return expr_tainted(e.left) or expr_tainted(e.right)
+        if isinstance(e, ast.UnaryOp):
+            return expr_tainted(e.operand)
+        if isinstance(e, (ast.Tuple, ast.List, ast.Set)):
+            return any(expr_tainted(x) for x in e.elts)
+        if isinstance(e, ast.Starred):
+            return expr_tainted(e.value)
+        if isinstance(e, ast.IfExp):
+            return expr_tainted(e.body) or expr_tainted(e.orelse)
+        if isinstance(e, ast.NamedExpr):
+            return expr_tainted(e.value)
+        return False
+
+    changed = True
+    while changed:
+        changed = False
+        for names, value in assigns:
+            if not names or all(n in tainted for n in names):
+                continue
+            if expr_tainted(value):
+                for n in names:
+                    if n not in tainted:
+                        tainted.add(n)
+                        changed = True
+    # stash the evaluator so rules can classify arbitrary expressions
+    # against this function's final taint set
+    return tainted, expr_tainted  # type: ignore[return-value]
+
+
+# ---------------------------------------------------------------------------
+
+
+class Rule:
+    ID = "REP000"
+    TITLE = ""
+
+    def check(self, ctx: ModuleContext) -> list[Finding]:  # pragma: no cover
+        raise NotImplementedError
+
+
+class DeviceSyncOnServingPath(Rule):
+    """REP001: a device sync (``.block_until_ready()``, ``.item()``,
+    ``.tolist()``, ``int()/float()/np.asarray`` over a device value)
+    inside a serving function of a serving module. The engine's whole
+    latency story rests on the serving path never blocking on the
+    device; the one sanctioned sync is lazy ``Result`` materialization
+    at render time."""
+
+    ID = "REP001"
+    TITLE = "device sync on the serving path"
+
+    def check(self, ctx: ModuleContext) -> list[Finding]:
+        if ctx.module_key not in C.SERVING_MODULES:
+            return []
+        serving = C.SERVING_FUNCS.get(ctx.module_key, frozenset())
+        idx = _FuncIndex(ctx.tree)
+        out: list[Finding] = []
+        seen: set[int] = set()
+        for fn in idx.funcs():
+            if not idx.is_serving(fn, serving):
+                continue
+            tainted, expr_tainted = _taint(fn)  # type: ignore[misc]
+            for node in _direct_body_nodes(fn):
+                if not isinstance(node, ast.Call) or id(node) in seen:
+                    continue
+                hit = self._classify(node, expr_tainted)
+                if hit:
+                    seen.add(id(node))
+                    out.append(ctx.make_finding(
+                        self.ID, node,
+                        f"{hit} in serving function {fn.name!r} "
+                        f"(zero-device-sync contract; move it off the "
+                        f"serving path or pragma with a reason)"))
+        return out
+
+    @staticmethod
+    def _classify(call: ast.Call, expr_tainted) -> str | None:
+        ch = _call_chain(call)
+        if ch in C.SYNC_CALL_ALWAYS:
+            return f"blocking device call {ch}()"
+        if isinstance(call.func, ast.Attribute):
+            meth = call.func.attr
+            if meth in C.SYNC_METHOD_ALWAYS:
+                return f".{meth}() device sync"
+            if meth in C.SYNC_METHOD_TAINTED and \
+                    expr_tainted(call.func.value):
+                return f".{meth}() on a device value"
+        if ch in C.SYNC_FN_TAINTED and call.args and \
+                expr_tainted(call.args[0]):
+            return f"{ch}() applied to a device value"
+        return None
+
+
+_AUG_OPS = {"Add": "+", "Sub": "-", "Mult": "*", "Div": "/",
+            "FloorDiv": "//", "Mod": "%", "BitOr": "|", "BitAnd": "&",
+            "BitXor": "^", "LShift": "<<", "RShift": ">>", "Pow": "**"}
+
+
+class BareSharedCounter(Rule):
+    """REP002: read-modify-write on a shared counter map
+    (``stats[k] += 1``) outside ``telemetry.Counters``. Concurrent
+    scheduler waves and render threads lose increments through plain
+    ``+=``; every shared counter goes through ``Counters.add``."""
+
+    ID = "REP002"
+    TITLE = "bare shared-counter mutation (use telemetry.Counters)"
+
+    def check(self, ctx: ModuleContext) -> list[Finding]:
+        if (not ctx.module_key.startswith(C.COUNTER_MODULES_PREFIX)
+                or ctx.module_key in C.COUNTER_MODULES_EXEMPT):
+            return []
+        out: list[Finding] = []
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.AugAssign):
+                tgt = node.target
+                if isinstance(tgt, ast.Subscript) and \
+                        self._counter_base(tgt.value):
+                    op = _AUG_OPS.get(type(node.op).__name__,
+                                      type(node.op).__name__)
+                    out.append(ctx.make_finding(
+                        self.ID, node,
+                        f"bare '{self._counter_base(tgt.value)}[...] "
+                        f"{op}=' is a lossy "
+                        f"read-modify-write under concurrent dispatch; "
+                        f"use telemetry.Counters.add"))
+            elif isinstance(node, ast.Assign):
+                # stats[k] = stats.get(k, 0) + 1  (same race, spelled out)
+                for tgt in node.targets:
+                    if not (isinstance(tgt, ast.Subscript)
+                            and self._counter_base(tgt.value)):
+                        continue
+                    base = self._counter_base(tgt.value)
+                    reads_self = any(
+                        self._counter_base(sub) == base
+                        or (isinstance(sub, ast.Attribute)
+                            and sub.attr == "get"
+                            and self._counter_base(sub.value) == base)
+                        for sub in ast.walk(node.value))
+                    if reads_self:
+                        out.append(ctx.make_finding(
+                            self.ID, node,
+                            f"read-modify-write of shared counter map "
+                            f"{base!r}; use telemetry.Counters.add"))
+        return out
+
+    @staticmethod
+    def _counter_base(expr: ast.AST) -> str | None:
+        if isinstance(expr, ast.Name) and C.COUNTER_NAME_RE.search(expr.id):
+            return expr.id
+        if isinstance(expr, ast.Attribute) and \
+                C.COUNTER_NAME_RE.search(expr.attr):
+            return _chain(expr) or expr.attr
+        return None
+
+
+class UnorderedLockAcquisition(Rule):
+    """REP003: lock construction/acquisition that bypasses the
+    scheduler's ordered-acquisition discipline — the lane-lock deadlock
+    class. Three shapes:
+
+    * constructing ``asyncio.Lock``/``threading.Lock`` inside
+      ``core/scheduler.py`` anywhere but the ``_locks_for`` helper
+      (lane/base locks must come from the one place that orders them);
+    * acquiring two locks with nested ``with`` blocks in one function;
+    * looping/multiple ``.acquire()`` calls in one function —
+      multi-lock acquisition belongs in the allowlisted consumer of the
+      ordered helper (``_dispatch_one``)."""
+
+    ID = "REP003"
+    TITLE = "lock acquisition outside the ordered-acquisition helper"
+
+    def check(self, ctx: ModuleContext) -> list[Finding]:
+        if not ctx.module_key.startswith(C.LOCK_MODULES_PREFIX):
+            return []
+        idx = _FuncIndex(ctx.tree)
+        out: list[Finding] = []
+        is_sched = ctx.module_key == "core/scheduler.py"
+        for fn in idx.funcs():
+            exempt = (ctx.module_key, idx.outermost_name(fn)) \
+                in C.MULTI_ACQUIRE_ALLOWED or fn.name in C.LOCK_BUILDER_FUNCS
+            body = _direct_body_nodes(fn)
+            if is_sched and fn.name not in C.LOCK_BUILDER_FUNCS:
+                for node in body:
+                    if isinstance(node, ast.Call) and _call_chain(node) in (
+                            "asyncio.Lock", "threading.Lock",
+                            "threading.RLock"):
+                        out.append(ctx.make_finding(
+                            self.ID, node,
+                            f"scheduler locks must be created by the "
+                            f"ordered helper _locks_for, not inline in "
+                            f"{fn.name!r}"))
+            if exempt:
+                continue
+            out.extend(self._nested_withs(ctx, fn))
+            # any .acquire() counts — the lock API is distinctive, and
+            # loop variables ("for lk in locks") defeat name matching
+            acquires = [n for n in body
+                        if isinstance(n, ast.Call)
+                        and isinstance(n.func, ast.Attribute)
+                        and n.func.attr == "acquire"]
+            if len(acquires) >= 2 or any(
+                    self._in_loop(fn, a) for a in acquires):
+                for a in acquires:
+                    out.append(ctx.make_finding(
+                        self.ID, a,
+                        f"multiple/looped direct .acquire() in "
+                        f"{fn.name!r}: acquire ordered lock sets via the "
+                        f"scheduler's _locks_for/_dispatch_one helpers"))
+        return out
+
+    @staticmethod
+    def _lockish(expr: ast.AST) -> bool:
+        if isinstance(expr, ast.Name):
+            return bool(C.LOCK_NAME_RE.search(expr.id))
+        if isinstance(expr, ast.Attribute):
+            return bool(C.LOCK_NAME_RE.search(expr.attr))
+        if isinstance(expr, ast.Subscript):
+            return UnorderedLockAcquisition._lockish(expr.value)
+        return False
+
+    def _nested_withs(self, ctx: ModuleContext, fn) -> list[Finding]:
+        out: list[Finding] = []
+
+        def walk(node: ast.AST, held: int) -> None:
+            for child in ast.iter_child_nodes(node):
+                if isinstance(child, _FUNC_NODES):
+                    continue
+                h = held
+                if isinstance(child, (ast.With, ast.AsyncWith)):
+                    n_locks = sum(
+                        1 for item in child.items
+                        if self._lockish(item.context_expr))
+                    if n_locks and held:
+                        out.append(ctx.make_finding(
+                            self.ID, child,
+                            f"nested lock acquisition in {fn.name!r} "
+                            f"(holding {held} lock(s) already): order "
+                            f"through the scheduler's helper or flatten "
+                            f"to one lock"))
+                    h = held + n_locks
+                walk(child, h)
+
+        walk(ast.Module(body=fn.body, type_ignores=[]), 0)
+        return out
+
+    @staticmethod
+    def _in_loop(fn, node: ast.AST) -> bool:
+        target_line = node.lineno
+
+        def contains(loop) -> bool:
+            return any(getattr(n, "lineno", -1) == target_line
+                       and isinstance(n, ast.Call)
+                       for n in ast.walk(loop))
+
+        for sub in ast.walk(fn):
+            if isinstance(sub, (ast.For, ast.AsyncFor, ast.While)) \
+                    and contains(sub):
+                return True
+        return False
+
+
+class HostClockInJit(Rule):
+    """REP004: host clock/randomness called inside a jit- or
+    Pallas-compiled function body. Those calls run once at trace time
+    and bake a constant into the executable — every replay then serves
+    a stale timestamp / the same "random" number."""
+
+    ID = "REP004"
+    TITLE = "host clock/random captured inside a jit/pallas body"
+
+    def check(self, ctx: ModuleContext) -> list[Finding]:
+        idx = _FuncIndex(ctx.tree)
+        compiled: set = set()
+        # (a) decorated defs
+        for fn in idx.funcs():
+            for dec in fn.decorator_list:
+                if self._wrapperish(dec):
+                    compiled.add(fn)
+        # (b) defs passed by name into jit()/pallas_call()/shard_map()
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            ch = _call_chain(node)
+            if ch is None or not ch.split(".")[-1].endswith(
+                    C.JIT_WRAPPER_SUFFIXES):
+                continue
+            for arg in node.args[:1]:
+                if isinstance(arg, ast.Name):
+                    compiled.update(idx.defs_by_name.get(arg.id, ()))
+                elif isinstance(arg, ast.Lambda):
+                    compiled.add(arg)
+        out: list[Finding] = []
+        for fn in compiled:
+            body = ast.walk(fn)
+            for node in body:
+                if isinstance(node, ast.Call):
+                    ch = _call_chain(node)
+                    if ch is not None and self._nondet(ch):
+                        out.append(ctx.make_finding(
+                            self.ID, node,
+                            f"{ch}() inside a compiled body runs at "
+                            f"TRACE time (constant-folded into the "
+                            f"executable); pass the value in as an "
+                            f"argument instead"))
+        return out
+
+    @staticmethod
+    def _wrapperish(dec: ast.AST) -> bool:
+        for sub in ast.walk(dec):
+            ch = _chain(sub) if isinstance(
+                sub, (ast.Name, ast.Attribute)) else None
+            if ch and ch.split(".")[-1].endswith(C.JIT_WRAPPER_SUFFIXES):
+                return True
+        return False
+
+    @staticmethod
+    def _nondet(chain: str) -> bool:
+        return any(chain == c.rstrip(".") or chain.startswith(c)
+                   for c in C.HOST_NONDET_CHAINS)
+
+
+class ServingPathPrint(Rule):
+    """REP005: leftover ``print`` / ``jax.debug.print`` in a serving
+    module or kernel. Debug prints on the serving path cost real
+    latency (jax.debug.print forces a host callback) and pollute the
+    wire logs; telemetry spans/counters are the sanctioned channel."""
+
+    ID = "REP005"
+    TITLE = "print/debug.print on the serving path"
+
+    def check(self, ctx: ModuleContext) -> list[Finding]:
+        if ctx.module_key not in C.PRINT_MODULES:
+            return []
+        idx = _FuncIndex(ctx.tree)
+        # map call nodes to their enclosing def for the allowlist
+        out: list[Finding] = []
+        for fn in list(idx.funcs()) + [ctx.tree]:
+            if fn is not ctx.tree and (
+                    fn.name in C.PRINT_ALLOWED_FUNCS
+                    or idx.outermost_name(fn) in C.PRINT_ALLOWED_FUNCS):
+                continue
+            nodes = _direct_body_nodes(fn) if fn is not ctx.tree else \
+                self._module_level(ctx.tree)
+            for node in nodes:
+                if not isinstance(node, ast.Call):
+                    continue
+                ch = _call_chain(node)
+                if ch == "print" or ch in C.PRINT_CHAINS:
+                    out.append(ctx.make_finding(
+                        self.ID, node,
+                        f"{ch}() left on the serving path; use "
+                        f"telemetry spans/counters (or guard under a "
+                        f"main/repl entry point)"))
+        return out
+
+    @staticmethod
+    def _module_level(tree: ast.Module) -> list[ast.AST]:
+        out: list[ast.AST] = []
+        stack: list[ast.AST] = []
+        for node in tree.body:
+            # skip `if __name__ == "__main__":` blocks entirely, and
+            # defs (they are scanned as functions, not module level)
+            if isinstance(node, _FUNC_NODES):
+                continue
+            if isinstance(node, ast.If) and "__name__" in ast.dump(node.test):
+                continue
+            stack.append(node)
+        while stack:
+            node = stack.pop()
+            out.append(node)
+            for child in ast.iter_child_nodes(node):
+                if isinstance(child, _FUNC_NODES):
+                    continue
+                stack.append(child)
+        return out
+
+
+class UseAfterDonation(Rule):
+    """REP006: reading a buffer after passing it to a
+    ``donate_argnums`` executor. jax invalidates donated buffers at
+    dispatch; a later read returns garbage or raises
+    ``RuntimeError: invalid buffer`` — but only sometimes, which is
+    what makes the class vicious. Detected shapes: calls through
+    locals bound to ``jax.jit(..., donate_argnums=...)``, immediate
+    ``jax.jit(f, donate_argnums=...)(args)`` calls, and the
+    config-declared donating call sites (``daemon._run_state``'s
+    ``fn``)."""
+
+    ID = "REP006"
+    TITLE = "use after donation"
+
+    def check(self, ctx: ModuleContext) -> list[Finding]:
+        idx = _FuncIndex(ctx.tree)
+        out: list[Finding] = []
+        for fn in idx.funcs():
+            donors: dict[str, tuple] = {}
+            cfg = C.DONATING_PARAMS.get((ctx.module_key, fn.name))
+            if cfg:
+                donors.update(cfg)
+            body = _direct_body_nodes(fn)
+            # local donor bindings: x = jax.jit(f, donate_argnums=K)
+            for node in body:
+                if isinstance(node, ast.Assign) and \
+                        isinstance(node.value, ast.Call):
+                    argnums = self._donated_argnums(node.value)
+                    if argnums is not None:
+                        for t in node.targets:
+                            if isinstance(t, ast.Name):
+                                donors[t.id] = argnums
+            for node in body:
+                if not isinstance(node, ast.Call):
+                    continue
+                argnums: tuple | None = None
+                if isinstance(node.func, ast.Name) and \
+                        node.func.id in donors:
+                    argnums = donors[node.func.id]
+                elif isinstance(node.func, ast.Call):
+                    argnums = self._donated_argnums(node.func)
+                if argnums is None:
+                    continue
+                for k in argnums:
+                    if k >= len(node.args):
+                        continue
+                    donated = node.args[k]
+                    chain = _chain(donated)
+                    if chain is None:
+                        continue
+                    out.extend(self._uses_after(
+                        ctx, fn, node, chain))
+        return out
+
+    @staticmethod
+    def _donated_argnums(call: ast.Call) -> tuple | None:
+        ch = _call_chain(call)
+        if ch is None or not ch.split(".")[-1] == "jit":
+            return None
+        for kw in call.keywords:
+            if kw.arg == "donate_argnums":
+                v = kw.value
+                if isinstance(v, ast.Constant) and isinstance(v.value, int):
+                    return (v.value,)
+                if isinstance(v, (ast.Tuple, ast.List)):
+                    nums = tuple(e.value for e in v.elts
+                                 if isinstance(e, ast.Constant))
+                    return nums or None
+        return None
+
+    def _uses_after(self, ctx: ModuleContext, fn, call: ast.Call,
+                    chain: str) -> list[Finding]:
+        """Loads of ``chain`` lexically after the donating call, until a
+        store to the same chain cleanses it (line-granular forward
+        scan; stores that merely index-assign into the chain count as
+        the cleanse — re-pointing the host container is fine)."""
+        out: list[Finding] = []
+        call_line = call.lineno
+        cleansed_at: int | None = None
+        events: list[tuple[int, str, ast.AST]] = []
+        for node in _direct_body_nodes(fn):
+            line = getattr(node, "lineno", None)
+            if line is None or line <= call_line:
+                continue
+            if isinstance(node, (ast.Name, ast.Attribute)):
+                c = _chain(node)
+                if c != chain:
+                    continue
+                if isinstance(node.ctx, ast.Store):
+                    events.append((line, "store", node))
+                elif isinstance(node.ctx, ast.Load):
+                    events.append((line, "load", node))
+        # a Load that only feeds a Store-context subscript/attribute
+        # (t.lanes[i] = st) is part of the re-assignment, not a read of
+        # donated buffers — detect via parent Assign targets
+        store_feed_lines = set()
+        for node in _direct_body_nodes(fn):
+            if isinstance(node, ast.Assign):
+                for t in node.targets:
+                    if isinstance(t, (ast.Subscript, ast.Attribute)):
+                        for sub in ast.walk(t):
+                            if isinstance(sub, (ast.Name, ast.Attribute)) \
+                                    and _chain(sub) == chain:
+                                store_feed_lines.add(t.lineno)
+        for line, kind, node in sorted(events, key=lambda e: e[0]):
+            if kind == "store" or line in store_feed_lines:
+                cleansed_at = line
+                break
+            out.append(ctx.make_finding(
+                self.ID, node,
+                f"{chain!r} read after being donated to a "
+                f"donate_argnums executor at line {call_line}; its "
+                f"buffers are invalidated at dispatch"))
+        _ = cleansed_at
+        return out
+
+
+ALL_RULES = (DeviceSyncOnServingPath, BareSharedCounter,
+             UnorderedLockAcquisition, HostClockInJit, ServingPathPrint,
+             UseAfterDonation)
+
+RULE_DOCS = {r.ID: (r.TITLE, (r.__doc__ or "").strip()) for r in ALL_RULES}

@@ -17,3 +17,17 @@ os.environ.setdefault("REPRO_WARMUP", "0")
 @pytest.fixture(autouse=True)
 def _seed():
     np.random.seed(0)
+
+
+@pytest.fixture(scope="session", autouse=True)
+def _lockcheck_no_cycles():
+    """When the suite runs armed (REPRO_LOCKCHECK=1 in scripts/ci.sh),
+    fail the session if the global acquisition-order graph picked up a
+    cycle — a potential deadlock — even though no test hung."""
+    yield
+    from repro.lint import lockorder
+    if lockorder.armed():
+        cyc = lockorder.cycles()
+        assert not cyc, (
+            f"lock-order cycle(s) observed under REPRO_LOCKCHECK=1: {cyc} "
+            f"(report: {lockorder.report()})")

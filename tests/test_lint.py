@@ -1,0 +1,506 @@
+"""reprolint: static rules (REP001-006), pragmas, baseline round-trip,
+and the runtime lock-order sanitizer (lint/lockorder.py).
+
+Static-rule fixtures are tiny synthetic modules written under a
+``core/``-shaped temp directory so their ``module_key`` matches the
+config scopes ("core/daemon.py" etc.) without touching the real tree.
+Every rule gets at least one true positive, one false-positive guard
+and a pragma-suppression case (the contract documented in
+``repro.lint.__doc__`` step 4).
+"""
+import json
+import textwrap
+import threading
+
+import pytest
+
+from repro.lint import engine, lockorder
+from repro.lint.rules import ALL_RULES
+
+
+def lint(tmp_path, source, rel="core/daemon.py"):
+    p = tmp_path / rel
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(textwrap.dedent(source))
+    return engine.run_lint([str(p)], use_baseline=False).findings
+
+
+def unsilenced(findings, rule=None):
+    return [f for f in findings
+            if not f.suppressed and (rule is None or f.rule == rule)]
+
+
+# ---------------------------------------------------------------------------
+# REP001 — device sync on the serving path
+
+
+def test_rep001_sync_in_serving_function(tmp_path):
+    fs = lint(tmp_path, """\
+        import jax.numpy as jnp
+
+        def execute(self, x):
+            y = jnp.sum(x)
+            y.block_until_ready()
+            n = int(jnp.max(x))
+            return n
+    """)
+    hits = unsilenced(fs, "REP001")
+    assert len(hits) == 2
+    assert {f.line for f in hits} == {5, 6}
+
+
+def test_rep001_taint_flows_through_locals(tmp_path):
+    fs = lint(tmp_path, """\
+        def execute(self):
+            dev = self.t.state["cols"]
+            host = np.asarray(dev)
+            return host
+    """)
+    assert len(unsilenced(fs, "REP001")) == 1
+
+
+def test_rep001_ignores_management_plane_and_host_values(tmp_path):
+    fs = lint(tmp_path, """\
+        import jax.numpy as jnp
+
+        def checkpoint(self, x):
+            # not a serving function: sync is the documented cost here
+            return float(jnp.sum(x))
+
+        def execute(self, k):
+            n = int(k)        # k is a host value, not device-tainted
+            d = len(jax.devices())   # host-returning jax call
+            return n + d
+    """)
+    assert unsilenced(fs, "REP001") == []
+
+
+def test_rep001_only_fires_in_serving_modules(tmp_path):
+    fs = lint(tmp_path, """\
+        import jax.numpy as jnp
+
+        def execute(self, x):
+            return float(jnp.sum(x))
+    """, rel="core/planner.py")
+    assert unsilenced(fs, "REP001") == []
+
+
+def test_rep001_pragma_suppresses_and_keeps_reason(tmp_path):
+    fs = lint(tmp_path, """\
+        import jax.numpy as jnp
+
+        def execute(self, x):
+            # reprolint: disable=REP001(admin barrier, measured cold path)
+            jnp.sum(x).block_until_ready()
+    """)
+    assert unsilenced(fs, "REP001") == []
+    sup = [f for f in fs if f.rule == "REP001" and f.suppressed]
+    assert len(sup) == 1
+    assert "admin barrier" in sup[0].reason
+
+
+# ---------------------------------------------------------------------------
+# REP002 — bare shared-counter mutation
+
+
+def test_rep002_augassign_and_spelled_out_rmw(tmp_path):
+    fs = lint(tmp_path, """\
+        def note(self, k):
+            self.stats[k] += 1
+            counts[k] = counts.get(k, 0) + 1
+    """)
+    assert len(unsilenced(fs, "REP002")) == 2
+
+
+def test_rep002_plain_store_and_exempt_module(tmp_path):
+    fs = lint(tmp_path, """\
+        def snapshot(self, k, v):
+            self.stats[k] = v          # overwrite, not read-modify-write
+            self.rows[k] += 1          # not a counter-named map
+    """)
+    assert unsilenced(fs, "REP002") == []
+    # telemetry.py implements Counters itself — exempt
+    fs = lint(tmp_path, """\
+        def add(self, k):
+            self._counts[k] += 1
+    """, rel="core/telemetry.py")
+    assert unsilenced(fs, "REP002") == []
+
+
+def test_rep002_pragma(tmp_path):
+    fs = lint(tmp_path, """\
+        def note(self, k):
+            self.stats[k] += 1  # reprolint: disable=REP002(single-threaded REPL)
+    """)
+    assert unsilenced(fs, "REP002") == []
+
+
+# ---------------------------------------------------------------------------
+# REP003 — lock discipline
+
+
+def test_rep003_nested_with_flagged(tmp_path):
+    fs = lint(tmp_path, """\
+        def swap(self):
+            with self.lock_a:
+                with self.lock_b:
+                    pass
+    """)
+    hits = unsilenced(fs, "REP003")
+    assert len(hits) == 1 and hits[0].line == 3
+
+
+def test_rep003_inline_lock_ctor_in_scheduler(tmp_path):
+    fs = lint(tmp_path, """\
+        import asyncio
+
+        def grab(self, table):
+            return self._locks.setdefault(table, asyncio.Lock())
+
+        def _locks_for(self, g):
+            return [self._ent.setdefault("base", asyncio.Lock())]
+    """, rel="core/scheduler.py")
+    hits = unsilenced(fs, "REP003")
+    # grab() flagged; the ordered helper _locks_for is the blessed site
+    assert len(hits) == 1 and hits[0].line == 4
+
+
+def test_rep003_looped_acquire_flagged_but_dispatch_one_exempt(tmp_path):
+    bad = """\
+        async def hold(self, locks):
+            for lk in locks:
+                await lk.acquire()
+    """
+    fs = lint(tmp_path, bad, rel="core/scheduler.py")
+    assert len(unsilenced(fs, "REP003")) == 1
+    fs = lint(tmp_path, bad.replace("hold", "_dispatch_one"),
+              rel="core/scheduler.py")
+    assert unsilenced(fs, "REP003") == []
+
+
+def test_rep003_single_lock_is_fine(tmp_path):
+    fs = lint(tmp_path, """\
+        def intern(self, s):
+            with self._lock:
+                return self._fwd[s]
+    """)
+    assert unsilenced(fs, "REP003") == []
+
+
+# ---------------------------------------------------------------------------
+# REP004 — host clock/random inside compiled bodies
+
+
+def test_rep004_decorated_and_by_name(tmp_path):
+    fs = lint(tmp_path, """\
+        import time, jax
+
+        @jax.jit
+        def step(s):
+            t0 = time.perf_counter()
+            return s + t0
+
+        def scan_step(s, x):
+            return s + random.random(), x
+
+        compiled = jax.jit(scan_step)
+    """)
+    assert len(unsilenced(fs, "REP004")) == 2
+
+
+def test_rep004_host_side_clock_is_fine(tmp_path):
+    fs = lint(tmp_path, """\
+        import time
+
+        def measure():
+            return time.perf_counter()
+    """)
+    assert unsilenced(fs, "REP004") == []
+
+
+def test_rep004_pragma(tmp_path):
+    fs = lint(tmp_path, """\
+        import time, jax
+
+        @jax.jit
+        def step(s):
+            # reprolint: disable=REP004(trace-time constant is intended)
+            return s + time.time()
+    """)
+    assert unsilenced(fs, "REP004") == []
+
+
+# ---------------------------------------------------------------------------
+# REP005 — prints on the serving path
+
+
+def test_rep005_print_flagged_exactly_once(tmp_path):
+    fs = lint(tmp_path, """\
+        def serve_loop(self):
+            print("debug")
+            jax.debug.print("x={}", 1)
+    """)
+    hits = unsilenced(fs, "REP005")
+    assert len(hits) == 2
+    assert [f.line for f in hits] == [2, 3]
+
+
+def test_rep005_module_level_print(tmp_path):
+    fs = lint(tmp_path, """\
+        FLAG = True
+        if FLAG:
+            print("import-time noise")
+    """)
+    assert len(unsilenced(fs, "REP005")) == 1
+
+
+def test_rep005_entrypoints_and_main_guard_allowed(tmp_path):
+    fs = lint(tmp_path, """\
+        def main():
+            print("usage: ...")
+
+        def repl():
+            def inner():
+                print("> ")
+            inner()
+
+        if __name__ == "__main__":
+            print("banner")
+    """)
+    assert unsilenced(fs, "REP005") == []
+
+
+def test_rep005_pragma(tmp_path):
+    fs = lint(tmp_path, """\
+        def serve_loop(self):
+            # reprolint: disable=REP005(startup handshake parsed from stdout)
+            print("READY")
+    """)
+    assert unsilenced(fs, "REP005") == []
+
+
+# ---------------------------------------------------------------------------
+# REP006 — use after donation
+
+
+def test_rep006_local_donor_binding(tmp_path):
+    fs = lint(tmp_path, """\
+        import jax
+
+        def tick(state):
+            g = jax.jit(step, donate_argnums=0)
+            out = g(state)
+            return state + out
+    """)
+    hits = unsilenced(fs, "REP006")
+    assert len(hits) == 1 and hits[0].line == 6
+
+
+def test_rep006_config_site_and_store_cleanse(tmp_path):
+    fs = lint(tmp_path, """\
+        def _run_state(self, t, fn, args):
+            out = fn(t.state, args)
+            bad = t.state["cols"]
+            return out
+    """)
+    assert len(unsilenced(fs, "REP006")) == 1
+    # the daemon's real pattern: re-point the handle first, then read
+    fs = lint(tmp_path, """\
+        def _run_state(self, t, fn, args):
+            out = fn(t.state, args)
+            t.state = out[0]
+            ok = t.state["cols"]
+            return ok
+    """)
+    assert unsilenced(fs, "REP006") == []
+
+
+def test_rep006_no_donation_no_finding(tmp_path):
+    fs = lint(tmp_path, """\
+        import jax
+
+        def tick(state):
+            g = jax.jit(step)
+            out = g(state)
+            return state + out
+    """)
+    assert unsilenced(fs, "REP006") == []
+
+
+# ---------------------------------------------------------------------------
+# engine: baseline round-trip, report, CLI
+
+
+VIOLATION = """\
+def serve_loop(self):
+    print("legacy debug")
+"""
+
+
+def test_baseline_round_trip(tmp_path):
+    src = tmp_path / "core" / "daemon.py"
+    src.parent.mkdir(parents=True)
+    src.write_text(VIOLATION)
+    bl = tmp_path / "baseline.json"
+
+    rep = engine.run_lint([str(src)], baseline_path=bl)
+    assert len(rep.unsilenced) == 1
+
+    n = engine.write_baseline(bl, rep.findings)
+    assert n == 1 and json.loads(bl.read_text())[0]["rule"] == "REP005"
+
+    rep = engine.run_lint([str(src)], baseline_path=bl)
+    assert rep.unsilenced == [] and rep.findings[0].baselined
+
+    # a NEW violation is not grandfathered by the old baseline
+    src.write_text(VIOLATION + "    print('fresh')\n")
+    rep = engine.run_lint([str(src)], baseline_path=bl)
+    assert len(rep.unsilenced) == 1
+    assert "fresh" in rep.unsilenced[0].snippet
+
+
+def test_report_counts_and_json_shape(tmp_path):
+    src = tmp_path / "core" / "daemon.py"
+    src.parent.mkdir(parents=True)
+    src.write_text(VIOLATION)
+    rep = engine.run_lint([str(src)], use_baseline=False)
+    d = rep.to_dict()
+    assert d["counts"]["unsilenced"] == 1
+    assert d["findings"][0]["rule"] == "REP005"
+    assert "REP005" in rep.text()
+
+
+def test_cli_exit_codes(tmp_path, capsys):
+    from repro.lint.__main__ import main
+    src = tmp_path / "core" / "daemon.py"
+    src.parent.mkdir(parents=True)
+    src.write_text(VIOLATION)
+    assert main([str(src), "--no-baseline", "--json"]) == 1
+    out = json.loads(capsys.readouterr().out)
+    assert out["counts"]["unsilenced"] == 1
+    src.write_text("def serve_loop(self):\n    return 1\n")
+    assert main([str(src), "--no-baseline"]) == 0
+
+
+def test_live_tree_is_clean():
+    """The shipping gate: the real src tree has zero unsilenced
+    findings (pragmas must carry reasons; baseline stays empty)."""
+    rep = engine.run_lint([str(engine.REPO_ROOT / "src")])
+    assert rep.unsilenced == [], engine.LintReport(
+        findings=rep.unsilenced, files=rep.files).text()
+    for f in rep.findings:
+        if f.suppressed:
+            assert f.reason, f"pragma without a reason: {f.path}:{f.line}"
+
+
+def test_all_rules_documented():
+    from repro.lint.rules import RULE_DOCS
+    assert sorted(RULE_DOCS) == [f"REP00{i}" for i in range(1, 7)]
+    assert len(ALL_RULES) == 6
+
+
+# ---------------------------------------------------------------------------
+# lockorder — runtime sanitizer
+
+
+def _in_thread(fn):
+    t = threading.Thread(target=fn)
+    t.start()
+    t.join(10)
+    assert not t.is_alive()
+
+
+def test_lockorder_flags_two_thread_inversion():
+    g = lockorder.Graph()
+    a = lockorder.LockProxy("A", graph=g)
+    b = lockorder.LockProxy("B", graph=g)
+
+    def t1():
+        with a:
+            with b:
+                pass
+
+    def t2():
+        with b:
+            with a:
+                pass
+
+    # sequential threads: the RUN never deadlocks, the ORDER GRAPH
+    # still proves the interleaved schedule that would
+    _in_thread(t1)
+    _in_thread(t2)
+    assert g.cycles() == [["A", "B"]]
+    rep = g.report()
+    assert rep["cycles"] and rep["locks"] == 2 and rep["acquisitions"] == 4
+
+
+def test_lockorder_clean_on_consistent_order():
+    g = lockorder.Graph()
+    a = lockorder.LockProxy("A", graph=g)
+    b = lockorder.LockProxy("B", graph=g)
+
+    def worker():
+        with a:
+            with b:
+                pass
+
+    _in_thread(worker)
+    _in_thread(worker)
+    assert g.cycles() == []
+    assert g.edges == {"A": {"B": 2}}
+
+
+def test_lockorder_same_name_instances_merge():
+    # leaf-lock classes (one lock per table/result) share a name; two
+    # instances nesting must not self-edge into a bogus cycle
+    g = lockorder.Graph()
+    l1 = lockorder.LockProxy("leaf", graph=g)
+    l2 = lockorder.LockProxy("leaf", graph=g)
+    with l1:
+        with l2:
+            pass
+    assert g.edges == {} and g.cycles() == []
+
+
+def test_lockorder_async_proxy_records_per_task():
+    import asyncio
+
+    g = lockorder.Graph()
+    a = lockorder.AsyncLockProxy("base", graph=g)
+    b = lockorder.AsyncLockProxy("lane0", graph=g)
+
+    async def dispatch():
+        await a.acquire()
+        async with b:
+            pass
+        a.release()
+
+    asyncio.run(dispatch())
+    assert g.edges == {"base": {"lane0": 1}}
+    assert g.cycles() == []
+
+
+def test_lockorder_factories_respect_env(monkeypatch):
+    monkeypatch.delenv("REPRO_LOCKCHECK", raising=False)
+    assert not lockorder.armed()
+    assert isinstance(lockorder.make_lock("x"), type(threading.Lock()))
+    monkeypatch.setenv("REPRO_LOCKCHECK", "1")
+    assert lockorder.armed()
+    lk = lockorder.make_lock("x")
+    assert isinstance(lk, lockorder.LockProxy)
+    alk = lockorder.make_async_lock("y")
+    assert isinstance(alk, lockorder.AsyncLockProxy)
+    # plain acquire/release on the global graph: no nesting, no edges
+    with lk:
+        pass
+    assert lockorder.summary()["armed"] is True
+
+
+def test_show_stats_reports_lockcheck_field():
+    from repro.core.daemon import SQLCached
+
+    db = SQLCached()
+    db.execute("CREATE TABLE lkchk (k INT, v INT)")
+    info = json.loads(db.execute("SHOW STATS").value)
+    assert set(info["lockcheck"]) == {"armed", "edges", "cycles"}
+    assert info["lockcheck"]["armed"] == lockorder.armed()
